@@ -1,0 +1,169 @@
+"""Analytic FLOP / HBM-byte model per (arch x shape) cell.
+
+Why analytic: XLA's HloCostAnalysis counts a while-loop body ONCE, so the
+scanned-layer structure (essential for 512-device compile times) makes
+``compiled.cost_analysis()`` report ~1/L of the real compute.  The
+roofline therefore uses this first-principles model for the compute and
+memory terms, validated against an UNROLLED compile of the smallest arch
+(see EXPERIMENTS.md §Roofline validation), while the collective term comes
+from the partitioned HLO with explicit trip-count scaling.
+
+All figures are GLOBAL (whole cluster); divide by chip count for
+per-device terms.  bf16 compute, f32 master weights + Adam states.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.models.config import ModelConfig
+from repro.launch.specs import SHAPE_GRID
+
+BF16 = 2
+F32 = 4
+
+
+def _attn_dims(cfg: ModelConfig):
+    if cfg.mla:
+        qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+        return cfg.n_heads, qk, cfg.v_head_dim
+    return cfg.n_heads, cfg.head_dim, cfg.head_dim
+
+
+def _layer_linear_flops_per_tok(cfg: ModelConfig) -> float:
+    """Forward matmul FLOPs per token per layer (attention + FFN)."""
+    d = cfg.d_model
+    if cfg.family == "ssm":
+        di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_nheads
+        return 2 * d * (2 * di + 2 * g * n + h) + 2 * di * d
+    h, qk, dv = _attn_dims(cfg)
+    if cfg.mla:
+        r = cfg.kv_lora_rank
+        attn = (2 * d * h * qk + 2 * d * (r + cfg.qk_rope_dim)
+                + 2 * r * h * (cfg.qk_nope_dim + dv) + 2 * h * dv * d)
+    else:
+        kv = cfg.n_kv_heads
+        attn = 2 * d * h * qk + 4 * d * kv * qk + 2 * h * dv * d
+    if cfg.is_moe:
+        ffn = (2 * d * cfg.n_experts                       # router
+               + (cfg.top_k + cfg.n_shared_experts) * 6 * d * cfg.moe_d_ff)
+    else:
+        ffn = 6 * d * cfg.d_ff
+    return attn + ffn
+
+
+def _attn_score_flops(cfg: ModelConfig, b: int, s: int, t: int) -> float:
+    """Forward QK^T + AV FLOPs for one layer, query len s vs key len t."""
+    h, qk, dv = _attn_dims(cfg)
+    causal = 0.5 if (cfg.causal and s == t) else 1.0
+    return (2 * b * s * t * h * qk + 2 * b * s * t * h * dv) * causal
+
+
+def _ssd_core_flops(cfg: ModelConfig, b: int, t: int) -> float:
+    ck = cfg.ssm_chunk
+    h, p, n = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    return 2 * b * t * h * (ck * (n + p) + 2 * n * p)
+
+
+def _n_layers_eff(cfg: ModelConfig) -> int:
+    if cfg.family == "encdec":
+        return cfg.enc_layers + cfg.dec_layers
+    if cfg.family == "hybrid":
+        return cfg.n_layers + cfg.n_layers // cfg.attn_every
+    return cfg.n_layers
+
+
+def flops_cell(cfg: ModelConfig, shape_name: str) -> Dict[str, float]:
+    s, b, kind = SHAPE_GRID[shape_name]
+    d, v = cfg.d_model, cfg.vocab
+    toks = b * s
+    L = _n_layers_eff(cfg)
+
+    lin = _layer_linear_flops_per_tok(cfg) * toks * L
+    if cfg.family == "ssm":
+        core = _ssd_core_flops(cfg, b, s) * L
+    elif cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.attn_every
+        core = (_ssd_core_flops(cfg, b, s) * cfg.n_layers
+                + _attn_score_flops(cfg, b, s, s) * n_attn)
+    elif cfg.family == "encdec":
+        core = (_attn_score_flops(cfg, b, s, s) * cfg.enc_layers      # enc
+                + _attn_score_flops(cfg, b, s, s) * cfg.dec_layers    # self
+                + _attn_score_flops(cfg, b, s, s) * cfg.dec_layers)   # cross
+    else:
+        core = _attn_score_flops(cfg, b, s, s) * cfg.n_layers
+    head = 2 * toks * d * v
+
+    if kind == "train":
+        total = 3 * (lin + core + head)
+        model = 6 * cfg.active_param_count() * toks
+    elif kind == "prefill":
+        total = lin + core + head
+        model = 2 * cfg.active_param_count() * toks
+    else:  # decode: one token against an S-long cache
+        lin1 = _layer_linear_flops_per_tok(cfg) * b * L
+        if cfg.family == "ssm":
+            h, p, n = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+            core1 = 4 * b * h * p * n * cfg.n_layers
+        elif cfg.family == "hybrid":
+            h, p, n = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+            n_attn = cfg.n_layers // cfg.attn_every
+            core1 = (4 * b * h * p * n * cfg.n_layers
+                     + _attn_score_flops(cfg, b, 1, s) * n_attn)
+        elif cfg.mla:
+            # absorbed MLA decode: attention runs in the rank-r latent space
+            r = cfg.kv_lora_rank
+            h = cfg.n_heads
+            per_layer = (2 * b * s * h * r          # latent scores
+                         + 2 * b * s * h * cfg.qk_rope_dim
+                         + 2 * b * s * h * r)       # latent AV
+            core1 = per_layer * cfg.n_layers
+        else:
+            core1 = _attn_score_flops(cfg, b, 1, s) * cfg.n_layers
+        total = lin1 + core1 + 2 * b * d * v
+        model = 2 * cfg.active_param_count() * b
+    return {"total": total, "model": model}
+
+
+def bytes_cell(cfg: ModelConfig, shape_name: str) -> float:
+    """Estimated global HBM traffic per step (reads + writes)."""
+    s, b, kind = SHAPE_GRID[shape_name]
+    d = cfg.d_model
+    toks = b * s
+    L = _n_layers_eff(cfg)
+    p_count = cfg.param_count()
+
+    if kind == "train":
+        # fwd read + bwd read (f32 casts) + grad write/read + Adam 3r+3w f32
+        param_traffic = p_count * (2 * F32 + 2 * F32 + 6 * F32)
+        # activations: ~6 tensor r/w of (toks, d) per layer + remat recompute
+        act_traffic = L * toks * d * BF16 * (8 if cfg.remat else 6)
+        logit_traffic = toks * cfg.vocab * (BF16 + F32) * 2
+        return param_traffic + act_traffic + logit_traffic
+    if kind == "prefill":
+        param_traffic = p_count * F32
+        act_traffic = L * toks * d * BF16 * 4
+        cache_traffic = _cache_bytes(cfg, b, s)
+        logit_traffic = toks * cfg.vocab * BF16
+        return param_traffic + act_traffic + cache_traffic + logit_traffic
+    # decode: weights + full cache read dominate
+    param_traffic = cfg.active_param_count() * F32
+    cache_traffic = _cache_bytes(cfg, b, s)           # read the window
+    return param_traffic + cache_traffic + b * d * L * BF16 * 6
+
+
+def _cache_bytes(cfg: ModelConfig, b: int, s: int) -> float:
+    if cfg.family == "ssm":
+        return cfg.n_layers * b * (cfg.ssm_nheads * cfg.ssm_headdim
+                                   * cfg.ssm_state) * F32 * 2
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.attn_every
+        ssm = cfg.n_layers * b * (cfg.ssm_nheads * cfg.ssm_headdim
+                                  * cfg.ssm_state) * F32 * 2
+        kv = n_attn * b * s * cfg.n_kv_heads * cfg.head_dim * BF16 * 2
+        return ssm + kv
+    if cfg.mla:
+        return cfg.n_layers * b * s * (cfg.kv_lora_rank + cfg.qk_rope_dim) * BF16
+    n = cfg.dec_layers if cfg.family == "encdec" else cfg.n_layers
+    mult = 4 if cfg.family == "encdec" else 2         # + cross K/V
+    return n * b * s * cfg.n_kv_heads * cfg.head_dim * BF16 * mult

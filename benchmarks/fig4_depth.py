@@ -1,0 +1,192 @@
+"""Figure 4: parallel (zkDL, same randomness for all layers) vs
+conventional sequential (layer-by-layer, Liu et al. 2021-style) proof
+generation as network depth L grows.
+
+Parallel column: the production `zkdl.Prover` -- one batched sumcheck per
+step over the STACKED tensors, one validity IPA, one multi-opened IPA per
+tensor; proving time ~O(DQ + log L) and size ~O(log(DQL)).
+
+Sequential column: an explicit per-layer prover built from the SAME
+primitives (sumcheck_prove / zkrelu / ipa) but with fresh randomness per
+layer and no batching: each layer pays its own matmul sumchecks, Hadamard
+sumchecks, validity IPA over (2 D Q)-bit tables and five aux openings.
+Proof size concatenates, so it grows as O(L log(DQ)) -- exactly the
+baseline ordering formalized in [1] that Fig. 4 compares against.
+(The sequential path is a cost-faithful prover; its verifier is not
+implemented -- component soundness is covered by the unit tests.)
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import ipa, mle, pedersen, zkdl, zkrelu
+from repro.core.sumcheck import sumcheck_prove
+from repro.core.transcript import Transcript
+from repro.field import FQ, add, mont_mul, sub
+from benchmarks.table2_zkrelu import Q_BITS, R_BITS, make_witness
+
+import jax.numpy as jnp
+
+Q_MOD = FQ.modulus
+
+
+def _rand(rng) -> int:
+    return int(rng.integers(0, Q_MOD, dtype=np.uint64)) % Q_MOD
+
+
+def _enc_tensor(x: np.ndarray) -> jnp.ndarray:
+    from repro.field import encode_i64
+    return jnp.asarray(encode_i64(FQ, x.reshape(-1))).reshape(-1, 4)
+
+
+class SequentialKeys:
+    """Per-layer commitment/validity keys (same sizes for every layer)."""
+
+    def __init__(self, width: int, bs: int):
+        d_elem = bs * width
+        self.kd = pedersen.make_key(b"seq/aux", d_elem)
+        self.kw = pedersen.make_key(b"seq/w", width * width)
+        self.validity = zkrelu.make_validity_keys(d_elem, Q_BITS, R_BITS)
+        self.k_bq = pedersen.CommitKey(self.validity.g_col,
+                                       self.validity.h_blind, b"seq/bq")
+        self.d_elem = d_elem
+        self.width = width
+        self.bs = bs
+
+
+def prove_sequential(keys: SequentialKeys, wit, rng) -> Dict:
+    """Layer-by-layer proof: fresh randomness and separate proofs per layer."""
+    L = wit.n_layers
+    bs, width, d_elem = keys.bs, keys.width, keys.d_elem
+    lb, ld = bs.bit_length() - 1, width.bit_length() - 1
+    size_bytes = 0
+    for l in range(L):
+        t = Transcript(b"seq/layer%d" % l)
+        # --- commitments for this layer's aux tensors --------------------
+        zpp = wit.zpp[l].reshape(-1) if l < L - 1 else wit.zpp[-1].reshape(-1)
+        has_relu = l < L - 1
+        bq = wit.b[l].reshape(-1) if has_relu else np.zeros(d_elem, np.int64)
+        rz = wit.rz[l].reshape(-1) if has_relu else np.zeros(d_elem, np.int64)
+        gap = wit.gap[l].reshape(-1) if l < L - 1 else np.zeros(d_elem, np.int64)
+        rga = wit.rga[l].reshape(-1) if l < L - 1 else np.zeros(d_elem, np.int64)
+        blinds = {n: _rand(rng) for n in ("zpp", "bq", "rz", "gap", "rga", "w")}
+        zpp_t, gap_t = _enc_tensor(zpp), _enc_tensor(gap)
+        rz_t, rga_t = _enc_tensor(rz), _enc_tensor(rga)
+        bq_t = _enc_tensor(bq)
+        com = {}
+        com["zpp"] = pedersen.commit(keys.kd, zpp_t, blinds["zpp"], nbits=Q_BITS)
+        com["bq"] = pedersen.commit_bits(keys.k_bq, bq.astype(np.uint32),
+                                         blinds["bq"])
+        com["rz"] = pedersen.commit(keys.kd, rz_t, blinds["rz"], nbits=R_BITS + 1)
+        com["gap"] = pedersen.commit(keys.kd, gap_t, blinds["gap"])
+        com["rga"] = pedersen.commit(keys.kd, rga_t, blinds["rga"])
+        size_bytes += 5 * 32
+        bits = zkrelu.build_aux_bits(zpp, gap, bq, rz, rga, Q_BITS, R_BITS)
+        vcoms, vblinds = zkrelu.commit_validity(keys.validity, bits, rng)
+        size_bytes += 3 * 32
+
+        # --- per-layer matmul sumchecks (eqs 30 / 33 / 34) ----------------
+        u_r = t.challenge_ints(b"u_r", Q_MOD, lb)
+        u_c = t.challenge_ints(b"u_c", Q_MOD, ld)
+        a_tab = _enc_tensor(wit.a[l]).reshape(bs, width, 4)
+        w_tab = _enc_tensor(wit.w[l]).reshape(width, width, 4)
+        gz_tab = _enc_tensor(wit.gz[l]).reshape(bs, width, 4)
+        fa = zkdl._fix_rows(a_tab, u_r)
+        fw = zkdl._fix_cols(w_tab, u_c)
+        sc1, _, f1 = sumcheck_prove([fa, fw], [(0, 1)], t, b"fwd")
+        size_bytes += 32 * (sum(len(m) for m in sc1.messages) + len(f1))
+        if l + 1 < L:
+            gz2 = _enc_tensor(wit.gz[l + 1]).reshape(bs, width, 4)
+            w2 = _enc_tensor(wit.w[l + 1]).reshape(width, width, 4)
+            fg = zkdl._fix_rows(gz2, u_r)
+            fw2 = zkdl._fix_rows(w2, u_c)
+            sc2, _, f2 = sumcheck_prove([fg, fw2], [(0, 1)], t, b"bwd")
+            size_bytes += 32 * (sum(len(m) for m in sc2.messages) + len(f2))
+        u_i = t.challenge_ints(b"u_i", Q_MOD, ld)
+        u_j = t.challenge_ints(b"u_j", Q_MOD, ld)
+        fgw = zkdl._fix_cols(gz_tab, u_i)
+        fa2 = zkdl._fix_cols(a_tab, u_j)
+        sc3, _, f3 = sumcheck_prove([fgw, fa2], [(0, 1)], t, b"gw")
+        size_bytes += 32 * (sum(len(m) for m in sc3.messages) + len(f3))
+
+        # --- per-layer Hadamard anchor (eqs 31 / 35) ----------------------
+        one_tab = jnp.broadcast_to(mle.enc(1), (d_elem, 4)).astype(jnp.uint32)
+        one_b = sub(FQ, one_tab, bq_t)
+        u_a = t.challenge_ints(b"u_a", Q_MOD, lb + ld)
+        pa = mle.expand_point(u_a)
+        sc4, u_star, f4 = sumcheck_prove([one_b, zpp_t, gap_t, pa],
+                                         [(0, 3, 1), (0, 3, 2)], t, b"anchor")
+        size_bytes += 32 * (sum(len(m) for m in sc4.messages) + len(f4))
+
+        # --- per-layer validity + openings --------------------------------
+        upp = t.challenge_int(b"upp", Q_MOD)
+        u_relu = u_star + [upp]
+        e_star = mle.expand_point(u_star)
+        v_zpp = int(mle.hmul(1, zkdl._dec(mle.fdot(zpp_t, e_star))))
+        v_gap = zkdl._dec(mle.fdot(gap_t, e_star))
+        v_bq = zkdl._dec(mle.fdot(bq_t, e_star))
+        v_rz = zkdl._dec(mle.fdot(rz_t, e_star))
+        v_rga = zkdl._dec(mle.fdot(rga_t, e_star))
+        v = ((1 - upp) * v_zpp + upp * v_gap) % Q_MOD
+        v_r = ((1 - upp) * v_rz + upp * v_rga) % Q_MOD
+        t.absorb_ints(b"vclaims", [v, v_bq, v_r])
+        vproof = zkrelu.prove_validity(keys.validity, bits, vblinds, u_relu,
+                                       v, v_bq, v_r, blinds["bq"], t, rng)
+        size_bytes += vproof.size_bytes()
+        for name, tab, blind in (("zpp", zpp_t, blinds["zpp"]),
+                                 ("bq", bq_t, blinds["bq"]),
+                                 ("rz", rz_t, blinds["rz"]),
+                                 ("gap", gap_t, blinds["gap"]),
+                                 ("rga", rga_t, blinds["rga"])):
+            key = keys.k_bq if name == "bq" else keys.kd
+            claim = zkdl._dec(mle.fdot(tab, e_star))
+            pr = ipa.open_prove(key, tab, e_star, blind, claim, t, rng)
+            size_bytes += pr.size_bytes()
+    return {"size_kB": size_bytes / 1024}
+
+
+def run_parallel(width: int, bs: int, depth: int):
+    cfg = zkdl.ZkdlConfig(n_layers=depth, batch=bs, width=width,
+                          q_bits=Q_BITS, r_bits=R_BITS)
+    keys = zkdl.make_keys(cfg)
+    wit = make_witness(width, bs, n_layers=depth)
+    rng = np.random.default_rng(depth)
+    prover = zkdl.Prover(keys, rng)
+    t0 = time.perf_counter()
+    prover.commit(wit)
+    proof = prover.prove(Transcript(b"zkdl"))
+    dt = time.perf_counter() - t0
+    return dt, proof.size_bytes() / 1024
+
+
+def run_sequential(width: int, bs: int, depth: int):
+    keys = SequentialKeys(width, bs)
+    wit = make_witness(width, bs, n_layers=depth)
+    rng = np.random.default_rng(depth)
+    t0 = time.perf_counter()
+    out = prove_sequential(keys, wit, rng)
+    dt = time.perf_counter() - t0
+    return dt, out["size_kB"]
+
+
+def main(depths: List[int] | None = None, width: int = 64, bs: int = 4):
+    depths = depths or [2, 4, 8]
+    rows = []
+    for L in depths:
+        tp, sp = run_parallel(width, bs, L)
+        ts, ss = run_sequential(width, bs, L)
+        rows.append((L, tp, sp, ts, ss))
+        print(f"fig4,depth={L},width={width},bs={bs},"
+              f"parallel_s={tp:.2f},parallel_kB={sp:.1f},"
+              f"sequential_s={ts:.2f},sequential_kB={ss:.1f},"
+              f"speedup={ts / tp:.2f}", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    full = "--full" in sys.argv
+    main(depths=[2, 4, 8, 16] if full else None)

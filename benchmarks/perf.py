@@ -1,0 +1,159 @@
+"""Perf hillclimb harness: lower one (arch x shape) cell under a named
+variant, report the three roofline terms and a collective 'profile'
+(per-computation, trip-count-scaled) to attribute wire bytes to program
+structure.  This is the measure step of the hypothesis -> change ->
+measure -> validate loop logged in EXPERIMENTS.md §Perf.
+
+    python -m benchmarks.perf --arch deepseek-7b --shape train_4k \
+        --variant baseline|fsdp|fsdp_seqshard|... [--multi-pod]
+"""
+from __future__ import annotations
+
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import dataclasses
+import json
+from typing import Dict
+
+from repro.launch.dryrun import (HBM_BW, ICI_BW, PEAK_FLOPS, _COMP_HEAD,
+                                 _TRIP_RE, _WHILE_BODY_RE, _line_collective,
+                                 collective_bytes_scaled)
+
+CHIPS = 256
+
+
+def variant_config(cfg, name: str):
+    """Named config variants for the hillclimb (framework-level knobs)."""
+    table = {
+        "baseline": {},
+        "fsdp": {"fsdp": True},
+        "nofsdp": {"fsdp": False},
+        "noremat": {"remat": False},
+        "fsdp_noremat": {"fsdp": True, "remat": False},
+        "remat_dots": {"remat_policy": "dots"},
+        "nofsdp_remat_dots": {"fsdp": False, "remat_policy": "dots"},
+        "sp": {"seq_shard_carry": True},
+        "sp_remat_dots": {"seq_shard_carry": True, "remat_policy": "dots"},
+        "sp_nofsdp": {"seq_shard_carry": True, "fsdp": False},
+    }
+    if name not in table:
+        raise SystemExit(f"unknown variant {name!r}: {sorted(table)}")
+    return dataclasses.replace(cfg, **table[name])
+
+
+def comp_profile(hlo_text: str, top: int = 12):
+    """Per-computation trip-scaled collective bytes, descending."""
+    comps: Dict[str, list] = {}
+    entry = None
+    current = None
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace():
+            m = _COMP_HEAD.match(line)
+            if m:
+                current = m.group(2)
+                comps[current] = []
+                if m.group(1):
+                    entry = current
+                continue
+        if current is not None:
+            comps[current].append(line)
+    per_comp, edges = {}, {}
+    for name, lines in comps.items():
+        tot, edge = 0, []
+        for ln in lines:
+            hit = _line_collective(ln)
+            if hit:
+                tot += hit[1]
+            if "while(" in ln and "body=" in ln:
+                bm = _WHILE_BODY_RE.search(ln)
+                tm = _TRIP_RE.search(ln)
+                if bm:
+                    edge.append((bm.group(1),
+                                 int(tm.group(1)) if tm else 1))
+        per_comp[name] = tot
+        edges[name] = edge
+    mult = {n: 0 for n in comps}
+    mult[entry or next(iter(comps))] = 1
+    work = [entry]
+    while work:
+        p = work.pop()
+        for body, trip in edges.get(p, ()):
+            if body in mult:
+                before = mult[body]
+                mult[body] += mult[p] * trip
+                if mult[body] != before:
+                    work.append(body)
+    rows = [(n, per_comp[n] * (mult.get(n, 0) or 1), mult.get(n, 0) or 1,
+             per_comp[n])
+            for n in comps if per_comp[n]]
+    rows.sort(key=lambda r: -r[1])
+    return rows[:top]
+
+
+def run(arch: str, shape: str, variant: str, multi_pod: bool = False,
+        profile: bool = True) -> Dict:
+    from repro.util import enable_compilation_cache
+    enable_compilation_cache()
+    from repro.configs.registry import get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import lower_cell
+    from benchmarks import costmodel
+
+    cfg = variant_config(get_config(arch), variant)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    lowered = lower_cell(cfg, mesh, shape)
+    compiled = lowered.compile()
+    hlo = compiled.as_text()
+    coll, per_kind = collective_bytes_scaled(hlo)
+    mem = compiled.memory_analysis()
+    live = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+            + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    fl = costmodel.flops_cell(cfg, shape)
+    by = costmodel.bytes_cell(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape, "variant": variant,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "compute_s": fl["total"] / CHIPS / PEAK_FLOPS,
+        "memory_s": by / CHIPS / HBM_BW,
+        "collective_s": coll / ICI_BW,
+        "collective_bytes": coll,
+        "per_kind": {k: v for k, v in per_kind.items() if v},
+        "live_gib": live / 2**30,
+        "model_flops_s": fl["model"] / CHIPS / PEAK_FLOPS,
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"), key=rec.__getitem__)
+    rec["dominant"] = dom
+    rec["roofline_frac"] = rec["model_flops_s"] / rec[dom]
+    print(f"perf,{arch},{shape},{variant},mesh={rec['mesh']},"
+          f"compute_s={rec['compute_s']:.3f},memory_s={rec['memory_s']:.3f},"
+          f"collective_s={rec['collective_s']:.3f},live_gib={rec['live_gib']:.1f},"
+          f"dominant={dom},frac={rec['roofline_frac']:.3f}", flush=True)
+    print(" kinds:", {k: f"{v:.2e}" for k, v in rec["per_kind"].items()},
+          flush=True)
+    if profile:
+        for name, scaled, m, raw in comp_profile(hlo):
+            print(f"  comp {name}  x{m}  {scaled:.3e} B (raw {raw:.3e})",
+                  flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rec = run(args.arch, args.shape, args.variant, args.multi_pod)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

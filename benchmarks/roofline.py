@@ -1,0 +1,149 @@
+"""Roofline report: compute / memory / collective terms per (arch x shape)
+cell on the single-pod 16x16 production mesh (TPU v5e constants).
+
+Sources (see costmodel.py docstring for why):
+  * compute term  = analytic FLOPs  / (chips * 197 TFLOP/s)
+  * memory term   = analytic bytes  / (chips * 819 GB/s)
+  * collective    = trip-count-scaled HLO collective bytes / (chips * 50 GB/s)
+
+The analytic model is validated against an UNROLLED compile of a reduced
+config (`validate_costmodel`, run by tests/test_roofline.py), since XLA's
+HloCostAnalysis counts a scanned layer stack once.  MODEL_FLOPS = 6*N*D
+(dense) / 6*N_active*D (MoE); the useful-compute ratio MODEL/analytic
+catches remat and redundancy waste.
+
+Reads results/dryrun/*.json (the dry-run artifacts); writes
+results/roofline.json and prints the table.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_FLOPS
+
+CHIPS = 256          # single-pod 16x16
+
+
+def _arch_id(stem: str) -> str:
+    return stem.replace("-", "_")
+
+
+def cell_report(arch: str, shape: str, dry: Dict) -> Dict:
+    from repro.configs.registry import get_config
+    from benchmarks import costmodel
+
+    cfg = get_config(arch)
+    fl = costmodel.flops_cell(cfg, shape)
+    by = costmodel.bytes_cell(cfg, shape)
+    coll_dev = dry["per_device_collective_bytes"]
+    compute_s = fl["total"] / CHIPS / PEAK_FLOPS
+    memory_s = by / CHIPS / HBM_BW
+    coll_s = coll_dev / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    # roofline fraction: useful-compute time over the achievable step time
+    # (bound below by the dominant term; terms overlap in the best case)
+    model_s = fl["model"] / CHIPS / PEAK_FLOPS
+    frac = model_s / bound if bound > 0 else 0.0
+    return {
+        "arch": arch, "shape": shape, "mesh": dry.get("mesh", "16x16"),
+        "compute_term_s": compute_s, "memory_term_s": memory_s,
+        "collective_term_s": coll_s, "dominant": dominant,
+        "model_flops": fl["model"], "hlo_flops_analytic": fl["total"],
+        "useful_ratio": fl["model"] / fl["total"] if fl["total"] else 0.0,
+        "roofline_fraction": frac,
+        "live_bytes_per_dev": dry.get("per_device_live_bytes"),
+        "fits_16g": (dry.get("per_device_live_bytes") or 0) < 16 * 2**30,
+    }
+
+
+def load_cells(out_dir: str = "results/dryrun", mesh_tag: str = "16_16"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(out_dir, f"*__{mesh_tag}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        cells.append(rec)
+    if not cells:
+        raise FileNotFoundError(f"no dry-run artifacts under {out_dir}")
+    return cells
+
+
+def main(out_dir: str = "results/dryrun", print_table: bool = True,
+         save: str = "results/roofline.json") -> List[Dict]:
+    rows = []
+    for rec in load_cells(out_dir):
+        arch = _arch_id(rec["arch"])
+        try:
+            rows.append(cell_report(arch, rec["shape"], rec))
+        except KeyError as exc:
+            print(f"roofline,skip={arch}x{rec['shape']},err={exc}")
+    if print_table:
+        for r in rows:
+            print(f"roofline,arch={r['arch']},shape={r['shape']},"
+                  f"compute_s={r['compute_term_s']:.4f},"
+                  f"memory_s={r['memory_term_s']:.4f},"
+                  f"collective_s={r['collective_term_s']:.4f},"
+                  f"dominant={r['dominant']},"
+                  f"useful_ratio={r['useful_ratio']:.3f},"
+                  f"roofline_frac={r['roofline_fraction']:.3f},"
+                  f"fits_16g={r['fits_16g']}", flush=True)
+    if save:
+        os.makedirs(os.path.dirname(save), exist_ok=True)
+        with open(save, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+def validate_costmodel(arch: str = "qwen3-0.6b", layers: int = 2,
+                       seq: int = 512, batch: int = 8) -> Dict:
+    """Compare the analytic model against an UNROLLED single-device compile
+    of a reduced config, where HloCostAnalysis counts every layer."""
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.registry import get_config
+    from repro.models import transformer
+    from benchmarks import costmodel
+    from repro.launch.specs import SHAPE_GRID
+
+    cfg = dataclasses.replace(get_config(arch), n_layers=layers,
+                              scan_layers=False, remat=False)
+    params = jax.eval_shape(
+        lambda k: transformer.init_params(cfg, k),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    batch_spec = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+
+    def fwd_loss(p, b):
+        return transformer.loss_fn(cfg, p, b)
+
+    compiled = jax.jit(jax.value_and_grad(fwd_loss)).lower(
+        params, batch_spec).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    hlo_flops = float(cost.get("flops", 0.0))
+
+    # analytic: same reduced config, train kind = 3x forward
+    toks = batch * seq
+    lin = costmodel._layer_linear_flops_per_tok(cfg) * toks * layers
+    core = costmodel._attn_score_flops(cfg, batch, seq, seq) * layers
+    head = 2 * toks * cfg.d_model * cfg.vocab
+    analytic = 3 * (lin + core + head)
+    return {"hlo_flops": hlo_flops, "analytic_flops": analytic,
+            "ratio": analytic / hlo_flops if hlo_flops else float("nan")}
+
+
+if __name__ == "__main__":
+    import sys
+    if "--validate" in sys.argv:
+        print(validate_costmodel())
+    main()

@@ -1,0 +1,1 @@
+"""zkDL core: the paper protocols as composable modules."""

@@ -1,0 +1,232 @@
+"""The Pedersen commitment group and multi-scalar multiplication.
+
+The group is the order-q subgroup of quadratic residues of F_p^*, with
+p = 2q + 1 a Sophie-Germain pair (q is the proof field FQ).  A group
+element is an FP limb array in Montgomery form; the group operation is
+``mont_mul(FP, ., .)`` and exponents live in FQ.
+
+TPU adaptation note (DESIGN.md): zkDL's CUDA prover leans on atomic bucket
+accumulation for Pippenger MSM.  Atomics do not exist on the TPU vector
+unit, so the MSM here is re-expressed as sort -> segmented associative
+scan -> scatter of segment tails, which XLA maps onto parallel hardware
+(and mirrors how production TPU kernels express histogram-like reductions).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.field import (
+    FP, FQ, GROUP_GEN, mont_mul, from_mont, encode_ints, int_to_limbs,
+    limbs_to_ints, hash_to_int,
+)
+
+P = FP.modulus
+Q = FQ.modulus
+
+WINDOW = 8
+NBUCKET = 1 << WINDOW
+
+
+def identity():
+    return jnp.asarray(np.array(FP.one))
+
+
+def g_mul(a, b):
+    """Group operation."""
+    return mont_mul(FP, a, b)
+
+
+def g_pow_int(base, e: int):
+    """base^e for python-int exponent (e taken mod q).
+
+    Routed through the jitted vectorized ``g_pow`` so repeated calls with
+    different exponents reuse one compiled executable.
+    """
+    e = int(e) % Q
+    exps = jnp.asarray(int_to_limbs(e))[None]
+    return g_pow(base[None], exps)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("nbits",))
+def g_pow(bases, exps_std, nbits: int = 61):
+    """Elementwise bases^exps. exps in standard (non-Montgomery) limb form.
+
+    Square-and-multiply as a lax.scan over the bit index so the compiled
+    body is one mont_mul pair (XLA-CPU chokes on a 61x unrolled graph).
+    """
+    result = jnp.broadcast_to(identity(), bases.shape).astype(jnp.uint32)
+
+    def step(carry, j):
+        res, acc = carry
+        limb = jnp.take(exps_std, j >> 4, axis=-1)
+        bit = ((limb >> (j & 15)) & 1).astype(bool)
+        res = jnp.where(bit[..., None], g_mul(res, acc), res)
+        acc = g_mul(acc, acc)
+        return (res, acc), None
+
+    (result, _), _ = jax.lax.scan(step, (result, bases), jnp.arange(nbits, dtype=jnp.uint32))
+    return result
+
+
+def _seg_combine(x, y):
+    v1, f1 = x
+    v2, f2 = y
+    v = jnp.where(f2[..., None].astype(bool), v2, g_mul(v1, v2))
+    return v, f1 | f2
+
+
+@functools.partial(jax.jit, static_argnames=("nwin",))
+def _msm_impl(points, exps_std, nwin: int):
+    """Pippenger MSM; windows processed high->low inside one lax.scan so
+    the compiled program contains a single window body."""
+    one = identity()
+
+    def window_body(total, w):
+        bitpos = jnp.uint32(WINDOW) * w
+        limb = jnp.take(exps_std, bitpos >> 4, axis=1)
+        digit = (limb >> (bitpos & 15)) & (NBUCKET - 1)
+        pts = jnp.where((digit == 0)[:, None], one[None], points)
+        order = jnp.argsort(digit)
+        sd = digit[order]
+        sp = pts[order]
+        starts = jnp.concatenate([jnp.ones((1,), jnp.uint32),
+                                  (sd[1:] != sd[:-1]).astype(jnp.uint32)])
+        vals, _ = jax.lax.associative_scan(_seg_combine, (sp, starts))
+        is_end = jnp.concatenate([(sd[1:] != sd[:-1]), jnp.ones((1,), bool)])
+        idx = jnp.where(is_end, sd, jnp.uint32(NBUCKET))
+        buckets = jnp.broadcast_to(one, (NBUCKET + 1, 4)).astype(jnp.uint32)
+        buckets = buckets.at[idx].set(vals, mode="drop")
+
+        # sum_j j * bucket_j via double running product, j = NBUCKET-1 .. 1
+        def agg(carry, b):
+            running, acc = carry
+            running = g_mul(running, b)
+            acc = g_mul(acc, running)
+            return (running, acc), None
+
+        rev = buckets[1:NBUCKET][::-1]
+        (_, win_acc), _ = jax.lax.scan(agg, (one, one), rev)
+
+        # total = total^(2^WINDOW) * win_acc
+        def sq(t, _):
+            return g_mul(t, t), None
+
+        total, _ = jax.lax.scan(sq, total, None, length=WINDOW)
+        total = g_mul(total, win_acc)
+        return total, None
+
+    ws = jnp.arange(nwin - 1, -1, -1, dtype=jnp.uint32)
+    total, _ = jax.lax.scan(window_body, jnp.broadcast_to(one, (4,)).astype(jnp.uint32), ws)
+    return total
+
+
+def _pad4(n: int) -> int:
+    """Next power of four >= n (fewer distinct compiled MSM shapes)."""
+    m = 1
+    while m < n:
+        m *= 4
+    return m
+
+
+def msm(points, exps_std, nbits: int = 61):
+    """prod_i points[i]^exps[i]; exps as (n,4) standard-form limbs.
+
+    Inputs are padded to a power-of-four length with zero exponents so the
+    halving shapes of the IPA reuse a handful of compiled executables.
+    """
+    n = points.shape[0]
+    assert n == exps_std.shape[0]
+    m = _pad4(n)
+    if m != n:
+        points = jnp.concatenate(
+            [points, jnp.broadcast_to(identity(), (m - n, 4)).astype(jnp.uint32)])
+        exps_std = jnp.concatenate(
+            [exps_std, jnp.zeros((m - n, 4), jnp.uint32)])
+    nwin = (nbits + WINDOW - 1) // WINDOW
+    return _msm_impl(points, exps_std, nwin)
+
+
+def msm_field(points, scalars_mont, nbits: int = 61):
+    """MSM where scalars are FQ elements in Montgomery form."""
+    return msm(points, from_mont(FQ, scalars_mont), nbits)
+
+
+@jax.jit
+def tree_prod(elems):
+    """Product of all group elements in (n,4)."""
+    one = identity()
+    while elems.shape[0] > 1:
+        if elems.shape[0] % 2 == 1:
+            elems = jnp.concatenate([elems, one[None]], axis=0)
+        elems = g_mul(elems[0::2], elems[1::2])
+    return elems[0]
+
+
+def msm_bits(points, bits):
+    """prod points[i]^{bits[i]} for a 0/1 vector: pure selection product."""
+    bits = jnp.asarray(bits).astype(bool)
+    n = bits.shape[0]
+    m = _pad4(n)
+    sel = jnp.where(bits[:, None], points[:n], identity()[None])
+    if m != n:
+        sel = jnp.concatenate(
+            [sel, jnp.broadcast_to(identity(), (m - n, 4)).astype(jnp.uint32)])
+    return tree_prod(sel)
+
+
+# ---------------------------------------------------------------------------
+# Generators (nothing-up-my-sleeve, unknown discrete logs).
+# ---------------------------------------------------------------------------
+
+_GEN_CACHE: dict = {}
+
+
+def derive_generators(label: bytes, n: int):
+    """n independent subgroup generators; hash-to-group (t -> t^2 mod p)."""
+    cached = _GEN_CACHE.get(label)
+    if cached is not None and cached.shape[0] >= n:
+        return jnp.asarray(cached[:n])
+    out = np.empty((n, 4), dtype=np.uint32)
+    r2 = pow(2, 128, P)
+    for i in range(n):
+        t = hash_to_int(label + i.to_bytes(8, "little"), P)
+        if t < 2:
+            t = 2
+        g = (t * t) % P                      # square -> QR subgroup
+        gm = (g * pow(2, 64, P)) % P         # to Montgomery form
+        for j in range(4):
+            out[i, j] = (gm >> (16 * j)) & 0xFFFF
+    _GEN_CACHE[label] = out
+    return jnp.asarray(out)
+
+
+def group_gen():
+    """The canonical subgroup generator h=4 in Montgomery form."""
+    g = (GROUP_GEN * pow(2, 64, P)) % P
+    return jnp.asarray(int_to_limbs(g))
+
+
+def decode_group(a) -> int:
+    """Group element -> canonical python int (for transcripts/serialization)."""
+    std = np.asarray(from_mont(FP, jnp.asarray(a)))
+    return int(limbs_to_ints(std)[()])
+
+
+def encode_group(x: int):
+    gm = (x % P) * pow(2, 64, P) % P
+    return jnp.asarray(int_to_limbs(gm))
+
+
+def exps_from_ints(vals) -> jnp.ndarray:
+    """Python ints (mod q) -> standard-form limb array for msm/g_pow."""
+    arr = np.array([int(v) % Q for v in vals], dtype=object)
+    return jnp.asarray(ints_to_limbs_np(arr))
+
+
+def ints_to_limbs_np(arr: np.ndarray) -> np.ndarray:
+    from repro.field import ints_to_limbs
+    return ints_to_limbs(arr)

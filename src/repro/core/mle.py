@@ -1,0 +1,146 @@
+"""Multilinear-extension utilities over the proof field FQ.
+
+Tables are flat ``(n, 4)`` uint32 limb arrays in Montgomery form with
+n = 2^d.  Variable ordering is little-endian: variable j of the MLE
+corresponds to bit j of the flat index, so folding variable 0 pairs
+adjacent entries ``(table[2i], table[2i+1])``.
+
+A point is a list of python ints (canonical field values, produced by the
+transcript); helpers encode them to limb form on demand.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.field import FQ, add, sub, mont_mul, encode_int, encode_ints
+
+Q = FQ.modulus
+
+
+def enc(x: int):
+    """Python int -> (4,) Montgomery limb jnp array."""
+    return jnp.asarray(encode_int(FQ, x))
+
+
+def enc_vec(xs):
+    return jnp.asarray(encode_ints(FQ, np.array([int(x) for x in xs], dtype=object)))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _fold_pair(table, r):
+    even, odd = table[0::2], table[1::2]
+    diff = sub(FQ, odd, even)
+    return add(FQ, even, mont_mul(FQ, diff, r[None]))
+
+
+def fold(table, r_limbs):
+    """Fix MLE variable 0 (lowest bit) at r: (n,4) -> (n/2,4)."""
+    assert table.shape[0] % 2 == 0
+    return _fold_pair(table, r_limbs)
+
+
+def eval_mle(table, point_ints):
+    """Evaluate the MLE of `table` at `point` (list of ints, little-endian)."""
+    n = table.shape[0]
+    assert n == 1 << len(point_ints), (n, len(point_ints))
+    for r in point_ints:
+        table = fold(table, enc(r))
+    return table[0]
+
+
+@jax.jit
+def _extend_expand(e, u):
+    # new coordinate occupies the HIGH bit so that coordinate j of the point
+    # stays aligned with bit j of the flat index (little-endian convention).
+    one = jnp.asarray(np.array(FQ.one))
+    lo = mont_mul(FQ, e, sub(FQ, one[None], u[None]))
+    hi = mont_mul(FQ, e, u[None])
+    return jnp.concatenate([lo, hi], axis=0)
+
+
+def expand_point(point_ints):
+    """e(u): (2^d, 4) table with e_i = prod_j (u_j if bit_j(i) else 1-u_j)."""
+    e = jnp.asarray(np.array(FQ.one))[None]
+    for u in point_ints:
+        e = _extend_expand(e, enc(u))
+    return e
+
+
+@jax.jit
+def _sum_step(table):
+    if table.shape[0] % 2 == 1:
+        table = jnp.concatenate([table, jnp.zeros((1, 4), jnp.uint32)], axis=0)
+    return add(FQ, table[0::2], table[1::2])
+
+
+def fsum(table):
+    """Field sum of all rows of (n,4): returns (4,)."""
+    while table.shape[0] > 1:
+        table = _sum_step(table)
+    return table[0]
+
+
+def fdot(a, b):
+    """Inner product of two (n,4) tables: returns (4,)."""
+    return fsum(mont_mul(FQ, a, b))
+
+
+# ---------------------------------------------------------------------------
+# Host-side (verifier) modular arithmetic over FQ as python ints.
+# ---------------------------------------------------------------------------
+
+def hadd(x, y):
+    return (x + y) % Q
+
+
+def hsub(x, y):
+    return (x - y) % Q
+
+
+def hmul(x, y):
+    return (x * y) % Q
+
+
+def hinv(x):
+    return pow(x, Q - 2, Q)
+
+
+def hneg(x):
+    return (-x) % Q
+
+
+def heval_point_product(point_a, point_b):
+    """beta~(a, b) = prod_j (a_j b_j + (1-a_j)(1-b_j)) for int points."""
+    acc = 1
+    for a, b in zip(point_a, point_b):
+        acc = acc * ((a * b + (1 - a) * (1 - b)) % Q) % Q
+    return acc % Q
+
+
+def hexpand_point(point_ints):
+    """Host e(u) as python-int list (small points only)."""
+    e = [1]
+    for u in point_ints:
+        lo = [(x * (1 - u)) % Q for x in e]
+        hi = [(x * u) % Q for x in e]
+        e = lo + hi
+    return e
+
+
+def lagrange_eval(ys, x):
+    """Evaluate the degree-(k-1) poly through points (0..k-1, ys) at x (ints)."""
+    k = len(ys)
+    acc = 0
+    for i in range(k):
+        num, den = 1, 1
+        for j in range(k):
+            if i == j:
+                continue
+            num = num * ((x - j) % Q) % Q
+            den = den * ((i - j) % Q) % Q
+        acc = (acc + ys[i] * num % Q * hinv(den)) % Q
+    return acc

@@ -1,0 +1,67 @@
+"""Pedersen vector commitments (Section 3.1 of zkDL).
+
+Commit(v; r) = h^r * prod_i g_i^{v_i} over the order-q subgroup of F_p^*.
+Homomorphic: com(v1;r1) * com(v2;r2) = com(v1+v2; r1+r2), and
+com(v;r)^k = com(k*v; k*r) -- both used heavily by zkReLU (Algorithm 1)
+and by the claim-batching in Protocol 2.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.field import FQ, from_mont
+from repro.core import group
+
+Q = FQ.modulus
+
+
+@dataclasses.dataclass(frozen=True)
+class CommitKey:
+    gens: jnp.ndarray        # (n, 4) group elements (Montgomery form)
+    h: jnp.ndarray           # (4,) blinding generator
+    label: bytes
+
+    @property
+    def n(self) -> int:
+        return int(self.gens.shape[0])
+
+    def slice(self, start: int, stop: int) -> "CommitKey":
+        return CommitKey(self.gens[start:stop], self.h, self.label)
+
+
+def make_key(label: bytes, n: int) -> CommitKey:
+    gens = group.derive_generators(b"zkdl/gens/" + label, n)
+    h = group.derive_generators(b"zkdl/blind/" + label, 1)[0]
+    return CommitKey(gens, h, label)
+
+
+def commit(key: CommitKey, values_mont, blind: int, nbits: int = 61):
+    """Commit to an FQ vector (Montgomery limb form). Returns group element."""
+    values_mont = values_mont.reshape(-1, 4)
+    n = values_mont.shape[0]
+    assert n <= key.n, (n, key.n)
+    acc = group.msm(key.gens[:n], from_mont(FQ, values_mont), nbits=nbits)
+    if blind:
+        acc = group.g_mul(acc, group.g_pow_int(key.h, blind))
+    return acc
+
+
+def commit_bits(key: CommitKey, bits, blind: int):
+    """Commit to a 0/1 vector: selection product, no exponentiation."""
+    bits = jnp.asarray(bits).reshape(-1)
+    acc = group.msm_bits(key.gens[: bits.shape[0]], bits)
+    if blind:
+        acc = group.g_mul(acc, group.g_pow_int(key.h, blind))
+    return acc
+
+
+def commit_ints(key: CommitKey, ints, blind: int, nbits: int = 61):
+    """Commit to python/np ints (taken mod q)."""
+    exps = group.exps_from_ints([int(v) for v in np.asarray(ints, dtype=object).reshape(-1)])
+    acc = group.msm(key.gens[: exps.shape[0]], exps, nbits=nbits)
+    if blind:
+        acc = group.g_mul(acc, group.g_pow_int(key.h, blind))
+    return acc

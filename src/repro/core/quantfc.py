@@ -1,0 +1,151 @@
+"""Quantized fully-connected network training step (Example 4.5 of zkDL).
+
+All values are fixed-point integers at scale 2^R held in int64 numpy
+arrays; the witness this module produces is exactly the set of tensors
+Protocol 2 commits to and proves relations over:
+
+    Z^l  = A^{l-1} W^l                       (30)  [scale 2^{2R}]
+    A^l  = (1 - B^l) . Z''^l                 (31)  [scale 2^R]
+    G_Z^L = Z^{L'} - Y                       (32)
+    G_A^l = G_Z^{l+1} W^{l+1 T}              (33)  [scale 2^{2R}]
+    G_W^l = G_Z^{l T} A^{l-1}                (34)  [scale 2^{2R}]
+    G_Z^l = (1 - B^l) . G_A'^l               (35)
+
+with the rescale/sign auxiliary decompositions of Section 4:
+
+    Z^l   = 2^R Z''^l - 2^{Q+R-1} B^l + R_Z^l         (3)
+    G_A^l = 2^R G_A'^l + R_GA^l                        (5)
+
+Floor division is used for rescaling, so both remainders live in [0, 2^R)
+(the paper mixes floor/round notation; floor keeps the uniqueness argument
+of Theorem 4.3 intact -- see DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    q_bits: int = 16     # Q: rescaled values are Q-bit signed
+    r_bits: int = 8      # R: scale factor 2^R
+
+    @property
+    def scale(self) -> int:
+        return 1 << self.r_bits
+
+
+def quantize(x: np.ndarray, cfg: QuantConfig) -> np.ndarray:
+    """Real array -> fixed-point int64 at scale 2^R, clipped to Q-bit range."""
+    v = np.floor(x * cfg.scale).astype(np.int64)
+    lim = 1 << (cfg.q_bits - 1)
+    return np.clip(v, -lim, lim - 1)
+
+
+def dequantize(v: np.ndarray, cfg: QuantConfig) -> np.ndarray:
+    return v.astype(np.float64) / cfg.scale
+
+
+def rescale(v: np.ndarray, cfg: QuantConfig):
+    """v -> (floor(v / 2^R), remainder in [0, 2^R))."""
+    vp = np.floor_divide(v, cfg.scale)
+    rem = v - vp * cfg.scale
+    assert (rem >= 0).all() and (rem < cfg.scale).all()
+    return vp, rem
+
+
+def relu_aux(z: np.ndarray, cfg: QuantConfig) -> Dict[str, np.ndarray]:
+    """Decompose Z per eq. (3): returns Z', Z'', B_{Q-1}, R_Z."""
+    zp, r_z = rescale(z, cfg)
+    lim = 1 << (cfg.q_bits - 1)
+    if (zp < -lim).any() or (zp >= lim).any():
+        raise OverflowError("Z' exceeds Q-bit signed range; raise q_bits")
+    b = (zp < 0).astype(np.int64)
+    zpp = zp + lim * b
+    assert (zpp >= 0).all() and (zpp < lim).all()
+    return {"zp": zp, "zpp": zpp, "b": b, "rz": r_z}
+
+
+def grad_aux(ga: np.ndarray, cfg: QuantConfig) -> Dict[str, np.ndarray]:
+    """Decompose G_A per eq. (5): returns G_A', R_GA."""
+    gap, r_ga = rescale(ga, cfg)
+    lim = 1 << (cfg.q_bits - 1)
+    if (gap < -lim).any() or (gap >= lim).any():
+        raise OverflowError("G_A' exceeds Q-bit signed range; raise q_bits")
+    return {"gap": gap, "rga": r_ga}
+
+
+@dataclasses.dataclass
+class StepWitness:
+    """Every tensor of one batch update, keyed by name, values int64.
+
+    Shapes: x (B,d), y (B,d), w[l] (d,d), and per-layer (B,d) tensors.
+    """
+    cfg: QuantConfig
+    x: np.ndarray
+    y: np.ndarray
+    w: List[np.ndarray]
+    z: List[np.ndarray]
+    zpp: List[np.ndarray]
+    b: List[np.ndarray]
+    rz: List[np.ndarray]
+    a: List[np.ndarray]        # a[0] = x, a[l] = relu output of layer l
+    gz: List[np.ndarray]       # gz[l], l = 1..L (1-indexed: gz[l-1])
+    ga: List[np.ndarray]       # ga[l] for l = 1..L-1
+    gap: List[np.ndarray]
+    rga: List[np.ndarray]
+    gw: List[np.ndarray]
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.w)
+
+
+def train_step_witness(x: np.ndarray, y: np.ndarray, ws: List[np.ndarray],
+                       cfg: QuantConfig) -> StepWitness:
+    """Forward + backward pass of the FCNN in exact integer arithmetic."""
+    n_layers = len(ws)
+    a = [x.astype(np.int64)]
+    z, zpp, bb, rz = [], [], [], []
+    for l in range(n_layers):
+        zl = a[-1] @ ws[l]
+        aux = relu_aux(zl, cfg)
+        z.append(zl)
+        zpp.append(aux["zpp"]); bb.append(aux["b"]); rz.append(aux["rz"])
+        if l < n_layers - 1:
+            a.append((1 - aux["b"]) * aux["zpp"])
+    # loss layer: square loss on rescaled output, eq (32)
+    zp_last = zpp[-1] - (1 << (cfg.q_bits - 1)) * bb[-1]
+    gz_last = zp_last - y.astype(np.int64)
+
+    gz = [None] * n_layers
+    ga = [None] * (n_layers - 1)
+    gap = [None] * (n_layers - 1)
+    rga = [None] * (n_layers - 1)
+    gz[n_layers - 1] = gz_last
+    for l in range(n_layers - 2, -1, -1):
+        gal = gz[l + 1] @ ws[l + 1].T
+        aux = grad_aux(gal, cfg)
+        ga[l] = gal
+        gap[l] = aux["gap"]; rga[l] = aux["rga"]
+        gz[l] = (1 - bb[l]) * aux["gap"]
+    gw = [gz[l].T @ a[l] for l in range(n_layers)]
+    return StepWitness(cfg=cfg, x=a[0], y=y.astype(np.int64), w=list(ws),
+                       z=z, zpp=zpp, b=bb, rz=rz, a=a, gz=gz, ga=ga,
+                       gap=gap, rga=rga, gw=gw)
+
+
+def sgd_apply(ws: List[np.ndarray], gw: List[np.ndarray], lr_shift: int,
+              cfg: QuantConfig) -> List[np.ndarray]:
+    """W <- W - G_W / 2^{lr_shift + R}: gradient at scale 2^{2R} mapped back
+    to weight scale 2^R with learning rate 2^{-lr_shift} (provable update:
+    one linear relation + one range-checked remainder; see zkdl.prove)."""
+    out = []
+    lim = 1 << (cfg.q_bits - 1)
+    for w, g in zip(ws, gw):
+        step = np.floor_divide(g, 1 << (lr_shift + cfg.r_bits))
+        out.append(np.clip(w - step, -lim, lim - 1))
+    return out

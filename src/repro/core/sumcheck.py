@@ -1,0 +1,140 @@
+"""Generic sum-of-products sumcheck prover/verifier over FQ.
+
+Proves claims of the form
+
+    claim = sum_{b in {0,1}^d}  sum_p  prod_{k in products[p]} T_k(b)
+
+for a list of distinct MLE tables ``T_k`` and products given as index
+tuples.  This single primitive instantiates every sumcheck zkDL needs:
+
+* Thaler's specialized matmul GKR layer  -> one product of 2 tables,
+* the zkReLU Hadamard relations (2)/(4)  -> products of 3 tables,
+* the cross-layer stacking relation (27) -> two degree-3 products sharing
+  the (1 - B_{Q-1}) table.
+
+The prover is pure JAX (limb arrays); the verifier is host-side python-int
+arithmetic.  Both drive the shared Fiat-Shamir transcript.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+from repro.field import FQ, add, sub, mont_mul, decode
+from repro.core import mle
+from repro.core.mle import enc, fsum, hadd, hmul, lagrange_eval
+from repro.core.transcript import Transcript
+
+Q = FQ.modulus
+
+
+@dataclasses.dataclass
+class SumcheckProof:
+    # messages[r] = list of degree+1 ints: round poly evals at X=0..degree
+    messages: List[List[int]]
+
+
+def _decode_scalar(x) -> int:
+    return int(decode(FQ, x)[()])
+
+
+def sumcheck_prove(
+    tables: List,
+    products: Sequence[Tuple[int, ...]],
+    transcript: Transcript,
+    label: bytes,
+    coefs: Sequence[int] | None = None,
+) -> Tuple[SumcheckProof, List[int], List[int]]:
+    """Returns (proof, point, final_values) where final_values[k] = T_k(point).
+
+    ``coefs`` (optional) gives one public field coefficient per product:
+    claim = sum_b sum_p coefs[p] * prod_k T_k(b) -- the random-linear-
+    combination batching of per-layer GKR claims (Fig. 3 / Example 4.5).
+    """
+    n = tables[0].shape[0]
+    assert all(t.shape[0] == n for t in tables)
+    degree = max(len(p) for p in products)
+    tables = list(tables)
+    rounds = n.bit_length() - 1
+    assert n == 1 << rounds
+    coef_limbs = None
+    if coefs is not None:
+        coef_limbs = [enc(int(c) % Q) for c in coefs]
+
+    messages: List[List[int]] = []
+    point: List[int] = []
+    for _ in range(rounds):
+        evens = [t[0::2] for t in tables]
+        odds = [t[1::2] for t in tables]
+        diffs = [sub(FQ, o, e) for o, e in zip(odds, evens)]
+        # evals[t][k] = table k evaluated at X=t (as (n/2,4) residual table)
+        evals = [evens, odds]
+        cur = odds
+        for _ in range(2, degree + 1):
+            cur = [add(FQ, c, d) for c, d in zip(cur, diffs)]
+            evals.append(cur)
+        msg = []
+        for t in range(degree + 1):
+            acc = None
+            for pi, prod in enumerate(products):
+                term = evals[t][prod[0]]
+                for k in prod[1:]:
+                    term = mont_mul(FQ, term, evals[t][k])
+                if coef_limbs is not None:
+                    term = mont_mul(FQ, term, coef_limbs[pi][None])
+                acc = term if acc is None else add(FQ, acc, term)
+            msg.append(_decode_scalar(fsum(acc)))
+        messages.append(msg)
+        transcript.absorb_ints(label + b"/round", msg)
+        r = transcript.challenge_int(label + b"/r", Q)
+        point.append(r)
+        r_l = enc(r)
+        tables = [add(FQ, e, mont_mul(FQ, d, r_l[None]))
+                  for e, d in zip(evens, diffs)]
+    final_values = [_decode_scalar(t[0]) for t in tables]
+    transcript.absorb_ints(label + b"/final", final_values)
+    return SumcheckProof(messages), point, final_values
+
+
+def sumcheck_verify(
+    claim: int,
+    proof: SumcheckProof,
+    degree: int,
+    rounds: int,
+    transcript: Transcript,
+    label: bytes,
+) -> Tuple[List[int], int]:
+    """Checks round consistency; returns (point, expected final combination).
+
+    The caller must separately check that
+        expected == sum_p prod_k final_values[k]
+    using final values that are themselves bound to commitments.
+    Raises ValueError on an inconsistent transcript.
+    """
+    if len(proof.messages) != rounds:
+        raise ValueError("sumcheck: wrong number of rounds")
+    running = claim % Q
+    point: List[int] = []
+    for msg in proof.messages:
+        if len(msg) != degree + 1:
+            raise ValueError("sumcheck: wrong round-poly degree")
+        if hadd(msg[0], msg[1]) != running:
+            raise ValueError("sumcheck: round consistency check failed")
+        transcript.absorb_ints(label + b"/round", msg)
+        r = transcript.challenge_int(label + b"/r", Q)
+        point.append(r)
+        running = lagrange_eval(msg, r)
+    return point, running
+
+
+def combine_final(products: Sequence[Tuple[int, ...]], final_values: List[int],
+                  coefs: Sequence[int] | None = None) -> int:
+    acc = 0
+    for pi, prod in enumerate(products):
+        term = 1
+        for k in prod:
+            term = hmul(term, final_values[k])
+        if coefs is not None:
+            term = hmul(term, int(coefs[pi]) % Q)
+        acc = hadd(acc, term)
+    return acc

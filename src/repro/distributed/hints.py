@@ -1,0 +1,66 @@
+"""Ambient sharding hints for intermediate activations.
+
+Model code cannot know the mesh, but a handful of intermediates (MoE
+dispatch buffers above all) MUST carry explicit constraints or XLA SPMD
+replicates them (the grok-1 train cell goes from 375 GiB/device to fitting
+once the (E, C, d) buffers are constrained).  The launcher calls
+``set_axes`` before tracing; model code calls ``constrain`` with symbolic
+axes ("BATCH" / "MODEL") that resolve against the ambient mesh, and the
+call is a no-op outside a configured mesh (smoke tests, 1 device).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_AXES: dict = {"batch": None, "model": None, "sizes": {}, "mesh": None}
+
+
+def set_axes(batch_axes: Optional[Tuple[str, ...]], model_axis: Optional[str],
+             sizes: Optional[dict] = None, mesh=None) -> None:
+    _AXES["batch"] = tuple(batch_axes) if batch_axes else None
+    _AXES["model"] = model_axis
+    _AXES["sizes"] = dict(sizes or {})
+    _AXES["mesh"] = mesh
+
+
+def clear() -> None:
+    set_axes(None, None, None, None)
+
+
+def mesh():
+    """The ambient device mesh (None outside a configured launch)."""
+    return _AXES["mesh"]
+
+
+def batch_axis_names() -> Optional[Tuple[str, ...]]:
+    return _AXES["batch"]
+
+
+def axis_size(which: str) -> int:
+    if which == "BATCH":
+        return max(1, int(_AXES["sizes"].get("batch", 1)))
+    return max(1, int(_AXES["sizes"].get("model", 1)))
+
+
+def constrain(x, spec: Sequence):
+    """spec entries: "BATCH" | "MODEL" | None. Dims that do not divide the
+    axis size fall back to None. No-op when no mesh is configured."""
+    if _AXES["batch"] is None and _AXES["model"] is None:
+        return x
+    dims = []
+    for i, s in enumerate(spec):
+        if s == "BATCH" and _AXES["batch"]:
+            dims.append(_AXES["batch"] if x.shape[i] % axis_size("BATCH") == 0
+                        else None)
+        elif s == "MODEL" and _AXES["model"]:
+            dims.append(_AXES["model"] if x.shape[i] % axis_size("MODEL") == 0
+                        else None)
+        else:
+            dims.append(None)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*dims))
+    except (ValueError, RuntimeError):
+        return x

@@ -1,0 +1,8 @@
+from repro.field.modarith import (  # noqa: F401
+    FQ, FP, GROUP_GEN, FieldSpec, NLIMB,
+    add, sub, neg, mont_mul, inv, batch_inv, pow_const,
+    to_mont, from_mont, is_zero, eq,
+    int_to_limbs, ints_to_limbs, limbs_to_ints,
+    encode_int, encode_ints, encode_i64, decode, decode_centered,
+    rand_elements, hash_to_int,
+)

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for zkDL's compute hot spots.
+
+Three kernels, each a ``kernel.py`` (pl.pallas_call + BlockSpec VMEM
+tiling) + ``ops.py`` (jit'd wrapper with layout transforms) + ``ref.py``
+(oracle):
+
+* ``modmul``        -- elementwise Montgomery limb multiply, the inner
+                       loop of MSM bucket products / sumcheck evaluation.
+* ``sumcheck_fold`` -- fused MLE fold (one sumcheck round), memory-bound;
+                       fusing sub+mul+add cuts HBM traffic 3x.
+* ``qmatmul``       -- exact int16 matmul as 4 int8 MXU passes + rank-1
+                       corrections (the quantized train-step matmuls of
+                       Example 4.5).
+
+All kernels validate on CPU via ``interpret=True`` (the wrappers default
+to interpret mode off-TPU) against their ``ref.py`` oracles.
+"""
+from repro.kernels import limb_planes  # noqa: F401

@@ -1,0 +1,120 @@
+"""Plane-form field arithmetic shared by the Pallas kernels.
+
+The pure-jnp reference (`repro.field.modarith`) keeps limbs in a trailing
+``(..., 4)`` axis -- natural for host code, but inside a TPU kernel the
+limb axis must NOT be the minor axis (it would waste 124 of 128 lanes).
+The kernels therefore use *limb-major planes*: a batch of n field elements
+is held as four ``(rows, 128)`` uint32 planes, one per 16-bit limb, so
+every VPU lane processes a distinct element and the CIOS inner loop is a
+fully-unrolled sequence of 32-bit lane ops.
+
+The functions here operate on ``[p0, p1, p2, p3]`` lists of identically
+shaped uint32 arrays and mirror ``modarith`` exactly (same bounds proof:
+all partial products and accumulators < 2^32).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax.numpy as jnp
+
+from repro.field.modarith import NLIMB, WMASK, FieldSpec
+
+U32 = jnp.uint32
+
+
+def _split(t):
+    return t & WMASK, t >> 16
+
+
+def _cond_sub_planes(spec: FieldSpec, t: List) -> List:
+    """5-word value < 2m -> canonical 4 limbs (plane form)."""
+    pl_ = list(spec.mod_limbs) + [0]
+    borrow = jnp.zeros_like(t[0])
+    u = []
+    for j in range(NLIMB + 1):
+        d = t[j] - jnp.uint32(pl_[j]) - borrow
+        u.append(d & WMASK)
+        borrow = d >> 31
+    keep_t = borrow.astype(bool)  # borrow out of top word => t < m
+    return [jnp.where(keep_t, t[j], u[j]) for j in range(NLIMB)]
+
+
+def mont_mul_planes(spec: FieldSpec, al: Sequence, bl: Sequence) -> List:
+    """CIOS Montgomery product of two plane-form operands."""
+    npr = jnp.uint32(spec.nprime16)
+    pl_ = [jnp.uint32(x) for x in spec.mod_limbs]
+    zero = jnp.zeros(jnp.broadcast_shapes(al[0].shape, bl[0].shape), U32)
+    t = [zero] * (NLIMB + 2)
+    for i in range(NLIMB):
+        c = zero
+        for j in range(NLIMB):
+            acc = t[j] + al[j] * bl[i] + c
+            t[j], c = _split(acc)
+        acc = t[NLIMB] + c
+        t[NLIMB], t[NLIMB + 1] = _split(acc)
+        m = (t[0] * npr) & WMASK
+        acc = t[0] + m * pl_[0]
+        _, c = _split(acc)
+        for j in range(1, NLIMB):
+            acc = t[j] + m * pl_[j] + c
+            t[j - 1], c = _split(acc)
+        acc = t[NLIMB] + c
+        t[NLIMB - 1], c = _split(acc)
+        t[NLIMB] = t[NLIMB + 1] + c
+        t[NLIMB + 1] = zero
+    return _cond_sub_planes(spec, t[:NLIMB + 1])
+
+
+def add_planes(spec: FieldSpec, al: Sequence, bl: Sequence) -> List:
+    c = jnp.zeros(jnp.broadcast_shapes(al[0].shape, bl[0].shape), U32)
+    t = []
+    for j in range(NLIMB):
+        acc = al[j] + bl[j] + c
+        s, c = _split(acc)
+        t.append(s)
+    t.append(c)
+    return _cond_sub_planes(spec, t)
+
+
+def sub_planes(spec: FieldSpec, al: Sequence, bl: Sequence) -> List:
+    borrow = jnp.zeros(jnp.broadcast_shapes(al[0].shape, bl[0].shape), U32)
+    d = []
+    for j in range(NLIMB):
+        x = al[j] - bl[j] - borrow
+        d.append(x & WMASK)
+        borrow = x >> 31
+    wrapped = borrow.astype(bool)
+    c = jnp.zeros_like(borrow)
+    e = []
+    for j in range(NLIMB):
+        acc = d[j] + jnp.uint32(spec.mod_limbs[j]) + c
+        s, c = _split(acc)
+        e.append(s)
+    return [jnp.where(wrapped, e[j], d[j]) for j in range(NLIMB)]
+
+
+# ---------------------------------------------------------------------------
+# Host-side layout transforms: (n, 4) trailing-limb <-> (4, rows, 128) planes
+# ---------------------------------------------------------------------------
+
+LANE = 128
+
+
+def pack_planes(x, rows_mult: int = 8):
+    """(n, 4) uint32 -> ((4, R, 128) planes, n) with R a multiple of rows_mult.
+
+    Zero-padding is harmless for all plane ops (0 op 0 = 0 stays canonical).
+    """
+    n = x.shape[0]
+    rows = max(1, -(-n // LANE))
+    rows = -(-rows // rows_mult) * rows_mult
+    pad = rows * LANE - n
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    return jnp.transpose(xp, (1, 0)).reshape(NLIMB, rows, LANE), n
+
+
+def unpack_planes(planes, n: int):
+    """(4, R, 128) planes -> (n, 4) trailing-limb layout."""
+    flat = planes.reshape(NLIMB, -1)
+    return jnp.transpose(flat, (1, 0))[:n]

@@ -1,0 +1,1 @@
+from repro.kernels.modmul.ops import modmul, modmul_planes_call  # noqa: F401

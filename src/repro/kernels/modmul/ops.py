@@ -1,0 +1,47 @@
+"""jit'd public wrapper for the modmul kernel.
+
+Accepts the repo-standard trailing-limb layout ``(..., 4)`` uint32
+(Montgomery form), repacks to limb-major planes, runs the Pallas kernel,
+and unpacks.  On non-TPU backends the kernel executes in ``interpret=True``
+mode (bit-exact, Python-evaluated) so CPU validation covers the same body
+that compiles for TPU.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.field.modarith import NLIMB, FieldSpec
+from repro.kernels.limb_planes import pack_planes, unpack_planes
+from repro.kernels.modmul.kernel import DEFAULT_BLOCK_ROWS, modmul_planes
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def modmul_planes_call(a_planes, b_planes, *, spec: FieldSpec,
+                       block_rows: int = DEFAULT_BLOCK_ROWS,
+                       interpret: bool | None = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return modmul_planes(a_planes, b_planes, spec=spec,
+                         block_rows=block_rows, interpret=interpret)
+
+
+def modmul(spec: FieldSpec, a, b, *, block_rows: int | None = None,
+           interpret: bool | None = None):
+    """Elementwise Montgomery product, trailing-limb layout (..., 4)."""
+    shape = a.shape
+    assert shape[-1] == NLIMB and b.shape == shape
+    a2 = a.reshape(-1, NLIMB)
+    b2 = b.reshape(-1, NLIMB)
+    n = a2.shape[0]
+    ap, _ = pack_planes(a2)
+    bp, _ = pack_planes(b2)
+    rows = ap.shape[1]
+    br = block_rows or min(DEFAULT_BLOCK_ROWS, rows)
+    while rows % br:
+        br //= 2
+    out = modmul_planes_call(ap, bp, spec=spec, block_rows=br,
+                             interpret=interpret)
+    return unpack_planes(out, n).reshape(shape)

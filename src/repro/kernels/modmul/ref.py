@@ -1,0 +1,21 @@
+"""Oracle for the modmul kernel: the verified pure-jnp CIOS multiply
+(`repro.field.modarith.mont_mul`) plus a python-int cross-check."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.field import modarith
+from repro.field.modarith import FieldSpec
+
+
+def modmul_ref(spec: FieldSpec, a, b):
+    """(n, 4) x (n, 4) Montgomery product via the pure-jnp reference."""
+    return modarith.mont_mul(spec, a, b)
+
+
+def modmul_pyint(spec: FieldSpec, a, b) -> np.ndarray:
+    """Ground truth through python ints: decode, multiply mod m, re-encode."""
+    av = modarith.decode(spec, a)
+    bv = modarith.decode(spec, b)
+    prod = (av * bv) % spec.modulus
+    return modarith.encode_ints(spec, prod)

@@ -1,0 +1,1 @@
+from repro.kernels.qmatmul.ops import qmatmul_i64, qmatmul_partials  # noqa: F401

@@ -1,0 +1,98 @@
+"""Public wrappers for the exact int16 matmul kernel.
+
+``qmatmul_partials`` is the jit'd device path: digit split, four MXU
+passes, rank-1 correction sums -- everything int32-exact.  On TPU the
+result stays in this digit-plane form for downstream integer work.
+
+``qmatmul_i64`` assembles the full-precision int64 product on host
+(numpy): this is the form the zkDL witness generator (`core/quantfc`)
+consumes, and the form the ref oracle is checked against.  (TPUs have no
+int64 lanes; the assembly weights are powers of two, so host assembly is
+four shifted adds per element.)
+
+Padding note: an int16 zero pad entry decomposes to x_hi = 0 but
+x_c = -128, so the digit matmuls and correction sums are NOT zero over
+padded K.  The decomposition identity still holds exactly for the padded
+matrices, and A_pad @ B_pad restricted to [:M, :N] equals A @ B (the int16
+pads are true zeros) -- so the assembly simply has to use the *padded* K,
+which `qmatmul_partials` returns alongside the partial products.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.qmatmul.kernel import (DEFAULT_BK, DEFAULT_BM, DEFAULT_BN,
+                                          qmatmul_digits)
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult0: int, mult1: int):
+    p0 = (-x.shape[0]) % mult0
+    p1 = (-x.shape[1]) % mult1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def _partials_jit(a, b, bm, bn, bk, interpret):
+    a_hi = (a >> 8).astype(jnp.int8)
+    a_c = ((a & 0xFF) - 128).astype(jnp.int8)
+    b_hi = (b >> 8).astype(jnp.int8)
+    b_c = ((b & 0xFF) - 128).astype(jnp.int8)
+    hh, hc, ch, cc = qmatmul_digits(a_hi, a_c, b_hi, b_c,
+                                    bm=bm, bn=bn, bk=bk, interpret=interpret)
+    rs_h = jnp.sum(a_hi.astype(jnp.int32), axis=1)   # (M,)
+    rs_c = jnp.sum(a_c.astype(jnp.int32), axis=1)
+    cs_h = jnp.sum(b_hi.astype(jnp.int32), axis=0)   # (N,)
+    cs_c = jnp.sum(b_c.astype(jnp.int32), axis=0)
+    return hh, hc, ch, cc, rs_h, rs_c, cs_h, cs_c
+
+
+def qmatmul_partials(a, b, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                     bk: int = DEFAULT_BK, interpret: bool | None = None):
+    """(M,K) x (K,N) int16 -> (digit products + correction sums, k_pad).
+
+    Returns ((hh, hc, ch, cc, rs_h, rs_c, cs_h, cs_c), k_pad) where the
+    matrices are sliced back to (M, N) / (M,) / (N,) but the correction
+    sums run over the padded contraction length ``k_pad``.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    assert a.dtype == jnp.int16 and b.dtype == jnp.int16
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    ap = _pad_to(jnp.asarray(a), bm, bk)
+    bp = _pad_to(jnp.asarray(b), bk, bn)
+    k_pad = ap.shape[1]
+    assert k_pad <= (1 << 17), "int32 accumulator bound requires K <= 2^17"
+    out = _partials_jit(ap, bp, min(bm, ap.shape[0]), min(bn, bp.shape[1]),
+                        min(bk, k_pad), interpret)
+    hh, hc, ch, cc, rs_h, rs_c, cs_h, cs_c = out
+    return (hh[:m, :n], hc[:m, :n], ch[:m, :n], cc[:m, :n],
+            rs_h[:m], rs_c[:m], cs_h[:n], cs_c[:n]), k_pad
+
+
+def qmatmul_i64(a, b, **kw) -> np.ndarray:
+    """Exact int64 product of two int16 matrices via the 4-pass kernel."""
+    parts, k_pad = qmatmul_partials(a, b, **kw)
+    hh, hc, ch, cc, rs_h, rs_c, cs_h, cs_c = parts
+    hh = np.asarray(hh, dtype=np.int64)
+    hc = np.asarray(hc, dtype=np.int64)
+    ch = np.asarray(ch, dtype=np.int64)
+    cc = np.asarray(cc, dtype=np.int64)
+    out = (hh << 16) + ((hc + ch) << 8) + cc
+    out += (np.asarray(rs_h, np.int64)[:, None] << 15)
+    out += (np.asarray(rs_c, np.int64)[:, None] << 7)
+    out += (np.asarray(cs_h, np.int64)[None, :] << 15)
+    out += (np.asarray(cs_c, np.int64)[None, :] << 7)
+    out += np.int64(k_pad) << 14
+    return out

@@ -1,0 +1,9 @@
+"""Oracle for the qmatmul kernel: plain numpy int64 matmul (exact for
+int16 operands: |prod| < 2^30, K < 2^33 before any overflow)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def qmatmul_ref(a, b) -> np.ndarray:
+    return np.asarray(a, dtype=np.int64) @ np.asarray(b, dtype=np.int64)

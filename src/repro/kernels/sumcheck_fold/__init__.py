@@ -1,0 +1,1 @@
+from repro.kernels.sumcheck_fold.ops import fold, fold_planes_call  # noqa: F401

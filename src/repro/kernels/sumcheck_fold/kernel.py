@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: fused sumcheck MLE fold.
+
+One sumcheck round replaces the table T (n elements) by
+
+    T'[i] = T[2i] + (T[2i+1] - T[2i]) * r        (fix variable 0 at r)
+
+The unfused jnp path (`repro.core.mle.fold`) materializes `diff = odd -
+even` and `diff * r` separately: ~3 reads + 3 writes of n/2 elements each
+(9n/2 element-moves of HBM traffic).  This kernel streams even/odd tiles
+through VMEM once and writes the folded tile: 2 reads + 1 write (3n/2
+moves), a 3x reduction on the dominant memory term of the proving loop --
+the fold is memory-bound (the CIOS multiply is ~152 lane-ops per 48 B,
+but sub+mul+add per element is cheap next to the HBM round-trips the
+unfused form makes).
+
+The scalar ``r`` is passed as a (4, 1, 128) broadcast tile (each lane of
+plane j holds limb j of r) so the kernel needs no scalar-prefetch plumbing
+and the same body runs in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.field.modarith import NLIMB, FieldSpec
+from repro.kernels.limb_planes import (LANE, add_planes, mont_mul_planes,
+                                       sub_planes)
+
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _fold_body(even_ref, odd_ref, r_ref, o_ref, *, spec: FieldSpec):
+    ev = [even_ref[j] for j in range(NLIMB)]
+    od = [odd_ref[j] for j in range(NLIMB)]
+    rl = [r_ref[j] for j in range(NLIMB)]          # (1, 128), broadcasts
+    diff = sub_planes(spec, od, ev)
+    out = add_planes(spec, ev, mont_mul_planes(spec, diff, rl))
+    for j in range(NLIMB):
+        o_ref[j] = out[j]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "block_rows", "interpret"))
+def fold_planes(even_planes, odd_planes, r_tile, *, spec: FieldSpec,
+                block_rows: int = DEFAULT_BLOCK_ROWS,
+                interpret: bool = True):
+    """(4,R,128) even/odd planes + (4,1,128) r tile -> (4,R,128) folded."""
+    nl, rows, lane = even_planes.shape
+    assert nl == NLIMB and lane == LANE
+    assert odd_planes.shape == even_planes.shape
+    assert r_tile.shape == (NLIMB, 1, LANE)
+    br = min(block_rows, rows)
+    assert rows % br == 0, (rows, br)
+    grid = (rows // br,)
+    blk = pl.BlockSpec((NLIMB, br, LANE), lambda i: (0, i, 0))
+    rblk = pl.BlockSpec((NLIMB, 1, LANE), lambda i: (0, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_fold_body, spec=spec),
+        grid=grid,
+        in_specs=[blk, blk, rblk],
+        out_specs=blk,
+        out_shape=jax.ShapeDtypeStruct(even_planes.shape, jnp.uint32),
+        interpret=interpret,
+    )(even_planes, odd_planes, r_tile)

@@ -1,0 +1,44 @@
+"""jit'd public wrapper for the fused sumcheck fold kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.field.modarith import NLIMB, FieldSpec
+from repro.field import FQ
+from repro.kernels.limb_planes import LANE, pack_planes, unpack_planes
+from repro.kernels.sumcheck_fold.kernel import (DEFAULT_BLOCK_ROWS,
+                                                fold_planes)
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fold_planes_call(even_planes, odd_planes, r_tile, *,
+                     spec: FieldSpec = FQ,
+                     block_rows: int = DEFAULT_BLOCK_ROWS,
+                     interpret: bool | None = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return fold_planes(even_planes, odd_planes, r_tile, spec=spec,
+                       block_rows=block_rows, interpret=interpret)
+
+
+def fold(table, r_limbs, *, spec: FieldSpec = FQ,
+         block_rows: int | None = None, interpret: bool | None = None):
+    """Drop-in for `repro.core.mle.fold`: (n,4) table, (4,) r -> (n/2,4)."""
+    n = table.shape[0]
+    assert n % 2 == 0 and table.shape[-1] == NLIMB
+    even, odd = table[0::2], table[1::2]
+    ep, _ = pack_planes(even)
+    op, _ = pack_planes(odd)
+    rows = ep.shape[1]
+    br = block_rows or min(DEFAULT_BLOCK_ROWS, rows)
+    while rows % br:
+        br //= 2
+    r_tile = jnp.broadcast_to(jnp.asarray(r_limbs).reshape(NLIMB, 1, 1),
+                              (NLIMB, 1, LANE)).astype(jnp.uint32)
+    out = fold_planes_call(ep, op, r_tile, spec=spec, block_rows=br,
+                           interpret=interpret)
+    return unpack_planes(out, n // 2)

@@ -1,0 +1,10 @@
+"""Oracle for the sumcheck_fold kernel: the pure-jnp fold used by the
+production prover (`repro.core.mle.fold`)."""
+from __future__ import annotations
+
+from repro.core import mle
+
+
+def fold_ref(table, r_limbs):
+    """(n, 4) table, (4,) r -> (n/2, 4) folded table."""
+    return mle.fold(table, r_limbs)

@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes and extract memory / cost / collective
+figures for the roofline analysis.
+
+This module MUST be the process entry point (python -m repro.launch.dryrun)
+so the device-count flag above lands before jax initializes. Nothing else
+in the repo sets this flag -- smoke tests and benchmarks see 1 device.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out results/]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.util import enable_compilation_cache
+
+# TPU v5e constants (targets; the host CPU only compiles, never runs)
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DT_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+             "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+             "s8": 1, "u8": 1, "pred": 1}
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*)\[([0-9,]*)\]")
+
+
+def _line_collective(line: str):
+    """(kind, bytes) if the line is a collective op, else None."""
+    stripped = line.lstrip()
+    m = re.search(r"=\s*(.+?)\s+(%?[a-z0-9\-]+)\(", stripped)
+    if not m:
+        return None
+    op = m.group(2).lstrip("%")
+    kind = next((k for k in _COLLECTIVES if op == k or
+                 op.startswith(k + ".") or op.rstrip("0123456789.") == k),
+                None)
+    if kind is None:
+        return None
+    nbytes = 0
+    for dt, dims in _SHAPE_RE.findall(m.group(1)):
+        if dt not in _DT_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        nbytes += n * _DT_BYTES[dt]
+    return kind, nbytes
+
+
+def collective_bytes(hlo_text: str):
+    """Sum result-operand bytes of every collective op (per-device module).
+
+    Returns (total_bytes, per_op_kind dict).  UNSCALED: a collective inside
+    a scanned layer stack (while loop) is counted once."""
+    per_kind = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        hit = _line_collective(line)
+        if hit:
+            per_kind[hit[0]] += hit[1]
+    return sum(per_kind.values()), per_kind
+
+
+_COMP_HEAD = re.compile(r"^(ENTRY\s+)?(%[\w.\-]+)\s*\(")
+_WHILE_BODY_RE = re.compile(r"body=(%[\w.\-]+)")
+_TRIP_RE = re.compile(r"known_trip_count\"?:?\{\"n\":\"(\d+)\"")
+
+
+def collective_bytes_scaled(hlo_text: str):
+    """Trip-count-aware collective totals.
+
+    A jax.lax.scan over L layers compiles to ONE while body, so its
+    collectives appear once in the module text but execute L times.  This
+    parser splits the module into computations, sums collective operand
+    bytes per computation, and multiplies by the product of enclosing
+    while-loop ``known_trip_count``s (propagated from ENTRY through
+    arbitrarily nested whiles, e.g. remat-of-scan).
+
+    Returns (total_bytes, per_kind dict)."""
+    comps: dict[str, list[str]] = {}
+    entry = None
+    current = None
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace():
+            m = _COMP_HEAD.match(line)
+            if m:
+                current = m.group(2)
+                comps[current] = []
+                if m.group(1):
+                    entry = current
+                continue
+        if current is not None:
+            comps[current].append(line)
+
+    per_comp_kind: dict[str, dict] = {}
+    edges: dict[str, list] = {}
+    for name, lines in comps.items():
+        kinds = {}
+        edge = []
+        for ln in lines:
+            hit = _line_collective(ln)
+            if hit:
+                kinds[hit[0]] = kinds.get(hit[0], 0) + hit[1]
+            if "while(" in ln and "body=" in ln:
+                bm = _WHILE_BODY_RE.search(ln)
+                tm = _TRIP_RE.search(ln)
+                if bm:
+                    edge.append((bm.group(1),
+                                 int(tm.group(1)) if tm else 1))
+        per_comp_kind[name] = kinds
+        edges[name] = edge
+
+    mult = {name: 0 for name in comps}
+    if entry is None and comps:
+        entry = next(iter(comps))
+    mult[entry] = 1
+    # propagate multipliers through the while DAG (worklist)
+    work = [entry]
+    while work:
+        parent = work.pop()
+        for body, trip in edges.get(parent, ()):
+            if body in mult:
+                before = mult[body]
+                mult[body] += mult[parent] * trip
+                if mult[body] != before:
+                    work.append(body)
+    per_kind = {k: 0 for k in _COLLECTIVES}
+    for name, kinds in per_comp_kind.items():
+        if not kinds:
+            continue
+        m = mult.get(name, 0) or 1     # unreachable-with-collectives: 1x
+        for k, v in kinds.items():
+            per_kind[k] += m * v
+    return sum(per_kind.values()), per_kind
+
+
+def analyze_compiled(lowered, compiled, n_chips: int):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll_raw, per_kind_raw = collective_bytes(hlo)
+    coll, per_kind = collective_bytes_scaled(hlo)
+    mem = compiled.memory_analysis()
+    memory = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        memory[attr] = int(getattr(mem, attr, 0) or 0)
+    live = (memory["argument_size_in_bytes"] + memory["temp_size_in_bytes"]
+            + memory["output_size_in_bytes"]
+            - memory.get("alias_size_in_bytes", 0))
+    return {
+        "per_device_flops": flops,
+        "per_device_bytes": bytes_acc,
+        "per_device_collective_bytes": coll,
+        "per_device_collective_bytes_unscaled": coll_raw,
+        "collective_breakdown": per_kind,
+        "collective_breakdown_unscaled": per_kind_raw,
+        "memory": memory,
+        "per_device_live_bytes": live,
+        "compute_term_s": flops / PEAK_FLOPS,
+        "memory_term_s": bytes_acc / HBM_BW,
+        "collective_term_s": coll / ICI_BW,
+        "n_chips": n_chips,
+    }
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str | None):
+    from repro.configs.registry import get_config
+    from repro.launch import specs as specs_mod
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import lower_cell
+
+    cfg = get_config(arch)
+    ok, why = specs_mod.applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        print(f"[dryrun] {arch} x {shape}: SKIP ({why})")
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.time()
+    try:
+        lowered = lower_cell(cfg, mesh, shape)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        rec.update(analyze_compiled(lowered, compiled, n_chips))
+        rec["status"] = "ok"
+        rec["lower_s"] = round(t_lower, 1)
+        rec["compile_s"] = round(t_compile, 1)
+        print(f"[dryrun] {arch} x {shape} ({rec['mesh']}): OK  "
+              f"lower {t_lower:.0f}s compile {t_compile:.0f}s  "
+              f"flops/dev {rec['per_device_flops']:.3e}  "
+              f"bytes/dev {rec['per_device_bytes']:.3e}  "
+              f"coll/dev {rec['per_device_collective_bytes']:.3e}  "
+              f"live/dev {rec['per_device_live_bytes']/2**30:.2f} GiB")
+        mem = compiled.memory_analysis()
+        print("  memory_analysis:", {k: rec["memory"][k]
+                                     for k in rec["memory"]})
+        ca = compiled.cost_analysis()
+        print("  cost_analysis keys: flops=%.3e bytes=%.3e"
+              % (rec["per_device_flops"], rec["per_device_bytes"]))
+    except Exception as exc:            # noqa: BLE001 -- report, keep going
+        rec["status"] = "error"
+        rec["error"] = f"{type(exc).__name__}: {exc}"
+        traceback.print_exc()
+        print(f"[dryrun] {arch} x {shape}: FAILED {rec['error'][:200]}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}__{shape}__{rec['mesh'].replace('x','_')}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1, default=float)
+    return rec
+
+
+def main():
+    enable_compilation_cache()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    from repro.configs.registry import ARCHS
+    from repro.launch.specs import SHAPE_GRID
+
+    lm_archs = [a for a in ARCHS if a != "fcnn_zkdl_16l"]
+    cells = []
+    if args.all:
+        for a in lm_archs:
+            for s in SHAPE_GRID:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+    results = []
+    for mp in meshes:
+        for arch, shape in cells:
+            results.append(run_cell(arch, shape, mp, args.out))
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} failed")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module touches no jax device state -- required because the dry-run forces
+512 host devices while smoke tests must see exactly one.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; (2,16,16) = 512 chips across two pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, found {len(devices)}; "
+            "run under launch/dryrun.py (which forces host devices) or on "
+            "real hardware")
+    import numpy as np
+    dev_array = np.asarray(devices[:need]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_debug_mesh(shape=(1, 1), axes=("data", "model")):
+    """Single-device mesh for tests."""
+    import numpy as np
+    return jax.sharding.Mesh(np.asarray(jax.devices()[:1]).reshape(shape), axes)
+
+
+def batch_axes(mesh) -> tuple:
+    """The mesh axes the global batch is sharded over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

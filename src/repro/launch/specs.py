@@ -1,0 +1,95 @@
+"""ShapeDtypeStruct stand-ins for every model input (weak-type-correct,
+shardable, no device allocation) -- the dry-run's raw material.
+
+The shape grid assigned to this paper:
+    train_4k     seq_len=4096   global_batch=256   (train_step)
+    prefill_32k  seq_len=32768  global_batch=32    (prefill_step)
+    decode_32k   seq_len=32768  global_batch=128   (decode_step, KV=32k)
+    long_500k    seq_len=524288 global_batch=1     (decode; SSM/hybrid only)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+SHAPE_GRID: Dict[str, Tuple[int, int, str]] = {
+    # name: (seq_len, global_batch, kind)
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+SUBQUADRATIC = ("ssm", "hybrid")
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    """(runs?, reason-if-skipped) for an (arch x shape) cell."""
+    seq, gb, kind = SHAPE_GRID[shape_name]
+    if shape_name == "long_500k" and cfg.family not in SUBQUADRATIC:
+        return False, "full-attention arch: 512k dense decode is the quadratic regime this shape excludes (DESIGN.md §4)"
+    return True, ""
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def train_batch_specs(cfg: ModelConfig, seq: int, batch: int) -> Dict:
+    if cfg.family == "vlm":
+        return {
+            "embeds": SDS((batch, seq, cfg.d_model), _dt(cfg)),
+            "positions3": SDS((3, batch, seq), jnp.int32),
+            "labels": SDS((batch, seq), jnp.int32),
+        }
+    if cfg.family == "encdec":
+        return {
+            "frames": SDS((batch, seq, cfg.d_model), _dt(cfg)),
+            "tokens": SDS((batch, seq), jnp.int32),
+            "labels": SDS((batch, seq), jnp.int32),
+        }
+    return {
+        "tokens": SDS((batch, seq), jnp.int32),
+        "labels": SDS((batch, seq), jnp.int32),
+    }
+
+
+def decode_token_specs(cfg: ModelConfig, batch: int) -> Dict:
+    if cfg.family == "vlm":
+        return {"token": SDS((batch, 1, cfg.d_model), _dt(cfg)),
+                "positions3": SDS((3, batch, 1), jnp.int32)}
+    return {"token": SDS((batch,), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.eval_shape(
+        functools.partial(transformer.make_cache, cfg, batch, max_seq))
+
+
+def param_specs(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(transformer.init_params, cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict:
+    """All abstract inputs for the given cell, keyed by role."""
+    seq, batch, kind = SHAPE_GRID[shape_name]
+    if kind == "train":
+        return {"kind": "train",
+                "batch": train_batch_specs(cfg, seq, batch)}
+    if kind == "prefill":
+        return {"kind": "prefill",
+                "batch": train_batch_specs(cfg, seq, batch)}
+    return {"kind": "decode",
+            "cache": cache_specs(cfg, batch, seq),
+            **decode_token_specs(cfg, batch),
+            "pos": SDS((), jnp.int32)}

@@ -1,0 +1,187 @@
+"""Production training driver.
+
+    python -m repro.launch.train --arch qwen3-0.6b --steps 100 \
+        --seq 512 --global-batch 8 --mesh 1x1 \
+        --ckpt-dir /tmp/run0 --ckpt-every 20 \
+        --compress int8 [--fail-at 37] [--resume]
+
+One entry point for the debug mesh (CPU), the single-pod 16x16 and the
+multi-pod 2x16x16 production meshes (--mesh accepts "DxM" or "PxDxM").
+Fault tolerance: periodic checkpoints, restart-from-latest (elastic: the
+restore re-places leaves under whatever mesh the job came back with),
+straggler monitoring, and optional injected failures to drill the path.
+Distributed-optimization: gradient compression (int8 + error feedback or
+top-k) before the optimizer; bf16 Adam moments for >=100B models.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import time
+
+import numpy as np
+
+
+def parse_mesh(spec: str):
+    import jax
+
+    dims = tuple(int(x) for x in spec.lower().split("x"))
+    if len(dims) == 2:
+        return jax.make_mesh(dims, ("data", "model"))
+    if len(dims) == 3:
+        return jax.make_mesh(dims, ("pod", "data", "model"))
+    raise SystemExit(f"bad --mesh {spec!r} (want DxM or PxDxM)")
+
+
+def build_state(cfg, opt_cfg, mesh, rng_seed: int = 0):
+    import jax
+    import jax.numpy as jnp
+    from repro.distributed import sharding as shard_rules
+    from repro.launch import steps as steps_mod
+    from repro.models import transformer
+    from repro.train import optim
+
+    st_spec = steps_mod.state_specs(cfg, opt_cfg)
+    st_shard = steps_mod.state_shardings(cfg, mesh, st_spec)
+
+    @functools.partial(jax.jit, out_shardings=st_shard)
+    def init(key):
+        params = transformer.init_params(cfg, key)
+        return {"params": params,
+                "opt": optim.init_opt_state(params, opt_cfg)}
+
+    with mesh:
+        state = init(jax.random.PRNGKey(rng_seed))
+    return state, st_spec, st_shard
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--layers", type=int, default=0,
+                    help="override n_layers (reduced runs)")
+    ap.add_argument("--d-model", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "int8", "topk"])
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a failure at this step (drills restart)")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    from repro.util import enable_compilation_cache
+    enable_compilation_cache()
+    import jax
+    from repro.configs.registry import get_config
+    from repro.data import pipeline
+    from repro.distributed import hints
+    from repro.distributed import sharding as shard_rules
+    from repro.launch import steps as steps_mod
+    from repro.launch.mesh import batch_axes
+    from repro.launch.specs import train_batch_specs
+    from repro.train import compression, optim, resilience
+
+    cfg = get_config(args.arch)
+    overrides = {}
+    if args.layers:
+        overrides["n_layers"] = args.layers
+        if cfg.family == "encdec":
+            overrides.update(enc_layers=args.layers, dec_layers=args.layers)
+    if args.d_model:
+        overrides["d_model"] = args.d_model
+        overrides["head_dim"] = 0
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+
+    mesh = parse_mesh(args.mesh)
+    opt_cfg = steps_mod.default_opt_cfg(cfg)
+    comp_cfg = compression.CompressionConfig(mode=args.compress)
+
+    bax = batch_axes(mesh)
+    sizes = {"batch": 1, "model": mesh.shape.get("model", 1)}
+    for a in bax:
+        sizes["batch"] *= mesh.shape[a]
+    hints.set_axes(bax, "model" if "model" in mesh.axis_names else None,
+                   sizes, mesh=mesh)
+
+    # --- data + step -------------------------------------------------------
+    source = pipeline.make_source(cfg, args.seq, args.global_batch)
+    base_step = steps_mod.build_train_step(cfg, opt_cfg)
+
+    def train_step(state, batch):
+        import jax as _jax
+        from repro.models import transformer as _t
+
+        def loss_grads(p):
+            return _t.loss_fn(cfg, p, batch)
+
+        loss, grads = _jax.value_and_grad(loss_grads)(state["params"])
+        grads, new_res = compression.compress_grads(
+            comp_cfg, grads, state["residual"])
+        new_params, new_opt, metrics = optim.apply_updates(
+            opt_cfg, state["params"], grads, state["opt"])
+        metrics["loss"] = loss
+        return ({"params": new_params, "opt": new_opt,
+                 "residual": new_res}, metrics)
+
+    state, st_spec, st_shard = build_state(cfg, opt_cfg, mesh)
+    state["residual"] = compression.init_residuals(state["params"]) \
+        if comp_cfg.mode != "none" else {}
+    res_shard = jax.tree.map(lambda _: shard_rules.replicated(mesh),
+                             state["residual"])
+    if comp_cfg.mode != "none":
+        res_shard = shard_rules.param_shardings(cfg, mesh, state["residual"])
+    full_shard = dict(st_shard, residual=res_shard)
+    b_shard = shard_rules.batch_shardings(
+        cfg, mesh, train_batch_specs(cfg, args.seq, args.global_batch))
+    jitted = jax.jit(train_step, in_shardings=(full_shard, b_shard),
+                     out_shardings=(full_shard, None), donate_argnums=(0,))
+
+    policy = (resilience.CheckpointPolicy(args.ckpt_dir, args.ckpt_every)
+              if args.ckpt_dir else None)
+    injector = resilience.FailureInjector(args.fail_at)
+    monitor = resilience.StragglerMonitor()
+
+    def loop(st, start):
+        nonlocal state
+        if st is not None:
+            state = st
+        step = start
+        while step < args.steps:
+            t0 = time.perf_counter()
+            injector.check(step)
+            batch = source.batch(step)
+            with mesh:
+                state, metrics = jitted(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            monitor.observe(step, dt, lambda s, d: print(
+                f"[train] straggler at step {s}: {d:.2f}s", flush=True))
+            if step % args.log_every == 0:
+                print(f"[train] step {step} loss {loss:.4f} {dt:.2f}s",
+                      flush=True)
+            if policy:
+                policy.maybe_save(step, state)
+            step += 1
+        return state
+
+    if policy:
+        template = dict(st_spec, residual=state["residual"])
+        state = resilience.run_resilient(loop, template, policy,
+                                         shardings=full_shard)
+    else:
+        state = loop(None, 0)
+    print(f"[train] done: {args.steps} steps, "
+          f"straggler events: {len(monitor.events)}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

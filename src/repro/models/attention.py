@@ -1,0 +1,212 @@
+"""Attention: grouped-query (GQA), MLA (DeepSeek-V2), cross-attention.
+
+Grouped einsums keep the repeated-KV heads implicit (no materialized
+repeat), and the decode path consumes a (B, S_max, KV, Dh) cache updated
+with lax.dynamic_update_slice so the same code lowers for every serve
+shape in the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (apply_mrope, apply_rope, dense_init,
+                                 init_rms, rms_norm)
+
+NEG_INF = -1e9
+
+
+def init_attention(key, cfg: ModelConfig) -> Dict:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, h * dh)),
+        "wk": dense_init(ks[1], (d, kv * dh)),
+        "wv": dense_init(ks[2], (d, kv * dh)),
+        "wo": dense_init(ks[3], (h * dh, d)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms(dh)
+        p["k_norm"] = init_rms(dh)
+    return p
+
+
+def _gqa_scores(q, k, cfg: ModelConfig):
+    """q: (B,S,H,Dh), k: (B,T,KV,Dh) -> scores (B,KV,G,S,T) without repeat."""
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, dh)
+    return jnp.einsum("bskgd,btkd->bkgst", qg, k) / np.sqrt(dh)
+
+
+def _gqa_out(scores, v):
+    """scores (B,KV,G,S,T), v (B,T,KV,Dh) -> (B,S,KV*G*Dh)."""
+    b, kv, g, s, t = scores.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", scores, v)
+    return out.reshape(b, s, kv * g * v.shape[-1])
+
+
+def attention(params: Dict, x, cfg: ModelConfig, positions,
+              mask: Optional[jnp.ndarray] = None,
+              positions3: Optional[jnp.ndarray] = None,
+              kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None):
+    """Full-sequence attention (training / prefill).
+
+    mask: (S, T) boolean (True = attend) or None for causal-by-default
+    when cfg.causal; kv_override supplies cross-attention keys/values.
+    """
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, s, h, dh)
+    if kv_override is None:
+        k = (x @ params["wk"].astype(x.dtype)).reshape(b, s, kv, dh)
+        v = (x @ params["wv"].astype(x.dtype)).reshape(b, s, kv, dh)
+    else:
+        k, v = kv_override
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"]) if kv_override is None else k
+    if kv_override is None:
+        if cfg.mrope_sections:
+            q = apply_mrope(q, positions3, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions3, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    scores = _gqa_scores(q, k, cfg)
+    t = k.shape[1]
+    if mask is None and cfg.causal and kv_override is None:
+        mask = jnp.tril(jnp.ones((s, t), bool))
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = _gqa_out(probs, v)
+    return out @ params["wo"].astype(x.dtype), (k, v)
+
+
+def decode_attention(params: Dict, x, cfg: ModelConfig, cache_k, cache_v,
+                     pos, positions3=None):
+    """Single-token decode: x (B,1,d); cache (B,S_max,KV,Dh); pos scalar.
+
+    Returns (out, new_cache_k, new_cache_v)."""
+    b, _, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, 1, h, dh)
+    k_new = (x @ params["wk"].astype(x.dtype)).reshape(b, 1, kv, dh)
+    v_new = (x @ params["wv"].astype(x.dtype)).reshape(b, 1, kv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k_new = rms_norm(k_new, params["k_norm"])
+    posb = jnp.full((b, 1), pos, jnp.int32)
+    if cfg.mrope_sections:
+        q = apply_mrope(q, positions3, cfg.rope_theta, cfg.mrope_sections)
+        k_new = apply_mrope(k_new, positions3, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, posb, cfg.rope_theta)
+        k_new = apply_rope(k_new, posb, cfg.rope_theta)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k_new.astype(cache_k.dtype), (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v_new.astype(cache_v.dtype), (0, pos, 0, 0))
+    scores = _gqa_scores(q, cache_k.astype(x.dtype), cfg)
+    t = cache_k.shape[1]
+    valid = (jnp.arange(t) <= pos)[None, None, None, None, :]
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = _gqa_out(probs, cache_v.astype(x.dtype))
+    return out @ params["wo"].astype(x.dtype), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLA: multi-head latent attention (DeepSeek-V2).  The KV cache stores only
+# the compressed c_kv (kv_lora_rank) + the shared RoPE key (qk_rope_dim).
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig) -> Dict:
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], (d, h * (dn + dr))),
+        "wdkv": dense_init(ks[1], (d, r)),
+        "wkpe": dense_init(ks[2], (d, dr)),
+        "wuk": dense_init(ks[3], (r, h * dn)),
+        "wuv": dense_init(ks[4], (r, h * dv)),
+        "wo": dense_init(ks[5], (h * dv, d)),
+        "ckv_norm": init_rms(r),
+    }
+
+
+def mla_attention(params: Dict, x, cfg: ModelConfig, positions):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, s, h, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    c_kv = rms_norm(x @ params["wdkv"].astype(x.dtype), params["ckv_norm"])
+    k_pe = apply_rope((x @ params["wkpe"].astype(x.dtype))[:, :, None, :],
+                      positions, cfg.rope_theta)          # (B,S,1,dr)
+    k_nope = (c_kv @ params["wuk"].astype(x.dtype)).reshape(b, s, h, dn)
+    v = (c_kv @ params["wuv"].astype(x.dtype)).reshape(b, s, h, dv)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe, (b, s, h, dr))], -1)
+    q_full = jnp.concatenate([q_nope, q_pe], -1)
+    scores = jnp.einsum("bshd,bthd->bhst", q_full, k) / np.sqrt(dn + dr)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(x.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v).reshape(b, s, h * dv)
+    return out @ params["wo"].astype(x.dtype), (c_kv, k_pe[:, :, 0, :])
+
+
+def mla_decode(params: Dict, x, cfg: ModelConfig, cache_ckv, cache_kpe, pos,
+               absorbed: bool = True):
+    """MLA decode against the compressed cache.
+
+    absorbed=True uses the W_uk-absorbed query trick (beyond-paper perf
+    iteration: attention runs in the rank-r latent space, avoiding the
+    per-step re-expansion of K from the whole cache).
+    """
+    b, _, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, 1, h, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    posb = jnp.full((b, 1), pos, jnp.int32)
+    q_pe = apply_rope(q_pe, posb, cfg.rope_theta)
+    c_new = rms_norm(x @ params["wdkv"].astype(x.dtype), params["ckv_norm"])
+    kpe_new = apply_rope((x @ params["wkpe"].astype(x.dtype))[:, :, None, :],
+                         posb, cfg.rope_theta)[:, :, 0, :]
+    cache_ckv = jax.lax.dynamic_update_slice(
+        cache_ckv, c_new.astype(cache_ckv.dtype), (0, pos, 0))
+    cache_kpe = jax.lax.dynamic_update_slice(
+        cache_kpe, kpe_new.astype(cache_kpe.dtype), (0, pos, 0))
+    t = cache_ckv.shape[1]
+    ckv = cache_ckv.astype(x.dtype)
+    if absorbed:
+        # q_abs = q_nope @ W_uk^T per head: (B,1,H,r)
+        wuk = params["wuk"].astype(x.dtype).reshape(r, h, dn)
+        q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, wuk)
+        s_nope = jnp.einsum("bshr,btr->bhst", q_abs, ckv)
+    else:
+        k_nope = (ckv @ params["wuk"].astype(x.dtype)).reshape(b, t, h, dn)
+        s_nope = jnp.einsum("bshd,bthd->bhst", q_nope, k_nope)
+    s_pe = jnp.einsum("bshd,btd->bhst", q_pe, cache_kpe.astype(x.dtype))
+    scores = (s_nope + s_pe) / np.sqrt(dn + dr)
+    valid = (jnp.arange(t) <= pos)[None, None, None, :]
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(x.dtype)
+    if absorbed:
+        # out latent = probs @ ckv, then expand through W_uv per head
+        lat = jnp.einsum("bhst,btr->bshr", probs, ckv)
+        wuv = params["wuv"].astype(x.dtype).reshape(r, h, dv)
+        out = jnp.einsum("bshr,rhd->bshd", lat, wuv).reshape(b, 1, h * dv)
+    else:
+        v = (ckv @ params["wuv"].astype(x.dtype)).reshape(b, t, h, dv)
+        out = jnp.einsum("bhst,bthd->bshd", probs, v).reshape(b, 1, h * dv)
+    return out @ params["wo"].astype(x.dtype), cache_ckv, cache_kpe

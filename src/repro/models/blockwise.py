@@ -1,0 +1,92 @@
+"""Blockwise (flash-style) attention in pure JAX: online softmax over KV
+chunks inside a q-chunk scan.  Required for the 32k prefill shapes, where
+dense (S x T) score materialization is impossible; also the baseline the
+Pallas attention kernel is validated against.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import hints
+
+NEG_INF = -1e9
+
+
+def blockwise_attention(q, k, v, *, causal: bool, q_chunk: int = 1024,
+                        kv_chunk: int = 1024, anchor: str = "auto"):
+    """q: (B,S,H,D), k/v: (B,T,KV,D) grouped-query; returns (B,S,H,D)."""
+    b, s, h, d = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, t)
+    nq, nk = s // q_chunk, t // kv_chunk
+    assert s % q_chunk == 0 and t % kv_chunk == 0
+
+    qg = q.reshape(b, nq, q_chunk, kv, g, d)
+    kc = k.reshape(b, nk, kv_chunk, kv, d)
+    vc = v.reshape(b, nk, kv_chunk, kv, d)
+    # Anchor the kv-group axis to MODEL: SPMD loses the head sharding
+    # across the reshape + scan boundary and re-gathers q/k/v inside the
+    # kv-chunk loop otherwise -- per-layer wire bytes blow up ~10x
+    # (EXPERIMENTS.md §Perf, deepseek-7b iter 1).  When kv does NOT
+    # divide the model axis the constraint pins the head dims replicated
+    # (one up-front gather per layer) -- a win for wide archs, a loss for
+    # small ones, hence the per-arch "auto"/"on"/"off" policy.
+    msize = hints.axis_size("MODEL")
+    apply_anchor = (anchor == "on"
+                    or (anchor == "auto" and msize > 1 and kv % msize == 0))
+    if apply_anchor:
+        qg = hints.constrain(qg, ("BATCH", None, None, "MODEL", None, None))
+        kc = hints.constrain(kc, ("BATCH", None, None, "MODEL", None))
+        vc = hints.constrain(vc, ("BATCH", None, None, "MODEL", None))
+    scale = 1.0 / np.sqrt(d)
+
+    def q_block(qi, q_blk):
+        # online softmax state (sharded like the inputs: kv on MODEL)
+        acc = jnp.zeros((b, kv, g, q_chunk, d), jnp.float32)
+        m = jnp.full((b, kv, g, q_chunk), -jnp.inf, jnp.float32)
+        l = jnp.zeros((b, kv, g, q_chunk), jnp.float32)
+        if apply_anchor:
+            acc = hints.constrain(acc, ("BATCH", "MODEL", None, None, None))
+            m = hints.constrain(m, ("BATCH", "MODEL", None, None))
+            l = hints.constrain(l, ("BATCH", "MODEL", None, None))
+
+        def kv_block(carry, inp):
+            acc, m, l = carry
+            ki, k_blk, v_blk = inp
+            scores = jnp.einsum("bskgd,btkd->bkgst", q_blk, k_blk) * scale
+            scores = scores.astype(jnp.float32)
+            if causal:
+                qpos = qi * q_chunk + jnp.arange(q_chunk)
+                kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+                mask = qpos[:, None] >= kpos[None, :]
+                scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+            p = jnp.exp(scores - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgst,btkd->bkgsd", p, v_blk.astype(jnp.float32))
+            l = l * corr + jnp.sum(p, axis=-1)
+            return (acc, m_new, l), None
+
+        ks_idx = jnp.arange(nk)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_block, (acc, m, l),
+            (ks_idx, jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        # emit bf16 immediately: halves the stacked q-block output buffers
+        return jnp.moveaxis(out, 3, 1).astype(q.dtype)     # (b,qc,kv,g,d)
+
+    idx = jnp.arange(nq)
+    outs = jax.lax.map(lambda inp: q_block(inp[0], inp[1]),
+                       (idx, jnp.moveaxis(qg, 1, 0)))
+    if apply_anchor:
+        outs = hints.constrain(outs,
+                               (None, "BATCH", None, "MODEL", None, None))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, d)
+    return out.astype(q.dtype)

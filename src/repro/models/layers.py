@@ -1,0 +1,93 @@
+"""Shared neural layers: norms, rotary embeddings, MLPs (pure functional)."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def init_rms(d: int):
+    return jnp.ones((d,), jnp.float32)
+
+
+def dense_init(key, shape, in_axis: int = 0):
+    fan_in = shape[in_axis]
+    scale = 1.0 / np.sqrt(fan_in)
+    return jax.random.uniform(key, shape, jnp.float32, -scale, scale)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, Dh); positions: (B, S) int32."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                      # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (B,S,half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections: Tuple[int, ...]):
+    """Multimodal RoPE (qwen2-vl): positions3 (3, B, S); the rotary half-dim
+    is split into `sections` (t, h, w), each using its own position stream."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)                      # (half,)
+    # choose the position stream per frequency-section
+    sec_id = np.repeat(np.arange(len(sections)), sections)      # (half,)
+    pos = positions3[sec_id, :, :]                              # (half, B, S)
+    ang = jnp.transpose(pos, (1, 2, 0)).astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU-style; act configurable so ReLU nets are zkReLU-provable)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, (d_model, d_ff)),
+        "wg": dense_init(k2, (d_model, d_ff)),
+        "wo": dense_init(k3, (d_ff, d_model)),
+    }
+
+
+def mlp(params: Dict, x, act_name: str):
+    act = activation(act_name)
+    h = act(x @ params["wg"].astype(x.dtype)) * (x @ params["wi"].astype(x.dtype))
+    return h @ params["wo"].astype(x.dtype)
+
+
+def cross_entropy(logits, labels, vocab: int):
+    """Mean CE over tokens; logits (..., V) any float dtype."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)

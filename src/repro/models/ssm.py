@@ -1,0 +1,158 @@
+"""Mamba2 (state-space duality / SSD) blocks: chunked train scan + O(1) decode.
+
+Follows the SSD algorithm of Dao & Gu (arXiv 2405.21060): within-chunk
+"attention-like" diagonal blocks + inter-chunk recurrence on the
+(H, P, N) state, all in exact einsum form.  Decode keeps a constant-size
+recurrent state plus a depthwise-conv ring buffer.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, init_rms, rms_norm
+
+
+def init_ssm(key, cfg: ModelConfig) -> Dict:
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_nheads
+    conv_ch = di + 2 * g * n
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * g * n + h)),
+        "conv": jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch), jnp.float32) * 0.1,
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": init_rms(di),
+        "out_proj": dense_init(ks[2], (di, d)),
+    }
+
+
+def _segsum(dA):
+    """dA: (..., L) -> (..., L, L) with out[i,j] = sum_{j<k<=i} dA_k (i>=j)."""
+    L = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _split_proj(params, x, cfg: ModelConfig):
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_nheads
+    proj = x @ params["in_proj"].astype(x.dtype)
+    z = proj[..., :di]
+    xbc = proj[..., di: di + di + 2 * g * n]
+    dt = proj[..., -h:]
+    return z, xbc, dt
+
+
+def ssd_scan(params: Dict, x, cfg: ModelConfig,
+             init_state=None, init_conv=None):
+    """x: (B, T, d_model) with T % chunk == 0. Returns (y, final_state)."""
+    b, t, _ = x.shape
+    di = cfg.d_inner
+    g, n, h, p = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    ck = min(cfg.ssm_chunk, t)
+    assert t % ck == 0
+    nc = t // ck
+
+    z, xbc, dt = _split_proj(params, x, cfg)
+    # causal depthwise conv over (x, B, C) channels
+    kw = params["conv"].astype(x.dtype)
+    pad = jnp.zeros((b, cfg.ssm_conv - 1, xbc.shape[-1]), x.dtype)
+    if init_conv is not None:
+        pad = init_conv.astype(x.dtype)
+    xpad = jnp.concatenate([pad, xbc], axis=1)
+    conv = sum(xpad[:, i: i + t] * kw[i][None, None]
+               for i in range(cfg.ssm_conv))
+    conv = jax.nn.silu(conv)
+    new_conv = xpad[:, t:]                                  # ring buffer tail
+    xs = conv[..., :di].reshape(b, t, h, p)
+    bmat = conv[..., di: di + g * n].reshape(b, t, g, n)
+    cmat = conv[..., di + g * n:].reshape(b, t, g, n)
+
+    a = -jnp.exp(params["a_log"]).astype(jnp.float32)       # (h,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None])   # (b,t,h)
+    dA = dt * a[None, None]                                 # (b,t,h)
+
+    # chunked views
+    xc = xs.reshape(b, nc, ck, h, p)
+    bc = jnp.repeat(bmat.reshape(b, nc, ck, g, n), h // g, axis=3)
+    cc = jnp.repeat(cmat.reshape(b, nc, ck, g, n), h // g, axis=3)
+    dtc = dt.reshape(b, nc, ck, h)
+    dAc = dA.reshape(b, nc, ck, h)
+    xdt = (xc * dtc[..., None]).astype(jnp.float32)
+
+    # 1) within-chunk (diagonal blocks)
+    lmat = jnp.exp(_segsum(jnp.moveaxis(dAc, -1, -2)))      # (b,nc,h,ck,ck)
+    y_diag = jnp.einsum("bclhn,bchls,bcshn,bcshp->bclhp",
+                        cc.astype(jnp.float32), lmat,
+                        bc.astype(jnp.float32), xdt)
+
+    # 2) per-chunk states
+    cs = jnp.cumsum(dAc, axis=2)
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)           # (b,nc,ck,h)
+    states = jnp.einsum("bcshn,bcsh,bcshp->bchpn",
+                        bc.astype(jnp.float32), decay_to_end, xdt)
+
+    # 3) inter-chunk recurrence
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                  # (b,nc,h)
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                    # emit PREV state
+
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+            else init_state.astype(jnp.float32))
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)           # (b,nc,h,p,n)
+
+    # 4) contribution of carried-in state
+    decay_from_start = jnp.exp(cs)                          # (b,nc,ck,h)
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp",
+                       cc.astype(jnp.float32), prev_states, decay_from_start)
+
+    y = (y_diag + y_off).reshape(b, t, h, p)
+    y = y + xs.astype(jnp.float32) * params["d_skip"][None, None, :, None]
+    y = y.reshape(b, t, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    out = y @ params["out_proj"].astype(x.dtype)
+    return out, (final, new_conv)
+
+
+def ssd_decode(params: Dict, x, cfg: ModelConfig, state, conv_buf):
+    """Single-token step. x: (B,1,d); state (B,H,P,N); conv_buf (B,K-1,ch)."""
+    b = x.shape[0]
+    di = cfg.d_inner
+    g, n, h, p = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    z, xbc, dt = _split_proj(params, x, cfg)
+    kw = params["conv"].astype(x.dtype)
+    window = jnp.concatenate([conv_buf.astype(x.dtype), xbc], axis=1)
+    conv = jnp.einsum("bkc,kc->bc", window, kw)[:, None]
+    conv = jax.nn.silu(conv)
+    new_buf = window[:, 1:]
+    xs = conv[..., :di].reshape(b, h, p)
+    bmat = jnp.repeat(conv[..., di: di + g * n].reshape(b, g, n), h // g, 1)
+    cmat = jnp.repeat(conv[..., di + g * n:].reshape(b, g, n), h // g, 1)
+
+    a = -jnp.exp(params["a_log"]).astype(jnp.float32)
+    dts = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"][None])
+    dA = jnp.exp(dts * a[None])                             # (b,h)
+    state = (state.astype(jnp.float32) * dA[:, :, None, None]
+             + jnp.einsum("bh,bhn,bhp->bhpn", dts, bmat.astype(jnp.float32),
+                          xs.astype(jnp.float32)))
+    y = jnp.einsum("bhn,bhpn->bhp", cmat.astype(jnp.float32), state)
+    y = y + xs.astype(jnp.float32) * params["d_skip"][None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    return y @ params["out_proj"].astype(x.dtype), state, new_buf

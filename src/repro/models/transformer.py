@@ -1,0 +1,505 @@
+"""Model assembly for all assigned architectures.
+
+Functional style (param pytrees + pure functions).  Uniform layer stacks
+are scanned (jax.lax.scan over stacked params) so the compiled HLO holds
+one layer body regardless of depth -- essential for the 512-device
+dry-run compile times and the standard production pattern (MaxText).
+
+Exposes, per model: init / loss / prefill / decode_step, plus cache
+constructors. The launcher (repro.launch) wraps these into pjit'd
+train/serve steps with sharding rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.blockwise import blockwise_attention
+from repro.models.layers import (apply_rope, cross_entropy, dense_init,
+                                 init_mlp, init_rms, mlp, rms_norm)
+
+DENSE_ATTN_MAX_SEQ = 2048     # above this, use blockwise attention
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _init_dense_block(key, cfg: ModelConfig) -> Dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": init_rms(cfg.d_model),
+        "ln2": init_rms(cfg.d_model),
+        "attn": (attn_mod.init_mla(k1, cfg) if cfg.mla
+                 else attn_mod.init_attention(k1, cfg)),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe_mod.init_moe(k2, cfg)
+    else:
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _init_cross_block(key, cfg: ModelConfig) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": init_rms(cfg.d_model), "ln2": init_rms(cfg.d_model),
+        "ln3": init_rms(cfg.d_model),
+        "attn": attn_mod.init_attention(k1, cfg),
+        "cross": attn_mod.init_attention(k2, cfg),
+        "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _stack(keys, fn):
+    ps = [fn(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+
+
+def init_params(cfg: ModelConfig, rng) -> Dict:
+    d, v = cfg.d_model, cfg.vocab
+    ks = jax.random.split(rng, 8)
+    params: Dict[str, Any] = {
+        "embed": jax.random.normal(ks[0], (v, d), jnp.float32) * 0.02,
+        "final_norm": init_rms(d),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(ks[1], (d, v))
+
+    if cfg.family == "ssm":
+        params["blocks"] = _stack(
+            jax.random.split(ks[2], cfg.n_layers),
+            lambda k: {"ln": init_rms(d), "ssm": ssm_mod.init_ssm(k, cfg)})
+    elif cfg.family == "hybrid":
+        params["blocks"] = _stack(
+            jax.random.split(ks[2], cfg.n_layers),
+            lambda k: {"ln": init_rms(d), "ssm": ssm_mod.init_ssm(k, cfg)})
+        params["shared_attn"] = _init_dense_block(ks[3], cfg)
+    elif cfg.family == "encdec":
+        params["enc"] = _stack(jax.random.split(ks[2], cfg.enc_layers),
+                               lambda k: _init_dense_block(k, cfg))
+        params["dec"] = _stack(jax.random.split(ks[3], cfg.dec_layers),
+                               lambda k: _init_cross_block(k, cfg))
+    else:   # dense / moe / vlm
+        n_moe = cfg.n_layers - cfg.first_dense
+        if cfg.first_dense:
+            params["dense_blocks"] = _stack(
+                jax.random.split(ks[4], cfg.first_dense),
+                lambda k: _init_dense_block(
+                    k, dataclasses.replace(cfg, n_experts=0)))
+        params["blocks"] = _stack(jax.random.split(ks[2], n_moe),
+                                  lambda k: _init_dense_block(k, cfg))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _attention_any(params, x, cfg: ModelConfig, positions, positions3):
+    s = x.shape[1]
+    if cfg.mla:
+        out, kvc = attn_mod.mla_attention(params, x, cfg, positions)
+        return out, kvc
+    if s > DENSE_ATTN_MAX_SEQ and not cfg.mrope_sections:
+        # blockwise path (rope applied inside attention helper below)
+        b, _, d = x.shape
+        h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        q = (x @ params["wq"].astype(x.dtype)).reshape(b, s, h, dh)
+        k = (x @ params["wk"].astype(x.dtype)).reshape(b, s, kv, dh)
+        v = (x @ params["wv"].astype(x.dtype)).reshape(b, s, kv, dh)
+        if cfg.qk_norm:
+            q = rms_norm(q, params["q_norm"])
+            k = rms_norm(k, params["k_norm"])
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        out = blockwise_attention(q, k, v, causal=cfg.causal,
+                                  anchor=cfg.blockwise_anchor)
+        out = out.reshape(b, s, h * dh) @ params["wo"].astype(x.dtype)
+        return out, (k, v)
+    out, kvc = attn_mod.attention(params, x, cfg, positions,
+                                  positions3=positions3)
+    return out, kvc
+
+
+def _dense_block_fwd(blk, x, cfg: ModelConfig, positions, positions3=None,
+                     collect_cache: bool = False):
+    from repro.distributed import hints
+    if cfg.seq_shard_carry:
+        # Megatron-SP: the residual carry lives S-sharded over 'model'
+        # (the scan carry + remat-saved input shrink 16x on the 16x16
+        # mesh); gather S here, re-shard at block exit.
+        x = hints.constrain(x, ("BATCH", None, None))
+    h, kvc = _attention_any(blk["attn"], rms_norm(x, blk["ln1"]), cfg,
+                            positions, positions3)
+    x = x + h
+    y = rms_norm(x, blk["ln2"])
+    if cfg.is_moe and "moe" in blk:
+        x = x + moe_mod.moe_ffn(blk["moe"], y, cfg)
+    else:
+        x = x + mlp(blk["mlp"], y, cfg.act)
+    if cfg.seq_shard_carry:
+        x = hints.constrain(x, ("BATCH", "MODEL", None))
+    return (x, kvc) if collect_cache else (x, None)
+
+
+def _scan_blocks(blocks, x, fwd, remat: bool, collect=False,
+                 scan: bool = True, remat_policy: str = "full"):
+    body = fwd
+    if remat:
+        if remat_policy == "dots":
+            # Save matmul outputs: the bwd pass recomputes only cheap
+            # elementwise work, so the fwd TP collectives (which sit
+            # downstream of dots) are NOT replayed in the bwd body.
+            body = jax.checkpoint(
+                fwd,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        else:
+            body = jax.checkpoint(fwd)
+
+    def step(carry, blk):
+        out, cache = body(blk, carry)
+        return out, cache
+
+    if scan:
+        return jax.lax.scan(step, x, blocks)
+    # Unrolled python loop: same math, every layer its own HLO.  Used to
+    # validate the analytic cost model (XLA's HloCostAnalysis counts a
+    # while body once, so scanned flops under-report by ~1/L; an unrolled
+    # compile of a reduced config is the ground truth it is checked
+    # against) and available to the perf loop for overlap experiments.
+    n = jax.tree.leaves(blocks)[0].shape[0]
+    stashes = []
+    for i in range(n):
+        blk = jax.tree.map(lambda a: a[i], blocks)
+        x, stash = step(x, blk)
+        stashes.append(stash)
+    if stashes and stashes[0] is not None:
+        stashes = jax.tree.map(lambda *xs: jnp.stack(xs), *stashes)
+    else:
+        stashes = None
+    return x, stashes
+
+
+def forward(cfg: ModelConfig, params: Dict, batch: Dict,
+            collect_cache: bool = False, head_last_only: bool = False):
+    """Returns (logits, caches) for LM-style models (incl. vlm/ssm/hybrid).
+
+    head_last_only: compute logits only for the final position (prefill
+    serving path -- avoids the full (B,S,V) logit tensor)."""
+    if cfg.family == "encdec":
+        return _forward_encdec(cfg, params, batch, collect_cache,
+                               head_last_only)
+    if "embeds" in batch:
+        x = batch["embeds"].astype(_dt(cfg))
+        b, s = x.shape[:2]
+    else:
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = params["embed"].astype(_dt(cfg))[tokens]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    positions3 = batch.get("positions3")
+
+    caches = None
+    if cfg.family in ("ssm", "hybrid"):
+        def blk_fwd(blk, carry):
+            y, st = ssm_mod.ssd_scan(blk["ssm"], rms_norm(carry, blk["ln"]), cfg)
+            out = carry + y
+            return out, (st if collect_cache else None)
+
+        if cfg.family == "ssm":
+            x, caches = _scan_blocks(params["blocks"], x, blk_fwd, cfg.remat,
+                                     collect_cache, scan=cfg.scan_layers,
+                                     remat_policy=cfg.remat_policy)
+        else:
+            # zamba2-style: shared attention block every cfg.attn_every layers
+            per = cfg.attn_every
+            n_groups = cfg.n_layers // per
+            cache_list = []
+            shared = params["shared_attn"]
+            shared_fwd = functools.partial(_dense_block_fwd, cfg=cfg,
+                                           positions=positions,
+                                           collect_cache=collect_cache)
+            if cfg.remat:
+                # the shared blocks run OUTSIDE the scanned stacks, so
+                # without this they save every intermediate for bwd
+                # (zamba2 train_4k: 9 un-remat'd attention blocks)
+                shared_fwd = jax.checkpoint(shared_fwd)
+            for gidx in range(n_groups):
+                hshared, kvc = shared_fwd(shared, x)
+                x = hshared[0] if isinstance(hshared, tuple) else hshared
+                if collect_cache:
+                    x, kvc = hshared if isinstance(hshared, tuple) else (hshared, None)
+                grp = jax.tree.map(lambda p: p[gidx * per:(gidx + 1) * per],
+                                   params["blocks"])
+                x, st = _scan_blocks(grp, x, blk_fwd, cfg.remat, collect_cache,
+                                     scan=cfg.scan_layers,
+                                     remat_policy=cfg.remat_policy)
+                cache_list.append((kvc, st))
+            caches = cache_list if collect_cache else None
+    else:
+        def blk_fwd(blk, carry):
+            out, kvc = _dense_block_fwd(blk, carry, cfg, positions,
+                                        positions3, collect_cache)
+            return out, kvc
+
+        if cfg.first_dense:
+            x, c0 = _scan_blocks(params["dense_blocks"], x, blk_fwd,
+                                 cfg.remat, collect_cache,
+                                 scan=cfg.scan_layers,
+                                 remat_policy=cfg.remat_policy)
+        x, caches = _scan_blocks(params["blocks"], x, blk_fwd, cfg.remat,
+                                 collect_cache, scan=cfg.scan_layers,
+                                     remat_policy=cfg.remat_policy)
+
+    if head_last_only:
+        x = x[:, -1:]
+    x = rms_norm(x, params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = x @ head.astype(x.dtype)
+    return logits, caches
+
+
+def _forward_encdec(cfg: ModelConfig, params: Dict, batch: Dict,
+                    collect_cache: bool, head_last_only: bool = False):
+    enc_x = batch["frames"].astype(_dt(cfg))
+    b, t_src = enc_x.shape[:2]
+    enc_pos = jnp.broadcast_to(jnp.arange(t_src, dtype=jnp.int32)[None],
+                               (b, t_src))
+    enc_cfg = dataclasses.replace(cfg, causal=False)
+
+    def enc_fwd(blk, carry):
+        out, _ = _dense_block_fwd(blk, carry, enc_cfg, enc_pos)
+        return out, None
+
+    enc_out, _ = _scan_blocks(params["enc"], enc_x, enc_fwd, cfg.remat)
+
+    tokens = batch["tokens"]
+    s = tokens.shape[1]
+    x = params["embed"].astype(_dt(cfg))[tokens]
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def dec_fwd(blk, carry):
+        h, kvc = attn_mod.attention(blk["attn"], rms_norm(carry, blk["ln1"]),
+                                    cfg, pos)
+        carry = carry + h
+        # cross attention over encoder output
+        y = rms_norm(carry, blk["ln2"])
+        kv = cfg.n_kv_heads
+        dh = cfg.head_dim
+        k = (enc_out @ blk["cross"]["wk"].astype(carry.dtype)).reshape(
+            b, t_src, kv, dh)
+        v = (enc_out @ blk["cross"]["wv"].astype(carry.dtype)).reshape(
+            b, t_src, kv, dh)
+        h2, _ = attn_mod.attention(blk["cross"], y, enc_cfg, pos,
+                                   kv_override=(k, v))
+        carry = carry + h2
+        carry = carry + mlp(blk["mlp"], rms_norm(carry, blk["ln3"]), cfg.act)
+        return carry, (kvc if collect_cache else None)
+
+    x, caches = _scan_blocks(params["dec"], x, dec_fwd, cfg.remat,
+                             collect_cache)
+    if head_last_only:
+        x = x[:, -1:]
+    x = rms_norm(x, params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    return x @ head.astype(x.dtype), (enc_out, caches)
+
+
+def loss_fn(cfg: ModelConfig, params: Dict, batch: Dict):
+    logits, _ = forward(cfg, params, batch)
+    return cross_entropy(logits, batch["labels"], cfg.vocab)
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init + decode step
+# ---------------------------------------------------------------------------
+
+def make_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict:
+    dt = _dt(cfg)
+    if cfg.family == "ssm":
+        return {
+            "state": jnp.zeros((cfg.n_layers, batch, cfg.ssm_nheads,
+                                cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1,
+                               cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state),
+                              dt),
+        }
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        return {
+            "state": jnp.zeros((cfg.n_layers, batch, cfg.ssm_nheads,
+                                cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1,
+                               cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state),
+                              dt),
+            "k": jnp.zeros((n_groups, batch, max_seq, cfg.n_kv_heads,
+                            cfg.head_dim), dt),
+            "v": jnp.zeros((n_groups, batch, max_seq, cfg.n_kv_heads,
+                            cfg.head_dim), dt),
+        }
+    if cfg.mla:
+        n = cfg.n_layers
+        return {
+            "ckv": jnp.zeros((n, batch, max_seq, cfg.kv_lora_rank), dt),
+            "kpe": jnp.zeros((n, batch, max_seq, cfg.qk_rope_dim), dt),
+        }
+    n = cfg.dec_layers if cfg.family == "encdec" else cfg.n_layers
+    cache = {
+        "k": jnp.zeros((n, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((n, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dt),
+    }
+    if cfg.family == "encdec":
+        # cross-attention K/V precomputed at prefill over source frames
+        cache["xk"] = jnp.zeros((n, batch, max_seq, cfg.n_kv_heads,
+                                 cfg.head_dim), dt)
+        cache["xv"] = jnp.zeros((n, batch, max_seq, cfg.n_kv_heads,
+                                 cfg.head_dim), dt)
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params: Dict, cache: Dict, token, pos,
+                positions3=None):
+    """One decode step. token: (B,) int32 (or embeds (B,1,d) for vlm);
+    pos: scalar int32. Returns (logits (B,V), new_cache)."""
+    dt = _dt(cfg)
+    if cfg.family in ("ssm", "hybrid"):
+        return _decode_ssm(cfg, params, cache, token, pos)
+    if token.ndim == 1:
+        x = params["embed"].astype(dt)[token][:, None, :]
+    else:
+        x = token.astype(dt)
+    b = x.shape[0]
+
+    if cfg.family == "encdec":
+        return _decode_encdec(cfg, params, cache, x, pos)
+
+    if cfg.mla:
+        def step(carry, inp):
+            blk, ckv, kpe = inp
+            h, ckv, kpe = attn_mod.mla_decode(blk["attn"],
+                                              rms_norm(carry, blk["ln1"]),
+                                              cfg, ckv, kpe, pos)
+            carry = carry + h
+            y = rms_norm(carry, blk["ln2"])
+            if cfg.is_moe and "moe" in blk:
+                carry = carry + moe_mod.moe_ffn(blk["moe"], y, cfg)
+            else:
+                carry = carry + mlp(blk["mlp"], y, cfg.act)
+            return carry, (ckv, kpe)
+
+        blocks = params["blocks"]
+        if cfg.first_dense:
+            nd = cfg.first_dense
+            x, (c0, p0) = jax.lax.scan(
+                step, x, (params["dense_blocks"], cache["ckv"][:nd],
+                          cache["kpe"][:nd]))
+            x, (c1, p1) = jax.lax.scan(
+                step, x, (blocks, cache["ckv"][nd:], cache["kpe"][nd:]))
+            new_cache = {"ckv": jnp.concatenate([c0, c1]),
+                         "kpe": jnp.concatenate([p0, p1])}
+        else:
+            x, (c1, p1) = jax.lax.scan(step, x, (blocks, cache["ckv"],
+                                                 cache["kpe"]))
+            new_cache = {"ckv": c1, "kpe": p1}
+    else:
+        def step(carry, inp):
+            blk, ck, cv = inp
+            h, ck, cv = attn_mod.decode_attention(
+                blk["attn"], rms_norm(carry, blk["ln1"]), cfg, ck, cv, pos,
+                positions3)
+            carry = carry + h
+            y = rms_norm(carry, blk["ln2"])
+            if cfg.is_moe and "moe" in blk:
+                carry = carry + moe_mod.moe_ffn(blk["moe"], y, cfg)
+            else:
+                carry = carry + mlp(blk["mlp"], y, cfg.act)
+            return carry, (ck, cv)
+
+        x, (nk, nv) = jax.lax.scan(step, x, (params["blocks"], cache["k"],
+                                             cache["v"]))
+        new_cache = {"k": nk, "v": nv}
+
+    x = rms_norm(x, params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = (x @ head.astype(x.dtype))[:, 0]
+    return logits, new_cache
+
+
+def _decode_ssm(cfg: ModelConfig, params, cache, token, pos):
+    dt = _dt(cfg)
+    x = params["embed"].astype(dt)[token][:, None, :]
+
+    def step(carry, inp):
+        blk, st, cb = inp
+        y, st, cb = ssm_mod.ssd_decode(blk["ssm"],
+                                       rms_norm(carry, blk["ln"]), cfg, st, cb)
+        return carry + y, (st, cb)
+
+    if cfg.family == "ssm":
+        x, (ns, ncv) = jax.lax.scan(step, x, (params["blocks"],
+                                              cache["state"], cache["conv"]))
+        new_cache = {"state": ns, "conv": ncv}
+    else:
+        per = cfg.attn_every
+        n_groups = cfg.n_layers // per
+        shared = params["shared_attn"]
+        states, convs, ks, vs = [], [], [], []
+        for gidx in range(n_groups):
+            h, ck, cv = attn_mod.decode_attention(
+                shared["attn"], rms_norm(x, shared["ln1"]), cfg,
+                cache["k"][gidx], cache["v"][gidx], pos)
+            x = x + h
+            x = x + mlp(shared["mlp"], rms_norm(x, shared["ln2"]), cfg.act)
+            ks.append(ck); vs.append(cv)
+            grp = jax.tree.map(lambda p: p[gidx * per:(gidx + 1) * per],
+                               params["blocks"])
+            x, (st, cb) = jax.lax.scan(
+                step, x, (grp, cache["state"][gidx * per:(gidx + 1) * per],
+                          cache["conv"][gidx * per:(gidx + 1) * per]))
+            states.append(st); convs.append(cb)
+        new_cache = {"state": jnp.concatenate(states),
+                     "conv": jnp.concatenate(convs),
+                     "k": jnp.stack(ks), "v": jnp.stack(vs)}
+    x = rms_norm(x, params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    return (x @ head.astype(x.dtype))[:, 0], new_cache
+
+
+def _decode_encdec(cfg: ModelConfig, params, cache, x, pos):
+    b = x.shape[0]
+
+    def step(carry, inp):
+        blk, ck, cv, xk, xv = inp
+        h, ck, cv = attn_mod.decode_attention(
+            blk["attn"], rms_norm(carry, blk["ln1"]), cfg, ck, cv, pos)
+        carry = carry + h
+        y = rms_norm(carry, blk["ln2"])
+        q_cfg = dataclasses.replace(cfg, causal=False)
+        h2, _ = attn_mod.attention(blk["cross"], y, q_cfg, None,
+                                   kv_override=(xk.astype(carry.dtype),
+                                                xv.astype(carry.dtype)))
+        carry = carry + h2
+        carry = carry + mlp(blk["mlp"], rms_norm(carry, blk["ln3"]), cfg.act)
+        return carry, (ck, cv)
+
+    x, (nk, nv) = jax.lax.scan(step, x, (params["dec"], cache["k"], cache["v"],
+                                         cache["xk"], cache["xv"]))
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = nk, nv
+    x = rms_norm(x, params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    return (x @ head.astype(x.dtype))[:, 0], new_cache

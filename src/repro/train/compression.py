@@ -1,0 +1,99 @@
+"""Gradient compression with error feedback (distributed-optimization
+trick for the 1000+-node regime).
+
+At 16x16+ scale the data-parallel gradient all-reduce moves
+2 bytes/param/step (bf16); int8 block-quantized compression halves it and
+top-k sparsification cuts it by ~kx.  Both are implemented as pure-jnp
+transforms compatible with pjit (the quantize/dequantize runs inside the
+train step; XLA reduces the compressed payload).
+
+Error feedback keeps the residual (g - dequant(quant(g))) in the optimizer
+state and adds it back the next step, which restores convergence to the
+uncompressed fixed point (Karimireddy et al. 2019) -- without it, int8
+rounding bias accumulates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    mode: str = "none"           # none | int8 | topk
+    block: int = 256             # int8: scale-block length
+    topk_frac: float = 0.01      # topk: fraction of entries kept
+    error_feedback: bool = True
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                        params)
+
+
+def _int8_quant(g, block: int):
+    flat = g.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, block)
+    scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return q, scale, pad
+
+
+def _int8_dequant(q, scale, pad, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+def _topk_mask(g, frac: float):
+    flat = g.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jnp.sort(jnp.abs(flat))[-k]
+    return (jnp.abs(g) >= thresh).astype(g.dtype)
+
+
+def compress_grads(cfg: CompressionConfig, grads, residuals):
+    """Returns (compressed-then-decompressed grads, new residuals).
+
+    The round trip models exactly what the wire sees; with pjit the
+    quantized representation is what crosses the data axis.
+    """
+    if cfg.mode == "none":
+        return grads, residuals
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32)
+        if cfg.error_feedback:
+            g32 = g32 + r
+        if cfg.mode == "int8":
+            q, scale, pad = _int8_quant(g32, cfg.block)
+            out = _int8_dequant(q, scale, pad, g32.shape)
+        elif cfg.mode == "topk":
+            out = g32 * _topk_mask(g32, cfg.topk_frac)
+        else:
+            raise ValueError(cfg.mode)
+        new_r = (g32 - out) if cfg.error_feedback else r
+        return out.astype(g.dtype), new_r
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residuals)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    new_g = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_r = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    return new_g, new_r
+
+
+def wire_bytes_per_param(cfg: CompressionConfig) -> float:
+    """Analytic bytes/param crossing the data axis (for the roofline)."""
+    if cfg.mode == "int8":
+        return 1.0 + 4.0 / cfg.block
+    if cfg.mode == "topk":
+        return cfg.topk_frac * 8.0       # value + index
+    return 2.0                           # bf16

@@ -1,0 +1,113 @@
+"""Fault tolerance for long-running multi-pod jobs.
+
+Three mechanisms, all host-side (they wrap the pjit'd step, never enter
+the compiled graph):
+
+* ``CheckpointPolicy`` -- periodic save + restart-from-latest.  Restore is
+  sharding-agnostic: checkpoints store full host arrays, so a job can come
+  back on a SMALLER or LARGER mesh (elastic rescale) -- the restore path
+  re-places every leaf under the new mesh's shardings.
+
+* ``StragglerMonitor`` -- per-step wall-time EMA; a step slower than
+  ``threshold`` x EMA flags a straggler event.  On real pods the action is
+  to quarantine the slow host and continue on the survivors (elastic
+  rescale); here the hook records the event and triggers the caller's
+  callback.
+
+* ``FailureInjector`` -- deterministic fault simulation for tests/examples
+  (raise at step k), proving the restart path end-to-end.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from repro.train import checkpoint
+
+
+@dataclasses.dataclass
+class CheckpointPolicy:
+    ckpt_dir: str
+    every: int = 50
+    keep: int = 3
+
+    def maybe_save(self, step: int, state) -> Optional[str]:
+        if step % self.every == 0 and step > 0:
+            return checkpoint.save(self.ckpt_dir, step, state)
+        return None
+
+    def restore_latest(self, state_template, shardings=None):
+        """Returns (state, start_step). state_template supplies the pytree
+        structure; `shardings` (optional) re-places leaves for the current
+        mesh -- this is the elastic-rescale path."""
+        step = checkpoint.latest_step(self.ckpt_dir)
+        if step is None:
+            return None, 0
+        state = checkpoint.restore(self.ckpt_dir, step, state_template)
+        if shardings is not None:
+            state = jax.device_put(state, shardings)
+        return state, step + 1
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    threshold: float = 3.0
+    ema_decay: float = 0.9
+    warmup: int = 3
+    _ema: float = 0.0
+    _n: int = 0
+    events: List[Dict] = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, dt: float,
+                on_straggler: Optional[Callable[[int, float], None]] = None
+                ) -> bool:
+        self._n += 1
+        if self._n <= self.warmup:
+            self._ema = dt if self._ema == 0 else (
+                self.ema_decay * self._ema + (1 - self.ema_decay) * dt)
+            return False
+        is_straggler = dt > self.threshold * self._ema
+        if is_straggler:
+            self.events.append({"step": step, "dt": dt, "ema": self._ema})
+            if on_straggler:
+                on_straggler(step, dt)
+        else:
+            self._ema = self.ema_decay * self._ema + (1 - self.ema_decay) * dt
+        return is_straggler
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    fail_at_step: Optional[int] = None
+    fired: bool = False
+
+    def check(self, step: int) -> None:
+        if (self.fail_at_step is not None and step == self.fail_at_step
+                and not self.fired):
+            self.fired = True
+            raise SimulatedFailure(f"injected failure at step {step}")
+
+
+def run_resilient(train_loop: Callable[[Any, int], Any],
+                  state_template, policy: CheckpointPolicy,
+                  shardings=None, max_restarts: int = 3):
+    """Drive ``train_loop(state, start_step) -> state`` with
+    restart-from-latest-checkpoint on failure.  Returns final state."""
+    restarts = 0
+    while True:
+        state, start = policy.restore_latest(state_template, shardings)
+        try:
+            return train_loop(state, start)
+        except SimulatedFailure as exc:
+            restarts += 1
+            print(f"[resilience] {exc}; restarting from latest checkpoint "
+                  f"(restart {restarts}/{max_restarts})", flush=True)
+            if restarts > max_restarts:
+                raise

@@ -1,0 +1,32 @@
+"""Shared utilities: persistent XLA compilation cache, timers."""
+from __future__ import annotations
+
+import contextlib
+import os
+import time
+
+_CACHE_DIR = os.environ.get("REPRO_JAX_CACHE", "/root/.cache/jaxcache")
+
+
+def enable_compilation_cache() -> None:
+    """Persist compiled executables across processes (tests, benchmarks)."""
+    import jax
+
+    os.makedirs(_CACHE_DIR, exist_ok=True)
+    try:
+        jax.config.update("jax_compilation_cache_dir", _CACHE_DIR)
+        # 0.0: the proof pipeline is built from hundreds of SMALL programs
+        # (per-round IPA/sumcheck shapes); at the default 0.5s threshold none
+        # of them persist and every process pays ~35s of recompiles.
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    except Exception:
+        pass  # older jax without the knobs
+
+
+@contextlib.contextmanager
+def timer(label: str, sink: dict | None = None):
+    t0 = time.perf_counter()
+    yield
+    dt = time.perf_counter() - t0
+    if sink is not None:
+        sink[label] = sink.get(label, 0.0) + dt

@@ -1,0 +1,6 @@
+"""Test configuration: persistent XLA cache (NO forced device count here --
+smoke tests and benches must see exactly 1 device; only launch/dryrun.py
+sets xla_force_host_platform_device_count)."""
+from repro.util import enable_compilation_cache
+
+enable_compilation_cache()

@@ -1,0 +1,156 @@
+"""Tests for MLE, sumcheck, and group/MSM primitives."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.field import FQ, FP, encode_ints, decode
+from repro.core import mle, group
+from repro.core.mle import enc, enc_vec, eval_mle, expand_point, fdot, fsum
+from repro.core.sumcheck import sumcheck_prove, sumcheck_verify, combine_final
+from repro.core.transcript import Transcript
+
+Q = FQ.modulus
+P = FP.modulus
+
+
+def table_from_ints(vals):
+    return jnp.asarray(encode_ints(FQ, np.array([v % Q for v in vals], dtype=object)))
+
+
+def test_eval_mle_on_hypercube():
+    rng = np.random.default_rng(0)
+    vals = [int(x) for x in rng.integers(0, 1000, size=8)]
+    t = table_from_ints(vals)
+    for i in range(8):
+        pt = [(i >> j) & 1 for j in range(3)]
+        got = int(decode(FQ, eval_mle(t, pt))[()])
+        assert got == vals[i]
+
+
+def test_expand_point_matches_eval():
+    rng = np.random.default_rng(1)
+    vals = [int(x) for x in rng.integers(0, Q, size=16, dtype=np.int64)]
+    t = table_from_ints(vals)
+    pt = [int(rng.integers(0, Q, dtype=np.int64)) for _ in range(4)]
+    direct = int(decode(FQ, eval_mle(t, pt))[()])
+    e = expand_point(pt)
+    via_dot = int(decode(FQ, fdot(t, e))[()])
+    assert direct == via_dot
+    # partition of unity
+    s = int(decode(FQ, fsum(e))[()])
+    assert s == 1
+
+
+def test_hexpand_matches_device():
+    rng = np.random.default_rng(5)
+    pt = [int(rng.integers(0, Q, dtype=np.int64)) for _ in range(3)]
+    host = mle.hexpand_point(pt)
+    dev = [int(v) for v in decode(FQ, expand_point(pt))]
+    assert host == dev
+
+
+@pytest.mark.parametrize("arity,d", [(1, 3), (2, 4), (3, 3)])
+def test_sumcheck_roundtrip(arity, d):
+    rng = np.random.default_rng(arity * 10 + d)
+    n = 1 << d
+    tables = [table_from_ints([int(x) for x in rng.integers(0, Q, size=n, dtype=np.int64)])
+              for _ in range(arity)]
+    products = [tuple(range(arity))]
+    claim = 0
+    hv = [[int(v) for v in decode(FQ, t)] for t in tables]
+    for i in range(n):
+        term = 1
+        for k in range(arity):
+            term = term * hv[k][i] % Q
+        claim = (claim + term) % Q
+    tp = Transcript(b"t")
+    proof, point, finals = sumcheck_prove(tables, products, tp, b"sc")
+    tv = Transcript(b"t")
+    vpoint, expected = sumcheck_verify(claim, proof, arity, d, tv, b"sc")
+    assert vpoint == point
+    assert expected == combine_final(products, finals)
+    # final values really are MLE evals at the point
+    for k in range(arity):
+        assert finals[k] == int(decode(FQ, eval_mle(tables[k], point))[()])
+
+
+def test_sumcheck_rejects_bad_claim():
+    rng = np.random.default_rng(9)
+    n = 8
+    t = table_from_ints([int(x) for x in rng.integers(0, Q, size=n, dtype=np.int64)])
+    tp = Transcript(b"t")
+    proof, _, _ = sumcheck_prove([t], [(0,)], tp, b"sc")
+    tv = Transcript(b"t")
+    with pytest.raises(ValueError):
+        sumcheck_verify(12345, proof, 1, 3, tv, b"sc")
+
+
+def test_sumcheck_two_products_shared_table():
+    rng = np.random.default_rng(11)
+    n = 16
+    tabs = [table_from_ints([int(x) for x in rng.integers(0, Q, size=n, dtype=np.int64)])
+            for _ in range(3)]
+    products = [(0, 1), (0, 2, 2)]
+    hv = [[int(v) for v in decode(FQ, t)] for t in tabs]
+    claim = 0
+    for i in range(n):
+        claim = (claim + hv[0][i] * hv[1][i] + hv[0][i] * hv[2][i] * hv[2][i]) % Q
+    tp, tv = Transcript(b"x"), Transcript(b"x")
+    proof, point, finals = sumcheck_prove(tabs, products, tp, b"s")
+    _, expected = sumcheck_verify(claim, proof, 3, 4, tv, b"s")
+    assert expected == combine_final(products, finals)
+
+
+# ---------------------------------------------------------------------------
+# Group / MSM
+# ---------------------------------------------------------------------------
+
+def test_group_pow_int():
+    g = group.group_gen()
+    x = group.decode_group(group.g_pow_int(g, 5))
+    assert x == pow(4, 5, P)
+    assert group.decode_group(group.g_pow_int(g, 0)) == 1
+    assert group.decode_group(group.g_pow_int(g, Q)) == 1  # order q subgroup
+
+
+def test_g_pow_vectorized():
+    gens = group.derive_generators(b"t1", 6)
+    exps = [3, 0, 1, Q - 1, 12345, 2**60]
+    out = group.g_pow(gens, group.exps_from_ints(exps))
+    for i, e in enumerate(exps):
+        base = group.decode_group(gens[i])
+        assert group.decode_group(out[i]) == pow(base, e % Q, P)
+
+
+@pytest.mark.parametrize("n,nbits", [(1, 61), (7, 61), (32, 61), (100, 16)])
+def test_msm_matches_naive(n, nbits):
+    rng = np.random.default_rng(n)
+    gens = group.derive_generators(b"t2", n)
+    exps = [int(rng.integers(0, 1 << min(nbits, 60), dtype=np.int64)) for _ in range(n)]
+    got = group.decode_group(group.msm(gens, group.exps_from_ints(exps), nbits=nbits))
+    expect = 1
+    for i, e in enumerate(exps):
+        expect = expect * pow(group.decode_group(gens[i]), e, P) % P
+    assert got == expect
+
+
+def test_msm_bits():
+    rng = np.random.default_rng(3)
+    n = 37
+    gens = group.derive_generators(b"t3", n)
+    bits = rng.integers(0, 2, size=n)
+    got = group.decode_group(group.msm_bits(gens, jnp.asarray(bits.astype(np.uint32))))
+    expect = 1
+    for i in range(n):
+        if bits[i]:
+            expect = expect * group.decode_group(gens[i]) % P
+    assert got == expect
+
+
+@settings(max_examples=10, deadline=None)
+@given(e=st.integers(min_value=0, max_value=Q - 1))
+def test_hypothesis_pow(e):
+    g = group.group_gen()
+    out = group.g_pow(g[None], group.exps_from_ints([e]))
+    assert group.decode_group(out[0]) == pow(4, e, P)

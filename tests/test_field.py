@@ -1,0 +1,117 @@
+"""Field layer tests: limb Montgomery arithmetic vs python-int oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.field import (
+    FQ, FP, add, sub, neg, mont_mul, inv, batch_inv, pow_const,
+    encode_ints, decode, encode_int, from_mont, to_mont, ints_to_limbs,
+    limbs_to_ints,
+)
+
+SPECS = [FQ, FP]
+
+
+def enc(spec, xs):
+    return jnp.asarray(encode_ints(spec, np.array(xs, dtype=object)))
+
+
+def dec(spec, a):
+    return decode(spec, np.asarray(a))
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.name)
+def test_roundtrip(spec):
+    vals = [0, 1, 2, spec.modulus - 1, 123456789, 2**60]
+    a = enc(spec, vals)
+    back = dec(spec, a)
+    assert [int(x) for x in back] == [v % spec.modulus for v in vals]
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.name)
+def test_add_sub_mul_known(spec):
+    rng = np.random.default_rng(0)
+    m = spec.modulus
+    xs = [int(rng.integers(0, 2**61)) % m for _ in range(64)]
+    ys = [int(rng.integers(0, 2**61)) % m for _ in range(64)]
+    a, b = enc(spec, xs), enc(spec, ys)
+    assert [int(v) for v in dec(spec, add(spec, a, b))] == [(x + y) % m for x, y in zip(xs, ys)]
+    assert [int(v) for v in dec(spec, sub(spec, a, b))] == [(x - y) % m for x, y in zip(xs, ys)]
+    assert [int(v) for v in dec(spec, mont_mul(spec, a, b))] == [(x * y) % m for x, y in zip(xs, ys)]
+    assert [int(v) for v in dec(spec, neg(spec, a))] == [(-x) % m for x in xs]
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.name)
+def test_edge_values(spec):
+    m = spec.modulus
+    edge = [0, 1, m - 1, m - 2, 2**16 - 1, 2**32 - 1, 2**48 - 1, m // 2]
+    a = enc(spec, edge)
+    for i, x in enumerate(edge):
+        for j, y in enumerate(edge):
+            got = int(dec(spec, mont_mul(spec, a[i], a[j]))[()])
+            assert got == (x * y) % m, (x, y)
+    s = int(dec(spec, add(spec, a[2], a[2]))[()])
+    assert s == (2 * (m - 1)) % m
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.name)
+def test_inv_and_pow(spec):
+    rng = np.random.default_rng(1)
+    m = spec.modulus
+    xs = [int(rng.integers(1, 2**60)) for _ in range(8)]
+    a = enc(spec, xs)
+    ia = inv(spec, a)
+    prod = mont_mul(spec, a, ia)
+    assert all(int(v) == 1 for v in dec(spec, prod))
+    p5 = pow_const(spec, a, 5)
+    assert [int(v) for v in dec(spec, p5)] == [pow(x, 5, m) for x in xs]
+    p0 = pow_const(spec, a, 0)
+    assert all(int(v) == 1 for v in dec(spec, p0))
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.name)
+def test_batch_inv(spec):
+    rng = np.random.default_rng(2)
+    xs = [int(rng.integers(1, spec.modulus)) for _ in range(33)]
+    a = enc(spec, xs)
+    b = batch_inv(spec, a)
+    m = spec.modulus
+    assert [int(v) for v in dec(spec, b)] == [pow(x, m - 2, m) for x in xs]
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    x=st.integers(min_value=0, max_value=FQ.modulus - 1),
+    y=st.integers(min_value=0, max_value=FQ.modulus - 1),
+)
+def test_hypothesis_mul_add_fq(x, y):
+    m = FQ.modulus
+    a, b = enc(FQ, [x]), enc(FQ, [y])
+    assert int(dec(FQ, mont_mul(FQ, a, b))[0]) == (x * y) % m
+    assert int(dec(FQ, add(FQ, a, b))[0]) == (x + y) % m
+    assert int(dec(FQ, sub(FQ, a, b))[0]) == (x - y) % m
+
+
+@settings(max_examples=30, deadline=None)
+@given(x=st.integers(min_value=0, max_value=FP.modulus - 1),
+       y=st.integers(min_value=0, max_value=FP.modulus - 1))
+def test_hypothesis_mul_fp(x, y):
+    assert int(dec(FP, mont_mul(FP, enc(FP, [x]), enc(FP, [y])))[0]) == (x * y) % FP.modulus
+
+
+def test_limb_roundtrip_multidim():
+    rng = np.random.default_rng(3)
+    vals = np.array([[int(rng.integers(0, 2**61)) for _ in range(3)]
+                     for _ in range(2)], dtype=object)
+    limbs = ints_to_limbs(vals)
+    assert limbs.shape == (2, 3, 4)
+    back = limbs_to_ints(limbs)
+    assert (back == vals).all()
+
+
+def test_mont_form_identity():
+    a = enc(FQ, [7])
+    std = from_mont(FQ, a)
+    again = to_mont(FQ, std)
+    assert (np.asarray(a) == np.asarray(again)).all()

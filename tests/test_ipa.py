@@ -1,0 +1,106 @@
+"""Tests for the zero-knowledge inner-product arguments."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.field import FQ, encode_ints, decode
+from repro.core import group, ipa, pedersen
+from repro.core.mle import fdot
+from repro.core.transcript import Transcript
+
+Q = FQ.modulus
+
+
+def field_vec(vals):
+    return jnp.asarray(encode_ints(FQ, np.array([v % Q for v in vals], dtype=object)))
+
+
+@pytest.mark.parametrize("n", [4, 16, 64])
+def test_open_roundtrip(n):
+    rng = np.random.default_rng(n)
+    key = pedersen.make_key(b"open-t", n)
+    a_int = [int(rng.integers(0, Q, dtype=np.uint64)) % Q for _ in range(n)]
+    b_int = [int(rng.integers(0, Q, dtype=np.uint64)) % Q for _ in range(n)]
+    a, b = field_vec(a_int), field_vec(b_int)
+    blind = int(rng.integers(0, Q, dtype=np.uint64)) % Q
+    com = pedersen.commit(key, a, blind)
+    claim = sum(x * y for x, y in zip(a_int, b_int)) % Q
+
+    tp = Transcript(b"ipa-test")
+    proof = ipa.open_prove(key, a, b, blind, claim, tp, rng)
+    tv = Transcript(b"ipa-test")
+    assert ipa.open_verify(key, com, b, claim, proof, tv)
+
+
+def test_open_rejects_wrong_claim():
+    n = 16
+    rng = np.random.default_rng(7)
+    key = pedersen.make_key(b"open-t", n)
+    a_int = [int(rng.integers(0, Q, dtype=np.uint64)) % Q for _ in range(n)]
+    b_int = [int(rng.integers(0, Q, dtype=np.uint64)) % Q for _ in range(n)]
+    a, b = field_vec(a_int), field_vec(b_int)
+    blind = 12345
+    com = pedersen.commit(key, a, blind)
+    claim = sum(x * y for x, y in zip(a_int, b_int)) % Q
+
+    tp = Transcript(b"ipa-test")
+    proof = ipa.open_prove(key, a, b, blind, claim, tp, rng)
+    tv = Transcript(b"ipa-test")
+    assert not ipa.open_verify(key, com, b, (claim + 1) % Q, proof, tv)
+
+
+def test_open_rejects_wrong_commitment():
+    n = 8
+    rng = np.random.default_rng(8)
+    key = pedersen.make_key(b"open-t", n)
+    a_int = [int(rng.integers(0, Q, dtype=np.uint64)) % Q for _ in range(n)]
+    b_int = [1] * n
+    a, b = field_vec(a_int), field_vec(b_int)
+    com = pedersen.commit(key, a, 99)
+    claim = sum(a_int) % Q
+    tp = Transcript(b"t")
+    proof = ipa.open_prove(key, a, b, 99, claim, tp, rng)
+    bad_com = group.g_mul(com, key.gens[0])
+    tv = Transcript(b"t")
+    assert not ipa.open_verify(key, bad_com, b, claim, proof, tv)
+
+
+@pytest.mark.parametrize("n", [4, 32])
+def test_pair_roundtrip(n):
+    rng = np.random.default_rng(100 + n)
+    g_gens = group.derive_generators(b"pair-G", n)
+    h_gens = group.derive_generators(b"pair-H", n)
+    h_blind = group.derive_generators(b"pair-h", 1)[0]
+    a_int = [int(rng.integers(0, Q, dtype=np.uint64)) % Q for _ in range(n)]
+    b_int = [int(rng.integers(0, Q, dtype=np.uint64)) % Q for _ in range(n)]
+    a, b = field_vec(a_int), field_vec(b_int)
+    blind = int(rng.integers(0, Q, dtype=np.uint64)) % Q
+    claim = sum(x * y for x, y in zip(a_int, b_int)) % Q
+    # C = h^blind G^a H^b
+    com = group.g_mul(
+        group.g_mul(group.msm_field(g_gens, a), group.msm_field(h_gens, b)),
+        group.g_pow_int(h_blind, blind))
+
+    tp = Transcript(b"pair")
+    proof = ipa.pair_prove(g_gens, h_gens, h_blind, a, b, blind, claim, tp, rng)
+    tv = Transcript(b"pair")
+    assert ipa.pair_verify(g_gens, h_gens, h_blind, com, claim, proof, tv, n)
+    tv2 = Transcript(b"pair")
+    assert not ipa.pair_verify(g_gens, h_gens, h_blind, com, (claim + 3) % Q,
+                               proof, tv2, n)
+
+
+def test_proof_is_logarithmic():
+    rng = np.random.default_rng(3)
+    sizes = {}
+    for n in [16, 64, 256]:
+        key = pedersen.make_key(b"open-t", n)
+        a_int = [int(rng.integers(0, Q, dtype=np.uint64)) % Q for _ in range(n)]
+        a = field_vec(a_int)
+        b = field_vec([1] * n)
+        com = pedersen.commit(key, a, 5)
+        claim = sum(a_int) % Q
+        tp = Transcript(b"t")
+        proof = ipa.open_prove(key, a, b, 5, claim, tp, rng)
+        sizes[n] = proof.size_bytes()
+    assert sizes[64] - sizes[16] == sizes[256] - sizes[64]  # +2 group els per 4x

@@ -1,0 +1,194 @@
+"""Per-kernel validation: Pallas body (interpret=True on CPU) vs ref.py
+oracle, swept over shapes, plus hypothesis property tests on exactness."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.field import FP, FQ, modarith
+from repro.core import mle
+from repro.kernels.limb_planes import pack_planes, unpack_planes
+from repro.kernels.modmul import modmul
+from repro.kernels.modmul.ref import modmul_pyint, modmul_ref
+from repro.kernels.sumcheck_fold import fold as kfold
+from repro.kernels.sumcheck_fold.ref import fold_ref
+from repro.kernels.qmatmul import qmatmul_i64
+from repro.kernels.qmatmul.ref import qmatmul_ref
+
+RNG = np.random.default_rng(7)
+
+
+def rand_mont(spec, n):
+    vals = RNG.integers(0, spec.modulus, size=n, dtype=np.uint64)
+    return jnp.asarray(modarith.encode_ints(
+        spec, np.array([int(v) % spec.modulus for v in vals], dtype=object)))
+
+
+# ---------------------------------------------------------------------------
+# layout transforms
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 7, 128, 1000, 4096])
+def test_pack_unpack_roundtrip(n):
+    a = rand_mont(FQ, n)
+    planes, n_out = pack_planes(a)
+    assert n_out == n
+    assert planes.shape[0] == 4 and planes.shape[2] == 128
+    back = unpack_planes(planes, n)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(a))
+
+
+# ---------------------------------------------------------------------------
+# modmul kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [FQ, FP], ids=["Fq", "Fp"])
+@pytest.mark.parametrize("n", [1, 5, 128, 777, 2048])
+def test_modmul_matches_ref(spec, n):
+    a = rand_mont(spec, n)
+    b = rand_mont(spec, n)
+    got = modmul(spec, a, b, interpret=True)
+    want = modmul_ref(spec, a, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_modmul_matches_pyint():
+    a = rand_mont(FQ, 64)
+    b = rand_mont(FQ, 64)
+    got = modmul(FQ, a, b, interpret=True)
+    want = modmul_pyint(FQ, a, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_modmul_block_row_sweep():
+    a = rand_mont(FQ, 2048)
+    b = rand_mont(FQ, 2048)
+    want = np.asarray(modmul_ref(FQ, a, b))
+    for br in (8, 16):
+        got = modmul(FQ, a, b, block_rows=br, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_modmul_nd_shapes():
+    a = rand_mont(FQ, 24).reshape(2, 3, 4, 4)
+    b = rand_mont(FQ, 24).reshape(2, 3, 4, 4)
+    got = modmul(FQ, a, b, interpret=True)
+    want = modmul_ref(FQ, a, b)
+    assert got.shape == (2, 3, 4, 4)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, FQ.modulus - 1), min_size=1, max_size=8),
+       st.lists(st.integers(0, FQ.modulus - 1), min_size=1, max_size=8))
+def test_modmul_property(xs, ys):
+    n = min(len(xs), len(ys))
+    xs, ys = xs[:n], ys[:n]
+    a = jnp.asarray(modarith.encode_ints(FQ, np.array(xs, dtype=object)))
+    b = jnp.asarray(modarith.encode_ints(FQ, np.array(ys, dtype=object)))
+    got = modarith.decode(FQ, modmul(FQ, a, b, interpret=True))
+    for i in range(n):
+        assert int(got[i]) == (xs[i] * ys[i]) % FQ.modulus
+
+
+# ---------------------------------------------------------------------------
+# sumcheck_fold kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [2, 8, 256, 1024, 4096])
+def test_fold_matches_ref(n):
+    table = rand_mont(FQ, n)
+    r = int(RNG.integers(0, FQ.modulus, dtype=np.uint64)) % FQ.modulus
+    r_l = mle.enc(r)
+    got = kfold(table, r_l, interpret=True)
+    want = fold_ref(table, r_l)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fold_repeated_rounds_full_eval():
+    """Folding all variables with the kernel == eval_mle with jnp path."""
+    d = 6
+    table = rand_mont(FQ, 1 << d)
+    point = [int(RNG.integers(0, FQ.modulus, dtype=np.uint64)) % FQ.modulus
+             for _ in range(d)]
+    t = table
+    for r in point:
+        t = kfold(t, mle.enc(r), interpret=True)
+    want = mle.eval_mle(table, point)
+    np.testing.assert_array_equal(np.asarray(t[0]), np.asarray(want))
+
+
+def test_fold_at_zero_and_one():
+    """fold(T, 0) = evens, fold(T, 1) = odds (multilinearity edge cases)."""
+    table = rand_mont(FQ, 64)
+    got0 = kfold(table, mle.enc(0), interpret=True)
+    got1 = kfold(table, mle.enc(1), interpret=True)
+    np.testing.assert_array_equal(np.asarray(got0), np.asarray(table[0::2]))
+    np.testing.assert_array_equal(np.asarray(got1), np.asarray(table[1::2]))
+
+
+# ---------------------------------------------------------------------------
+# qmatmul kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [
+    (1, 1, 1), (3, 5, 7), (8, 16, 8), (64, 64, 64),
+    (100, 200, 50), (128, 512, 256),
+])
+def test_qmatmul_matches_ref(m, k, n):
+    a = jnp.asarray(RNG.integers(-2**15, 2**15, size=(m, k)), dtype=jnp.int16)
+    b = jnp.asarray(RNG.integers(-2**15, 2**15, size=(k, n)), dtype=jnp.int16)
+    got = qmatmul_i64(a, b, interpret=True)
+    want = qmatmul_ref(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_qmatmul_extreme_values():
+    """Corner values: int16 min/max hit every digit-boundary case."""
+    vals = np.array([-32768, -32767, -129, -128, -1, 0, 1, 127, 128,
+                     255, 256, 32767], dtype=np.int16)
+    a = jnp.asarray(np.tile(vals, (8, 1)))            # (8, 12)
+    b = jnp.asarray(np.tile(vals[:, None], (1, 8)))   # (12, 8)
+    got = qmatmul_i64(a, b, interpret=True)
+    want = qmatmul_ref(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_qmatmul_block_sweep():
+    a = jnp.asarray(RNG.integers(-2**15, 2**15, size=(64, 128)),
+                    dtype=jnp.int16)
+    b = jnp.asarray(RNG.integers(-2**15, 2**15, size=(128, 64)),
+                    dtype=jnp.int16)
+    want = qmatmul_ref(np.asarray(a), np.asarray(b))
+    for bm, bn, bk in [(8, 8, 16), (16, 32, 64), (64, 64, 128)]:
+        got = qmatmul_i64(a, b, bm=bm, bn=bn, bk=bk, interpret=True)
+        np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 9), st.integers(1, 9), st.integers(1, 9),
+       st.integers(0, 2**32 - 1))
+def test_qmatmul_property(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(-2**15, 2**15, size=(m, k)),
+                    dtype=jnp.int16)
+    b = jnp.asarray(rng.integers(-2**15, 2**15, size=(k, n)),
+                    dtype=jnp.int16)
+    got = qmatmul_i64(a, b, interpret=True)
+    np.testing.assert_array_equal(got, qmatmul_ref(np.asarray(a),
+                                                   np.asarray(b)))
+
+
+def test_qmatmul_witness_shapes():
+    """The kernel reproduces a quantfc-style forward matmul exactly."""
+    from repro.core import quantfc
+    cfg = quantfc.QuantConfig(q_bits=12, r_bits=4)
+    a = RNG.standard_normal((16, 32)).astype(np.float32)
+    w = (RNG.standard_normal((32, 32)) / np.sqrt(32)).astype(np.float32)
+    aq = quantfc.quantize(a, cfg)
+    wq = quantfc.quantize(w, cfg)
+    want = aq @ wq
+    got = qmatmul_i64(jnp.asarray(aq, jnp.int16), jnp.asarray(wq, jnp.int16),
+                      interpret=True)
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,68 @@
+"""Tests for proofs of (non-)membership (Appendix B, Table 3)."""
+import numpy as np
+import pytest
+
+from repro.core import merkle
+
+
+def make_commitments(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.bytes(32) for _ in range(n)]
+
+
+@pytest.mark.parametrize("hash_name", ["md5", "sha1", "sha256"])
+def test_membership_roundtrip(hash_name):
+    data = make_commitments(50)
+    tree = merkle.MerkleTree(data, hash_name)
+    members = data[:5]
+    non_members = make_commitments(5, seed=99)
+    queried = members + non_members
+    proof = tree.prove_membership(queried)
+    assert len(proof.included) == 5
+    assert len(proof.excluded) == 5
+    assert merkle.verify_membership(queried, tree.root, proof, hash_name)
+
+
+def test_rejects_lying_about_membership():
+    data = make_commitments(20, seed=1)
+    tree = merkle.MerkleTree(data, "sha256")
+    member = data[0]
+    proof = tree.prove_membership([member])
+    # trainer claims the member is NOT in the set
+    h = merkle.hash_bits(member, "sha256")
+    proof.included.remove(h)
+    proof.excluded.append(h)
+    assert not merkle.verify_membership([member], tree.root, proof, "sha256")
+
+
+def test_rejects_wrong_root():
+    data = make_commitments(20, seed=2)
+    tree = merkle.MerkleTree(data, "sha256")
+    proof = tree.prove_membership(data[:3])
+    assert not merkle.verify_membership(data[:3], b"\x00" * 32, proof, "sha256")
+
+
+def test_rejects_forged_exclusion():
+    data = make_commitments(16, seed=3)
+    tree = merkle.MerkleTree(data, "sha256")
+    outsider = make_commitments(1, seed=4)[0]
+    proof = tree.prove_membership([outsider])
+    assert merkle.verify_membership([outsider], tree.root, proof, "sha256")
+    # claim the outsider IS a member by forging the value
+    h = merkle.hash_bits(outsider, "sha256")
+    proof.excluded.remove(h)
+    proof.included.append(h)
+    proof.node_values[h] = outsider
+    assert not merkle.verify_membership([outsider], tree.root, proof, "sha256")
+
+
+def test_positivity_ratio_scaling():
+    """Table 3: proof size grows with the positivity ratio."""
+    data = make_commitments(200, seed=5)
+    tree = merkle.MerkleTree(data, "sha256")
+    outsiders = make_commitments(20, seed=6)
+    p_zero = tree.prove_membership(outsiders)
+    p_full = tree.prove_membership(data[:20])
+    assert merkle.verify_membership(outsiders, tree.root, p_zero, "sha256")
+    assert merkle.verify_membership(data[:20], tree.root, p_full, "sha256")
+    assert p_zero.size_nodes() < p_full.size_nodes()

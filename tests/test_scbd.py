@@ -1,0 +1,48 @@
+"""Tests for the SC-BD baseline (general-purpose bit-decomposition proof,
+the comparison column of Table 2)."""
+import numpy as np
+import pytest
+
+from repro.core import scbd
+from repro.core.transcript import Transcript
+
+
+def rand_aux(d, qb, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(-(1 << (qb - 1)), 1 << (qb - 1), size=d
+                        ).astype(np.int64)
+
+
+@pytest.mark.parametrize("d,qb", [(16, 8), (64, 16), (256, 16)])
+def test_scbd_roundtrip(d, qb):
+    aux = rand_aux(d, qb, seed=d)
+    proof = scbd.prove(aux, qb, Transcript(b"scbd"))
+    assert scbd.verify(proof, d, qb, Transcript(b"scbd"))
+
+
+def test_scbd_rejects_forged_claim():
+    aux = rand_aux(32, 8, seed=1)
+    proof = scbd.prove(aux, 8, Transcript(b"scbd"))
+    proof.claim = (proof.claim + 1) % scbd.Q_MOD
+    assert not scbd.verify(proof, 32, 8, Transcript(b"scbd"))
+
+
+def test_scbd_rejects_tampered_round():
+    aux = rand_aux(32, 8, seed=2)
+    proof = scbd.prove(aux, 8, Transcript(b"scbd"))
+    proof.sc_main.messages[1][0] = (proof.sc_main.messages[1][0] + 1) % scbd.Q_MOD
+    assert not scbd.verify(proof, 32, 8, Transcript(b"scbd"))
+
+
+def test_scbd_rejects_nonbinary_witness():
+    """A prover who forges the bin sumcheck finals is caught."""
+    aux = rand_aux(16, 8, seed=3)
+    proof = scbd.prove(aux, 8, Transcript(b"scbd"))
+    proof.bin_finals[2] = (proof.bin_finals[2] + 1) % scbd.Q_MOD
+    assert not scbd.verify(proof, 16, 8, Transcript(b"scbd"))
+
+
+def test_scbd_workload_is_quadratic():
+    assert scbd.workload_elems(1024, 16) == 1024 * 1024 * 16
+    # the asymptotic gap of Table 1: D^2 Q vs zkReLU's D Q
+    assert scbd.workload_elems(2048, 16) // (2048 * 16) == 2048

@@ -1,0 +1,80 @@
+"""End-to-end tests for the full zkDL protocol (Protocol 2)."""
+import numpy as np
+import pytest
+
+from repro.core import quantfc, zkdl
+from repro.core.quantfc import QuantConfig, train_step_witness
+
+CFG = zkdl.ZkdlConfig(n_layers=3, batch=4, width=8, q_bits=16, r_bits=4)
+
+
+def make_witness(seed=0, cfg=CFG):
+    rng = np.random.default_rng(seed)
+    qc = QuantConfig(q_bits=cfg.q_bits, r_bits=cfg.r_bits)
+    x = quantfc.quantize(rng.uniform(-1, 1, (cfg.batch, cfg.width)), qc)
+    y = quantfc.quantize(rng.uniform(-1, 1, (cfg.batch, cfg.width)), qc)
+    ws = [quantfc.quantize(rng.uniform(-1, 1, (cfg.width, cfg.width)) * 0.3, qc)
+          for _ in range(cfg.n_layers)]
+    return train_step_witness(x, y, ws, qc)
+
+
+@pytest.fixture(scope="module")
+def keys():
+    return zkdl.make_keys(CFG)
+
+
+def test_witness_relations():
+    wit = make_witness()
+    cfg = wit.cfg
+    for l in range(wit.n_layers):
+        assert (wit.z[l] == wit.a[l] @ wit.w[l]).all()
+        assert (wit.z[l] == (1 << cfg.r_bits) * wit.zpp[l]
+                - (1 << (cfg.q_bits + cfg.r_bits - 1)) * wit.b[l]
+                + wit.rz[l]).all()
+        assert (wit.gw[l] == wit.gz[l].T @ wit.a[l]).all()
+    for l in range(wit.n_layers - 1):
+        assert (wit.a[l + 1] == (1 - wit.b[l]) * wit.zpp[l]).all()
+        assert (wit.ga[l] == wit.gz[l + 1] @ wit.w[l + 1].T).all()
+        assert (wit.gz[l] == (1 - wit.b[l]) * wit.gap[l]).all()
+
+
+def test_prove_verify_accepts(keys):
+    rng = np.random.default_rng(1)
+    wit = make_witness(seed=1)
+    proof = zkdl.prove_step(keys, wit, rng)
+    assert zkdl.verify_step(keys, proof)
+    # proof is compact: well under 100 kB at this toy size
+    assert proof.size_bytes() < 100_000
+
+
+def test_rejects_tampered_gradient(keys):
+    rng = np.random.default_rng(2)
+    wit = make_witness(seed=2)
+    wit.gw[1][0, 0] += 1          # forged weight gradient
+    proof = zkdl.prove_step(keys, wit, rng)
+    assert not zkdl.verify_step(keys, proof)
+
+
+def test_rejects_tampered_relu_mask(keys):
+    rng = np.random.default_rng(3)
+    wit = make_witness(seed=3)
+    wit.b[0][0, 0] ^= 1           # flip a ReLU sign bit
+    proof = zkdl.prove_step(keys, wit, rng)
+    assert not zkdl.verify_step(keys, proof)
+
+
+def test_rejects_tampered_forward(keys):
+    rng = np.random.default_rng(4)
+    wit = make_witness(seed=4)
+    wit.zpp[1][0, 0] = (wit.zpp[1][0, 0] + 1) % (1 << (CFG.q_bits - 1))
+    proof = zkdl.prove_step(keys, wit, rng)
+    assert not zkdl.verify_step(keys, proof)
+
+
+def test_rejects_proof_reuse_other_witness(keys):
+    rng = np.random.default_rng(5)
+    proof = zkdl.prove_step(keys, make_witness(seed=5), rng)
+    proof2 = zkdl.prove_step(keys, make_witness(seed=6),
+                             np.random.default_rng(6))
+    proof.ipas["w"] = proof2.ipas["w"]   # splice a foreign opening
+    assert not zkdl.verify_step(keys, proof)

@@ -1,0 +1,122 @@
+"""Standalone tests for zkReLU auxiliary-input validity (Section 4.1)."""
+import numpy as np
+import pytest
+
+from repro.field import FQ
+from repro.core import group, pedersen, zkrelu
+from repro.core.mle import hexpand_point
+from repro.core.transcript import Transcript
+
+Q_MOD = FQ.modulus
+
+DS = 8        # stacked aux length (power of 2)
+QB = 8        # Q bits
+RB = 4        # R bits
+
+
+def make_aux(rng, ds=DS):
+    zpp = rng.integers(0, 1 << (QB - 1), size=ds).astype(np.int64)
+    gap = rng.integers(-(1 << (QB - 1)), 1 << (QB - 1), size=ds).astype(np.int64)
+    bq = rng.integers(0, 2, size=ds).astype(np.int64)
+    rz = rng.integers(0, 1 << RB, size=ds).astype(np.int64)
+    rga = rng.integers(0, 1 << RB, size=ds).astype(np.int64)
+    return zpp, gap, bq, rz, rga
+
+
+def honest_claims(zpp, gap, bq, rz, rga, u_relu):
+    """Host-side MLE evals: v, v_{Q-1}, v_r at u_relu = (u_star..., u'')."""
+    ds = zpp.shape[0]
+    u_star, upp = u_relu[:-1], u_relu[-1]
+    e = hexpand_point(u_star)
+    vz = sum(int(zpp[i]) * e[i] for i in range(ds)) % Q_MOD
+    vg = sum(int(gap[i]) % Q_MOD * e[i] for i in range(ds)) % Q_MOD
+    vq1 = sum(int(bq[i]) * e[i] for i in range(ds)) % Q_MOD
+    vrz = sum(int(rz[i]) * e[i] for i in range(ds)) % Q_MOD
+    vrga = sum(int(rga[i]) * e[i] for i in range(ds)) % Q_MOD
+    v = ((1 - upp) * vz + upp * vg) % Q_MOD
+    vr = ((1 - upp) * vrz + upp * vrga) % Q_MOD
+    return v, vq1, vr
+
+
+def run_protocol(tamper=None):
+    rng = np.random.default_rng(42)
+    zpp, gap, bq, rz, rga = make_aux(rng)
+    keys = zkrelu.make_validity_keys(DS, QB, RB)
+    bits = zkrelu.build_aux_bits(zpp, gap, bq, rz, rga, QB, RB)
+    if tamper == "bitflip":
+        bits.b_mat[3, 2] ^= 1
+    if tamper == "sign":
+        bits.bq[2] ^= 1
+        # rebuild bq-dependent parts dishonestly: bq column lives separately
+
+    coms, blinds = zkrelu.commit_validity(keys, bits, rng)
+    # standalone com of B_{Q-1} under g_col (the aux tensor commitment)
+    r_q1 = int(rng.integers(0, Q_MOD, dtype=np.uint64)) % Q_MOD
+    key_col = pedersen.CommitKey(keys.g_col, keys.h_blind, b"bq")
+    com_bq1 = group.decode_group(
+        pedersen.commit_bits(key_col, bits.bq.astype(np.uint32), r_q1))
+
+    n_vars = DS.bit_length() - 1
+    tp = Transcript(b"zkrelu-test")
+    tp.absorb_ints(b"coms", [coms.com_b_ip, coms.com_bq1p, coms.com_br_ip,
+                             com_bq1])
+    u_relu = tp.challenge_ints(b"urelu", Q_MOD, n_vars + 1)
+    v, vq1, vr = honest_claims(zpp, gap, bq, rz, rga, u_relu)
+    tp.absorb_ints(b"claims", [v, vq1, vr])
+
+    proof = zkrelu.prove_validity(keys, bits, blinds, u_relu, v, vq1, vr,
+                                  r_q1, tp, rng)
+
+    tv = Transcript(b"zkrelu-test")
+    tv.absorb_ints(b"coms", [coms.com_b_ip, coms.com_bq1p, coms.com_br_ip,
+                             com_bq1])
+    u_relu_v = tv.challenge_ints(b"urelu", Q_MOD, n_vars + 1)
+    assert u_relu_v == u_relu
+    tv.absorb_ints(b"claims", [v, vq1, vr])
+    return zkrelu.verify_validity(keys, coms, com_bq1, v, vq1, vr,
+                                  u_relu, proof, tv)
+
+
+def test_validity_accepts_honest():
+    assert run_protocol()
+
+
+def test_validity_rejects_bitflip():
+    assert not run_protocol(tamper="bitflip")
+
+
+def test_validity_rejects_wrong_claim():
+    rng = np.random.default_rng(1)
+    zpp, gap, bq, rz, rga = make_aux(rng)
+    keys = zkrelu.make_validity_keys(DS, QB, RB)
+    bits = zkrelu.build_aux_bits(zpp, gap, bq, rz, rga, QB, RB)
+    coms, blinds = zkrelu.commit_validity(keys, bits, rng)
+    r_q1 = 77
+    key_col = pedersen.CommitKey(keys.g_col, keys.h_blind, b"bq")
+    com_bq1 = group.decode_group(
+        pedersen.commit_bits(key_col, bits.bq.astype(np.uint32), r_q1))
+    n_vars = DS.bit_length() - 1
+    tp = Transcript(b"t2")
+    u_relu = tp.challenge_ints(b"urelu", Q_MOD, n_vars + 1)
+    v, vq1, vr = honest_claims(zpp, gap, bq, rz, rga, u_relu)
+    v_bad = (v + 1) % Q_MOD
+    tp.absorb_ints(b"claims", [v_bad, vq1, vr])
+    proof = zkrelu.prove_validity(keys, bits, blinds, u_relu, v_bad, vq1, vr,
+                                  r_q1, tp, rng)
+    tv = Transcript(b"t2")
+    u2 = tv.challenge_ints(b"urelu", Q_MOD, n_vars + 1)
+    tv.absorb_ints(b"claims", [v_bad, vq1, vr])
+    assert not zkrelu.verify_validity(keys, coms, com_bq1, v_bad, vq1, vr,
+                                      u2, proof, tv)
+
+
+def test_bits_roundtrip():
+    rng = np.random.default_rng(2)
+    v = rng.integers(-(1 << 7), 1 << 7, size=32).astype(np.int64)
+    b = zkrelu.bits_signed(v, 8)
+    rec = sum(b[:, j].astype(np.int64) << j for j in range(7)) - (b[:, 7].astype(np.int64) << 7)
+    assert (rec == v).all()
+    u = rng.integers(0, 1 << 7, size=32).astype(np.int64)
+    bu = zkrelu.bits_unsigned(u, 7)
+    rec_u = sum(bu[:, j].astype(np.int64) << j for j in range(7))
+    assert (rec_u == u).all()
