@@ -1,0 +1,132 @@
+"""Cross-step aggregation benchmark: the FAC4DNN amortization curve.
+
+For T in --steps-list, proves ONE aggregated session over T consecutive
+batch updates (shared commitments, sumchecks, validity argument and IPA
+openings; the step axis is log2(T) extra sumcheck variables) and reports
+per-step proving time and per-step proof size.  The T=1 row doubles as
+the "T independent proofs" baseline: independent proving costs exactly
+T * row(1), so amortization = per_step(T) / per_step(1).
+
+    PYTHONPATH=src python benchmarks/agg_steps.py \
+        [--steps-list 1,2,4,8] [--width 4] [--batch 2] [--layers 2] \
+        [--repeats 2] [--no-verify] [--out BENCH_agg_steps.json]
+
+Emits BENCH_agg_steps.json with the full curve plus the monotonicity
+verdicts on the T=1..4 prefix.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def bench_T(T: int, layers: int, batch: int, width: int, q_bits: int,
+            r_bits: int, repeats: int, verify: bool):
+    from repro.core.quantfc import QuantConfig, synthetic_sgd_trajectory
+    from repro.core.pipeline import (PipelineConfig, make_keys,
+                                     prove_session, verify_session)
+
+    cfg = PipelineConfig(n_layers=layers, batch=batch, width=width,
+                         q_bits=q_bits, r_bits=r_bits, n_steps=T)
+    qc = QuantConfig(q_bits=q_bits, r_bits=r_bits)
+    keys = make_keys(cfg)
+    wits = synthetic_sgd_trajectory(T, layers, batch, width, qc, seed=T)
+
+    # warmup run (jit compilation / caches), then best-of-N timed runs
+    proof = prove_session(keys, wits, np.random.default_rng(0))
+    best = float("inf")
+    for rep in range(repeats):
+        t0 = time.perf_counter()
+        proof = prove_session(keys, wits, np.random.default_rng(rep + 1))
+        best = min(best, time.perf_counter() - t0)
+
+    ok = None
+    if verify:
+        t0 = time.perf_counter()
+        ok = verify_session(keys, proof)
+        verify_s = time.perf_counter() - t0
+        assert ok, f"aggregated proof rejected at T={T}"
+    else:
+        verify_s = None
+
+    return {
+        "T": T,
+        "prove_s": best,
+        "per_step_s": best / T,
+        "proof_bytes": proof.size_bytes(),
+        "per_step_bytes": proof.size_bytes() / T,
+        "verify_s": verify_s,
+        "verify_ok": ok,
+    }
+
+
+def monotonic_prefix(rows, key, t_max=4):
+    """Strictly-decreasing verdict over the measured T<=t_max prefix;
+    None (json null) when T=1 wasn't measured or the prefix is trivial,
+    so a partial --steps-list never yields a vacuous True."""
+    vals = [r[key] for r in rows if r["T"] <= t_max]
+    if len(vals) < 2 or not any(r["T"] == 1 for r in rows):
+        return None
+    return all(b < a for a, b in zip(vals, vals[1:]))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps-list", default="1,2,4,8")
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--width", type=int, default=4)
+    ap.add_argument("--q-bits", type=int, default=16)
+    ap.add_argument("--r-bits", type=int, default=4)
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--no-verify", action="store_true")
+    ap.add_argument("--out", default="BENCH_agg_steps.json")
+    args = ap.parse_args(argv)
+
+    from repro.util import enable_compilation_cache
+    enable_compilation_cache()
+
+    steps = sorted({int(s) for s in args.steps_list.split(",")})
+    rows = []
+    for T in steps:
+        row = bench_T(T, args.layers, args.batch, args.width,
+                      args.q_bits, args.r_bits, args.repeats,
+                      verify=not args.no_verify)
+        base = rows[0] if rows else row
+        row["amortization_vs_T1"] = (row["per_step_s"] / base["per_step_s"]
+                                     if base["T"] == 1 else None)
+        rows.append(row)
+        amort = row["amortization_vs_T1"]
+        print(f"agg_steps,T={T},prove_s={row['prove_s']:.2f},"
+              f"per_step_s={row['per_step_s']:.2f},"
+              f"proof_kB={row['proof_bytes'] / 1024:.1f},"
+              f"per_step_kB={row['per_step_bytes'] / 1024:.2f},"
+              f"amortization="
+              f"{f'{amort:.2f}' if amort is not None else 'n/a'}",
+              flush=True)
+
+    result = {
+        "config": {"layers": args.layers, "batch": args.batch,
+                   "width": args.width, "q_bits": args.q_bits,
+                   "r_bits": args.r_bits, "repeats": args.repeats},
+        "rows": rows,
+        "monotonic_per_step_time_1_to_4": monotonic_prefix(
+            rows, "per_step_s"),
+        "monotonic_per_step_size_1_to_4": monotonic_prefix(
+            rows, "per_step_bytes"),
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"agg_steps: wrote {args.out}; "
+          f"per-step time monotonic(1..4)="
+          f"{result['monotonic_per_step_time_1_to_4']}, "
+          f"per-step size monotonic(1..4)="
+          f"{result['monotonic_per_step_size_1_to_4']}", flush=True)
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -93,6 +93,38 @@ def comp_profile(hlo_text: str, top: int = 12):
     return rows[:top]
 
 
+def run_zkdl(arch: str, shape: str, variant: str) -> Dict:
+    """Proof-pipeline perf cell for the fcnn (zkDL) family: there is no
+    XLA train cell to lower, so the measure step is the aggregated
+    prover itself -- per-step proving time and proof size at T=1 vs T=4
+    (the FAC4DNN amortization; full curve in benchmarks/agg_steps.py).
+
+    Uses the agg_steps smoke cell, where the amortizable fixed costs
+    dominate; this module's forced 512-device XLA env inflates per-op
+    dispatch cost, so absolute times are not comparable to a standalone
+    benchmarks/agg_steps.py run."""
+    from benchmarks.agg_steps import bench_T
+
+    if variant != "baseline":
+        print(f"perf,{arch}: variant {variant!r} has no effect on the "
+              f"zkdl proof pipeline (no XLA knobs); running baseline",
+              flush=True)
+    rows = [bench_T(T, layers=2, batch=2, width=4, q_bits=16, r_bits=4,
+                    repeats=2, verify=(T == 1)) for T in (1, 4)]
+    rec = {
+        "arch": arch, "shape": shape, "variant": variant, "mesh": "n/a",
+        "mode": "zkdl-proof-pipeline", "rows": rows,
+        "amortization_t4": rows[1]["per_step_s"] / rows[0]["per_step_s"],
+    }
+    for r in rows:
+        print(f"perf,{arch},zkdl,T={r['T']},"
+              f"per_step_s={r['per_step_s']:.2f},"
+              f"per_step_kB={r['per_step_bytes'] / 1024:.2f}", flush=True)
+    print(f"perf,{arch},zkdl,amortization_t4="
+          f"{rec['amortization_t4']:.2f}", flush=True)
+    return rec
+
+
 def run(arch: str, shape: str, variant: str, multi_pod: bool = False,
         profile: bool = True) -> Dict:
     from repro.util import enable_compilation_cache
@@ -102,6 +134,8 @@ def run(arch: str, shape: str, variant: str, multi_pod: bool = False,
     from repro.launch.steps import lower_cell
     from benchmarks import costmodel
 
+    if get_config(arch).family == "fcnn":
+        return run_zkdl(arch, shape, variant)
     cfg = variant_config(get_config(arch), variant)
     mesh = make_production_mesh(multi_pod=multi_pod)
     lowered = lower_cell(cfg, mesh, shape)

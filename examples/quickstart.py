@@ -1,10 +1,12 @@
-"""Quickstart: prove and verify one training step with zkDL.
+"""Quickstart: verifiable training with the aggregated proof pipeline.
 
-Trains a small quantized FCNN for one batch update, generates the
-Protocol-2 zero-knowledge proof (zkReLU + batched matmul sumchecks +
-aux-validity IPA), and verifies it as the trusted verifier would.
+Trains a small quantized FCNN for T batch updates, aggregates them into
+ONE zero-knowledge proof via `ProofSession` (zkReLU + batched matmul
+sumchecks over layers AND steps + aux-validity IPA -- the FAC4DNN
+aggregation), and verifies it as the trusted verifier would.
 
-    PYTHONPATH=src python examples/quickstart.py [--width 32] [--batch 8]
+    PYTHONPATH=src python examples/quickstart.py \
+        [--width 16] [--batch 4] [--agg-steps 2]
 """
 import argparse
 import time
@@ -15,52 +17,63 @@ import numpy as np
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--width", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--agg-steps", type=int, default=2,
+                    help="training steps aggregated into one proof")
     args = ap.parse_args()
 
     from repro.util import enable_compilation_cache
     enable_compilation_cache()
-    from repro.core import quantfc, zkdl
-    from repro.core.quantfc import QuantConfig, train_step_witness
+    from repro.core.quantfc import QuantConfig, synthetic_sgd_trajectory
+    from repro.core.pipeline import (PipelineConfig, ProofSession,
+                                     make_keys, verify_session)
 
-    cfg = zkdl.ZkdlConfig(n_layers=args.layers, batch=args.batch,
-                          width=args.width, q_bits=16, r_bits=8)
+    T = args.agg_steps
+    cfg = PipelineConfig(n_layers=args.layers, batch=args.batch,
+                         width=args.width, q_bits=16, r_bits=8, n_steps=T)
     print(f"[quickstart] FCNN: {args.layers} layers x {args.width} wide, "
-          f"batch {args.batch} -- Example 4.5 of the paper")
+          f"batch {args.batch}, {T} aggregated step(s) -- Example 4.5 + "
+          f"FAC4DNN cross-step stacking")
 
-    rng = np.random.default_rng(0)
     qc = QuantConfig(q_bits=16, r_bits=8)
-    x = quantfc.quantize(rng.uniform(-1, 1, (args.batch, args.width)), qc)
-    y = quantfc.quantize(rng.uniform(-1, 1, (args.batch, args.width)), qc)
-    ws = [quantfc.quantize(
-        rng.uniform(-1, 1, (args.width, args.width)) * 0.3, qc)
-        for _ in range(args.layers)]
+    t0 = time.time()
+    keys = make_keys(cfg)
+    print(f"[quickstart] commitment keys: {time.time()-t0:.2f}s")
+
+    def make_trajectory(tamper_last=False):
+        wits = synthetic_sgd_trajectory(T, args.layers, args.batch,
+                                        args.width, qc, seed=0)
+        if tamper_last:
+            wits[-1].gw[0][0, 0] += 1      # forged weight gradient
+        return wits
+
+    def prove_trajectory(wits):
+        session = ProofSession(keys, np.random.default_rng(1))
+        for wit in wits:
+            session.add_step(wit)
+        return session.prove()
 
     t0 = time.time()
-    wit = train_step_witness(x, y, ws, qc)
-    print(f"[quickstart] witness (exact int fwd+bwd, eqs 30-35): "
+    honest = make_trajectory()
+    print(f"[quickstart] {T} witnesses (exact int fwd+bwd, eqs 30-35): "
           f"{time.time()-t0:.2f}s")
 
     t0 = time.time()
-    keys = zkdl.make_keys(cfg)
-    print(f"[quickstart] commitment keys: {time.time()-t0:.2f}s")
+    proof = prove_trajectory(honest)
+    print(f"[quickstart] PROVE ({T} steps, one proof): {time.time()-t0:.1f}s,"
+          f" proof size {proof.size_bytes()/1024:.1f} kB "
+          f"({proof.size_bytes()/1024/T:.1f} kB/step)")
 
     t0 = time.time()
-    proof = zkdl.prove_step(keys, wit, rng)
-    print(f"[quickstart] PROVE: {time.time()-t0:.1f}s, "
-          f"proof size {proof.size_bytes()/1024:.1f} kB")
-
-    t0 = time.time()
-    ok = zkdl.verify_step(keys, proof)
+    ok = verify_session(keys, proof)
     print(f"[quickstart] VERIFY: {time.time()-t0:.1f}s -> "
           f"{'ACCEPT' if ok else 'REJECT'}")
     assert ok
 
-    # a tampered gradient must be rejected
-    wit.gw[0][0, 0] += 1
-    bad = zkdl.prove_step(keys, wit, rng)
-    ok_bad = zkdl.verify_step(keys, bad)
+    # a tampered gradient in the LAST aggregated step must be rejected
+    ok_bad = verify_session(keys, prove_trajectory(make_trajectory(
+        tamper_last=True)))
     print(f"[quickstart] tampered-gradient proof -> "
           f"{'ACCEPT (!!)' if ok_bad else 'REJECT (as it must)'}")
     assert not ok_bad

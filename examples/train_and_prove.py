@@ -1,53 +1,62 @@
 """End-to-end verifiable training: train a quantized FCNN for N steps,
-producing a Protocol-2 proof per batch update, with checkpoint/restart.
+streaming ONE aggregated proof per --agg-window batch updates (the
+FAC4DNN cross-step aggregation), with checkpoint/restart.
 
 This is the paper's deployment story in miniature: the trainer runs
-quantized SGD and streams (commitments, proof) per step to the trusted
-verifier; interrupt and resume at any step from the checkpoint.
+quantized SGD, queues each step's witness in a `ProofSession`, and every
+window emits a single (commitments, proof) transcript to the trusted
+verifier; interrupt and resume at any window boundary from the
+checkpoint.
 
     PYTHONPATH=src python examples/train_and_prove.py \
-        --steps 5 --width 16 --batch 8 [--prove-every 1] [--no-verify]
+        --steps 4 --width 16 --batch 8 [--agg-window 2] [--no-verify]
 
 Scaling note: width 4096 x 16 layers (the paper's 200M-param experiment)
 is the same code path; per-step proving cost on this CPU substrate is the
-Table-2 column in EXPERIMENTS.md.
+Table-2 column in EXPERIMENTS.md, divided by the aggregation window (see
+BENCH_agg_steps.json for the amortization curve).
 """
 import argparse
 import os
-import time
 
 import numpy as np
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=3)
+    ap.add_argument("--steps", type=int, default=4)
     ap.add_argument("--width", type=int, default=16)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--layers", type=int, default=2)
     ap.add_argument("--lr-shift", type=int, default=10,
                     help="learning rate = 2^-shift (integer SGD)")
-    ap.add_argument("--prove-every", type=int, default=1)
+    ap.add_argument("--agg-window", type=int, default=2,
+                    help="training steps aggregated into each proof")
     ap.add_argument("--no-verify", action="store_true")
     ap.add_argument("--ckpt", default="/tmp/zkdl_train_ckpt.npz")
     args = ap.parse_args()
 
     from repro.util import enable_compilation_cache
     enable_compilation_cache()
-    from repro.core import quantfc, zkdl
+    from repro.core import quantfc
     from repro.core.quantfc import QuantConfig, train_step_witness
+    from repro.core.pipeline import PipelineConfig, make_keys
+    from repro.launch.steps import ZkdlProveHook
 
     qc = QuantConfig(q_bits=16, r_bits=8)
-    cfg = zkdl.ZkdlConfig(n_layers=args.layers, batch=args.batch,
-                          width=args.width, q_bits=16, r_bits=8)
-    keys = zkdl.make_keys(cfg)
+    window = max(1, args.agg_window)
+    cfg = PipelineConfig(n_layers=args.layers, batch=args.batch,
+                         width=args.width, q_bits=16, r_bits=8,
+                         n_steps=window)
+    keys = make_keys(cfg)
     rng = np.random.default_rng(0)
 
     # synthetic dataset (fixed): batches cycle deterministically
     data_x = rng.uniform(-1, 1, (args.batch * 8, args.width))
     data_y = rng.uniform(-1, 1, (args.batch * 8, args.width))
 
-    # restore or init weights
+    # restore or init weights (checkpoints land on window boundaries, so
+    # a resumed run never re-proves a half-aggregated window)
     start = 0
     if os.path.exists(args.ckpt):
         with np.load(args.ckpt) as z:
@@ -59,33 +68,44 @@ def main():
             rng.uniform(-1, 1, (args.width, args.width)) * 0.3, qc)
             for _ in range(args.layers)]
 
-    proof_sizes = []
+    # the hook owns the session window: every `window` observed steps it
+    # proves (and verifies) one aggregated transcript, then the callback
+    # checkpoints on the window boundary
+    def on_proof(step, proof, tp):
+        print(f"[train] step {step}: aggregated proof over "
+              f"{proof.n_steps} steps, {proof.size_bytes()/1024:.1f} kB"
+              f" in {tp:.1f}s ({tp/proof.n_steps:.1f}s/step, "
+              f"verified={not args.no_verify})", flush=True)
+        np.savez(args.ckpt, step=step + 1,
+                 **{f"w{i}": ws[i] for i in range(args.layers)})
+
+    hook = ZkdlProveHook(keys, rng, verify=not args.no_verify,
+                         on_proof=on_proof)
     for step in range(start, args.steps):
         lo = (step * args.batch) % data_x.shape[0]
         xb = quantfc.quantize(data_x[lo:lo + args.batch], qc)
         yb = quantfc.quantize(data_y[lo:lo + args.batch], qc)
         wit = train_step_witness(xb, yb, ws, qc)
 
-        if step % args.prove_every == 0:
-            t0 = time.time()
-            proof = zkdl.prove_step(keys, wit, rng)
-            tp = time.time() - t0
-            proof_sizes.append(proof.size_bytes())
-            if not args.no_verify:
-                assert zkdl.verify_step(keys, proof), "verifier rejected!"
-            print(f"[train] step {step}: proof {proof.size_bytes()/1024:.1f} kB"
-                  f" in {tp:.1f}s (verified={not args.no_verify})", flush=True)
+        # integer SGD on the (about-to-be-)PROVEN gradients
+        ws = quantfc.sgd_apply(ws, wit.gw, args.lr_shift, qc)
+        hook.observe(step, wit)
 
-        # integer SGD on the PROVEN gradients (scale 2^{2R} -> 2^R shift)
-        for i in range(args.layers):
-            ws[i] = ws[i] - (wit.gw[i] >> (qc.r_bits + args.lr_shift))
-            lim = 1 << (qc.q_bits - 1)
-            ws[i] = np.clip(ws[i], -lim, lim - 1)
-        np.savez(args.ckpt, step=step + 1,
-                 **{f"w{i}": ws[i] for i in range(args.layers)})
-
-    print(f"[train] {args.steps - start} steps done; mean proof "
-          f"{np.mean(proof_sizes)/1024:.1f} kB; checkpoint at {args.ckpt}")
+    done = args.steps - start
+    sizes = [p.size_bytes() for _, p, _ in hook.proofs]
+    mean_kb = (np.mean(sizes) / 1024) if sizes else 0.0
+    print(f"[train] {done} steps done; {len(sizes)} aggregated "
+          f"proofs (mean {mean_kb:.1f} kB, window {window}); "
+          f"checkpoint at {args.ckpt}")
+    if hook.n_pending:
+        # checkpoints land on window boundaries only: the trailing
+        # partial window is UNPROVEN and not persisted -- a resumed run
+        # recomputes those steps deterministically and proves them with
+        # the next full window.
+        print(f"[train] WARNING: {hook.n_pending} trailing step(s) "
+              f"form a partial window -- unproven and not checkpointed; "
+              f"they will be re-run (and proven) on resume, or pick "
+              f"--steps as a multiple of --agg-window", flush=True)
 
 
 if __name__ == "__main__":

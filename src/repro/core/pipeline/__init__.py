@@ -1,0 +1,27 @@
+"""Staged zkDL proof pipeline with cross-step FAC4DNN aggregation.
+
+Public surface:
+
+* `PipelineConfig` / `PipelineKeys` / `make_keys`  -- setup (config.py)
+* `ProofSession` / `prove_session` / `AggregatedProof` -- prover (session.py)
+* `verify` / `verify_session`                      -- verifier (verifier.py)
+* `stack_witnesses` / `StackedWitness`             -- witness stacking
+
+See README.md in this package for the module <-> paper map.
+"""
+from repro.core.pipeline.config import (PipelineConfig, PipelineKeys,
+                                        make_keys)
+from repro.core.pipeline.session import (AggregatedProof, ProofSession,
+                                         SessionCommitments, SessionProver,
+                                         prove_session)
+from repro.core.pipeline.verifier import verify, verify_session
+from repro.core.pipeline.witness import (StackedWitness, build_field_tables,
+                                         stack_witnesses)
+
+__all__ = [
+    "PipelineConfig", "PipelineKeys", "make_keys",
+    "AggregatedProof", "ProofSession", "SessionCommitments",
+    "SessionProver", "prove_session",
+    "verify", "verify_session",
+    "StackedWitness", "build_field_tables", "stack_witnesses",
+]

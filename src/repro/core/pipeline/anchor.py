@@ -1,0 +1,125 @@
+"""Step (b): the anchor sumcheck -- generalized eq. (27) over the stacked
+(elem, layer, step) hypercube.
+
+Every claim on the uncommitted tensors A^{l,t} / G_Z^{l,t} produced by
+step (a) is random-linearly combined (coefficients `AnchorCoefs`) and
+reduced, through ONE degree-3 sumcheck over all log2(d_stack) =
+log2(B*d) + log2(l_pad) + log2(t_pad) variables, to claims on the
+committed auxiliary tensors at a single point u_star.  Aggregating T
+steps therefore costs log2(t_pad) extra rounds -- not T extra proofs.
+
+The public batching tables pa / pg are Kronecker products of a sparse
+slot-axis coefficient vector with the expanded element points, so the
+verifier re-evaluates them at u_star in O(T*L + log d) host work.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+
+from repro.field import FQ, add, sub
+from repro.core.mle import enc, expand_point, heval_point_product, hexpand_point
+from repro.core.sumcheck import SumcheckProof, sumcheck_prove, sumcheck_verify
+from repro.core.transcript import Transcript
+from repro.core.pipeline import matmul
+from repro.core.pipeline.challenges import AnchorCoefs, ChallengeSchedule
+from repro.core.pipeline.config import PipelineConfig
+from repro.core.pipeline.tables import kron, log2_exact, weight_table, wt_eval
+from repro.core.pipeline.witness import FieldTables
+
+Q_MOD = FQ.modulus
+
+
+@dataclasses.dataclass
+class AnchorPoints:
+    """The four stacked element-points carrying step-(a) claims."""
+    pt_f: List[int]    # A claims from fwd
+    pt_g: List[int]    # A claims from gw
+    pt_b: List[int]    # G_Z claims from bwd
+    pt_w: List[int]    # G_Z claims from gw
+
+    @classmethod
+    def build(cls, ch: ChallengeSchedule, w1, w2, w3) -> "AnchorPoints":
+        return cls(pt_f=w1 + ch.u_r, pt_g=ch.u_j + w3,
+                   pt_b=w2 + ch.u_r2, pt_w=ch.u_i + w3)
+
+
+def _slot_dicts(cfg: PipelineConfig, al: AnchorCoefs) -> Tuple[Dict, ...]:
+    """AnchorCoefs -> sparse slot-axis weight dicts (A^l lives at layer
+    index l-1 of the stacked tensors, as does G_Z^l)."""
+    wA1 = {cfg.slot(t, l - 1): c for (t, l), c in al.a1.items()}
+    wA2 = {cfg.slot(t, l - 1): c for (t, l), c in al.a2.items()}
+    wG1 = {cfg.slot(t, l - 1): c for (t, l), c in al.g1.items()}
+    wG2 = {cfg.slot(t, l - 1): c for (t, l), c in al.g2.items()}
+    return wA1, wA2, wG1, wG2
+
+
+@dataclasses.dataclass
+class AnchorOut:
+    sc_anchor: SumcheckProof
+    anchor_finals: List[int]
+    u_star: List[int]
+    pts: AnchorPoints
+
+
+def prove(cfg: PipelineConfig, tabs: FieldTables, ch: ChallengeSchedule,
+          mat: matmul.MatmulOut, t: Transcript) -> AnchorOut:
+    pts = AnchorPoints.build(ch, mat.w1, mat.w2, mat.w3)
+    al = AnchorCoefs.draw(t, cfg)
+    wA1, wA2, wG1, wG2 = _slot_dicts(cfg, al)
+    pa = add(FQ, kron(weight_table(wA1, cfg.s_pad), expand_point(pts.pt_f)),
+             kron(weight_table(wA2, cfg.s_pad), expand_point(pts.pt_g)))
+    pg = add(FQ, kron(weight_table(wG1, cfg.s_pad), expand_point(pts.pt_b)),
+             kron(weight_table(wG2, cfg.s_pad), expand_point(pts.pt_w)))
+    one_tab = jnp.broadcast_to(enc(1), (cfg.d_stack, 4)).astype(jnp.uint32)
+    one_b = sub(FQ, one_tab, tabs.bq_t)
+    anchor_tables = [one_b, tabs.zpp_t, tabs.gap_t, pa, pg]
+    anchor_products = [(0, 3, 1), (0, 4, 2)]
+    sc_anchor, u_star, anchor_finals = sumcheck_prove(
+        anchor_tables, anchor_products, t, b"anchor")
+    return AnchorOut(sc_anchor=sc_anchor, anchor_finals=anchor_finals,
+                     u_star=u_star, pts=pts)
+
+
+def verify(cfg: PipelineConfig, proof, ch: ChallengeSchedule,
+           w1, w2, w3, t: Transcript) -> Tuple[AnchorPoints, List[int]]:
+    """Checks the anchor sumcheck against the step-(a) finals and the
+    public batching tables; returns (points, u_star).  Raises ValueError
+    on failure."""
+    T, L = cfg.n_steps, cfg.n_layers
+    lb, ld = log2_exact(cfg.batch), log2_exact(cfg.width)
+    pts = AnchorPoints.build(ch, w1, w2, w3)
+    al = AnchorCoefs.draw(t, cfg)
+
+    # LHS: the batched claims assembled from the matmul sumcheck finals
+    lhs = 0
+    for (ti, l), c in al.a1.items():      # A^l from fwd pair (t, l+1)
+        lhs = (lhs + c * proof.fwd_finals[2 * matmul.fwd_pair(cfg, ti, l + 1)]) % Q_MOD
+    for (ti, l), c in al.a2.items():      # A^l from gw pair (t, l+1)
+        lhs = (lhs + c * proof.gw_finals[2 * matmul.gw_pair(cfg, ti, l + 1) + 1]) % Q_MOD
+    for (ti, l), c in al.g1.items():      # G_Z^l from bwd pair (t, l-1)
+        lhs = (lhs + c * proof.bwd_finals[2 * matmul.bwd_pair(cfg, ti, l - 1)]) % Q_MOD
+    for (ti, l), c in al.g2.items():      # G_Z^l from gw pair (t, l)
+        lhs = (lhs + c * proof.gw_finals[2 * matmul.gw_pair(cfg, ti, l)]) % Q_MOD
+
+    u_star, exp_anchor = sumcheck_verify(
+        lhs, proof.sc_anchor, 3, log2_exact(cfg.d_stack), t, b"anchor")
+    f_oneb, f_zpp, f_gap, f_pa, f_pg = proof.anchor_finals
+    if exp_anchor != (f_oneb * f_pa % Q_MOD * f_zpp
+                      + f_oneb * f_pg % Q_MOD * f_gap) % Q_MOD:
+        raise ValueError("anchor-final")
+    t.absorb_ints(b"anchor/final", proof.anchor_finals)
+
+    # recompute the public batching tables at u_star
+    u_elem, u_slot = u_star[: lb + ld], u_star[lb + ld:]
+    el = hexpand_point(u_slot)
+    wA1, wA2, wG1, wG2 = _slot_dicts(cfg, al)
+    pa_check = (wt_eval(wA1, el) * heval_point_product(pts.pt_f, u_elem)
+                + wt_eval(wA2, el) * heval_point_product(pts.pt_g, u_elem)) % Q_MOD
+    pg_check = (wt_eval(wG1, el) * heval_point_product(pts.pt_b, u_elem)
+                + wt_eval(wG2, el) * heval_point_product(pts.pt_w, u_elem)) % Q_MOD
+    if f_pa != pa_check or f_pg != pg_check:
+        raise ValueError("anchor-public-tables")
+    return pts, u_star

@@ -1,0 +1,97 @@
+"""Challenge schedule for the staged pipeline (one draw, all stages).
+
+Every challenge is drawn from the shared Fiat-Shamir transcript in a
+fixed order; the prover and the standalone verifier call the same
+``draw`` classmethods at the same transcript positions.  The slot
+challenges (u_sf / u_sb / u_sw) range over the combined (step, layer)
+axis -- log2(l_pad) + log2(t_pad) variables -- which is what batches all
+layers of all T steps into each of the three matmul sumchecks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from repro.field import FQ
+from repro.core.mle import expand_point
+from repro.core.pipeline.config import PipelineConfig
+from repro.core.pipeline.tables import kron, log2_exact
+from repro.core.transcript import Transcript
+
+Q_MOD = FQ.modulus
+
+
+@dataclasses.dataclass
+class ChallengeSchedule:
+    u_r: List[int]; u_c: List[int]       # forward sumcheck points
+    u_r2: List[int]; u_c2: List[int]     # backward
+    u_i: List[int]; u_j: List[int]       # weight-gradient
+    u_sf: List[int]; u_sb: List[int]; u_sw: List[int]   # slot axes
+
+    @classmethod
+    def draw(cls, t: Transcript, cfg: PipelineConfig) -> "ChallengeSchedule":
+        lb = log2_exact(cfg.batch)
+        ld = log2_exact(cfg.width)
+        ls = log2_exact(cfg.s_pad)
+        c = lambda tag, n: t.challenge_ints(tag, Q_MOD, n)
+        return cls(
+            u_r=c(b"u_r", lb), u_c=c(b"u_c", ld),
+            u_r2=c(b"u_r2", lb), u_c2=c(b"u_c2", ld),
+            u_i=c(b"u_i", ld), u_j=c(b"u_j", ld),
+            u_sf=c(b"u_sf", ls), u_sb=c(b"u_sb", ls), u_sw=c(b"u_sw", ls))
+
+
+def pi_bases(ch: ChallengeSchedule) -> Tuple:
+    """Expanded opening bases at the three matmul points pi1/pi2/pi3."""
+    e_pi1 = kron(expand_point(ch.u_sf), kron(expand_point(ch.u_r),
+                                             expand_point(ch.u_c)))
+    e_pi2 = kron(expand_point(ch.u_sb), kron(expand_point(ch.u_r2),
+                                             expand_point(ch.u_c2)))
+    e_pi3 = kron(expand_point(ch.u_sw), kron(expand_point(ch.u_i),
+                                             expand_point(ch.u_j)))
+    return e_pi1, e_pi2, e_pi3
+
+
+@dataclasses.dataclass
+class AnchorCoefs:
+    """Random linear combination coefficients batching every A^{l,t} and
+    G_Z^{l,t} claim of step (a) into the single anchor sumcheck (the
+    generalized eq. 27, now over layers AND steps).  Keys are (t, l)."""
+    a1: Dict[Tuple[int, int], int]   # A^l claims from the fwd sumcheck
+    a2: Dict[Tuple[int, int], int]   # A^l claims from the gw sumcheck
+    g1: Dict[Tuple[int, int], int]   # G_Z^l claims from the bwd sumcheck
+    g2: Dict[Tuple[int, int], int]   # G_Z^l claims from the gw sumcheck
+
+    @classmethod
+    def draw(cls, t: Transcript, cfg: PipelineConfig) -> "AnchorCoefs":
+        T, L = cfg.n_steps, cfg.n_layers
+        c = lambda tag, ti, l: t.challenge_int(
+            b"%s/%d/%d" % (tag, ti, l), Q_MOD)
+        return cls(
+            a1={(ti, l): c(b"aA1", ti, l)
+                for ti in range(T) for l in range(1, L)},
+            a2={(ti, l): c(b"aA2", ti, l)
+                for ti in range(T) for l in range(1, L)},
+            g1={(ti, l): c(b"aG1", ti, l)
+                for ti in range(T) for l in range(2, L)},
+            g2={(ti, l): c(b"aG2", ti, l)
+                for ti in range(T) for l in range(1, L)})
+
+
+@dataclasses.dataclass
+class WeightDraws:
+    """Per-(step, layer) coefficients folding all W claims (and all
+    stacked points) into two combined openings of the ONE W commitment."""
+    w1: Dict[Tuple[int, int], int]
+    w2: Dict[Tuple[int, int], int]
+
+    @classmethod
+    def draw(cls, t: Transcript, cfg: PipelineConfig) -> "WeightDraws":
+        T, L = cfg.n_steps, cfg.n_layers
+        c = lambda tag, ti, l: t.challenge_int(
+            b"%s/%d/%d" % (tag, ti, l), Q_MOD)
+        return cls(
+            w1={(ti, l): c(b"dW1", ti, l)
+                for ti in range(T) for l in range(1, L + 1)},
+            w2={(ti, l): c(b"dW2", ti, l)
+                for ti in range(T) for l in range(1, L)})

@@ -1,0 +1,87 @@
+"""Pipeline configuration and commitment keys.
+
+`PipelineConfig` generalizes the seed's per-step `ZkdlConfig` with a step
+count T: the committed auxiliary tensors are stacked over BOTH layers and
+training steps, so the stacked hypercube gains log2(t_pad) variables (the
+layer-stacking trick of eq. 27 applied once more, per FAC4DNN).  With
+``n_steps=1`` every size below degenerates to the seed layout, so the
+single-step keys are bit-identical to the old `zkdl.make_keys`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import pedersen, zkrelu
+from repro.core.pipeline.tables import next_pow2
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    n_layers: int
+    batch: int            # power of 2
+    width: int            # power of 2 (layer in/out dim, padded)
+    q_bits: int
+    r_bits: int
+    n_steps: int = 1      # T: training steps aggregated into one proof
+
+    def __post_init__(self):
+        assert self.n_layers >= 2, "pipeline needs >= 2 layers (eq. 33)"
+        assert self.n_steps >= 1
+
+    @property
+    def l_pad(self) -> int:
+        return next_pow2(self.n_layers)
+
+    @property
+    def t_pad(self) -> int:
+        return next_pow2(self.n_steps)
+
+    @property
+    def s_pad(self) -> int:
+        """Slots on the stacked (step, layer) axis; layer varies fastest."""
+        return self.t_pad * self.l_pad
+
+    @property
+    def d_elem(self) -> int:
+        return self.batch * self.width
+
+    @property
+    def d_stack(self) -> int:
+        """Stacked aux length: elem vars low, then layer vars, then step."""
+        return self.s_pad * self.d_elem
+
+    @property
+    def w_stack(self) -> int:
+        return self.s_pad * self.width * self.width
+
+    @property
+    def y_stack(self) -> int:
+        return self.t_pad * self.d_elem
+
+    def slot(self, t: int, layer_idx: int) -> int:
+        """Flat (step, layer) slot index; layer_idx is 0-based storage."""
+        assert 0 <= t < self.t_pad and 0 <= layer_idx < self.l_pad
+        return t * self.l_pad + layer_idx
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineKeys:
+    cfg: PipelineConfig
+    kd: pedersen.CommitKey        # stacked aux tensors (d_stack)
+    kw: pedersen.CommitKey        # stacked W / G_W (s_pad * width^2)
+    kx: pedersen.CommitKey        # per-sample data vectors (width)
+    ky: pedersen.CommitKey        # labels, stacked over steps (y_stack)
+    k_bq: pedersen.CommitKey      # B_{Q-1} under the G-column basis
+    validity: zkrelu.ValidityKeys
+
+
+def make_keys(cfg: PipelineConfig) -> PipelineKeys:
+    vk = zkrelu.make_validity_keys(cfg.d_stack, cfg.q_bits, cfg.r_bits)
+    return PipelineKeys(
+        cfg=cfg,
+        kd=pedersen.make_key(b"zkdl/aux", cfg.d_stack),
+        kw=pedersen.make_key(b"zkdl/w", cfg.w_stack),
+        kx=pedersen.make_key(b"zkdl/x", cfg.width),
+        ky=pedersen.make_key(b"zkdl/y", cfg.y_stack),
+        k_bq=pedersen.CommitKey(vk.g_col, vk.h_blind, b"zkdl/bq"),
+        validity=vk)

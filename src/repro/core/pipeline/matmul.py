@@ -1,0 +1,153 @@
+"""Step (a): the three batched matmul sumchecks (Fig. 3, eqs 30/33/34).
+
+One forward, one backward, and one weight-gradient sumcheck, each
+batching EVERY layer of EVERY aggregated training step under a single
+set of randomness: pair (t, l) contributes two fixed tables and a public
+coefficient e(u_s)[slot(t, l)], so the per-(step, layer) GKR claims
+collapse into three sumchecks whose round count is log2(width) or
+log2(batch) -- independent of both L and T.
+
+Final-value indexing (shared with the anchor stage and the verifier):
+fwd pair (t,l), l in 1..L   -> tables [A^{l-1,t}, W^{l,t}]
+bwd pair (t,l), l in 1..L-1 -> tables [G_Z^{l+1,t}, W^{l+1,t}]
+gw  pair (t,l), l in 1..L   -> tables [G_Z^{l,t},  A^{l-1,t}]
+with pair index t*L + (l-1)  (t*(L-1) + (l-1) for bwd).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+from repro.field import FQ
+from repro.core.mle import hexpand_point
+from repro.core.sumcheck import (SumcheckProof, combine_final,
+                                 sumcheck_prove, sumcheck_verify)
+from repro.core.transcript import Transcript
+from repro.core.pipeline.challenges import ChallengeSchedule
+from repro.core.pipeline.config import PipelineConfig
+from repro.core.pipeline.tables import fix_cols, fix_rows, log2_exact
+from repro.core.pipeline.witness import FieldTables
+
+Q_MOD = FQ.modulus
+
+
+def fwd_pair(cfg: PipelineConfig, t: int, l: int) -> int:
+    """Pair index of layer l (1-based) of step t in the fwd sumcheck."""
+    return t * cfg.n_layers + (l - 1)
+
+
+def bwd_pair(cfg: PipelineConfig, t: int, l: int) -> int:
+    return t * (cfg.n_layers - 1) + (l - 1)
+
+
+def gw_pair(cfg: PipelineConfig, t: int, l: int) -> int:
+    return t * cfg.n_layers + (l - 1)
+
+
+def _coefs(cfg: PipelineConfig, e_slot: List[int], layers: range):
+    """e_slot[slot(t, l-1)] for every pair (t, l), in pair order."""
+    return [e_slot[cfg.slot(t, l - 1)]
+            for t in range(cfg.n_steps) for l in layers]
+
+
+@dataclasses.dataclass
+class MatmulOut:
+    sc_fwd: SumcheckProof
+    sc_bwd: SumcheckProof
+    sc_gw: SumcheckProof
+    fwd_finals: List[int]
+    bwd_finals: List[int]
+    gw_finals: List[int]
+    w1: List[int]          # bound point of the fwd sumcheck (col vars)
+    w2: List[int]          # bwd (col vars)
+    w3: List[int]          # gw (row vars)
+
+
+def prove(cfg: PipelineConfig, tabs: FieldTables, ch: ChallengeSchedule,
+          t: Transcript) -> MatmulOut:
+    T, L = cfg.n_steps, cfg.n_layers
+    ef = hexpand_point(ch.u_sf)
+    eb = hexpand_point(ch.u_sb)
+    ew = hexpand_point(ch.u_sw)
+
+    # forward: sum_{t,l} ef[slot] Z~^{l,t}(u_r,u_c) = sum_w A W
+    fwd_tables, fwd_products = [], []
+    for ti in range(T):
+        for l in range(1, L + 1):
+            fa = fix_rows(tabs.a_tabs[ti][l - 1], ch.u_r)
+            fw = fix_cols(tabs.w_mats[ti][l - 1], ch.u_c)
+            p = 2 * fwd_pair(cfg, ti, l)
+            fwd_tables += [fa, fw]
+            fwd_products.append((p, p + 1))
+    sc_fwd, w1, fwd_finals = sumcheck_prove(
+        fwd_tables, fwd_products, t, b"fwd",
+        coefs=_coefs(cfg, ef, range(1, L + 1)))
+
+    # backward: sum_{t,l} eb[slot] GA~^{l,t}(u_r2,u_c2) = sum GZ^{l+1} W^{l+1}
+    bwd_tables, bwd_products = [], []
+    for ti in range(T):
+        for l in range(1, L):
+            fg = fix_rows(tabs.gz_tabs[ti][l], ch.u_r2)     # GZ^{l+1,t}
+            fw = fix_rows(tabs.w_mats[ti][l], ch.u_c2)      # W^{l+1,t} rows
+            p = 2 * bwd_pair(cfg, ti, l)
+            bwd_tables += [fg, fw]
+            bwd_products.append((p, p + 1))
+    sc_bwd, w2, bwd_finals = sumcheck_prove(
+        bwd_tables, bwd_products, t, b"bwd",
+        coefs=_coefs(cfg, eb, range(1, L)))
+
+    # gw: sum_{t,l} ew[slot] GW~^{l,t}(u_i,u_j) = sum_b GZ^l A^{l-1}
+    gw_tables, gw_products = [], []
+    for ti in range(T):
+        for l in range(1, L + 1):
+            fg = fix_cols(tabs.gz_tabs[ti][l - 1], ch.u_i)
+            fa = fix_cols(tabs.a_tabs[ti][l - 1], ch.u_j)
+            p = 2 * gw_pair(cfg, ti, l)
+            gw_tables += [fg, fa]
+            gw_products.append((p, p + 1))
+    sc_gw, w3, gw_finals = sumcheck_prove(
+        gw_tables, gw_products, t, b"gw",
+        coefs=_coefs(cfg, ew, range(1, L + 1)))
+
+    return MatmulOut(sc_fwd=sc_fwd, sc_bwd=sc_bwd, sc_gw=sc_gw,
+                     fwd_finals=fwd_finals, bwd_finals=bwd_finals,
+                     gw_finals=gw_finals, w1=w1, w2=w2, w3=w3)
+
+
+def verify(cfg: PipelineConfig, proof, op, ch: ChallengeSchedule,
+           t: Transcript) -> Tuple[List[int], List[int], List[int]]:
+    """Checks the three sumchecks; returns (w1, w2, w3) bound points.
+
+    Raises ValueError on any inconsistency (caught by the caller)."""
+    T, L = cfg.n_steps, cfg.n_layers
+    lb, ld = log2_exact(cfg.batch), log2_exact(cfg.width)
+    ef = hexpand_point(ch.u_sf)
+    eb = hexpand_point(ch.u_sb)
+    ew = hexpand_point(ch.u_sw)
+    two_r = pow(2, cfg.r_bits, Q_MOD)
+    two_qr1 = pow(2, cfg.q_bits + cfg.r_bits - 1, Q_MOD)
+
+    claim_fwd = (two_r * op["a1"] - two_qr1 * op["a2"] + op["a3"]) % Q_MOD
+    fwd_products = [(2 * i, 2 * i + 1) for i in range(T * L)]
+    w1, exp_fwd = sumcheck_verify(claim_fwd, proof.sc_fwd, 2, ld, t, b"fwd")
+    if exp_fwd != combine_final(fwd_products, proof.fwd_finals,
+                                coefs=_coefs(cfg, ef, range(1, L + 1))):
+        raise ValueError("fwd-final")
+    t.absorb_ints(b"fwd/final", proof.fwd_finals)
+
+    claim_bwd = (two_r * op["a4"] + op["a5"]) % Q_MOD
+    bwd_products = [(2 * i, 2 * i + 1) for i in range(T * (L - 1))]
+    w2, exp_bwd = sumcheck_verify(claim_bwd, proof.sc_bwd, 2, ld, t, b"bwd")
+    if exp_bwd != combine_final(bwd_products, proof.bwd_finals,
+                                coefs=_coefs(cfg, eb, range(1, L))):
+        raise ValueError("bwd-final")
+    t.absorb_ints(b"bwd/final", proof.bwd_finals)
+
+    claim_gw = op["a6"]
+    gw_products = [(2 * i, 2 * i + 1) for i in range(T * L)]
+    w3, exp_gw = sumcheck_verify(claim_gw, proof.sc_gw, 2, lb, t, b"gw")
+    if exp_gw != combine_final(gw_products, proof.gw_finals,
+                               coefs=_coefs(cfg, ew, range(1, L + 1))):
+        raise ValueError("gw-final")
+    t.absorb_ints(b"gw/final", proof.gw_finals)
+    return w1, w2, w3

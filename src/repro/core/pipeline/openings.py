@@ -1,0 +1,299 @@
+"""Step (c): derived claims, folded IPA openings, and zkReLU validity.
+
+Everything the anchor reduced to point-claims on COMMITTED tensors is
+discharged here:
+
+* the per-step eq. (32) reduction of G_Z^{L,t} to Z''/B/Y claims (the
+  loss layer is linear, so the verifier assembles it from openings);
+* one IPA per committed tensor, with ALL of its claims -- across points,
+  layers and aggregated steps -- folded into a single inner product via
+  <T, b1> + rho <T, b2> = <T, b1 + rho b2>;
+* the per-sample data commitments (Section 4.4) folded homomorphically
+  over rows AND steps into two IPAs total;
+* the zkReLU validity argument over the full stacked bit matrices.
+
+The proof therefore carries O(log(T L D Q)) group elements for T steps,
+against O(T log(L D Q)) for T independent proofs.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.field import FQ, add, mont_mul
+from repro.core import group, ipa, zkrelu
+from repro.core.mle import enc, expand_point, fdot, hexpand_point
+from repro.core.transcript import Transcript
+from repro.core.pipeline import matmul
+from repro.core.pipeline.anchor import AnchorPoints
+from repro.core.pipeline.challenges import (ChallengeSchedule, WeightDraws,
+                                            pi_bases)
+from repro.core.pipeline.config import PipelineConfig, PipelineKeys
+from repro.core.pipeline.tables import dec_scalar, kron, weight_table
+from repro.core.pipeline.witness import FieldTables
+
+Q_MOD = FQ.modulus
+
+# canonical per-step opening-claim names for the eq. (32) reduction
+GZ_TOP_KEYS = ("zL_b", "bL_b", "y_b", "zL_w", "bL_w", "y_w")
+
+
+def gz_top_keys(cfg: PipelineConfig) -> List[str]:
+    return [f"{k}/{t}" for t in range(cfg.n_steps) for k in GZ_TOP_KEYS]
+
+
+def initial_claims(cfg: PipelineConfig, tabs: FieldTables,
+                   ch: ChallengeSchedule, op: Dict[str, int],
+                   t: Transcript) -> tuple:
+    """Openings a1..a6 of the stacked aux tensors at pi1/pi2/pi3."""
+    e_pi1, e_pi2, e_pi3 = pi_bases(ch)
+    op["a1"] = dec_scalar(fdot(tabs.zpp_t, e_pi1))
+    op["a2"] = dec_scalar(fdot(tabs.bq_t, e_pi1))
+    op["a3"] = dec_scalar(fdot(tabs.rz_t, e_pi1))
+    op["a4"] = dec_scalar(fdot(tabs.gap_t, e_pi2))
+    op["a5"] = dec_scalar(fdot(tabs.rga_t, e_pi2))
+    op["a6"] = dec_scalar(fdot(tabs.gw_t, e_pi3))
+    t.absorb_ints(b"op1", [op[k] for k in ("a1", "a2", "a3",
+                                           "a4", "a5", "a6")])
+    return e_pi1, e_pi2, e_pi3
+
+
+def gz_top_bases(cfg: PipelineConfig, pts: AnchorPoints):
+    """Per-step bases selecting (step t, layer L) of the stacked tensors
+    at pt_b / pt_w, plus the per-step selectors on the stacked labels."""
+    L = cfg.n_layers
+    e_b, e_w = expand_point(pts.pt_b), expand_point(pts.pt_w)
+    b_gzl_b, b_gzl_w, y_b, y_w = [], [], [], []
+    for t in range(cfg.n_steps):
+        eL = weight_table({cfg.slot(t, L - 1): 1}, cfg.s_pad)
+        e_t = weight_table({t: 1}, cfg.t_pad)
+        b_gzl_b.append(kron(eL, e_b))
+        b_gzl_w.append(kron(eL, e_w))
+        y_b.append(kron(e_t, e_b))
+        y_w.append(kron(e_t, e_w))
+    return b_gzl_b, b_gzl_w, y_b, y_w
+
+
+def w_opening(cfg: PipelineConfig, dlt: WeightDraws, ch: ChallengeSchedule,
+              w1, w2, fwd_finals, bwd_finals):
+    """Combined bases/claims folding every W^{l,t} claim into two
+    openings of the single stacked-W commitment."""
+    wW1 = weight_table({cfg.slot(t, l - 1): c
+                        for (t, l), c in dlt.w1.items()}, cfg.s_pad)
+    wW2 = weight_table({cfg.slot(t, l): c
+                        for (t, l), c in dlt.w2.items()}, cfg.s_pad)
+    b_w1 = kron(wW1, kron(expand_point(w1), expand_point(ch.u_c)))
+    b_w2 = kron(wW2, kron(expand_point(ch.u_c2), expand_point(w2)))
+    cl_w1 = 0
+    for (t, l), c in dlt.w1.items():
+        cl_w1 = (cl_w1 + c * fwd_finals[2 * matmul.fwd_pair(cfg, t, l) + 1]) % Q_MOD
+    cl_w2 = 0
+    for (t, l), c in dlt.w2.items():
+        cl_w2 = (cl_w2 + c * bwd_finals[2 * matmul.bwd_pair(cfg, t, l) + 1]) % Q_MOD
+    return b_w1, b_w2, cl_w1, cl_w2
+
+
+def _combine_claims(t: Transcript, name: str, claims_pts):
+    """Fold several (public vector, claim) pairs for one tensor into one
+    (vector, claim) via transcript powers of rho."""
+    rho = t.challenge_int(b"rho/" + name.encode(), Q_MOD)
+    combined_b, combined_claim, rpow = None, 0, 1
+    for b_pub, claim in claims_pts:
+        scaled = mont_mul(FQ, b_pub, enc(rpow)[None])
+        combined_b = scaled if combined_b is None else add(FQ, combined_b,
+                                                           scaled)
+        combined_claim = (combined_claim + rpow * claim) % Q_MOD
+        rpow = rpow * rho % Q_MOD
+    return combined_b, combined_claim
+
+
+def x_fold_openings(cfg: PipelineConfig, ch: ChallengeSchedule, w1, w3,
+                    fwd_finals, gw_finals):
+    """The two cross-step data-opening specs: (tag, row point, column
+    point, per-step claims).  Per-step claims are batched with a rho
+    challenge on top of the per-row fold, so all T*B per-sample
+    commitments collapse into ONE commitment fold per tag."""
+    T = cfg.n_steps
+    return (
+        ("x1", ch.u_r, w1,
+         [fwd_finals[2 * matmul.fwd_pair(cfg, t, 1)] for t in range(T)]),
+        ("x2", w3, ch.u_j,
+         [gw_finals[2 * matmul.gw_pair(cfg, t, 1) + 1] for t in range(T)]),
+    )
+
+
+def _x_coefs(cfg: PipelineConfig, t: Transcript, tag: str, row_pt,
+             claims: List[int]):
+    """Per-(step, sample) fold coefficients rho^t * e_row[i] plus the
+    combined claim; shared by prover and verifier."""
+    e_row = hexpand_point(row_pt)
+    rho = t.challenge_int(b"rho/" + tag.encode(), Q_MOD)
+    coefs, combined_claim, rpow = [], 0, 1
+    for ti in range(cfg.n_steps):
+        coefs.extend(rpow * e_row[i] % Q_MOD for i in range(cfg.batch))
+        combined_claim = (combined_claim + rpow * claims[ti]) % Q_MOD
+        rpow = rpow * rho % Q_MOD
+    return coefs, combined_claim
+
+
+def prove(cfg: PipelineConfig, keys: PipelineKeys, tabs: FieldTables,
+          blinds: Dict[str, int], x_blinds: List[int],
+          aux_bits: zkrelu.AuxBits, vblinds, ch: ChallengeSchedule,
+          mat: matmul.MatmulOut, anc, op: Dict[str, int],
+          e_pi1, e_pi2, e_pi3, t: Transcript, rng):
+    """Runs the whole of step (c) prover-side; returns (ipas, validity)."""
+    T, L = cfg.n_steps, cfg.n_layers
+    pts, u_star = anc.pts, anc.u_star
+    e_star = expand_point(u_star)
+    op["a7"] = dec_scalar(fdot(tabs.rz_t, e_star))
+    op["a8"] = dec_scalar(fdot(tabs.rga_t, e_star))
+    t.absorb_ints(b"op2", [op["a7"], op["a8"]])
+    upp = t.challenge_int(b"upp", Q_MOD)
+    u_relu = u_star + [upp]
+    f_oneb, f_zpp, f_gap = anc.anchor_finals[:3]
+    v = ((1 - upp) * f_zpp + upp * f_gap) % Q_MOD
+    v_q1 = (1 - f_oneb) % Q_MOD
+    v_r = ((1 - upp) * op["a7"] + upp * op["a8"]) % Q_MOD
+    t.absorb_ints(b"vclaims", [v, v_q1, v_r])
+
+    # per-step GZ^{L,t} linear reduction claims (eq. 32)
+    b_gzl_b, b_gzl_w, yb_bases, yw_bases = gz_top_bases(cfg, pts)
+    for ti in range(T):
+        op[f"zL_b/{ti}"] = dec_scalar(fdot(tabs.zpp_t, b_gzl_b[ti]))
+        op[f"bL_b/{ti}"] = dec_scalar(fdot(tabs.bq_t, b_gzl_b[ti]))
+        op[f"y_b/{ti}"] = dec_scalar(fdot(tabs.y_t, yb_bases[ti]))
+        op[f"zL_w/{ti}"] = dec_scalar(fdot(tabs.zpp_t, b_gzl_w[ti]))
+        op[f"bL_w/{ti}"] = dec_scalar(fdot(tabs.bq_t, b_gzl_w[ti]))
+        op[f"y_w/{ti}"] = dec_scalar(fdot(tabs.y_t, yw_bases[ti]))
+    t.absorb_ints(b"op3", [op[k] for k in gz_top_keys(cfg)])
+
+    ipas: Dict[str, ipa.IpaProof] = {}
+
+    def multi_open(name, table, key, blind, claims_pts):
+        combined_b, combined_claim = _combine_claims(t, name, claims_pts)
+        ipas[name] = ipa.open_prove(key, table, combined_b, blind,
+                                    combined_claim, t, rng)
+
+    multi_open("zpp", tabs.zpp_t, keys.kd, blinds["zpp"],
+               [(e_pi1, op["a1"]), (e_star, f_zpp)]
+               + [(b_gzl_b[ti], op[f"zL_b/{ti}"]) for ti in range(T)]
+               + [(b_gzl_w[ti], op[f"zL_w/{ti}"]) for ti in range(T)])
+    multi_open("bq", tabs.bq_t, keys.k_bq, blinds["bq"],
+               [(e_pi1, op["a2"]), (e_star, v_q1)]
+               + [(b_gzl_b[ti], op[f"bL_b/{ti}"]) for ti in range(T)]
+               + [(b_gzl_w[ti], op[f"bL_w/{ti}"]) for ti in range(T)])
+    multi_open("rz", tabs.rz_t, keys.kd, blinds["rz"],
+               [(e_pi1, op["a3"]), (e_star, op["a7"])])
+    multi_open("gap", tabs.gap_t, keys.kd, blinds["gap"],
+               [(e_pi2, op["a4"]), (e_star, f_gap)])
+    multi_open("rga", tabs.rga_t, keys.kd, blinds["rga"],
+               [(e_pi2, op["a5"]), (e_star, op["a8"])])
+
+    dlt = WeightDraws.draw(t, cfg)
+    b_w1, b_w2, cl_w1, cl_w2 = w_opening(cfg, dlt, ch, mat.w1, mat.w2,
+                                         mat.fwd_finals, mat.bwd_finals)
+    multi_open("w", tabs.w_t, keys.kw, blinds["w"],
+               [(b_w1, cl_w1), (b_w2, cl_w2)])
+    multi_open("gw", tabs.gw_t, keys.kw, blinds["gw"], [(e_pi3, op["a6"])])
+    multi_open("y", tabs.y_t, keys.ky, blinds["y"],
+               [(yb_bases[ti], op[f"y_b/{ti}"]) for ti in range(T)]
+               + [(yw_bases[ti], op[f"y_w/{ti}"]) for ti in range(T)])
+
+    # data openings: per-sample commitments folded over rows AND steps
+    for tag, row_pt, col_pt, claims in x_fold_openings(
+            cfg, ch, mat.w1, mat.w3, mat.fwd_finals, mat.gw_finals):
+        coefs, combined_claim = _x_coefs(cfg, t, tag, row_pt, claims)
+        folded = None
+        blind_f = 0
+        for j, c in enumerate(coefs):
+            s = mont_mul(FQ, tabs.x_tabs[j], enc(c)[None])
+            folded = s if folded is None else add(FQ, folded, s)
+            blind_f = (blind_f + c * x_blinds[j]) % Q_MOD
+        ipas[tag] = ipa.open_prove(keys.kx, folded, expand_point(col_pt),
+                                   blind_f, combined_claim, t, rng)
+
+    validity = zkrelu.prove_validity(
+        keys.validity, aux_bits, vblinds, u_relu,
+        v, v_q1, v_r, blinds["bq"], t, rng)
+    return ipas, validity
+
+
+def verify(cfg: PipelineConfig, keys: PipelineKeys, proof, coms,
+           ch: ChallengeSchedule, pts: AnchorPoints, u_star, w1, w2, w3,
+           e_pi1, e_pi2, e_pi3, t: Transcript) -> None:
+    """Verifier side of step (c).  Raises ValueError naming the first
+    failing check."""
+    T, L = cfg.n_steps, cfg.n_layers
+    op = proof.openings
+    two_q1 = pow(2, cfg.q_bits - 1, Q_MOD)
+    e_star = expand_point(u_star)
+    f_oneb, f_zpp, f_gap = proof.anchor_finals[:3]
+
+    t.absorb_ints(b"op2", [op["a7"], op["a8"]])
+    upp = t.challenge_int(b"upp", Q_MOD)
+    u_relu = u_star + [upp]
+    v = ((1 - upp) * f_zpp + upp * f_gap) % Q_MOD
+    v_q1 = (1 - f_oneb) % Q_MOD
+    v_r = ((1 - upp) * op["a7"] + upp * op["a8"]) % Q_MOD
+    t.absorb_ints(b"vclaims", [v, v_q1, v_r])
+    t.absorb_ints(b"op3", [op[k] for k in gz_top_keys(cfg)])
+
+    # per-step GZ^{L,t} linear checks (eq. 32)
+    for ti in range(T):
+        gzl_b = (op[f"zL_b/{ti}"] - two_q1 * op[f"bL_b/{ti}"]
+                 - op[f"y_b/{ti}"]) % Q_MOD
+        if proof.bwd_finals[2 * matmul.bwd_pair(cfg, ti, L - 1)] != gzl_b:
+            raise ValueError("gzL-bwd")
+        gzl_w = (op[f"zL_w/{ti}"] - two_q1 * op[f"bL_w/{ti}"]
+                 - op[f"y_w/{ti}"]) % Q_MOD
+        if proof.gw_finals[2 * matmul.gw_pair(cfg, ti, L)] != gzl_w:
+            raise ValueError("gzL-gw")
+
+    b_gzl_b, b_gzl_w, yb_bases, yw_bases = gz_top_bases(cfg, pts)
+
+    def multi_check(name, com_int, key, claims_pts):
+        combined_b, combined_claim = _combine_claims(t, name, claims_pts)
+        ok = ipa.open_verify(key, group.encode_group(com_int), combined_b,
+                             combined_claim, proof.ipas[name], t)
+        if not ok:
+            raise ValueError("open-" + name)
+
+    multi_check("zpp", coms.zpp, keys.kd,
+                [(e_pi1, op["a1"]), (e_star, f_zpp)]
+                + [(b_gzl_b[ti], op[f"zL_b/{ti}"]) for ti in range(T)]
+                + [(b_gzl_w[ti], op[f"zL_w/{ti}"]) for ti in range(T)])
+    multi_check("bq", coms.bq, keys.k_bq,
+                [(e_pi1, op["a2"]), (e_star, v_q1)]
+                + [(b_gzl_b[ti], op[f"bL_b/{ti}"]) for ti in range(T)]
+                + [(b_gzl_w[ti], op[f"bL_w/{ti}"]) for ti in range(T)])
+    multi_check("rz", coms.rz, keys.kd,
+                [(e_pi1, op["a3"]), (e_star, op["a7"])])
+    multi_check("gap", coms.gap, keys.kd,
+                [(e_pi2, op["a4"]), (e_star, f_gap)])
+    multi_check("rga", coms.rga, keys.kd,
+                [(e_pi2, op["a5"]), (e_star, op["a8"])])
+
+    dlt = WeightDraws.draw(t, cfg)
+    b_w1, b_w2, cl_w1, cl_w2 = w_opening(cfg, dlt, ch, w1, w2,
+                                         proof.fwd_finals,
+                                         proof.bwd_finals)
+    multi_check("w", coms.w, keys.kw, [(b_w1, cl_w1), (b_w2, cl_w2)])
+    multi_check("gw", coms.gw, keys.kw, [(e_pi3, op["a6"])])
+    multi_check("y", coms.y, keys.ky,
+                [(yb_bases[ti], op[f"y_b/{ti}"]) for ti in range(T)]
+                + [(yw_bases[ti], op[f"y_w/{ti}"]) for ti in range(T)])
+
+    # data openings: fold the per-sample commitments homomorphically
+    import jax.numpy as jnp
+    com_pts = jnp.stack([group.encode_group(ci) for ci in coms.x])
+    for tag, row_pt, col_pt, claims in x_fold_openings(
+            cfg, ch, w1, w3, proof.fwd_finals, proof.gw_finals):
+        coefs, combined_claim = _x_coefs(cfg, t, tag, row_pt, claims)
+        com_fold = group.msm(com_pts, group.exps_from_ints(coefs))
+        if not ipa.open_verify(keys.kx, com_fold, expand_point(col_pt),
+                               combined_claim, proof.ipas[tag], t):
+            raise ValueError("open-" + tag)
+
+    if not zkrelu.verify_validity(
+            keys.validity, coms.validity, coms.bq, v, v_q1, v_r, u_relu,
+            proof.validity, t):
+        raise ValueError("validity")

@@ -1,0 +1,208 @@
+"""`ProofSession`: accumulate T training-step witnesses, emit ONE proof.
+
+This is the FAC4DNN deployment surface: the trainer calls ``add_step``
+once per batch update and ``prove`` once per aggregation window; the
+committed tensors, the transcript, the three matmul sumchecks, the
+anchor sumcheck, the zkReLU validity argument and every IPA opening are
+all shared across the window's T steps, so per-step proof size and
+per-step fixed proving cost fall as T grows (see benchmarks/agg_steps.py
+for the measured amortization curve).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import group, ipa, pedersen, zkrelu
+from repro.core.quantfc import StepWitness
+from repro.core.sumcheck import SumcheckProof
+from repro.core.transcript import Transcript
+from repro.core.pipeline import anchor as anchor_mod
+from repro.core.pipeline import matmul as matmul_mod
+from repro.core.pipeline import openings as openings_mod
+from repro.core.pipeline.challenges import ChallengeSchedule
+from repro.core.pipeline.config import PipelineConfig, PipelineKeys
+from repro.core.pipeline.tables import enc_tensor, rand_scalar
+from repro.core.pipeline.witness import (StackedWitness, build_field_tables,
+                                         stack_witnesses)
+
+
+@dataclasses.dataclass
+class SessionCommitments:
+    """Everything the trainer publishes before the interaction; the x
+    list holds the per-sample data commitments of ALL T steps, t-major
+    (Section 4.4 folded-data path)."""
+    x: List[int]
+    y: int
+    w: int
+    gw: int
+    zpp: int
+    bq: int
+    rz: int
+    gap: int
+    rga: int
+    validity: zkrelu.ValidityCommitments
+
+    def as_ints(self) -> List[int]:
+        return (self.x + [self.y, self.w, self.gw, self.zpp, self.bq,
+                          self.rz, self.gap, self.rga,
+                          self.validity.com_b_ip, self.validity.com_bq1p,
+                          self.validity.com_br_ip])
+
+
+@dataclasses.dataclass
+class AggregatedProof:
+    """One transcript covering all T aggregated steps."""
+    coms: SessionCommitments
+    openings: Dict[str, int]               # claim values, by name
+    sc_fwd: SumcheckProof
+    sc_bwd: SumcheckProof
+    sc_gw: SumcheckProof
+    sc_anchor: SumcheckProof
+    fwd_finals: List[int]
+    bwd_finals: List[int]
+    gw_finals: List[int]
+    anchor_finals: List[int]
+    ipas: Dict[str, ipa.IpaProof]
+    validity: zkrelu.ValidityProof
+    n_steps: int = 1
+
+    def size_bytes(self) -> int:
+        n = len(self.coms.as_ints()) + len(self.openings)
+        for sc in (self.sc_fwd, self.sc_bwd, self.sc_gw, self.sc_anchor):
+            n += sum(len(m) for m in sc.messages)
+        n += (len(self.fwd_finals) + len(self.bwd_finals)
+              + len(self.gw_finals) + len(self.anchor_finals))
+        total = 32 * n
+        total += sum(p.size_bytes() for p in self.ipas.values())
+        total += self.validity.size_bytes()
+        return total
+
+
+class SessionProver:
+    """Two-phase prover over a stacked witness: commit, then prove."""
+
+    def __init__(self, keys: PipelineKeys, rng: np.random.Generator):
+        self.keys = keys
+        self.cfg = keys.cfg
+        self.rng = rng
+
+    # -- commitment phase --------------------------------------------------
+    def commit(self, sw: StackedWitness) -> SessionCommitments:
+        cfg, keys, rng = self.cfg, self.keys, self.rng
+        self.sw = sw
+        self.tabs = build_field_tables(sw)
+        self.blinds = {name: rand_scalar(rng) for name in
+                       ("y", "w", "gw", "zpp", "bq", "rz", "gap", "rga")}
+        self.x_blinds = [rand_scalar(rng) for _ in sw.x]
+
+        # NOTE: narrow MSM windows (nbits < 61) are only sound for
+        # UNSIGNED tensors -- negative values map to ~61-bit field elements.
+        qb = cfg.q_bits
+        com_x = [group.decode_group(pedersen.commit(
+            keys.kx, enc_tensor(x), b))
+            for x, b in zip(sw.x, self.x_blinds)]
+        com_y = pedersen.commit(keys.ky, self.tabs.y_t, self.blinds["y"])
+        com_w = pedersen.commit(keys.kw, self.tabs.w_t, self.blinds["w"])
+        com_gw = pedersen.commit(keys.kw, self.tabs.gw_t, self.blinds["gw"])
+        com_zpp = pedersen.commit(keys.kd, self.tabs.zpp_t,
+                                  self.blinds["zpp"], nbits=qb)
+        com_bq = pedersen.commit_bits(keys.k_bq, sw.bq_s.astype(np.uint32),
+                                      self.blinds["bq"])
+        com_rz = pedersen.commit(keys.kd, self.tabs.rz_t,
+                                 self.blinds["rz"], nbits=cfg.r_bits + 1)
+        com_gap = pedersen.commit(keys.kd, self.tabs.gap_t,
+                                  self.blinds["gap"])
+        com_rga = pedersen.commit(keys.kd, self.tabs.rga_t,
+                                  self.blinds["rga"], nbits=cfg.r_bits + 1)
+
+        self.aux_bits = zkrelu.build_aux_bits(
+            sw.zpp_s, sw.gap_s, sw.bq_s, sw.rz_s, sw.rga_s,
+            cfg.q_bits, cfg.r_bits)
+        vcoms, self.vblinds = zkrelu.commit_validity(keys.validity,
+                                                     self.aux_bits, rng)
+        self.coms = SessionCommitments(
+            x=com_x, y=group.decode_group(com_y), w=group.decode_group(com_w),
+            gw=group.decode_group(com_gw), zpp=group.decode_group(com_zpp),
+            bq=group.decode_group(com_bq), rz=group.decode_group(com_rz),
+            gap=group.decode_group(com_gap), rga=group.decode_group(com_rga),
+            validity=vcoms)
+        return self.coms
+
+    # -- interactive phase (Fiat-Shamir) -----------------------------------
+    def prove(self, transcript: Transcript) -> AggregatedProof:
+        cfg, keys, rng = self.cfg, self.keys, self.rng
+        t = transcript
+        t.absorb_ints(b"coms", self.coms.as_ints())
+        ch = ChallengeSchedule.draw(t, cfg)
+
+        op: Dict[str, int] = {}
+        e_pi1, e_pi2, e_pi3 = openings_mod.initial_claims(
+            cfg, self.tabs, ch, op, t)
+        mat = matmul_mod.prove(cfg, self.tabs, ch, t)            # step (a)
+        anc = anchor_mod.prove(cfg, self.tabs, ch, mat, t)       # step (b)
+        ipas, validity = openings_mod.prove(                     # step (c)
+            cfg, keys, self.tabs, self.blinds, self.x_blinds,
+            self.aux_bits, self.vblinds, ch, mat, anc, op,
+            e_pi1, e_pi2, e_pi3, t, rng)
+
+        return AggregatedProof(
+            coms=self.coms, openings=op, sc_fwd=mat.sc_fwd,
+            sc_bwd=mat.sc_bwd, sc_gw=mat.sc_gw, sc_anchor=anc.sc_anchor,
+            fwd_finals=mat.fwd_finals, bwd_finals=mat.bwd_finals,
+            gw_finals=mat.gw_finals, anchor_finals=anc.anchor_finals,
+            ipas=ipas, validity=validity, n_steps=cfg.n_steps)
+
+
+class ProofSession:
+    """Streaming front end: add step witnesses as training progresses,
+    then emit the single aggregated proof for the window."""
+
+    def __init__(self, keys: PipelineKeys,
+                 rng: Optional[np.random.Generator] = None,
+                 label: bytes = b"zkdl"):
+        self.keys = keys
+        self.cfg = keys.cfg
+        self.rng = rng if rng is not None else np.random.default_rng()
+        self.label = label
+        self._steps: List[StepWitness] = []
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._steps)
+
+    @property
+    def is_full(self) -> bool:
+        return len(self._steps) >= self.cfg.n_steps
+
+    def add_step(self, wit: StepWitness) -> int:
+        """Queue one batch-update witness; returns its step index."""
+        if self.is_full:
+            raise ValueError(
+                f"session already holds {self.cfg.n_steps} steps; "
+                "prove() and start a new session")
+        self._steps.append(wit)
+        return len(self._steps) - 1
+
+    def prove(self) -> AggregatedProof:
+        """Stack the queued witnesses and emit the aggregated proof."""
+        sw = stack_witnesses(self._steps, self.cfg)
+        prover = SessionProver(self.keys, self.rng)
+        prover.commit(sw)
+        return prover.prove(Transcript(self.label))
+
+    def verify(self, proof: AggregatedProof) -> bool:
+        from repro.core.pipeline.verifier import verify_session
+        return verify_session(self.keys, proof, label=self.label)
+
+
+def prove_session(keys: PipelineKeys, wits: List[StepWitness],
+                  rng: np.random.Generator,
+                  label: bytes = b"zkdl") -> AggregatedProof:
+    """One-shot helper: aggregate `wits` (length cfg.n_steps) -> proof."""
+    session = ProofSession(keys, rng, label=label)
+    for w in wits:
+        session.add_step(w)
+    return session.prove()

@@ -1,0 +1,81 @@
+"""Shared field-table helpers for the staged proof pipeline.
+
+All proof tensors are flat ``(n, 4)`` uint32 limb tables in Montgomery
+form (see `repro.core.mle` for the variable-ordering convention).  The
+helpers here are the witness-to-table plumbing every stage shares:
+encoding int64 tensors, fixing row/column variable blocks, Kronecker
+products of expanded points, and sparse "weight" tables over the stacked
+(step, layer) slot axis.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.field import FQ, add, sub, mont_mul, encode_i64, decode
+from repro.core.mle import enc, enc_vec
+
+Q_MOD = FQ.modulus
+
+
+def next_pow2(n: int) -> int:
+    m = 1
+    while m < n:
+        m *= 2
+    return m
+
+
+def log2_exact(n: int) -> int:
+    assert n & (n - 1) == 0
+    return n.bit_length() - 1
+
+
+def rand_scalar(rng) -> int:
+    return int(rng.integers(0, Q_MOD, dtype=np.uint64)) % Q_MOD
+
+
+def enc_tensor(x: np.ndarray) -> jnp.ndarray:
+    """int64 array -> flat (n,4) Montgomery table."""
+    return jnp.asarray(encode_i64(FQ, x.reshape(-1))).reshape(-1, 4)
+
+
+def dec_scalar(x) -> int:
+    return int(decode(FQ, x)[()])
+
+
+def fix_rows(table: jnp.ndarray, point: List[int]) -> jnp.ndarray:
+    """table (R, C, 4); fold ROW vars (little-endian) -> (C, 4)."""
+    for r in point:
+        rl = enc(r)
+        even, odd = table[0::2], table[1::2]
+        table = add(FQ, even, mont_mul(FQ, sub(FQ, odd, even), rl[None, None]))
+    return table[0]
+
+
+def fix_cols(table: jnp.ndarray, point: List[int]) -> jnp.ndarray:
+    """table (R, C, 4); fold COL vars -> (R, 4)."""
+    for r in point:
+        rl = enc(r)
+        even, odd = table[:, 0::2], table[:, 1::2]
+        table = add(FQ, even, mont_mul(FQ, sub(FQ, odd, even), rl[None, None]))
+    return table[:, 0]
+
+
+def kron(hi: jnp.ndarray, lo: jnp.ndarray) -> jnp.ndarray:
+    """(a,4) x (b,4) -> (a*b,4) with lo varying fastest (low MLE vars)."""
+    return mont_mul(FQ, hi[:, None, :], lo[None, :, :]).reshape(-1, 4)
+
+
+def weight_table(weights: Dict[int, int], n: int) -> jnp.ndarray:
+    """Sparse coefficient vector over an n-slot axis as a field table."""
+    vec = np.zeros(n, dtype=object)
+    for i, w in weights.items():
+        vec[i] = w % Q_MOD
+    return enc_vec(list(vec))
+
+
+def wt_eval(weights: Dict[int, int], e_host: List[int]) -> int:
+    """<weights, e(u)> for a host-expanded point (verifier side)."""
+    return sum(w * e_host[i] for i, w in weights.items()) % Q_MOD

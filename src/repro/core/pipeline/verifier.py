@@ -1,0 +1,62 @@
+"""Standalone verifier for aggregated pipeline proofs.
+
+Mirrors the prover's transcript schedule exactly: absorb commitments,
+draw the challenge schedule, replay steps (a)/(b)/(c).  Soundness checks
+are expressed as ValueError raises inside the stage modules; this module
+converts them into an accept/reject bit (plus an optional failure trace
+for telemetry).
+"""
+from __future__ import annotations
+
+from repro.core.pipeline import anchor as anchor_mod
+from repro.core.pipeline import matmul as matmul_mod
+from repro.core.pipeline import openings as openings_mod
+from repro.core.pipeline.challenges import ChallengeSchedule, pi_bases
+from repro.core.pipeline.config import PipelineKeys
+from repro.core.pipeline.session import AggregatedProof
+from repro.core.transcript import Transcript
+
+
+def verify(keys: PipelineKeys, proof: AggregatedProof,
+           transcript: Transcript, trace: list | None = None) -> bool:
+    """Trusted-verifier side of the aggregated protocol.
+
+    If ``trace`` is a list, the name of the first failing check is
+    appended (debugging/telemetry; does not affect soundness).
+    """
+    cfg = keys.cfg
+    t = transcript
+    op = proof.openings
+    try:
+        if proof.n_steps != cfg.n_steps:
+            raise ValueError("step-count")
+        if len(proof.coms.x) != cfg.n_steps * cfg.batch:
+            raise ValueError("x-commitment-count")
+        t.absorb_ints(b"coms", proof.coms.as_ints())
+        ch = ChallengeSchedule.draw(t, cfg)
+        t.absorb_ints(b"op1", [op[k] for k in ("a1", "a2", "a3",
+                                               "a4", "a5", "a6")])
+        e_pi1, e_pi2, e_pi3 = pi_bases(ch)
+
+        w1, w2, w3 = matmul_mod.verify(cfg, proof, op, ch, t)    # step (a)
+        pts, u_star = anchor_mod.verify(cfg, proof, ch,          # step (b)
+                                        w1, w2, w3, t)
+        openings_mod.verify(cfg, keys, proof, proof.coms, ch,    # step (c)
+                            pts, u_star, w1, w2, w3,
+                            e_pi1, e_pi2, e_pi3, t)
+        return True
+    # ValueError: failed soundness checks / inconsistent transcript;
+    # KeyError/IndexError: structurally malformed proof fields.  Verifier-
+    # side programming errors (AssertionError etc.) propagate -- an
+    # infrastructure bug must not masquerade as a forged proof.
+    except (ValueError, KeyError, IndexError) as exc:
+        if trace is not None:
+            arg = exc.args[0] if exc.args else exc
+            trace.append(arg if isinstance(arg, str) else f"exception: {exc!r}")
+        return False
+
+
+def verify_session(keys: PipelineKeys, proof: AggregatedProof,
+                   label: bytes = b"zkdl",
+                   trace: list | None = None) -> bool:
+    return verify(keys, proof, Transcript(label), trace=trace)

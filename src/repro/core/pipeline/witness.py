@@ -1,0 +1,121 @@
+"""Witness stacking: T `StepWitness`es -> one stacked proof witness.
+
+The stacked auxiliary tensors put the element variables low, the layer
+variables next, and the step variables on top (little-endian MLE
+ordering), so flat index = (t * l_pad + layer) * d_elem + elem.  Padded
+layers AND padded steps are zero, which keeps every stacked relation
+exact: zero slots contribute nothing to any sumcheck and pass the zkReLU
+range constraints trivially.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantfc import StepWitness
+from repro.core.pipeline.config import PipelineConfig
+from repro.core.pipeline.tables import enc_tensor
+
+
+def _stack_aux(per_step: List[List[np.ndarray]],
+               cfg: PipelineConfig) -> np.ndarray:
+    """per_step[t] = list of (B, d) int64 -> (d_stack,) with zero padding."""
+    out = np.zeros((cfg.t_pad, cfg.l_pad, cfg.d_elem), dtype=np.int64)
+    for t, layers in enumerate(per_step):
+        for i, tensor in enumerate(layers):
+            out[t, i] = tensor.reshape(-1)
+    return out.reshape(-1)
+
+
+@dataclasses.dataclass
+class StackedWitness:
+    """Stacked int64 tensors plus the per-step raw witnesses."""
+    cfg: PipelineConfig
+    steps: List[StepWitness]
+    zpp_s: np.ndarray      # (d_stack,)
+    bq_s: np.ndarray
+    rz_s: np.ndarray
+    gap_s: np.ndarray
+    rga_s: np.ndarray
+    w_s: np.ndarray        # (w_stack,)
+    gw_s: np.ndarray
+    y_s: np.ndarray        # (y_stack,)
+    x: List[np.ndarray]    # T*B per-sample rows (width,), t-major
+
+    @property
+    def n_steps(self) -> int:
+        return len(self.steps)
+
+
+def stack_witnesses(steps: List[StepWitness],
+                    cfg: PipelineConfig) -> StackedWitness:
+    if len(steps) != cfg.n_steps:
+        raise ValueError(
+            f"session holds {len(steps)} step witnesses, "
+            f"config requires exactly {cfg.n_steps}")
+    for t, wit in enumerate(steps):
+        if wit.n_layers != cfg.n_layers:
+            raise ValueError(f"step {t}: {wit.n_layers} layers != "
+                             f"{cfg.n_layers}")
+        if wit.x.shape != (cfg.batch, cfg.width):
+            raise ValueError(f"step {t}: x shape {wit.x.shape} != "
+                             f"{(cfg.batch, cfg.width)}")
+
+    w_stack = np.zeros((cfg.t_pad, cfg.l_pad, cfg.width * cfg.width),
+                       dtype=np.int64)
+    gw_stack = np.zeros_like(w_stack)
+    y_stack = np.zeros((cfg.t_pad, cfg.d_elem), dtype=np.int64)
+    xs: List[np.ndarray] = []
+    for t, wit in enumerate(steps):
+        for i in range(cfg.n_layers):
+            w_stack[t, i] = wit.w[i].reshape(-1)
+            gw_stack[t, i] = wit.gw[i].reshape(-1)
+        y_stack[t] = wit.y.reshape(-1)
+        xs.extend(wit.x[i] for i in range(cfg.batch))
+
+    return StackedWitness(
+        cfg=cfg, steps=list(steps),
+        zpp_s=_stack_aux([w.zpp for w in steps], cfg),
+        bq_s=_stack_aux([w.b for w in steps], cfg),
+        rz_s=_stack_aux([w.rz for w in steps], cfg),
+        gap_s=_stack_aux([w.gap for w in steps], cfg),
+        rga_s=_stack_aux([w.rga for w in steps], cfg),
+        w_s=w_stack.reshape(-1), gw_s=gw_stack.reshape(-1),
+        y_s=y_stack.reshape(-1), x=xs)
+
+
+@dataclasses.dataclass
+class FieldTables:
+    """The stacked witness re-encoded as Montgomery limb tables (prover)."""
+    zpp_t: jnp.ndarray
+    bq_t: jnp.ndarray
+    rz_t: jnp.ndarray
+    gap_t: jnp.ndarray
+    rga_t: jnp.ndarray
+    w_t: jnp.ndarray
+    gw_t: jnp.ndarray
+    y_t: jnp.ndarray
+    x_tabs: List[jnp.ndarray]            # T*B tables (width, 4), t-major
+    a_tabs: List[List[jnp.ndarray]]      # [t][l] (B, d, 4)
+    gz_tabs: List[List[jnp.ndarray]]     # [t][l] (B, d, 4)
+    w_mats: List[List[jnp.ndarray]]      # [t][l] (d, d, 4)
+
+
+def build_field_tables(sw: StackedWitness) -> FieldTables:
+    cfg = sw.cfg
+    B, d = cfg.batch, cfg.width
+    return FieldTables(
+        zpp_t=enc_tensor(sw.zpp_s), bq_t=enc_tensor(sw.bq_s),
+        rz_t=enc_tensor(sw.rz_s), gap_t=enc_tensor(sw.gap_s),
+        rga_t=enc_tensor(sw.rga_s), w_t=enc_tensor(sw.w_s),
+        gw_t=enc_tensor(sw.gw_s), y_t=enc_tensor(sw.y_s),
+        x_tabs=[enc_tensor(x) for x in sw.x],
+        a_tabs=[[enc_tensor(a).reshape(B, d, 4) for a in w.a]
+                for w in sw.steps],
+        gz_tabs=[[enc_tensor(g).reshape(B, d, 4) for g in w.gz]
+                 for w in sw.steps],
+        w_mats=[[enc_tensor(m).reshape(d, d, 4) for m in w.w]
+                for w in sw.steps])

@@ -138,6 +138,25 @@ def train_step_witness(x: np.ndarray, y: np.ndarray, ws: List[np.ndarray],
                        gap=gap, rga=rga, gw=gw)
 
 
+def synthetic_sgd_trajectory(n_steps: int, n_layers: int, batch: int,
+                             width: int, cfg: QuantConfig, seed: int = 0,
+                             lr_shift: int = 8) -> List[StepWitness]:
+    """n_steps consecutive batch-update witnesses along a real integer-SGD
+    trajectory on seeded synthetic data (the shared generator for tests,
+    benchmarks and examples, so they all measure the same trajectory)."""
+    rng = np.random.default_rng(seed)
+    ws = [quantize(rng.uniform(-1, 1, (width, width)) * 0.3, cfg)
+          for _ in range(n_layers)]
+    wits = []
+    for _ in range(n_steps):
+        x = quantize(rng.uniform(-1, 1, (batch, width)), cfg)
+        y = quantize(rng.uniform(-1, 1, (batch, width)), cfg)
+        wit = train_step_witness(x, y, ws, cfg)
+        wits.append(wit)
+        ws = sgd_apply(ws, wit.gw, lr_shift, cfg)
+    return wits
+
+
 def sgd_apply(ws: List[np.ndarray], gw: List[np.ndarray], lr_shift: int,
               cfg: QuantConfig) -> List[np.ndarray]:
     """W <- W - G_W / 2^{lr_shift + R}: gradient at scale 2^{2R} mapped back

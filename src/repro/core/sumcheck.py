@@ -89,8 +89,13 @@ def sumcheck_prove(
         r = transcript.challenge_int(label + b"/r", Q)
         point.append(r)
         r_l = enc(r)
-        tables = [add(FQ, e, mont_mul(FQ, d, r_l[None]))
-                  for e, d in zip(evens, diffs)]
+        if mle.fold_backend() == "pallas":
+            # fused fold kernel: one VMEM pass per table instead of
+            # materializing diff and diff*r (see kernels/sumcheck_fold)
+            tables = [mle.fold(t, r_l) for t in tables]
+        else:
+            tables = [add(FQ, e, mont_mul(FQ, d, r_l[None]))
+                      for e, d in zip(evens, diffs)]
     final_values = [_decode_scalar(t[0]) for t in tables]
     transcript.absorb_ints(label + b"/final", final_values)
     return SumcheckProof(messages), point, final_values

@@ -1,693 +1,50 @@
-"""zkDL Protocol 2: full zero-knowledge proof of one FCNN batch update.
+"""Compatibility shim over `repro.core.pipeline`.
 
-Proof structure (mirrors Fig. 3 -- each step batches ALL layers with one
-set of randomness, which is what collapses proving time by O(L)):
-
-  step (a) three batched matmul sumchecks (Thaler's specialized GKR) over
-           eqs (30)/(33)/(34), all layers random-linearly combined;
-  step (b) the "anchor" sumcheck -- the generalized eq. (27) -- reducing
-           every claim on the uncommitted tensors A^l / G_Z^l to claims on
-           the committed auxiliary tensors at one point u_star;
-  step (c) zkReLU validity of the auxiliary inputs (Section 4.1) plus
-           Pedersen/IPA openings of every committed tensor.
-
-Claims on Z^l and G_A^l never need their own commitments: eqs (3)/(5) are
-linear, so the verifier assembles them homomorphically from aux openings
-(exactly the paper's use of commitment homomorphism).  G_Z^L similarly
-reduces to Z''^L, B^L and Y via eq. (32).
-
-Per-tensor opening claims at multiple points are folded into a single IPA
-by combining the public vectors (<T, b1> + rho <T, b2> = <T, b1 + rho b2>),
-so the proof stays logarithmic in D*Q*L.
+The Protocol-2 monolith that used to live here is now the staged proof
+pipeline package (see `repro/core/pipeline/README.md` for the module <->
+paper map).  This module keeps the original single-step API alive:
+`ZkdlConfig` is a `PipelineConfig` with ``n_steps=1``, and
+`prove_step`/`verify_step` run a one-step `ProofSession`, which is the
+T=1 degenerate case of the cross-step FAC4DNN aggregation.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional, Tuple
-
-import jax.numpy as jnp
 import numpy as np
 
-from repro.field import FQ, add, sub, mont_mul, encode_i64, decode
-from repro.core import group, ipa, pedersen, zkrelu
-from repro.core.mle import (enc, enc_vec, expand_point, hexpand_point,
-                            heval_point_product, fdot, hadd, hmul, hsub)
-from repro.core.sumcheck import (sumcheck_prove, sumcheck_verify,
-                                 combine_final, SumcheckProof)
-from repro.core.transcript import Transcript
+from repro.core.pipeline import verifier as _verifier
+from repro.core.pipeline.config import (PipelineConfig as ZkdlConfig,
+                                        PipelineKeys as ZkdlKeys,
+                                        make_keys)
+from repro.core.pipeline.session import (AggregatedProof as ZkdlProof,
+                                         SessionCommitments as ZkdlCommitments,
+                                         SessionProver)
+from repro.core.pipeline.tables import (dec_scalar as _dec,
+                                        enc_tensor as _enc_tensor,
+                                        fix_cols as _fix_cols,
+                                        fix_rows as _fix_rows,
+                                        kron as _kron,
+                                        weight_table as _weight_table)
+from repro.core.pipeline.witness import stack_witnesses
 from repro.core.quantfc import StepWitness
+from repro.core.transcript import Transcript
 
-Q_MOD = FQ.modulus
-
-
-def _next_pow2(n: int) -> int:
-    m = 1
-    while m < n:
-        m *= 2
-    return m
+__all__ = [
+    "ZkdlConfig", "ZkdlKeys", "ZkdlProof", "ZkdlCommitments",
+    "make_keys", "Prover", "prove_step", "verify_step", "verify",
+]
 
 
-def _log2(n: int) -> int:
-    assert n & (n - 1) == 0
-    return n.bit_length() - 1
+class Prover(SessionProver):
+    """Single-step prover: `commit` accepts one `StepWitness` directly."""
 
-
-def _rand(rng) -> int:
-    return int(rng.integers(0, Q_MOD, dtype=np.uint64)) % Q_MOD
-
-
-def _enc_tensor(x: np.ndarray) -> jnp.ndarray:
-    """int64 array -> flat (n,4) Montgomery table."""
-    return jnp.asarray(encode_i64(FQ, x.reshape(-1))).reshape(-1, 4)
-
-
-def _dec(x) -> int:
-    return int(decode(FQ, x)[()])
-
-
-def _fix_rows(table: jnp.ndarray, point: List[int]) -> jnp.ndarray:
-    """table (R, C, 4); fold ROW vars (little-endian) -> (C, 4)."""
-    for r in point:
-        rl = enc(r)
-        even, odd = table[0::2], table[1::2]
-        table = add(FQ, even, mont_mul(FQ, sub(FQ, odd, even), rl[None, None]))
-    return table[0]
-
-
-def _fix_cols(table: jnp.ndarray, point: List[int]) -> jnp.ndarray:
-    """table (R, C, 4); fold COL vars -> (R, 4)."""
-    for r in point:
-        rl = enc(r)
-        even, odd = table[:, 0::2], table[:, 1::2]
-        table = add(FQ, even, mont_mul(FQ, sub(FQ, odd, even), rl[None, None]))
-    return table[:, 0]
-
-
-def _kron(hi: jnp.ndarray, lo: jnp.ndarray) -> jnp.ndarray:
-    """(a,4) x (b,4) -> (a*b,4) with lo varying fastest (low MLE vars)."""
-    return mont_mul(FQ, hi[:, None, :], lo[None, :, :]).reshape(-1, 4)
-
-
-def _weight_table(weights: Dict[int, int], n: int) -> jnp.ndarray:
-    vec = np.zeros(n, dtype=object)
-    for i, w in weights.items():
-        vec[i] = w % Q_MOD
-    return enc_vec(list(vec))
-
-
-@dataclasses.dataclass(frozen=True)
-class ZkdlConfig:
-    n_layers: int
-    batch: int            # power of 2
-    width: int            # power of 2 (layer in/out dim, padded)
-    q_bits: int
-    r_bits: int
-
-    @property
-    def l_pad(self) -> int:
-        return _next_pow2(self.n_layers)
-
-    @property
-    def d_elem(self) -> int:
-        return self.batch * self.width
-
-    @property
-    def d_stack(self) -> int:
-        return self.l_pad * self.d_elem
-
-
-@dataclasses.dataclass(frozen=True)
-class ZkdlKeys:
-    cfg: ZkdlConfig
-    kd: pedersen.CommitKey        # stacked aux tensors (d_stack)
-    kw: pedersen.CommitKey        # stacked W / G_W (l_pad * width^2)
-    kx: pedersen.CommitKey        # per-sample data vectors (width)
-    ky: pedersen.CommitKey        # labels (d_elem)
-    k_bq: pedersen.CommitKey      # B_{Q-1} under the G-column basis
-    validity: zkrelu.ValidityKeys
-
-
-def make_keys(cfg: ZkdlConfig) -> ZkdlKeys:
-    vk = zkrelu.make_validity_keys(cfg.d_stack, cfg.q_bits, cfg.r_bits)
-    return ZkdlKeys(
-        cfg=cfg,
-        kd=pedersen.make_key(b"zkdl/aux", cfg.d_stack),
-        kw=pedersen.make_key(b"zkdl/w", cfg.l_pad * cfg.width * cfg.width),
-        kx=pedersen.make_key(b"zkdl/x", cfg.width),
-        ky=pedersen.make_key(b"zkdl/y", cfg.d_elem),
-        k_bq=pedersen.CommitKey(vk.g_col, vk.h_blind, b"zkdl/bq"),
-        validity=vk)
-
-
-@dataclasses.dataclass
-class ZkdlCommitments:
-    """Everything the trainer publishes before the interaction."""
-    x: List[int]                  # per-sample commitments (Section 4.4)
-    y: int
-    w: int
-    gw: int
-    zpp: int
-    bq: int
-    rz: int
-    gap: int
-    rga: int
-    validity: zkrelu.ValidityCommitments
-
-    def as_ints(self) -> List[int]:
-        return (self.x + [self.y, self.w, self.gw, self.zpp, self.bq,
-                          self.rz, self.gap, self.rga,
-                          self.validity.com_b_ip, self.validity.com_bq1p,
-                          self.validity.com_br_ip])
-
-
-@dataclasses.dataclass
-class ZkdlProof:
-    coms: ZkdlCommitments
-    openings: Dict[str, int]               # claim values, by name
-    sc_fwd: SumcheckProof
-    sc_bwd: SumcheckProof
-    sc_gw: SumcheckProof
-    sc_anchor: SumcheckProof
-    fwd_finals: List[int]
-    bwd_finals: List[int]
-    gw_finals: List[int]
-    anchor_finals: List[int]
-    ipas: Dict[str, ipa.IpaProof]
-    validity: zkrelu.ValidityProof
-
-    def size_bytes(self) -> int:
-        n = len(self.coms.as_ints()) + len(self.openings)
-        for sc in (self.sc_fwd, self.sc_bwd, self.sc_gw, self.sc_anchor):
-            n += sum(len(m) for m in sc.messages)
-        n += (len(self.fwd_finals) + len(self.bwd_finals)
-              + len(self.gw_finals) + len(self.anchor_finals))
-        total = 32 * n
-        total += sum(p.size_bytes() for p in self.ipas.values())
-        total += self.validity.size_bytes()
-        return total
-
-
-def _stack_aux(per_layer: List[np.ndarray], cfg: ZkdlConfig) -> np.ndarray:
-    """list of (B, d) int64 -> (l_pad * d_elem,) int64 with zero padding."""
-    out = np.zeros((cfg.l_pad, cfg.d_elem), dtype=np.int64)
-    for i, t in enumerate(per_layer):
-        out[i] = t.reshape(-1)
-    return out.reshape(-1)
-
-
-class Prover:
-    def __init__(self, keys: ZkdlKeys, rng: np.random.Generator):
-        self.keys = keys
-        self.cfg = keys.cfg
-        self.rng = rng
-
-    # -- commitment phase --------------------------------------------------
     def commit(self, wit: StepWitness):
-        cfg, keys, rng = self.cfg, self.keys, self.rng
-        L = cfg.n_layers
-        self.wit = wit
-        self.zpp_s = _stack_aux(wit.zpp, cfg)
-        self.bq_s = _stack_aux(wit.b, cfg)
-        self.rz_s = _stack_aux(wit.rz, cfg)
-        self.gap_s = _stack_aux(wit.gap, cfg)
-        self.rga_s = _stack_aux(wit.rga, cfg)
-        w_stack = np.zeros((cfg.l_pad, cfg.width * cfg.width), dtype=np.int64)
-        gw_stack = np.zeros_like(w_stack)
-        for i in range(L):
-            w_stack[i] = wit.w[i].reshape(-1)
-            gw_stack[i] = wit.gw[i].reshape(-1)
-        self.w_s = w_stack.reshape(-1)
-        self.gw_s = gw_stack.reshape(-1)
-
-        self.blinds = {name: _rand(rng) for name in
-                       ("y", "w", "gw", "zpp", "bq", "rz", "gap", "rga")}
-        self.x_blinds = [_rand(rng) for _ in range(cfg.batch)]
-
-        # NOTE: narrow MSM windows (nbits < 61) are only sound for
-        # UNSIGNED tensors -- negative values map to ~61-bit field elements.
-        qb = cfg.q_bits
-        com_x = [group.decode_group(pedersen.commit(
-            keys.kx, _enc_tensor(wit.x[i]), self.x_blinds[i]))
-            for i in range(cfg.batch)]
-        com_y = pedersen.commit(keys.ky, _enc_tensor(wit.y), self.blinds["y"])
-        com_w = pedersen.commit(keys.kw, _enc_tensor(self.w_s),
-                                self.blinds["w"])
-        com_gw = pedersen.commit(keys.kw, _enc_tensor(self.gw_s),
-                                 self.blinds["gw"])
-        com_zpp = pedersen.commit(keys.kd, _enc_tensor(self.zpp_s),
-                                  self.blinds["zpp"], nbits=qb)
-        com_bq = pedersen.commit_bits(keys.k_bq, self.bq_s.astype(np.uint32),
-                                      self.blinds["bq"])
-        com_rz = pedersen.commit(keys.kd, _enc_tensor(self.rz_s),
-                                 self.blinds["rz"], nbits=cfg.r_bits + 1)
-        com_gap = pedersen.commit(keys.kd, _enc_tensor(self.gap_s),
-                                  self.blinds["gap"])
-        com_rga = pedersen.commit(keys.kd, _enc_tensor(self.rga_s),
-                                  self.blinds["rga"], nbits=cfg.r_bits + 1)
-
-        self.aux_bits = zkrelu.build_aux_bits(
-            self.zpp_s, self.gap_s, self.bq_s, self.rz_s, self.rga_s,
-            cfg.q_bits, cfg.r_bits)
-        vcoms, self.vblinds = zkrelu.commit_validity(keys.validity,
-                                                     self.aux_bits, rng)
-        self.coms = ZkdlCommitments(
-            x=com_x, y=group.decode_group(com_y), w=group.decode_group(com_w),
-            gw=group.decode_group(com_gw), zpp=group.decode_group(com_zpp),
-            bq=group.decode_group(com_bq), rz=group.decode_group(com_rz),
-            gap=group.decode_group(com_gap), rga=group.decode_group(com_rga),
-            validity=vcoms)
-        return self.coms
-
-    # -- interactive phase (Fiat-Shamir) ------------------------------------
-    def prove(self, transcript: Transcript) -> ZkdlProof:
-        cfg, keys, rng, wit = self.cfg, self.keys, self.rng, self.wit
-        L, B, d = cfg.n_layers, cfg.batch, cfg.width
-        lb, ld, ll = _log2(B), _log2(d), _log2(cfg.l_pad)
-        t = transcript
-        t.absorb_ints(b"coms", self.coms.as_ints())
-
-        ch = _Challenges.draw(t, lb, ld, ll)
-        # field tables
-        a_tabs = [_enc_tensor(a).reshape(B, d, 4) for a in wit.a]
-        gz_tabs = [_enc_tensor(g).reshape(B, d, 4) for g in wit.gz]
-        w_tabs = [_enc_tensor(w).reshape(d, d, 4) for w in wit.w]
-        zpp_t = _enc_tensor(self.zpp_s)
-        bq_t = _enc_tensor(self.bq_s)
-        rz_t = _enc_tensor(self.rz_s)
-        gap_t = _enc_tensor(self.gap_s)
-        rga_t = _enc_tensor(self.rga_s)
-        w_t = _enc_tensor(self.w_s)
-        gw_t = _enc_tensor(self.gw_s)
-        y_t = _enc_tensor(wit.y)
-        x_tabs = [_enc_tensor(wit.x[i]) for i in range(B)]
-
-        # opening claims a1..a8 at pi1/pi2/pi3
-        e_pi1 = _kron(expand_point(ch.u_sf), _kron(expand_point(ch.u_r),
-                                                   expand_point(ch.u_c)))
-        e_pi2 = _kron(expand_point(ch.u_sb), _kron(expand_point(ch.u_r2),
-                                                   expand_point(ch.u_c2)))
-        e_pi3 = _kron(expand_point(ch.u_sw), _kron(expand_point(ch.u_i),
-                                                   expand_point(ch.u_j)))
-        op: Dict[str, int] = {}
-        op["a1"] = _dec(fdot(zpp_t, e_pi1))
-        op["a2"] = _dec(fdot(bq_t, e_pi1))
-        op["a3"] = _dec(fdot(rz_t, e_pi1))
-        op["a4"] = _dec(fdot(gap_t, e_pi2))
-        op["a5"] = _dec(fdot(rga_t, e_pi2))
-        op["a6"] = _dec(fdot(gw_t, e_pi3))
-        t.absorb_ints(b"op1", [op[k] for k in ("a1", "a2", "a3", "a4", "a5", "a6")])
-
-        # ---------- step (a): three batched matmul sumchecks ----------------
-        ef = hexpand_point(ch.u_sf)
-        eb = hexpand_point(ch.u_sb)
-        ew = hexpand_point(ch.u_sw)
-        # forward: sum_l ef[l-1] Z~^l(u_r,u_c) = sum_w A W
-        fwd_tables, fwd_products, fwd_coefs = [], [], []
-        for l in range(1, L + 1):
-            fa = _fix_rows(a_tabs[l - 1], ch.u_r)
-            fw = _fix_cols(w_tabs[l - 1], ch.u_c)
-            fwd_tables += [fa, fw]
-            fwd_products.append((2 * (l - 1), 2 * (l - 1) + 1))
-            fwd_coefs.append(ef[l - 1])
-        sc_fwd, w1, fwd_finals = sumcheck_prove(fwd_tables, fwd_products, t,
-                                                b"fwd", coefs=fwd_coefs)
-        # backward: sum_l eb[l-1] GA~^l(u_r2,u_c2) = sum_w GZ^{l+1} W^{l+1}
-        bwd_tables, bwd_products, bwd_coefs = [], [], []
-        for l in range(1, L):
-            fg = _fix_rows(gz_tabs[l], ch.u_r2)       # GZ^{l+1}
-            fw = _fix_rows(w_tabs[l], ch.u_c2)        # W^{l+1} rows fixed
-            bwd_tables += [fg, fw]
-            bwd_products.append((2 * (l - 1), 2 * (l - 1) + 1))
-            bwd_coefs.append(eb[l - 1])
-        sc_bwd, w2, bwd_finals = sumcheck_prove(bwd_tables, bwd_products, t,
-                                                b"bwd", coefs=bwd_coefs)
-        # gw: sum_l ew[l-1] GW~^l(u_i,u_j) = sum_b GZ^l A^{l-1}
-        gw_tables, gw_products, gw_coefs = [], [], []
-        for l in range(1, L + 1):
-            fg = _fix_cols(gz_tabs[l - 1], ch.u_i)
-            fa = _fix_cols(a_tabs[l - 1], ch.u_j)
-            gw_tables += [fg, fa]
-            gw_products.append((2 * (l - 1), 2 * (l - 1) + 1))
-            gw_coefs.append(ew[l - 1])
-        sc_gw, w3, gw_finals = sumcheck_prove(gw_tables, gw_products, t,
-                                              b"gw", coefs=gw_coefs)
-
-        # ---------- step (b): anchor sumcheck (generalized eq. 27) ----------
-        pt_f = w1 + ch.u_r          # A claims from fwd
-        pt_g = ch.u_j + w3          # A claims from gw
-        pt_b = w2 + ch.u_r2         # GZ claims from bwd
-        pt_w = ch.u_i + w3          # GZ claims from gw
-        al = _AnchorCoefs.draw(t, L)
-        wA1 = _weight_table({l - 1: al.a1[l] for l in range(1, L)}, cfg.l_pad)
-        wA2 = _weight_table({l - 1: al.a2[l] for l in range(1, L)}, cfg.l_pad)
-        wG1 = _weight_table({l - 1: al.g1[l] for l in range(2, L)}, cfg.l_pad)
-        wG2 = _weight_table({l - 1: al.g2[l] for l in range(1, L)}, cfg.l_pad)
-        pa = add(FQ, _kron(wA1, expand_point(pt_f)),
-                 _kron(wA2, expand_point(pt_g)))
-        pg = add(FQ, _kron(wG1, expand_point(pt_b)),
-                 _kron(wG2, expand_point(pt_w)))
-        one_tab = jnp.broadcast_to(enc(1), (cfg.d_stack, 4)).astype(jnp.uint32)
-        one_b = sub(FQ, one_tab, bq_t)
-        anchor_tables = [one_b, zpp_t, gap_t, pa, pg]
-        anchor_products = [(0, 3, 1), (0, 4, 2)]
-        sc_anchor, u_star, anchor_finals = sumcheck_prove(
-            anchor_tables, anchor_products, t, b"anchor")
-
-        # remainder openings at u_star (for v_r) and derived claims
-        e_star = expand_point(u_star)
-        op["a7"] = _dec(fdot(rz_t, e_star))
-        op["a8"] = _dec(fdot(rga_t, e_star))
-        t.absorb_ints(b"op2", [op["a7"], op["a8"]])
-        upp = t.challenge_int(b"upp", Q_MOD)
-        u_relu = u_star + [upp]
-        f_oneb, f_zpp, f_gap = anchor_finals[0], anchor_finals[1], anchor_finals[2]
-        v = ((1 - upp) * f_zpp + upp * f_gap) % Q_MOD
-        v_q1 = (1 - f_oneb) % Q_MOD
-        v_r = ((1 - upp) * op["a7"] + upp * op["a8"]) % Q_MOD
-        t.absorb_ints(b"vclaims", [v, v_q1, v_r])
-
-        # GZ^L linear reduction points (eq. 32)
-        eL = _weight_table({L - 1: 1}, cfg.l_pad)
-        b_gzl_b = _kron(eL, expand_point(pt_b))
-        b_gzl_w = _kron(eL, expand_point(pt_w))
-        op["zL_b"] = _dec(fdot(zpp_t, b_gzl_b))
-        op["bL_b"] = _dec(fdot(bq_t, b_gzl_b))
-        op["y_b"] = _dec(fdot(y_t, expand_point(pt_b)))
-        op["zL_w"] = _dec(fdot(zpp_t, b_gzl_w))
-        op["bL_w"] = _dec(fdot(bq_t, b_gzl_w))
-        op["y_w"] = _dec(fdot(y_t, expand_point(pt_w)))
-        # W / GW / X claims come straight from sumcheck finals (bound there)
-        t.absorb_ints(b"op3", [op[k] for k in ("zL_b", "bL_b", "y_b",
-                                               "zL_w", "bL_w", "y_w")])
-
-        # ---------- step (c): openings + zkReLU validity ---------------------
-        ipas: Dict[str, ipa.IpaProof] = {}
-
-        def multi_open(name, table, key, blind, claims_pts):
-            """Batch several (b_pub, claim) for ONE tensor into one IPA."""
-            rho = t.challenge_int(b"rho/" + name.encode(), Q_MOD)
-            combined_b = None
-            combined_claim = 0
-            rpow = 1
-            for b_pub, claim in claims_pts:
-                scaled = mont_mul(FQ, b_pub, enc(rpow)[None])
-                combined_b = scaled if combined_b is None else add(FQ, combined_b, scaled)
-                combined_claim = (combined_claim + rpow * claim) % Q_MOD
-                rpow = rpow * rho % Q_MOD
-            ipas[name] = ipa.open_prove(key, table, combined_b, blind,
-                                        combined_claim, t, rng)
-
-        multi_open("zpp", zpp_t, keys.kd, self.blinds["zpp"],
-                   [(e_pi1, op["a1"]), (e_star, f_zpp),
-                    (b_gzl_b, op["zL_b"]), (b_gzl_w, op["zL_w"])])
-        multi_open("bq", bq_t, keys.k_bq, self.blinds["bq"],
-                   [(e_pi1, op["a2"]), (e_star, v_q1),
-                    (b_gzl_b, op["bL_b"]), (b_gzl_w, op["bL_w"])])
-        multi_open("rz", rz_t, keys.kd, self.blinds["rz"],
-                   [(e_pi1, op["a3"]), (e_star, op["a7"])])
-        multi_open("gap", gap_t, keys.kd, self.blinds["gap"],
-                   [(e_pi2, op["a4"]), (e_star, f_gap)])
-        multi_open("rga", rga_t, keys.kd, self.blinds["rga"],
-                   [(e_pi2, op["a5"]), (e_star, op["a8"])])
-        # W: two stacked points, fresh per-layer weights
-        dlt = _WeightDraws.draw(t, L)
-        wW1 = _weight_table({l - 1: dlt.w1[l] for l in range(1, L + 1)}, cfg.l_pad)
-        wW2 = _weight_table({l: dlt.w2[l] for l in range(1, L)}, cfg.l_pad)
-        b_w1 = _kron(wW1, _kron(expand_point(w1), expand_point(ch.u_c)))
-        b_w2 = _kron(wW2, _kron(expand_point(ch.u_c2), expand_point(w2)))
-        cl_w1 = 0
-        for l in range(1, L + 1):
-            cl_w1 = (cl_w1 + dlt.w1[l] * fwd_finals[2 * (l - 1) + 1]) % Q_MOD
-        cl_w2 = 0
-        for l in range(1, L):
-            cl_w2 = (cl_w2 + dlt.w2[l] * bwd_finals[2 * (l - 1) + 1]) % Q_MOD
-        multi_open("w", w_t, keys.kw, self.blinds["w"],
-                   [(b_w1, cl_w1), (b_w2, cl_w2)])
-        multi_open("gw", gw_t, keys.kw, self.blinds["gw"], [(e_pi3, op["a6"])])
-        # Y at pt_b and pt_w
-        multi_open("y", y_t, keys.ky, self.blinds["y"],
-                   [(expand_point(pt_b), op["y_b"]),
-                    (expand_point(pt_w), op["y_w"])])
-        # X openings (Section 4.4 folded-data path): two folds
-        for tag, row_pt, col_pt, claim in (
-                ("x1", ch.u_r, w1, fwd_finals[0]),
-                ("x2", w3, ch.u_j, gw_finals[1])):
-            e_row = hexpand_point(row_pt)
-            folded = None
-            for i in range(B):
-                s = mont_mul(FQ, x_tabs[i], enc(e_row[i])[None])
-                folded = s if folded is None else add(FQ, folded, s)
-            blind_f = sum(e_row[i] * self.x_blinds[i] for i in range(B)) % Q_MOD
-            ipas[tag] = ipa.open_prove(keys.kx, folded, expand_point(col_pt),
-                                       blind_f, claim, t, rng)
-
-        validity = zkrelu.prove_validity(
-            keys.validity, self.aux_bits, self.vblinds, u_relu,
-            v, v_q1, v_r, self.blinds["bq"], t, rng)
-
-        return ZkdlProof(
-            coms=self.coms, openings=op, sc_fwd=sc_fwd, sc_bwd=sc_bwd,
-            sc_gw=sc_gw, sc_anchor=sc_anchor, fwd_finals=fwd_finals,
-            bwd_finals=bwd_finals, gw_finals=gw_finals,
-            anchor_finals=anchor_finals, ipas=ipas, validity=validity)
-
-
-@dataclasses.dataclass
-class _Challenges:
-    u_r: List[int]; u_c: List[int]
-    u_r2: List[int]; u_c2: List[int]
-    u_i: List[int]; u_j: List[int]
-    u_sf: List[int]; u_sb: List[int]; u_sw: List[int]
-
-    @staticmethod
-    def draw(t: Transcript, lb: int, ld: int, ll: int) -> "_Challenges":
-        c = lambda tag, n: t.challenge_ints(tag, Q_MOD, n)
-        return _Challenges(
-            u_r=c(b"u_r", lb), u_c=c(b"u_c", ld),
-            u_r2=c(b"u_r2", lb), u_c2=c(b"u_c2", ld),
-            u_i=c(b"u_i", ld), u_j=c(b"u_j", ld),
-            u_sf=c(b"u_sf", ll), u_sb=c(b"u_sb", ll), u_sw=c(b"u_sw", ll))
-
-
-@dataclasses.dataclass
-class _AnchorCoefs:
-    a1: Dict[int, int]; a2: Dict[int, int]
-    g1: Dict[int, int]; g2: Dict[int, int]
-
-    @staticmethod
-    def draw(t: Transcript, L: int) -> "_AnchorCoefs":
-        return _AnchorCoefs(
-            a1={l: t.challenge_int(b"aA1/%d" % l, Q_MOD) for l in range(1, L)},
-            a2={l: t.challenge_int(b"aA2/%d" % l, Q_MOD) for l in range(1, L)},
-            g1={l: t.challenge_int(b"aG1/%d" % l, Q_MOD) for l in range(2, L)},
-            g2={l: t.challenge_int(b"aG2/%d" % l, Q_MOD) for l in range(1, L)})
-
-
-@dataclasses.dataclass
-class _WeightDraws:
-    w1: Dict[int, int]
-    w2: Dict[int, int]
-
-    @staticmethod
-    def draw(t: Transcript, L: int) -> "_WeightDraws":
-        return _WeightDraws(
-            w1={l: t.challenge_int(b"dW1/%d" % l, Q_MOD) for l in range(1, L + 1)},
-            w2={l: t.challenge_int(b"dW2/%d" % l, Q_MOD) for l in range(1, L)})
+        assert self.cfg.n_steps == 1, "use ProofSession for n_steps > 1"
+        return super().commit(stack_witnesses([wit], self.cfg))
 
 
 def verify(keys: ZkdlKeys, proof: ZkdlProof, transcript: Transcript,
            trace: list | None = None) -> bool:
-    """Trusted-verifier side of Protocol 2. Returns accept/reject.
-
-    If ``trace`` is a list, the name of the first failing check is appended
-    (debugging/telemetry; does not affect soundness).
-    """
-
-    def fail(reason: str) -> bool:
-        if trace is not None:
-            trace.append(reason)
-        return False
-    cfg = keys.cfg
-    L, B, d = cfg.n_layers, cfg.batch, cfg.width
-    lb, ld, ll = _log2(B), _log2(d), _log2(cfg.l_pad)
-    t = transcript
-    op = proof.openings
-    t.absorb_ints(b"coms", proof.coms.as_ints())
-    ch = _Challenges.draw(t, lb, ld, ll)
-    t.absorb_ints(b"op1", [op[k] for k in ("a1", "a2", "a3", "a4", "a5", "a6")])
-
-    ef = hexpand_point(ch.u_sf)
-    eb = hexpand_point(ch.u_sb)
-    ew = hexpand_point(ch.u_sw)
-    qb, rb = cfg.q_bits, cfg.r_bits
-    two_r = pow(2, rb, Q_MOD)
-    two_qr1 = pow(2, qb + rb - 1, Q_MOD)
-    two_q1 = pow(2, qb - 1, Q_MOD)
-
-    try:
-        # forward sumcheck
-        claim_fwd = (two_r * op["a1"] - two_qr1 * op["a2"] + op["a3"]) % Q_MOD
-        fwd_products = [(2 * i, 2 * i + 1) for i in range(L)]
-        w1, exp_fwd = sumcheck_verify(claim_fwd, proof.sc_fwd, 2, ld, t, b"fwd")
-        if exp_fwd != combine_final(fwd_products, proof.fwd_finals,
-                                    coefs=[ef[i] for i in range(L)]):
-            return fail("fwd-final")
-        t.absorb_ints(b"fwd/final", proof.fwd_finals)
-        # backward sumcheck
-        claim_bwd = (two_r * op["a4"] + op["a5"]) % Q_MOD
-        bwd_products = [(2 * i, 2 * i + 1) for i in range(L - 1)]
-        w2, exp_bwd = sumcheck_verify(claim_bwd, proof.sc_bwd, 2, ld, t, b"bwd")
-        if exp_bwd != combine_final(bwd_products, proof.bwd_finals,
-                                    coefs=[eb[i] for i in range(L - 1)]):
-            return fail("bwd-final")
-        t.absorb_ints(b"bwd/final", proof.bwd_finals)
-        # gw sumcheck
-        claim_gw = op["a6"]
-        gw_products = [(2 * i, 2 * i + 1) for i in range(L)]
-        w3, exp_gw = sumcheck_verify(claim_gw, proof.sc_gw, 2, lb, t, b"gw")
-        if exp_gw != combine_final(gw_products, proof.gw_finals,
-                                   coefs=[ew[i] for i in range(L)]):
-            return fail("gw-final")
-        t.absorb_ints(b"gw/final", proof.gw_finals)
-
-        # anchor sumcheck
-        pt_f = w1 + ch.u_r
-        pt_g = ch.u_j + w3
-        pt_b = w2 + ch.u_r2
-        pt_w = ch.u_i + w3
-        al = _AnchorCoefs.draw(t, L)
-        # LHS: batched claims from the matmul sumcheck finals
-        lhs = 0
-        for l in range(1, L):        # A^l from fwd table of layer l+1
-            lhs = (lhs + al.a1[l] * proof.fwd_finals[2 * l]) % Q_MOD
-        for l in range(1, L):        # A^l from gw table of layer l+1
-            lhs = (lhs + al.a2[l] * proof.gw_finals[2 * l + 1]) % Q_MOD
-        for l in range(2, L):        # GZ^l from bwd (table index l-2)
-            lhs = (lhs + al.g1[l] * proof.bwd_finals[2 * (l - 2)]) % Q_MOD
-        for l in range(1, L):        # GZ^l from gw (table index l-1)
-            lhs = (lhs + al.g2[l] * proof.gw_finals[2 * (l - 1)]) % Q_MOD
-        u_star, exp_anchor = sumcheck_verify(lhs, proof.sc_anchor, 3,
-                                             _log2(cfg.d_stack), t, b"anchor")
-        f_oneb, f_zpp, f_gap, f_pa, f_pg = proof.anchor_finals
-        if exp_anchor != (f_oneb * f_pa % Q_MOD * f_zpp
-                          + f_oneb * f_pg % Q_MOD * f_gap) % Q_MOD:
-            return fail("anchor-final")
-        t.absorb_ints(b"anchor/final", proof.anchor_finals)
-        # recompute public-table finals
-        u_elem, u_layer = u_star[: lb + ld], u_star[lb + ld:]
-        el = hexpand_point(u_layer)
-
-        def wt_eval(weights: Dict[int, int]) -> int:
-            return sum(w * el[i] for i, w in weights.items()) % Q_MOD
-
-        pa_check = (wt_eval({l - 1: al.a1[l] for l in range(1, L)})
-                    * heval_point_product(pt_f, u_elem)
-                    + wt_eval({l - 1: al.a2[l] for l in range(1, L)})
-                    * heval_point_product(pt_g, u_elem)) % Q_MOD
-        pg_check = (wt_eval({l - 1: al.g1[l] for l in range(2, L)})
-                    * heval_point_product(pt_b, u_elem)
-                    + wt_eval({l - 1: al.g2[l] for l in range(1, L)})
-                    * heval_point_product(pt_w, u_elem)) % Q_MOD
-        if f_pa != pa_check or f_pg != pg_check:
-            return fail("anchor-public-tables")
-
-        t.absorb_ints(b"op2", [op["a7"], op["a8"]])
-        upp = t.challenge_int(b"upp", Q_MOD)
-        u_relu = u_star + [upp]
-        v = ((1 - upp) * f_zpp + upp * f_gap) % Q_MOD
-        v_q1 = (1 - f_oneb) % Q_MOD
-        v_r = ((1 - upp) * op["a7"] + upp * op["a8"]) % Q_MOD
-        t.absorb_ints(b"vclaims", [v, v_q1, v_r])
-        t.absorb_ints(b"op3", [op[k] for k in ("zL_b", "bL_b", "y_b",
-                                               "zL_w", "bL_w", "y_w")])
-
-        # GZ^L linear checks (eq. 32): finals from bwd (l = L-1) and gw (l = L)
-        gzl_b = (op["zL_b"] - two_q1 * op["bL_b"] - op["y_b"]) % Q_MOD
-        if L >= 2 and proof.bwd_finals[2 * (L - 2)] != gzl_b:
-            return fail("gzL-bwd")
-        gzl_w = (op["zL_w"] - two_q1 * op["bL_w"] - op["y_w"]) % Q_MOD
-        if proof.gw_finals[2 * (L - 1)] != gzl_w:
-            return fail("gzL-gw")
-
-        # openings
-        e_pi1 = _kron(expand_point(ch.u_sf), _kron(expand_point(ch.u_r),
-                                                   expand_point(ch.u_c)))
-        e_pi2 = _kron(expand_point(ch.u_sb), _kron(expand_point(ch.u_r2),
-                                                   expand_point(ch.u_c2)))
-        e_pi3 = _kron(expand_point(ch.u_sw), _kron(expand_point(ch.u_i),
-                                                   expand_point(ch.u_j)))
-        e_star = expand_point(u_star)
-        eL = _weight_table({L - 1: 1}, cfg.l_pad)
-        b_gzl_b = _kron(eL, expand_point(pt_b))
-        b_gzl_w = _kron(eL, expand_point(pt_w))
-
-        def multi_check(name, com_int, key, claims_pts) -> bool:
-            rho = t.challenge_int(b"rho/" + name.encode(), Q_MOD)
-            combined_b, combined_claim, rpow = None, 0, 1
-            for b_pub, claim in claims_pts:
-                scaled = mont_mul(FQ, b_pub, enc(rpow)[None])
-                combined_b = scaled if combined_b is None else add(FQ, combined_b, scaled)
-                combined_claim = (combined_claim + rpow * claim) % Q_MOD
-                rpow = rpow * rho % Q_MOD
-            return ipa.open_verify(key, group.encode_group(com_int),
-                                   combined_b, combined_claim,
-                                   proof.ipas[name], t)
-
-        cm = proof.coms
-        if not multi_check("zpp", cm.zpp, keys.kd,
-                           [(e_pi1, op["a1"]), (e_star, f_zpp),
-                            (b_gzl_b, op["zL_b"]), (b_gzl_w, op["zL_w"])]):
-            return fail("open-zpp")
-        if not multi_check("bq", cm.bq, keys.k_bq,
-                           [(e_pi1, op["a2"]), (e_star, v_q1),
-                            (b_gzl_b, op["bL_b"]), (b_gzl_w, op["bL_w"])]):
-            return fail("open-bq")
-        if not multi_check("rz", cm.rz, keys.kd,
-                           [(e_pi1, op["a3"]), (e_star, op["a7"])]):
-            return fail("open-rz")
-        if not multi_check("gap", cm.gap, keys.kd,
-                           [(e_pi2, op["a4"]), (e_star, f_gap)]):
-            return fail("open-gap")
-        if not multi_check("rga", cm.rga, keys.kd,
-                           [(e_pi2, op["a5"]), (e_star, op["a8"])]):
-            return fail("open-rga")
-        dlt = _WeightDraws.draw(t, L)
-        wW1 = _weight_table({l - 1: dlt.w1[l] for l in range(1, L + 1)}, cfg.l_pad)
-        wW2 = _weight_table({l: dlt.w2[l] for l in range(1, L)}, cfg.l_pad)
-        b_w1 = _kron(wW1, _kron(expand_point(w1), expand_point(ch.u_c)))
-        b_w2 = _kron(wW2, _kron(expand_point(ch.u_c2), expand_point(w2)))
-        cl_w1 = 0
-        for l in range(1, L + 1):
-            cl_w1 = (cl_w1 + dlt.w1[l] * proof.fwd_finals[2 * (l - 1) + 1]) % Q_MOD
-        cl_w2 = 0
-        for l in range(1, L):
-            cl_w2 = (cl_w2 + dlt.w2[l] * proof.bwd_finals[2 * (l - 1) + 1]) % Q_MOD
-        if not multi_check("w", cm.w, keys.kw, [(b_w1, cl_w1), (b_w2, cl_w2)]):
-            return fail("open-w")
-        if not multi_check("gw", cm.gw, keys.kw, [(e_pi3, op["a6"])]):
-            return fail("open-gw")
-        if not multi_check("y", cm.y, keys.ky,
-                           [(expand_point(pt_b), op["y_b"]),
-                            (expand_point(pt_w), op["y_w"])]):
-            return fail("open-y")
-        # X openings: fold the per-sample commitments homomorphically
-        for tag, row_pt, col_pt, claim in (
-                ("x1", ch.u_r, w1, proof.fwd_finals[0]),
-                ("x2", w3, ch.u_j, proof.gw_finals[1])):
-            e_row = hexpand_point(row_pt)
-            com_pts = jnp.stack([group.encode_group(ci) for ci in cm.x])
-            com_fold = group.msm(com_pts, group.exps_from_ints(e_row))
-            if not ipa.open_verify(keys.kx, com_fold, expand_point(col_pt),
-                                   claim, proof.ipas[tag], t):
-                return fail("open-" + tag)
-
-        if not zkrelu.verify_validity(
-                keys.validity, cm.validity, cm.bq, v, v_q1, v_r, u_relu,
-                proof.validity, t):
-            return fail("validity")
-        return True
-    except (ValueError, KeyError) as exc:
-        return fail(f"exception: {exc!r}")
+    return _verifier.verify(keys, proof, transcript, trace=trace)
 
 
 def prove_step(keys: ZkdlKeys, wit: StepWitness, rng: np.random.Generator,

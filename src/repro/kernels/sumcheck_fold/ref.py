@@ -1,5 +1,6 @@
 """Oracle for the sumcheck_fold kernel: the pure-jnp fold used by the
-production prover (`repro.core.mle.fold`)."""
+production prover (`repro.core.mle.fold_jnp` -- the dispatch-free path,
+so the oracle stays independent of ZKDL_FOLD_BACKEND)."""
 from __future__ import annotations
 
 from repro.core import mle
@@ -7,4 +8,4 @@ from repro.core import mle
 
 def fold_ref(table, r_limbs):
     """(n, 4) table, (4,) r -> (n/2, 4) folded table."""
-    return mle.fold(table, r_limbs)
+    return mle.fold_jnp(table, r_limbs)

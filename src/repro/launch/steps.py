@@ -21,6 +21,65 @@ from repro.models.config import ModelConfig
 from repro.train import optim
 
 
+def build_zkdl_step(zk_cfg, lr_shift: int = 8):
+    """Train step for the quantized-FCNN (zkDL) family: exact integer
+    SGD whose per-batch witness feeds the proof pipeline.
+
+    Returns ``step(ws, batch) -> (new_ws, StepWitness)`` with batch a
+    dict of int64 arrays {"x": (B, d), "y": (B, d)} at scale 2^R."""
+    from repro.core import quantfc
+
+    qc = quantfc.QuantConfig(q_bits=zk_cfg.q_bits, r_bits=zk_cfg.r_bits)
+
+    def step(ws, batch):
+        wit = quantfc.train_step_witness(batch["x"], batch["y"], ws, qc)
+        return quantfc.sgd_apply(ws, wit.gw, lr_shift, qc), wit
+
+    return step
+
+
+class ZkdlProveHook:
+    """Prove-while-train: observe each step's witness; every
+    ``keys.cfg.n_steps`` steps one aggregated proof covering the whole
+    window is emitted (and optionally verified) via `ProofSession`.
+
+    The trainer never blocks on a per-step proof: proofs are per-window,
+    which is the FAC4DNN cross-step amortization."""
+
+    def __init__(self, keys, rng, verify: bool = True, on_proof=None,
+                 label: bytes = b"zkdl/train"):
+        from repro.core.pipeline import ProofSession
+
+        self._mk = lambda: ProofSession(keys, rng, label=label)
+        self._session = self._mk()
+        self.keys = keys
+        self.verify = verify
+        self.on_proof = on_proof
+        self.proofs = []           # (last_step, proof, prove_seconds)
+
+    @property
+    def n_pending(self) -> int:
+        return self._session.n_pending
+
+    def observe(self, step: int, wit) -> None:
+        import time
+
+        self._session.add_step(wit)
+        if not self._session.is_full:
+            return
+        t0 = time.perf_counter()
+        proof = self._session.prove()
+        dt = time.perf_counter() - t0
+        if self.verify:
+            ok = self._session.verify(proof)
+            if not ok:
+                raise RuntimeError(f"aggregated proof REJECTED at step {step}")
+        self.proofs.append((step, proof, dt))
+        if self.on_proof is not None:
+            self.on_proof(step, proof, dt)
+        self._session = self._mk()
+
+
 def build_train_step(cfg: ModelConfig, opt_cfg: optim.AdamWConfig):
     def train_step(state, batch):
         loss, grads = jax.value_and_grad(

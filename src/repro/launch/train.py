@@ -56,6 +56,67 @@ def build_state(cfg, opt_cfg, mesh, rng_seed: int = 0):
     return state, st_spec, st_shard
 
 
+def run_zkdl_train(cfg, args) -> int:
+    """Prove-while-train for the quantized-FCNN (zkDL) family: integer
+    SGD with one aggregated proof per --prove-window steps.
+
+        python -m repro.launch.train --arch fcnn-zkdl-16l \
+            --layers 2 --d-model 8 --global-batch 4 --steps 8 \
+            --prove-window 4 [--no-verify]
+
+    Without overrides this runs the paper-scale 16x4096 network -- the
+    same code path, just slow on a CPU substrate."""
+    import numpy as np
+    from repro.core import quantfc
+    from repro.core.pipeline import PipelineConfig, make_keys
+    from repro.launch import steps as steps_mod
+
+    layers = args.layers or cfg.n_layers
+    width = args.d_model or cfg.d_model
+    window = max(1, args.prove_window)
+    zk_cfg = PipelineConfig(n_layers=layers, batch=args.global_batch,
+                            width=width, q_bits=16, r_bits=8,
+                            n_steps=window)
+    qc = quantfc.QuantConfig(q_bits=zk_cfg.q_bits, r_bits=zk_cfg.r_bits)
+    print(f"[train] zkdl fcnn: {layers} layers x {width} wide, "
+          f"batch {args.global_batch}, aggregating {window} step(s)/proof",
+          flush=True)
+
+    keys = make_keys(zk_cfg)
+    rng = np.random.default_rng(0)
+    ws = [quantfc.quantize(
+        rng.uniform(-1, 1, (width, width)) * 0.3, qc)
+        for _ in range(layers)]
+    data_x = rng.uniform(-1, 1, (args.global_batch * 8, width))
+    data_y = rng.uniform(-1, 1, (args.global_batch * 8, width))
+
+    def on_proof(step, proof, dt):
+        print(f"[train] step {step}: aggregated proof over "
+              f"{proof.n_steps} steps, {proof.size_bytes() / 1024:.1f} kB "
+              f"in {dt:.1f}s ({dt / proof.n_steps:.1f}s/step, "
+              f"verified={not args.no_verify})", flush=True)
+
+    hook = steps_mod.ZkdlProveHook(keys, rng, verify=not args.no_verify,
+                                   on_proof=on_proof)
+    step_fn = steps_mod.build_zkdl_step(zk_cfg)
+    for step in range(args.steps):
+        lo = (step * args.global_batch) % data_x.shape[0]
+        batch = {
+            "x": quantfc.quantize(data_x[lo:lo + args.global_batch], qc),
+            "y": quantfc.quantize(data_y[lo:lo + args.global_batch], qc),
+        }
+        t0 = time.perf_counter()
+        ws, wit = step_fn(ws, batch)
+        step_s = time.perf_counter() - t0          # training only; proving
+        hook.observe(step, wit)                    # is logged per window
+        if step % args.log_every == 0:
+            print(f"[train] step {step} {step_s:.2f}s", flush=True)
+    print(f"[train] done: {args.steps} steps, {len(hook.proofs)} "
+          f"aggregated proofs, {hook.n_pending} step(s) pending "
+          f"(next window)", flush=True)
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -74,12 +135,19 @@ def main(argv=None):
     ap.add_argument("--fail-at", type=int, default=None,
                     help="inject a failure at this step (drills restart)")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--prove-window", type=int, default=4,
+                    help="fcnn family: training steps per aggregated proof")
+    ap.add_argument("--no-verify", action="store_true",
+                    help="fcnn family: skip verifying emitted proofs")
     args = ap.parse_args(argv)
 
     from repro.util import enable_compilation_cache
     enable_compilation_cache()
-    import jax
     from repro.configs.registry import get_config
+    arch_cfg = get_config(args.arch)
+    if arch_cfg.family == "fcnn":
+        return run_zkdl_train(arch_cfg, args)
+    import jax
     from repro.data import pipeline
     from repro.distributed import hints
     from repro.distributed import sharding as shard_rules

@@ -1,8 +1,8 @@
 """Per-kernel validation: Pallas body (interpret=True on CPU) vs ref.py
-oracle, swept over shapes, plus hypothesis property tests on exactness."""
+oracle, swept over shapes.  Hypothesis property tests on exactness live
+in test_property_based.py (skipped when dev extras are absent)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
 
@@ -79,19 +79,6 @@ def test_modmul_nd_shapes():
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.lists(st.integers(0, FQ.modulus - 1), min_size=1, max_size=8),
-       st.lists(st.integers(0, FQ.modulus - 1), min_size=1, max_size=8))
-def test_modmul_property(xs, ys):
-    n = min(len(xs), len(ys))
-    xs, ys = xs[:n], ys[:n]
-    a = jnp.asarray(modarith.encode_ints(FQ, np.array(xs, dtype=object)))
-    b = jnp.asarray(modarith.encode_ints(FQ, np.array(ys, dtype=object)))
-    got = modarith.decode(FQ, modmul(FQ, a, b, interpret=True))
-    for i in range(n):
-        assert int(got[i]) == (xs[i] * ys[i]) % FQ.modulus
-
-
 # ---------------------------------------------------------------------------
 # sumcheck_fold kernel
 # ---------------------------------------------------------------------------
@@ -164,20 +151,6 @@ def test_qmatmul_block_sweep():
     for bm, bn, bk in [(8, 8, 16), (16, 32, 64), (64, 64, 128)]:
         got = qmatmul_i64(a, b, bm=bm, bn=bn, bk=bk, interpret=True)
         np.testing.assert_array_equal(got, want)
-
-
-@settings(max_examples=15, deadline=None)
-@given(st.integers(1, 9), st.integers(1, 9), st.integers(1, 9),
-       st.integers(0, 2**32 - 1))
-def test_qmatmul_property(m, k, n, seed):
-    rng = np.random.default_rng(seed)
-    a = jnp.asarray(rng.integers(-2**15, 2**15, size=(m, k)),
-                    dtype=jnp.int16)
-    b = jnp.asarray(rng.integers(-2**15, 2**15, size=(k, n)),
-                    dtype=jnp.int16)
-    got = qmatmul_i64(a, b, interpret=True)
-    np.testing.assert_array_equal(got, qmatmul_ref(np.asarray(a),
-                                                   np.asarray(b)))
 
 
 def test_qmatmul_witness_shapes():

@@ -1,0 +1,97 @@
+"""Aggregated proof pipeline tests: T=2 prove/verify roundtrip plus
+tamper rejections (flipped aux bit, wrong step count, stale transcript,
+cross-step claim splicing)."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core.quantfc import QuantConfig, synthetic_sgd_trajectory
+from repro.core.pipeline import (PipelineConfig, ProofSession, make_keys,
+                                 prove_session, verify_session)
+
+CFG = PipelineConfig(n_layers=2, batch=2, width=4, q_bits=16, r_bits=4,
+                     n_steps=2)
+QC = QuantConfig(q_bits=CFG.q_bits, r_bits=CFG.r_bits)
+
+
+def make_step_witnesses(seed=0, n_steps=CFG.n_steps, cfg=CFG):
+    """n_steps consecutive batch updates with real integer SGD between."""
+    return synthetic_sgd_trajectory(n_steps, cfg.n_layers, cfg.batch,
+                                    cfg.width, QC, seed=seed)
+
+
+@pytest.fixture(scope="module")
+def keys():
+    return make_keys(CFG)
+
+
+@pytest.fixture(scope="module")
+def proof(keys):
+    return prove_session(keys, make_step_witnesses(seed=1),
+                         np.random.default_rng(1))
+
+
+def test_aggregated_roundtrip_accepts(keys, proof):
+    trace = []
+    assert verify_session(keys, proof, trace=trace), trace
+    assert proof.n_steps == CFG.n_steps
+    # one aggregated transcript: a single set of commitments/IPAs covers
+    # both steps, so the proof stays well under 2x a single-step proof
+    assert proof.size_bytes() < 20_000
+    assert len(proof.coms.x) == CFG.n_steps * CFG.batch
+
+
+def test_rejects_flipped_aux_bit(keys):
+    wits = make_step_witnesses(seed=2)
+    wits[1].b[0][0, 0] ^= 1          # flip a ReLU sign bit in step 1
+    bad = prove_session(keys, wits, np.random.default_rng(2))
+    assert not verify_session(keys, bad)
+
+
+def test_rejects_tampered_step1_gradient(keys):
+    wits = make_step_witnesses(seed=3)
+    wits[1].gw[0][0, 0] += 1         # forged gradient in the SECOND step
+    bad = prove_session(keys, wits, np.random.default_rng(3))
+    assert not verify_session(keys, bad)
+
+
+def test_rejects_wrong_step_count(keys):
+    session = ProofSession(keys, np.random.default_rng(4))
+    session.add_step(make_step_witnesses(seed=4, n_steps=1)[0])
+    with pytest.raises(ValueError, match="step"):
+        session.prove()             # only 1 of 2 steps queued
+
+    wits = make_step_witnesses(seed=5, n_steps=3)
+    full = ProofSession(keys, np.random.default_rng(5))
+    full.add_step(wits[0])
+    full.add_step(wits[1])
+    with pytest.raises(ValueError, match="already holds"):
+        full.add_step(wits[2])      # session window is full
+
+
+def test_rejects_step_count_tamper(keys, proof):
+    bad = copy.deepcopy(proof)
+    bad.n_steps = 1                 # claim fewer steps than proven
+    trace = []
+    assert not verify_session(keys, bad, trace=trace)
+    assert trace == ["step-count"]
+
+
+def test_rejects_stale_transcript(keys, proof):
+    # same proof replayed against a different session label: every
+    # challenge diverges, so the first sumcheck must already fail
+    assert not verify_session(keys, proof, label=b"zkdl/other-session")
+
+
+def test_rejects_cross_step_claim_swap(keys, proof):
+    bad = copy.deepcopy(proof)
+    bad.openings["zL_b/0"], bad.openings["zL_b/1"] = \
+        bad.openings["zL_b/1"], bad.openings["zL_b/0"]
+    assert not verify_session(keys, bad)
+
+
+def test_rejects_tampered_opening(keys, proof):
+    bad = copy.deepcopy(proof)
+    bad.openings["a1"] = (bad.openings["a1"] + 1) % (2**61)
+    assert not verify_session(keys, bad)

@@ -1,0 +1,85 @@
+"""Hypothesis property tests for field / group / kernel exactness.
+
+Collected only when the dev extras are installed: the module-level
+``pytest.importorskip("hypothesis")`` guard skips the whole file in
+clean environments (see requirements-dev.txt), so the tier-1 suite
+never hard-fails on a missing dev dependency."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.field import (FQ, FP, add, sub, mont_mul, modarith,  # noqa: E402
+                         encode_ints, decode)
+from repro.core import group  # noqa: E402
+from repro.kernels.modmul import modmul  # noqa: E402
+from repro.kernels.qmatmul import qmatmul_i64  # noqa: E402
+from repro.kernels.qmatmul.ref import qmatmul_ref  # noqa: E402
+
+Q = FQ.modulus
+P = FP.modulus
+
+
+def enc(spec, xs):
+    return jnp.asarray(encode_ints(spec, np.array(xs, dtype=object)))
+
+
+def dec(spec, a):
+    return decode(spec, np.asarray(a))
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    x=st.integers(min_value=0, max_value=Q - 1),
+    y=st.integers(min_value=0, max_value=Q - 1),
+)
+def test_hypothesis_mul_add_fq(x, y):
+    a, b = enc(FQ, [x]), enc(FQ, [y])
+    assert int(dec(FQ, mont_mul(FQ, a, b))[0]) == (x * y) % Q
+    assert int(dec(FQ, add(FQ, a, b))[0]) == (x + y) % Q
+    assert int(dec(FQ, sub(FQ, a, b))[0]) == (x - y) % Q
+
+
+@settings(max_examples=30, deadline=None)
+@given(x=st.integers(min_value=0, max_value=P - 1),
+       y=st.integers(min_value=0, max_value=P - 1))
+def test_hypothesis_mul_fp(x, y):
+    assert int(dec(FP, mont_mul(FP, enc(FP, [x]), enc(FP, [y])))[0]) \
+        == (x * y) % P
+
+
+@settings(max_examples=10, deadline=None)
+@given(e=st.integers(min_value=0, max_value=Q - 1))
+def test_hypothesis_pow(e):
+    g = group.group_gen()
+    out = group.g_pow(g[None], group.exps_from_ints([e]))
+    assert group.decode_group(out[0]) == pow(4, e, P)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, Q - 1), min_size=1, max_size=8),
+       st.lists(st.integers(0, Q - 1), min_size=1, max_size=8))
+def test_modmul_property(xs, ys):
+    n = min(len(xs), len(ys))
+    xs, ys = xs[:n], ys[:n]
+    a = jnp.asarray(modarith.encode_ints(FQ, np.array(xs, dtype=object)))
+    b = jnp.asarray(modarith.encode_ints(FQ, np.array(ys, dtype=object)))
+    got = modarith.decode(FQ, modmul(FQ, a, b, interpret=True))
+    for i in range(n):
+        assert int(got[i]) == (xs[i] * ys[i]) % Q
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 9), st.integers(1, 9), st.integers(1, 9),
+       st.integers(0, 2**32 - 1))
+def test_qmatmul_property(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(-2**15, 2**15, size=(m, k)),
+                    dtype=jnp.int16)
+    b = jnp.asarray(rng.integers(-2**15, 2**15, size=(k, n)),
+                    dtype=jnp.int16)
+    got = qmatmul_i64(a, b, interpret=True)
+    np.testing.assert_array_equal(got, qmatmul_ref(np.asarray(a),
+                                                   np.asarray(b)))
