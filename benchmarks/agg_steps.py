@@ -9,10 +9,14 @@ T * row(1), so amortization = per_step(T) / per_step(1).
 
     PYTHONPATH=src python benchmarks/agg_steps.py \
         [--steps-list 1,2,4,8] [--width 4] [--batch 2] [--layers 2] \
-        [--repeats 2] [--no-verify] [--out BENCH_agg_steps.json]
+        [--repeats 2] [--no-verify] [--out BENCH_agg_steps.json] \
+        [--het-widths 16,8,4,2] [--smoke]
 
-Emits BENCH_agg_steps.json with the full curve plus the monotonicity
-verdicts on the T=1..4 prefix.
+Emits BENCH_agg_steps.json with the full curve, the monotonicity
+verdicts on the T=1..4 prefix, and a heterogeneous cell comparing a
+pyramid MLP against a uniform MLP of (approximately) equal parameter
+count in one aggregated session.  ``--smoke`` is the CI guard: tiny
+shapes, every cell must verify, no JSON written.
 """
 from __future__ import annotations
 
@@ -24,16 +28,20 @@ import numpy as np
 
 
 def bench_T(T: int, layers: int, batch: int, width: int, q_bits: int,
-            r_bits: int, repeats: int, verify: bool):
-    from repro.core.quantfc import QuantConfig, synthetic_sgd_trajectory
+            r_bits: int, repeats: int, verify: bool, widths=None):
+    from repro.core.quantfc import (QuantConfig,
+                                    synthetic_sgd_trajectory_widths)
     from repro.core.pipeline import (PipelineConfig, make_keys,
                                      prove_session, verify_session)
 
-    cfg = PipelineConfig(n_layers=layers, batch=batch, width=width,
-                         q_bits=q_bits, r_bits=r_bits, n_steps=T)
+    if widths is None:
+        widths = (width,) * (layers + 1)
+    cfg = PipelineConfig(n_layers=len(widths) - 1, batch=batch,
+                         q_bits=q_bits, r_bits=r_bits, n_steps=T,
+                         widths=widths)
     qc = QuantConfig(q_bits=q_bits, r_bits=r_bits)
     keys = make_keys(cfg)
-    wits = synthetic_sgd_trajectory(T, layers, batch, width, qc, seed=T)
+    wits = synthetic_sgd_trajectory_widths(T, widths, batch, qc, seed=T)
 
     # warmup run (jit compilation / caches), then best-of-N timed runs
     proof = prove_session(keys, wits, np.random.default_rng(0))
@@ -63,6 +71,42 @@ def bench_T(T: int, layers: int, batch: int, width: int, q_bits: int,
     }
 
 
+def bench_heterogeneous(args, T: int = 2):
+    """The heterogeneous cell: a pyramid MLP vs a uniform-width MLP at
+    (approximately) equal parameter count, both aggregated over T steps
+    in ONE ProofSession.  FAC4DNN's claim is that heterogeneous shapes
+    aggregate as well as uniform ones; the acceptance bar is pyramid
+    per-step prove time within 1.5x of uniform."""
+    het_widths = tuple(int(w) for w in args.het_widths.split(","))
+    uni = bench_T(T, args.het_uniform_layers, args.batch,
+                  args.het_uniform_width, args.q_bits, args.r_bits,
+                  args.repeats, verify=not args.no_verify)
+    het = bench_T(T, 0, args.batch, 0, args.q_bits, args.r_bits,
+                  args.repeats, verify=not args.no_verify,
+                  widths=het_widths)
+    p_het = sum(a * b for a, b in zip(het_widths, het_widths[1:]))
+    p_uni = args.het_uniform_layers * args.het_uniform_width ** 2
+    cell = {
+        "T": T,
+        "widths": list(het_widths),
+        "uniform_width": args.het_uniform_width,
+        "uniform_layers": args.het_uniform_layers,
+        "param_count_het": p_het,
+        "param_count_uniform": p_uni,
+        "het_per_step_s": het["per_step_s"],
+        "uniform_per_step_s": uni["per_step_s"],
+        "het_per_step_bytes": het["per_step_bytes"],
+        "uniform_per_step_bytes": uni["per_step_bytes"],
+        "ratio_het_vs_uniform": het["per_step_s"] / uni["per_step_s"],
+        "verify_ok": het["verify_ok"] and uni["verify_ok"],
+    }
+    print(f"agg_steps,het,widths={'x'.join(map(str, het_widths))},"
+          f"params={p_het}v{p_uni},per_step_s="
+          f"{het['per_step_s']:.2f}v{uni['per_step_s']:.2f},"
+          f"ratio={cell['ratio_het_vs_uniform']:.2f}", flush=True)
+    return cell
+
+
 def monotonic_prefix(rows, key, t_max=4):
     """Strictly-decreasing verdict over the measured T<=t_max prefix;
     None (json null) when T=1 wasn't measured or the prefix is trivial,
@@ -83,8 +127,27 @@ def main(argv=None):
     ap.add_argument("--r-bits", type=int, default=4)
     ap.add_argument("--repeats", type=int, default=2)
     ap.add_argument("--no-verify", action="store_true")
-    ap.add_argument("--out", default="BENCH_agg_steps.json")
+    ap.add_argument("--het-widths", default="16,8,4,2",
+                    help="pyramid shape table for the heterogeneous cell")
+    ap.add_argument("--het-uniform-width", type=int, default=8)
+    ap.add_argument("--het-uniform-layers", type=int, default=3)
+    ap.add_argument("--no-het", action="store_true",
+                    help="skip the heterogeneous comparison cell")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: tiny shapes, 1 repeat, asserts every "
+                         "cell verifies, writes no JSON unless --out is "
+                         "passed explicitly")
+    ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.steps_list = "1,2"
+        args.repeats = 1
+        args.no_verify = False
+        args.het_widths = "8,4,4,2"        # multi-bucket, but tiny
+        args.het_uniform_width = 4
+        args.het_uniform_layers = 2
+    if args.out is None:
+        args.out = None if args.smoke else "BENCH_agg_steps.json"
 
     from repro.util import enable_compilation_cache
     enable_compilation_cache()
@@ -118,13 +181,23 @@ def main(argv=None):
         "monotonic_per_step_size_1_to_4": monotonic_prefix(
             rows, "per_step_bytes"),
     }
-    with open(args.out, "w") as f:
-        json.dump(result, f, indent=1)
-    print(f"agg_steps: wrote {args.out}; "
-          f"per-step time monotonic(1..4)="
-          f"{result['monotonic_per_step_time_1_to_4']}, "
-          f"per-step size monotonic(1..4)="
-          f"{result['monotonic_per_step_size_1_to_4']}", flush=True)
+    if not args.no_het:
+        result["heterogeneous"] = bench_heterogeneous(args)
+
+    if args.smoke:
+        assert all(r["verify_ok"] for r in rows), "smoke: a cell rejected"
+        if not args.no_het:
+            assert result["heterogeneous"]["verify_ok"], \
+                "smoke: heterogeneous cell rejected"
+        print("agg_steps: smoke ok (all cells verified)", flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"agg_steps: wrote {args.out}; "
+              f"per-step time monotonic(1..4)="
+              f"{result['monotonic_per_step_time_1_to_4']}, "
+              f"per-step size monotonic(1..4)="
+              f"{result['monotonic_per_step_size_1_to_4']}", flush=True)
     return result
 
 

@@ -1,0 +1,71 @@
+"""Pippenger MSM window microbench: fixed WINDOW=8 vs length-adaptive.
+
+Small vectors (the IPA's halving fold lengths) used to pay the full
+256-bucket scatter per window; `group.best_window` picks ~log2(n)
+instead.  Reports best-of-N wall time per length and the speedup.
+
+    PYTHONPATH=src python benchmarks/msm_window.py \
+        [--sizes 4,16,64,256,1024] [--repeats 3] [--out BENCH_msm.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def bench_one(n: int, repeats: int, window):
+    import jax.numpy as jnp
+    from repro.core import group
+
+    rng = np.random.default_rng(n)
+    pts_int = [pow(int(rng.integers(2, 1 << 40)), 2, group.P)
+               for _ in range(n)]
+    pts = jnp.asarray(np.stack([np.asarray(group.encode_group(p))
+                                for p in pts_int]))
+    exps = group.exps_from_ints(
+        [int(rng.integers(0, group.Q)) for _ in range(n)])
+    out = group.msm(pts, exps, window=window)       # warmup / compile
+    out.block_until_ready()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        group.msm(pts, exps, window=window).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="4,16,64,256,1024")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_msm.json")
+    args = ap.parse_args(argv)
+
+    from repro.util import enable_compilation_cache
+    enable_compilation_cache()
+    from repro.core import group
+
+    rows = []
+    for n in sorted({int(s) for s in args.sizes.split(",")}):
+        fixed_s = bench_one(n, args.repeats, window=8)
+        adapt_s = bench_one(n, args.repeats, window=None)
+        w = group.best_window(group._pad4(n))
+        rows.append({"n": n, "window_fixed8_s": fixed_s,
+                     "window_adaptive": w, "adaptive_s": adapt_s,
+                     "speedup": fixed_s / adapt_s})
+        print(f"msm,n={n},fixed8={fixed_s * 1e3:.2f}ms,"
+              f"adaptive(w={w})={adapt_s * 1e3:.2f}ms,"
+              f"speedup={fixed_s / adapt_s:.2f}x", flush=True)
+
+    result = {"repeats": args.repeats, "rows": rows}
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"msm_window: wrote {args.out}", flush=True)
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -13,4 +13,8 @@ if ! python -c "import hypothesis" 2>/dev/null; then
         || echo "[ci] dev extras unavailable (offline?); property tests will skip"
 fi
 
-exec python -m pytest -x -q "$@"
+python -m pytest -x -q "$@"
+
+# benchmark-path smoke: tiny shapes, every cell must verify (keeps the
+# aggregation benchmark from rotting between PRs)
+python benchmarks/agg_steps.py --smoke

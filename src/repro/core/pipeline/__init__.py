@@ -1,7 +1,10 @@
-"""Staged zkDL proof pipeline with cross-step FAC4DNN aggregation.
+"""Layer-graph zkDL proof pipeline with FAC4DNN aggregation across
+heterogeneous layers AND training steps.
 
 Public surface:
 
+* `LayerOp` / `LayerGraph` / `OP_REGISTRY` / `build_fcnn_graph` /
+  `proof_graph_for_family`                         -- the IR (graph.py)
 * `PipelineConfig` / `PipelineKeys` / `make_keys`  -- setup (config.py)
 * `ProofSession` / `prove_session` / `AggregatedProof` -- prover (session.py)
 * `verify` / `verify_session`                      -- verifier (verifier.py)
@@ -11,6 +14,9 @@ See README.md in this package for the module <-> paper map.
 """
 from repro.core.pipeline.config import (PipelineConfig, PipelineKeys,
                                         make_keys)
+from repro.core.pipeline.graph import (OP_REGISTRY, LayerGraph, LayerOp,
+                                       OpSpec, build_fcnn_graph,
+                                       proof_graph_for_family, register_op)
 from repro.core.pipeline.session import (AggregatedProof, ProofSession,
                                          SessionCommitments, SessionProver,
                                          prove_session)
@@ -19,6 +25,8 @@ from repro.core.pipeline.witness import (StackedWitness, build_field_tables,
                                          stack_witnesses)
 
 __all__ = [
+    "LayerOp", "LayerGraph", "OpSpec", "OP_REGISTRY", "register_op",
+    "build_fcnn_graph", "proof_graph_for_family",
     "PipelineConfig", "PipelineKeys", "make_keys",
     "AggregatedProof", "ProofSession", "SessionCommitments",
     "SessionProver", "prove_session",

@@ -1,16 +1,22 @@
 """Step (b): the anchor sumcheck -- generalized eq. (27) over the stacked
-(elem, layer, step) hypercube.
+(elem, node, step) hypercube.
 
 Every claim on the uncommitted tensors A^{l,t} / G_Z^{l,t} produced by
-step (a) is random-linearly combined (coefficients `AnchorCoefs`) and
-reduced, through ONE degree-3 sumcheck over all log2(d_stack) =
-log2(B*d) + log2(l_pad) + log2(t_pad) variables, to claims on the
-committed auxiliary tensors at a single point u_star.  Aggregating T
-steps therefore costs log2(t_pad) extra rounds -- not T extra proofs.
+the step-(a) bucket sumchecks is random-linearly combined (coefficients
+`AnchorCoefs`) and reduced, through ONE degree-3 sumcheck over all
+log2(d_stack) = log2(d_slot) + log2(l_pad) + log2(t_pad) variables, to
+claims on the committed auxiliary tensors at a single point u_star.
+Aggregating T steps therefore costs log2(t_pad) extra rounds -- not T
+extra proofs -- and heterogeneous layers cost nothing extra at all: a
+claim at a narrow node's point is embedded into its slot by zero-
+extending the point (`pad_point`), so the same batching table handles
+every shape.
 
-The public batching tables pa / pg are Kronecker products of a sparse
-slot-axis coefficient vector with the expanded element points, so the
-verifier re-evaluates them at u_star in O(T*L + log d) host work.
+The public batching tables pa / pg are sums of Kronecker products of
+sparse slot-axis coefficient vectors with expanded claim points, grouped
+by distinct point (a uniform graph has exactly one fwd/gw/bwd point, so
+the seed's two-term tables fall out unchanged); the verifier
+re-evaluates them at u_star in O(#claims * log d) host work.
 """
 from __future__ import annotations
 
@@ -20,11 +26,13 @@ from typing import Dict, List, Tuple
 import jax.numpy as jnp
 
 from repro.field import FQ, add, sub
-from repro.core.mle import enc, expand_point, heval_point_product, hexpand_point
+from repro.core.mle import (enc, expand_point, heval_point_product,
+                            hexpand_point)
 from repro.core.sumcheck import SumcheckProof, sumcheck_prove, sumcheck_verify
 from repro.core.transcript import Transcript
 from repro.core.pipeline import matmul
-from repro.core.pipeline.challenges import AnchorCoefs, ChallengeSchedule
+from repro.core.pipeline.challenges import (AnchorCoefs, ChallengeSchedule,
+                                            instance_slices, pad_point)
 from repro.core.pipeline.config import PipelineConfig
 from repro.core.pipeline.tables import kron, log2_exact, weight_table, wt_eval
 from repro.core.pipeline.witness import FieldTables
@@ -32,28 +40,115 @@ from repro.core.pipeline.witness import FieldTables
 Q_MOD = FQ.modulus
 
 
-@dataclasses.dataclass
-class AnchorPoints:
-    """The four stacked element-points carrying step-(a) claims."""
-    pt_f: List[int]    # A claims from fwd
-    pt_g: List[int]    # A claims from gw
-    pt_b: List[int]    # G_Z claims from bwd
-    pt_w: List[int]    # G_Z claims from gw
+@dataclasses.dataclass(frozen=True)
+class AnchorClaim:
+    """One step-(a) claim on an uncommitted activation / gradient tensor:
+    its aux slot, its element point (in the tensor's own variables), the
+    drawn batching coefficient, and where its value lives in the bucket
+    sumcheck finals (family, layer, left/right index)."""
+    slot: int
+    point: Tuple[int, ...]
+    coef: int
+    family: str
+    layer: int
+    idx: int
+    step: int
 
-    @classmethod
-    def build(cls, ch: ChallengeSchedule, w1, w2, w3) -> "AnchorPoints":
-        return cls(pt_f=w1 + ch.u_r, pt_g=ch.u_j + w3,
-                   pt_b=w2 + ch.u_r2, pt_w=ch.u_i + w3)
+
+def _act_point(cfg: PipelineConfig, ch: ChallengeSchedule,
+               points: Dict[str, List[List[int]]], family: str,
+               layer: int) -> Tuple[int, ...]:
+    """Element point of the ACTIVATION-side operand claim produced by the
+    (family, layer) instance: the bound inner point takes the operand's
+    free variables, the claim-tensor slices its fixed ones."""
+    inst = cfg.graph.instance(family, layer)
+    bi, _ = cfg.graph.locate(family, layer)
+    w = points[family][bi]
+    u_cols, u_rows, _ = instance_slices(inst, ch.glob(family))
+    if family == "fwd":     # A^{layer-1}(u_rows, w): cols bound at w
+        return tuple(w) + tuple(u_rows)
+    if family == "bwd":     # G_Z^{layer+1}(u_rows, w)
+        return tuple(w) + tuple(u_rows)
+    # gw left (idx 0): G_Z^layer(w, u_rows); right (idx 1): A^{layer-1}(w, u_cols)
+    raise AssertionError("gw handled by _gw_point")
 
 
-def _slot_dicts(cfg: PipelineConfig, al: AnchorCoefs) -> Tuple[Dict, ...]:
-    """AnchorCoefs -> sparse slot-axis weight dicts (A^l lives at layer
-    index l-1 of the stacked tensors, as does G_Z^l)."""
-    wA1 = {cfg.slot(t, l - 1): c for (t, l), c in al.a1.items()}
-    wA2 = {cfg.slot(t, l - 1): c for (t, l), c in al.a2.items()}
-    wG1 = {cfg.slot(t, l - 1): c for (t, l), c in al.g1.items()}
-    wG2 = {cfg.slot(t, l - 1): c for (t, l), c in al.g2.items()}
-    return wA1, wA2, wG1, wG2
+def _gw_point(cfg: PipelineConfig, ch: ChallengeSchedule,
+              points: Dict[str, List[List[int]]], layer: int,
+              idx: int) -> Tuple[int, ...]:
+    inst = cfg.graph.instance("gw", layer)
+    bi, _ = cfg.graph.locate("gw", layer)
+    w3 = points["gw"][bi]
+    u_cols, u_rows, _ = instance_slices(inst, ch.glob("gw"))
+    # G_W^l rows select G_Z^l columns, G_W^l cols select A^{l-1} columns
+    return (tuple(u_rows) if idx == 0 else tuple(u_cols)) + tuple(w3)
+
+
+def collect_claims(cfg: PipelineConfig, ch: ChallengeSchedule,
+                   al: AnchorCoefs, points: Dict[str, List[List[int]]]
+                   ) -> Tuple[List[AnchorClaim], List[AnchorClaim]]:
+    """(A claims, G_Z claims), in the fixed a1/a2/g1/g2 draw order."""
+    g = cfg.graph
+    a_claims: List[AnchorClaim] = []
+    g_claims: List[AnchorClaim] = []
+    for (ti, l), c in al.a1.items():      # A^l from fwd instance l+1
+        a_claims.append(AnchorClaim(
+            slot=g.aux_slot(g.node_for_layer("zkrelu", l).name),
+            point=_act_point(cfg, ch, points, "fwd", l + 1),
+            coef=c, family="fwd", layer=l + 1, idx=0, step=ti))
+    for (ti, l), c in al.a2.items():      # A^l from gw instance l+1
+        a_claims.append(AnchorClaim(
+            slot=g.aux_slot(g.node_for_layer("zkrelu", l).name),
+            point=_gw_point(cfg, ch, points, l + 1, 1),
+            coef=c, family="gw", layer=l + 1, idx=1, step=ti))
+    for (ti, l), c in al.g1.items():      # G_Z^l from bwd instance l-1
+        g_claims.append(AnchorClaim(
+            slot=g.aux_slot(g.node_for_layer("zkrelu", l).name),
+            point=_act_point(cfg, ch, points, "bwd", l - 1),
+            coef=c, family="bwd", layer=l - 1, idx=0, step=ti))
+    for (ti, l), c in al.g2.items():      # G_Z^l from gw instance l
+        g_claims.append(AnchorClaim(
+            slot=g.aux_slot(g.node_for_layer("zkrelu", l).name),
+            point=_gw_point(cfg, ch, points, l, 0),
+            coef=c, family="gw", layer=l, idx=0, step=ti))
+    return a_claims, g_claims
+
+
+def _group_claims(cfg: PipelineConfig, claims: List[AnchorClaim]
+                  ) -> Dict[Tuple[int, ...], Dict[int, int]]:
+    """Claims grouped by distinct element point, coefficients summed per
+    stacked slot.  Prover table construction and verifier re-evaluation
+    MUST use this same grouping, so it is the single shared helper."""
+    groups: Dict[Tuple[int, ...], Dict[int, int]] = {}
+    for cl in claims:
+        w = groups.setdefault(cl.point, {})
+        slot = cfg.slot(cl.step, cl.slot)
+        w[slot] = (w.get(slot, 0) + cl.coef) % Q_MOD
+    return groups
+
+
+def _batch_table(cfg: PipelineConfig, claims: List[AnchorClaim]):
+    """Prover-side public batching table over the full stacked cube:
+    sum over claims of coef * (slot selector (x) padded point expansion),
+    grouped by distinct point so a uniform graph builds exactly the
+    seed's Kronecker terms."""
+    groups = _group_claims(cfg, claims)
+    acc = None
+    for point, weights in groups.items():
+        term = kron(weight_table(weights, cfg.s_pad),
+                    expand_point(pad_point(list(point), cfg.la)))
+        acc = term if acc is None else add(FQ, acc, term)
+    return acc
+
+
+def _batch_eval(cfg: PipelineConfig, claims: List[AnchorClaim],
+                el: List[int], u_elem: List[int]) -> int:
+    """Verifier-side evaluation of the batching table at u_star."""
+    acc = 0
+    for point, weights in _group_claims(cfg, claims).items():
+        acc = (acc + wt_eval(weights, el) * heval_point_product(
+            pad_point(list(point), cfg.la), u_elem)) % Q_MOD
+    return acc
 
 
 @dataclasses.dataclass
@@ -61,18 +156,15 @@ class AnchorOut:
     sc_anchor: SumcheckProof
     anchor_finals: List[int]
     u_star: List[int]
-    pts: AnchorPoints
 
 
 def prove(cfg: PipelineConfig, tabs: FieldTables, ch: ChallengeSchedule,
           mat: matmul.MatmulOut, t: Transcript) -> AnchorOut:
-    pts = AnchorPoints.build(ch, mat.w1, mat.w2, mat.w3)
+    points = {fam: mat.fams[fam].points for fam in mat.fams}
     al = AnchorCoefs.draw(t, cfg)
-    wA1, wA2, wG1, wG2 = _slot_dicts(cfg, al)
-    pa = add(FQ, kron(weight_table(wA1, cfg.s_pad), expand_point(pts.pt_f)),
-             kron(weight_table(wA2, cfg.s_pad), expand_point(pts.pt_g)))
-    pg = add(FQ, kron(weight_table(wG1, cfg.s_pad), expand_point(pts.pt_b)),
-             kron(weight_table(wG2, cfg.s_pad), expand_point(pts.pt_w)))
+    a_claims, g_claims = collect_claims(cfg, ch, al, points)
+    pa = _batch_table(cfg, a_claims)
+    pg = _batch_table(cfg, g_claims)
     one_tab = jnp.broadcast_to(enc(1), (cfg.d_stack, 4)).astype(jnp.uint32)
     one_b = sub(FQ, one_tab, tabs.bq_t)
     anchor_tables = [one_b, tabs.zpp_t, tabs.gap_t, pa, pg]
@@ -80,29 +172,25 @@ def prove(cfg: PipelineConfig, tabs: FieldTables, ch: ChallengeSchedule,
     sc_anchor, u_star, anchor_finals = sumcheck_prove(
         anchor_tables, anchor_products, t, b"anchor")
     return AnchorOut(sc_anchor=sc_anchor, anchor_finals=anchor_finals,
-                     u_star=u_star, pts=pts)
+                     u_star=u_star)
 
 
 def verify(cfg: PipelineConfig, proof, ch: ChallengeSchedule,
-           w1, w2, w3, t: Transcript) -> Tuple[AnchorPoints, List[int]]:
+           points: Dict[str, List[List[int]]],
+           t: Transcript) -> List[int]:
     """Checks the anchor sumcheck against the step-(a) finals and the
-    public batching tables; returns (points, u_star).  Raises ValueError
-    on failure."""
-    T, L = cfg.n_steps, cfg.n_layers
-    lb, ld = log2_exact(cfg.batch), log2_exact(cfg.width)
-    pts = AnchorPoints.build(ch, w1, w2, w3)
+    public batching tables; returns u_star.  Raises ValueError on
+    failure."""
     al = AnchorCoefs.draw(t, cfg)
+    a_claims, g_claims = collect_claims(cfg, ch, al, points)
 
-    # LHS: the batched claims assembled from the matmul sumcheck finals
+    # LHS: the batched claims assembled from the bucket sumcheck finals
     lhs = 0
-    for (ti, l), c in al.a1.items():      # A^l from fwd pair (t, l+1)
-        lhs = (lhs + c * proof.fwd_finals[2 * matmul.fwd_pair(cfg, ti, l + 1)]) % Q_MOD
-    for (ti, l), c in al.a2.items():      # A^l from gw pair (t, l+1)
-        lhs = (lhs + c * proof.gw_finals[2 * matmul.gw_pair(cfg, ti, l + 1) + 1]) % Q_MOD
-    for (ti, l), c in al.g1.items():      # G_Z^l from bwd pair (t, l-1)
-        lhs = (lhs + c * proof.bwd_finals[2 * matmul.bwd_pair(cfg, ti, l - 1)]) % Q_MOD
-    for (ti, l), c in al.g2.items():      # G_Z^l from gw pair (t, l)
-        lhs = (lhs + c * proof.gw_finals[2 * matmul.gw_pair(cfg, ti, l)]) % Q_MOD
+    for cl in a_claims + g_claims:
+        finals = getattr(proof, f"{cl.family}_finals")
+        v = matmul.pair_final(cfg, finals, cl.family, cl.step, cl.layer,
+                              cl.idx)
+        lhs = (lhs + cl.coef * v) % Q_MOD
 
     u_star, exp_anchor = sumcheck_verify(
         lhs, proof.sc_anchor, 3, log2_exact(cfg.d_stack), t, b"anchor")
@@ -113,13 +201,23 @@ def verify(cfg: PipelineConfig, proof, ch: ChallengeSchedule,
     t.absorb_ints(b"anchor/final", proof.anchor_finals)
 
     # recompute the public batching tables at u_star
-    u_elem, u_slot = u_star[: lb + ld], u_star[lb + ld:]
+    u_elem, u_slot = u_star[: cfg.la], u_star[cfg.la:]
     el = hexpand_point(u_slot)
-    wA1, wA2, wG1, wG2 = _slot_dicts(cfg, al)
-    pa_check = (wt_eval(wA1, el) * heval_point_product(pts.pt_f, u_elem)
-                + wt_eval(wA2, el) * heval_point_product(pts.pt_g, u_elem)) % Q_MOD
-    pg_check = (wt_eval(wG1, el) * heval_point_product(pts.pt_b, u_elem)
-                + wt_eval(wG2, el) * heval_point_product(pts.pt_w, u_elem)) % Q_MOD
-    if f_pa != pa_check or f_pg != pg_check:
+    if f_pa != _batch_eval(cfg, a_claims, el, u_elem):
         raise ValueError("anchor-public-tables")
-    return pts, u_star
+    if f_pg != _batch_eval(cfg, g_claims, el, u_elem):
+        raise ValueError("anchor-public-tables")
+    return u_star
+
+
+def output_gz_points(cfg: PipelineConfig, ch: ChallengeSchedule,
+                     points: Dict[str, List[List[int]]]
+                     ) -> Tuple[List[int], List[int]]:
+    """The two element points carrying the G_Z^{L,t} claims that bypass
+    the anchor and discharge through the eq. (32) loss-layer reduction:
+    pt_b from the bwd instance of pair L-1, pt_w from the gw instance of
+    layer L.  Both span log2(batch * padded output width) variables."""
+    L = cfg.n_layers
+    pt_b = list(_act_point(cfg, ch, points, "bwd", L - 1))
+    pt_w = list(_gw_point(cfg, ch, points, L, 0))
+    return pt_b, pt_w

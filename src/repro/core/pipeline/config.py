@@ -1,36 +1,74 @@
 """Pipeline configuration and commitment keys.
 
-`PipelineConfig` generalizes the seed's per-step `ZkdlConfig` with a step
-count T: the committed auxiliary tensors are stacked over BOTH layers and
-training steps, so the stacked hypercube gains log2(t_pad) variables (the
-layer-stacking trick of eq. 27 applied once more, per FAC4DNN).  With
-``n_steps=1`` every size below degenerates to the seed layout, so the
+`PipelineConfig` carries the per-tensor shape table of the proof graph:
+``widths`` is the full MLP shape vector d_0..d_L (input width, then one
+out-width per layer), so heterogeneous pyramids like 784-512-256-128-10
+are first-class.  The scalar ``width`` remains as the uniform shorthand
+(``widths=None`` means every d_i = width), and with ``n_steps=1`` and
+uniform widths every size below degenerates to the seed layout, so the
 single-step keys are bit-identical to the old `zkdl.make_keys`.
+
+All committed tensors are stacked over graph slots AND training steps
+(the layer-stacking trick of eq. 27, applied per FAC4DNN to the whole
+(step, node) axis): each aux node gets a ``d_slot``-element slot, each
+weight node a ``w_slot``-element slot, with per-node zero padding to the
+common slot size.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+from typing import Optional, Tuple
 
 from repro.core import pedersen, zkrelu
-from repro.core.pipeline.tables import next_pow2
+from repro.core.pipeline.graph import LayerGraph, build_fcnn_graph
+from repro.core.pipeline.tables import log2_exact, next_pow2
 
 
 @dataclasses.dataclass(frozen=True)
 class PipelineConfig:
     n_layers: int
     batch: int            # power of 2
-    width: int            # power of 2 (layer in/out dim, padded)
-    q_bits: int
-    r_bits: int
+    width: int = 0        # uniform layer width shorthand (widths wins)
+    q_bits: int = 16
+    r_bits: int = 8
     n_steps: int = 1      # T: training steps aggregated into one proof
+    widths: Optional[Tuple[int, ...]] = None   # shape table d_0..d_L
 
     def __post_init__(self):
         assert self.n_layers >= 2, "pipeline needs >= 2 layers (eq. 33)"
         assert self.n_steps >= 1
+        assert self.batch == next_pow2(self.batch), "batch must be pow2"
+        if self.widths is None:
+            assert self.width >= 1, "pass width or widths"
+            object.__setattr__(self, "widths",
+                               (self.width,) * (self.n_layers + 1))
+        else:
+            object.__setattr__(self, "widths",
+                               tuple(int(w) for w in self.widths))
+            assert len(self.widths) == self.n_layers + 1, \
+                "widths must be d_0..d_L (n_layers + 1 entries)"
+            assert all(w >= 1 for w in self.widths)
 
     @property
+    def is_uniform(self) -> bool:
+        return len(set(self.widths)) == 1
+
+    @functools.cached_property
+    def graph(self) -> LayerGraph:
+        """The layer-graph IR every pipeline stage iterates over."""
+        return build_fcnn_graph(self.widths, self.batch)
+
+    # -- stacked-axis geometry (all powers of two) ------------------------
+    @property
     def l_pad(self) -> int:
-        return next_pow2(self.n_layers)
+        """Aux-slot axis length (one slot per zkReLU node)."""
+        return next_pow2(len(self.graph.aux_nodes))
+
+    @property
+    def lw_pad(self) -> int:
+        """Weight-slot axis length (one slot per qmatmul node)."""
+        return next_pow2(len(self.graph.weight_nodes))
 
     @property
     def t_pad(self) -> int:
@@ -38,38 +76,83 @@ class PipelineConfig:
 
     @property
     def s_pad(self) -> int:
-        """Slots on the stacked (step, layer) axis; layer varies fastest."""
+        """Slots on the stacked (step, aux node) axis; node varies fastest."""
         return self.t_pad * self.l_pad
 
     @property
+    def sw_pad(self) -> int:
+        return self.t_pad * self.lw_pad
+
+    @property
     def d_elem(self) -> int:
-        return self.batch * self.width
+        """Element area of one aux slot (batch x max padded width)."""
+        return self.graph.d_slot
+
+    @property
+    def w_elem(self) -> int:
+        return self.graph.w_slot
 
     @property
     def d_stack(self) -> int:
-        """Stacked aux length: elem vars low, then layer vars, then step."""
+        """Stacked aux length: elem vars low, then node vars, then step."""
         return self.s_pad * self.d_elem
 
     @property
     def w_stack(self) -> int:
-        return self.s_pad * self.width * self.width
+        return self.sw_pad * self.w_elem
+
+    @property
+    def y_elem(self) -> int:
+        return self.graph.y_elem
 
     @property
     def y_stack(self) -> int:
-        return self.t_pad * self.d_elem
+        return self.t_pad * self.y_elem
 
-    def slot(self, t: int, layer_idx: int) -> int:
-        """Flat (step, layer) slot index; layer_idx is 0-based storage."""
-        assert 0 <= t < self.t_pad and 0 <= layer_idx < self.l_pad
-        return t * self.l_pad + layer_idx
+    @property
+    def x_len(self) -> int:
+        """Per-sample data vector length (padded input width)."""
+        return self.graph.input_node.cols_pad
+
+    def slot(self, t: int, node_idx: int) -> int:
+        """Flat (step, aux node) slot index; node_idx is 0-based."""
+        assert 0 <= t < self.t_pad and 0 <= node_idx < self.l_pad
+        return t * self.l_pad + node_idx
+
+    def wslot(self, t: int, node_idx: int) -> int:
+        """Flat (step, weight node) slot index."""
+        assert 0 <= t < self.t_pad and 0 <= node_idx < self.lw_pad
+        return t * self.lw_pad + node_idx
+
+    # -- challenge-point sizes (see challenges.py) ------------------------
+    @property
+    def lb(self) -> int:
+        return log2_exact(self.batch)
+
+    @property
+    def la(self) -> int:
+        """log2 of one aux slot's element area."""
+        return log2_exact(self.d_elem)
+
+    @property
+    def lw(self) -> int:
+        return log2_exact(self.w_elem)
+
+    @property
+    def lj(self) -> int:
+        """Low-var split of the weight elem point: log2(max padded
+        in-width).  Uniform graphs give lj = log2(width) so the drawn
+        u_i / u_j vectors match the seed transcript exactly."""
+        return log2_exact(max(self.graph.weight_shape(n)[0]
+                              for n in self.graph.weight_nodes))
 
 
 @dataclasses.dataclass(frozen=True)
 class PipelineKeys:
     cfg: PipelineConfig
     kd: pedersen.CommitKey        # stacked aux tensors (d_stack)
-    kw: pedersen.CommitKey        # stacked W / G_W (s_pad * width^2)
-    kx: pedersen.CommitKey        # per-sample data vectors (width)
+    kw: pedersen.CommitKey        # stacked W / G_W (sw_pad * w_elem)
+    kx: pedersen.CommitKey        # per-sample data vectors (x_len)
     ky: pedersen.CommitKey        # labels, stacked over steps (y_stack)
     k_bq: pedersen.CommitKey      # B_{Q-1} under the G-column basis
     validity: zkrelu.ValidityKeys
@@ -81,7 +164,7 @@ def make_keys(cfg: PipelineConfig) -> PipelineKeys:
         cfg=cfg,
         kd=pedersen.make_key(b"zkdl/aux", cfg.d_stack),
         kw=pedersen.make_key(b"zkdl/w", cfg.w_stack),
-        kx=pedersen.make_key(b"zkdl/x", cfg.width),
+        kx=pedersen.make_key(b"zkdl/x", cfg.x_len),
         ky=pedersen.make_key(b"zkdl/y", cfg.y_stack),
         k_bq=pedersen.CommitKey(vk.g_col, vk.h_blind, b"zkdl/bq"),
         validity=vk)

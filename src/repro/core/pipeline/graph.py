@@ -1,0 +1,435 @@
+"""FAC4DNN layer-graph IR: heterogeneous-layer proof aggregation.
+
+The paper's point (Section 5) is that proofs aggregate over *different
+layers and training steps without being constrained by their sequential
+order*.  The seed pipeline realized that only for the uniform-width
+quantized FCNN of Example 4.5; this module makes the network shape a
+first-class object instead:
+
+* `LayerOp` — one node of the proof graph (input, quantized matmul,
+  zkReLU rescale/activation, residual add, output gradient) with an
+  explicit unpadded shape and explicit edges to its producers.
+* `OP_REGISTRY` — per-kind `OpSpec` supplying shape validation, the
+  witness extractor (node -> named int64 tensors of one `StepWitness`),
+  and the sumcheck relation handler (node -> `MatmulInstance`s).  The
+  zkReLU / output-gradient relation checks live in `anchor.py` /
+  `openings.py` but are *driven* by the slot and claim enumerations
+  defined here.
+* `LayerGraph` — the validated graph plus everything the prover and the
+  standalone verifier both derive from it: aux/weight slot maps, padded
+  slot sizes, matmul relation instances, and the **shape buckets**.
+
+Shape buckets are the aggregation mechanism: every matmul relation
+instance (one per (family, layer), replicated per aggregated training
+step) is keyed by its sumcheck table length (the padded inner dimension)
+and all instances in a bucket — across layers AND steps — share ONE
+batched sumcheck, entering with public coefficient
+``e(u_slot)[slot(t, node)] * padfac`` exactly like the seed's three
+hardcoded fwd/bwd/gw sumchecks.  A uniform-width graph degenerates to
+one bucket per family, reproducing the seed transcript bit-for-bit.
+
+Slot layout (little-endian MLE variables, low to high):
+
+    aux slot:    [cols of node tensor | rows (batch) | zero pad]  d_slot
+    weight slot: [cols (in-width)     | rows (out)   | zero pad]  w_slot
+
+so a claim on a node tensor at point ``p`` becomes a claim on the
+stacked commitment at ``p ++ zeros ++ slot-selector``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.pipeline.tables import log2_exact, next_pow2
+
+FAMILIES = ("fwd", "bwd", "gw")
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerOp:
+    """One node of the proof graph.
+
+    ``shape`` is the UNPADDED (rows, cols) of the node's output tensor;
+    padded sizes are derived (each dim to the next power of two).
+    ``layer`` is the 1-based layer index used for witness extraction and
+    transcript tags (0 for the input node).
+    """
+    name: str
+    kind: str                      # key into OP_REGISTRY
+    inputs: Tuple[str, ...]
+    shape: Tuple[int, int]
+    layer: int = 0
+
+    @property
+    def rows_pad(self) -> int:
+        return next_pow2(self.shape[0])
+
+    @property
+    def cols_pad(self) -> int:
+        return next_pow2(self.shape[1])
+
+    @property
+    def elem_pad(self) -> int:
+        return self.rows_pad * self.cols_pad
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulInstance:
+    """One matmul relation of one layer (replicated per training step).
+
+    The claim tensor is the product result: Z^l for fwd (eq. 30),
+    G_A^l for bwd (eq. 33), G_W^l for gw (eq. 34).  ``claim_slot`` is
+    the stacked-axis slot the claim reduces to (aux slot for fwd/bwd,
+    weight slot for gw); ``inner`` is the padded inner dimension — the
+    sumcheck table length and therefore the bucket key.
+    """
+    family: str
+    layer: int
+    claim_rows: int        # padded rows of the claim tensor
+    claim_cols: int        # padded cols of the claim tensor
+    inner: int             # padded contraction length (bucket key)
+    claim_slot: int        # slot index on the aux (fwd/bwd) or weight (gw) axis
+    a_node: str            # activation operand node name ("" for bwd)
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    """Registry entry: everything the pipeline needs to know per op kind."""
+    kind: str
+    owns_aux_slot: bool        # node gets a slot in the stacked aux tensors
+    owns_weight_slot: bool     # node gets a slot in the stacked W / G_W
+    validate: Callable[["LayerOp", "LayerGraph"], None]
+    extract: Callable[["LayerOp", object], Dict[str, np.ndarray]]
+    relations: Callable[["LayerOp", "LayerGraph"], List[MatmulInstance]]
+
+
+OP_REGISTRY: Dict[str, OpSpec] = {}
+
+
+def register_op(spec: OpSpec) -> OpSpec:
+    if spec.kind in OP_REGISTRY:
+        raise ValueError(f"op kind {spec.kind!r} already registered")
+    OP_REGISTRY[spec.kind] = spec
+    return spec
+
+
+def _no_relations(op, graph):
+    return []
+
+
+def _no_tensors(op, wit):
+    return {}
+
+
+# ---------------------------------------------------------------------------
+# Op kinds
+# ---------------------------------------------------------------------------
+
+def _validate_input(op: LayerOp, graph: "LayerGraph") -> None:
+    if op.inputs:
+        raise ValueError(f"{op.name}: input node takes no inputs")
+
+
+def _validate_qmatmul(op: LayerOp, graph: "LayerGraph") -> None:
+    (src,) = op.inputs
+    a = graph.node(src)
+    if a.shape[0] != op.shape[0]:
+        raise ValueError(f"{op.name}: batch {op.shape[0]} != producer "
+                         f"{src} batch {a.shape[0]}")
+    # implied weight shape: (in=a.cols, out=op.cols); both must be >= 1
+    if a.shape[1] < 1 or op.shape[1] < 1:
+        raise ValueError(f"{op.name}: degenerate weight shape")
+
+
+def _validate_same_shape(op: LayerOp, graph: "LayerGraph") -> None:
+    for src in op.inputs:
+        if graph.node(src).shape != op.shape:
+            raise ValueError(f"{op.name}: shape {op.shape} != producer "
+                             f"{src} shape {graph.node(src).shape}")
+
+
+def _extract_qmatmul(op: LayerOp, wit) -> Dict[str, np.ndarray]:
+    l = op.layer
+    return {"w": wit.w[l - 1], "gw": wit.gw[l - 1]}
+
+
+def _extract_zkrelu(op: LayerOp, wit) -> Dict[str, np.ndarray]:
+    l, L = op.layer, len(wit.w)
+    zero = np.zeros_like(wit.zpp[l - 1])
+    return {
+        "zpp": wit.zpp[l - 1], "bq": wit.b[l - 1], "rz": wit.rz[l - 1],
+        # the output layer has no downstream G_A (its gradient comes from
+        # the loss, eq. 32), so its grad-aux slots stay exactly zero
+        "gap": wit.gap[l - 1] if l < L else zero,
+        "rga": wit.rga[l - 1] if l < L else zero,
+    }
+
+
+def _extract_output_grad(op: LayerOp, wit) -> Dict[str, np.ndarray]:
+    return {"y": wit.y}
+
+
+def _extract_residual(op: LayerOp, wit) -> Dict[str, np.ndarray]:
+    raise NotImplementedError(
+        "residual_add is a first-class IR node (shape-checked, claim-"
+        "routable through the anchor: a claim on A1+A2 splits linearly "
+        "onto both producer slots) but quantfc witness generation does "
+        "not emit residual trajectories yet — see ROADMAP.md")
+
+
+def _relations_qmatmul(op: LayerOp, graph: "LayerGraph") -> List[MatmulInstance]:
+    """The three Fig. 3 relation instances a quantized matmul owns.
+
+    fwd (eq. 30): Z^l = A^{l-1} W^l, claim on layer l's aux slot.
+    gw  (eq. 34): G_W^l = G_Z^{l,T} A^{l-1}, claim on weight slot l.
+    bwd (eq. 33): G_A^{l-1} = G_Z^l W^{l,T} — attached to layer l because
+    it contracts over layer l's OUT width and reads W^l; the claim lands
+    on layer l-1's aux slot.  Layer 1 has no upstream activation, so it
+    emits no bwd instance (and its A-operand is the input node, whose
+    claims discharge through the per-sample data commitments instead of
+    the anchor).
+    """
+    (src,) = op.inputs
+    a = graph.node(src)
+    act = graph.node_for_layer("zkrelu", op.layer)
+    out: List[MatmulInstance] = []
+    out.append(MatmulInstance(
+        family="fwd", layer=op.layer, claim_rows=op.rows_pad,
+        claim_cols=op.cols_pad, inner=a.cols_pad,
+        claim_slot=graph.aux_slot(act.name), a_node=src))
+    if op.layer > 1:
+        prev_act = graph.node_for_layer("zkrelu", op.layer - 1)
+        out.append(MatmulInstance(
+            family="bwd", layer=op.layer - 1, claim_rows=prev_act.rows_pad,
+            claim_cols=prev_act.cols_pad, inner=op.cols_pad,
+            claim_slot=graph.aux_slot(prev_act.name), a_node=""))
+    out.append(MatmulInstance(
+        family="gw", layer=op.layer, claim_rows=op.cols_pad,
+        claim_cols=a.cols_pad, inner=op.rows_pad,
+        claim_slot=graph.weight_slot(op.name), a_node=src))
+    return out
+
+
+register_op(OpSpec("input", False, False, _validate_input,
+                   _no_tensors, _no_relations))
+register_op(OpSpec("qmatmul", False, True, _validate_qmatmul,
+                   _extract_qmatmul, _relations_qmatmul))
+register_op(OpSpec("zkrelu", True, False, _validate_same_shape,
+                   _extract_zkrelu, _no_relations))
+register_op(OpSpec("residual_add", False, False, _validate_same_shape,
+                   _extract_residual, _no_relations))
+register_op(OpSpec("output_grad", False, False, _validate_same_shape,
+                   _extract_output_grad, _no_relations))
+
+
+# ---------------------------------------------------------------------------
+# The graph
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """All relation instances of one family sharing a sumcheck table
+    length; ONE batched sumcheck proves every (instance, step) pair."""
+    family: str
+    inner: int
+    instances: Tuple[MatmulInstance, ...]
+
+    @property
+    def rounds(self) -> int:
+        return log2_exact(self.inner)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerGraph:
+    nodes: Tuple[LayerOp, ...]
+
+    def __post_init__(self):
+        names = [n.name for n in self.nodes]
+        if len(set(names)) != len(names):
+            raise ValueError("duplicate node names")
+        for op in self.nodes:
+            if op.kind not in OP_REGISTRY:
+                raise ValueError(f"{op.name}: unregistered op kind "
+                                 f"{op.kind!r}; known: {sorted(OP_REGISTRY)}")
+            for src in op.inputs:
+                if src not in names[:names.index(op.name)]:
+                    raise ValueError(f"{op.name}: input {src!r} is not an "
+                                     "earlier node (graph must be in "
+                                     "topological order)")
+            OP_REGISTRY[op.kind].validate(op, self)
+
+    # -- lookups ----------------------------------------------------------
+    def node(self, name: str) -> LayerOp:
+        for n in self.nodes:
+            if n.name == name:
+                return n
+        raise KeyError(name)
+
+    def node_for_layer(self, kind: str, layer: int) -> LayerOp:
+        for n in self.nodes:
+            if n.kind == kind and n.layer == layer:
+                return n
+        raise KeyError((kind, layer))
+
+    # -- slot maps --------------------------------------------------------
+    @functools.cached_property
+    def aux_nodes(self) -> Tuple[LayerOp, ...]:
+        """Nodes owning a stacked-aux slot, in slot order."""
+        return tuple(n for n in self.nodes
+                     if OP_REGISTRY[n.kind].owns_aux_slot)
+
+    @functools.cached_property
+    def weight_nodes(self) -> Tuple[LayerOp, ...]:
+        return tuple(n for n in self.nodes
+                     if OP_REGISTRY[n.kind].owns_weight_slot)
+
+    def aux_slot(self, name: str) -> int:
+        return [n.name for n in self.aux_nodes].index(name)
+
+    def weight_slot(self, name: str) -> int:
+        return [n.name for n in self.weight_nodes].index(name)
+
+    # -- padded geometry --------------------------------------------------
+    @property
+    def batch(self) -> int:
+        return self.nodes[0].shape[0]
+
+    @functools.cached_property
+    def d_slot(self) -> int:
+        """Element area of one aux slot (shared by all aux nodes)."""
+        return max(n.rows_pad * n.cols_pad for n in self.aux_nodes)
+
+    @functools.cached_property
+    def w_slot(self) -> int:
+        """Element area of one weight slot: max padded in*out."""
+        return max(self.weight_shape(n)[0] * self.weight_shape(n)[1]
+                   for n in self.weight_nodes)
+
+    def weight_shape(self, op: LayerOp) -> Tuple[int, int]:
+        """Padded (rows=in, cols=out) of a qmatmul node's weight."""
+        (src,) = op.inputs
+        return self.node(src).cols_pad, op.cols_pad
+
+    @functools.cached_property
+    def output_node(self) -> LayerOp:
+        outs = [n for n in self.nodes if n.kind == "output_grad"]
+        if len(outs) != 1:
+            raise ValueError(f"graph needs exactly one output_grad node, "
+                             f"got {len(outs)}")
+        return outs[0]
+
+    @property
+    def y_elem(self) -> int:
+        """Per-step padded label area: batch x padded output width."""
+        o = self.output_node
+        return o.rows_pad * o.cols_pad
+
+    @functools.cached_property
+    def input_node(self) -> LayerOp:
+        ins = [n for n in self.nodes if n.kind == "input"]
+        if len(ins) != 1:
+            raise ValueError("graph needs exactly one input node")
+        return ins[0]
+
+    # -- relation instances and shape buckets -----------------------------
+    @functools.cached_property
+    def instances(self) -> Dict[str, Tuple[MatmulInstance, ...]]:
+        """Per family, all relation instances in layer order."""
+        per: Dict[str, List[MatmulInstance]] = {f: [] for f in FAMILIES}
+        for op in self.nodes:
+            for inst in OP_REGISTRY[op.kind].relations(op, self):
+                per[inst.family].append(inst)
+        for fam in per:
+            per[fam].sort(key=lambda i: i.layer)
+        return {f: tuple(v) for f, v in per.items()}
+
+    @functools.cached_property
+    def buckets(self) -> Dict[str, Tuple[Bucket, ...]]:
+        """Instances grouped by sumcheck table length (first-seen order,
+        so a uniform graph yields exactly one bucket per family)."""
+        out: Dict[str, Tuple[Bucket, ...]] = {}
+        for fam, insts in self.instances.items():
+            grouped: Dict[int, List[MatmulInstance]] = {}
+            for inst in insts:
+                grouped.setdefault(inst.inner, []).append(inst)
+            out[fam] = tuple(Bucket(fam, inner, tuple(g))
+                             for inner, g in grouped.items())
+        return out
+
+    @functools.cached_property
+    def locators(self) -> Dict[str, Dict[int, Tuple[int, int]]]:
+        """Per family: layer -> (bucket index, position inside bucket).
+
+        The pair index of (step t, layer) inside its bucket's sumcheck is
+        ``t * len(bucket.instances) + position``."""
+        out: Dict[str, Dict[int, Tuple[int, int]]] = {}
+        for fam, buckets in self.buckets.items():
+            m: Dict[int, Tuple[int, int]] = {}
+            for bi, b in enumerate(buckets):
+                for pos, inst in enumerate(b.instances):
+                    m[inst.layer] = (bi, pos)
+            out[fam] = m
+        return out
+
+    def locate(self, family: str, layer: int) -> Tuple[int, int]:
+        return self.locators[family][layer]
+
+    def instance(self, family: str, layer: int) -> MatmulInstance:
+        bi, pos = self.locate(family, layer)
+        return self.buckets[family][bi].instances[pos]
+
+
+def extract_node_tensors(graph: LayerGraph, wit) -> Dict[str, Dict]:
+    """One step's tensors keyed by graph node name, via the op
+    registry's witness extractors -- the single graph-native view of a
+    `StepWitness` (used by both witness stacking and
+    `quantfc.step_graph_witness`)."""
+    return {op.name: OP_REGISTRY[op.kind].extract(op, wit)
+            for op in graph.nodes}
+
+
+# ---------------------------------------------------------------------------
+# Builders + the family registry (launch-time lookup)
+# ---------------------------------------------------------------------------
+
+def build_fcnn_graph(widths: Tuple[int, ...], batch: int) -> LayerGraph:
+    """The (possibly pyramid) MLP graph of Example 4.5: widths is the
+    full shape table d_0..d_L (input width, then one out-width per
+    layer).  Uniform widths reproduce the seed pipeline exactly."""
+    widths = tuple(int(w) for w in widths)
+    if len(widths) < 3:
+        raise ValueError("fcnn graph needs >= 2 layers (eq. 33): pass "
+                         "widths d_0..d_L with L >= 2")
+    L = len(widths) - 1
+    nodes: List[LayerOp] = [LayerOp("x", "input", (), (batch, widths[0]))]
+    prev = "x"
+    for l in range(1, L + 1):
+        nodes.append(LayerOp(f"mm{l}", "qmatmul", (prev,),
+                             (batch, widths[l]), layer=l))
+        nodes.append(LayerOp(f"act{l}", "zkrelu", (f"mm{l}",),
+                             (batch, widths[l]), layer=l))
+        prev = f"act{l}"
+    nodes.append(LayerOp("loss", "output_grad", (prev,),
+                         (batch, widths[L]), layer=L))
+    return LayerGraph(tuple(nodes))
+
+
+PROOF_GRAPH_BUILDERS: Dict[str, Callable[..., LayerGraph]] = {
+    "fcnn": build_fcnn_graph,
+}
+
+
+def proof_graph_for_family(family: str, **kwargs) -> LayerGraph:
+    """Launch-time lookup: model family -> proof graph builder."""
+    try:
+        builder = PROOF_GRAPH_BUILDERS[family]
+    except KeyError:
+        raise LookupError(
+            f"no proof graph registered for family {family!r}; provable "
+            f"families: {sorted(PROOF_GRAPH_BUILDERS)} (register a builder "
+            "in repro.core.pipeline.graph.PROOF_GRAPH_BUILDERS)") from None
+    return builder(**kwargs)

@@ -1,153 +1,216 @@
-"""Step (a): the three batched matmul sumchecks (Fig. 3, eqs 30/33/34).
+"""Step (a): shape-bucketed batched matmul sumchecks (Fig. 3, eqs 30/33/34).
 
-One forward, one backward, and one weight-gradient sumcheck, each
-batching EVERY layer of EVERY aggregated training step under a single
-set of randomness: pair (t, l) contributes two fixed tables and a public
-coefficient e(u_s)[slot(t, l)], so the per-(step, layer) GKR claims
-collapse into three sumchecks whose round count is log2(width) or
-log2(batch) -- independent of both L and T.
+The seed's three hardcoded fwd/bwd/gw sumchecks are the uniform-width
+special case of a general rule: every matmul relation instance of the
+layer graph is keyed by its sumcheck table length (padded inner
+dimension) and all instances in a bucket — across layers AND aggregated
+training steps — share ONE batched sumcheck.  Pair (t, instance) enters
+with the public coefficient
+
+    e(u_slot)[slot(t, node)] * padfac(instance)
+
+where padfac is the zero-padding factor of the instance's claim tensor
+inside its slot (1 for the widest shape).  The per-bucket initial claims
+sum to the family target derived from the stacked-commitment openings
+a1..a6; with more than one bucket the prover transmits the split (it is
+redundant for a single bucket, so uniform graphs keep the exact seed
+transcript).
 
 Final-value indexing (shared with the anchor stage and the verifier):
-fwd pair (t,l), l in 1..L   -> tables [A^{l-1,t}, W^{l,t}]
-bwd pair (t,l), l in 1..L-1 -> tables [G_Z^{l+1,t}, W^{l+1,t}]
-gw  pair (t,l), l in 1..L   -> tables [G_Z^{l,t},  A^{l-1,t}]
-with pair index t*L + (l-1)  (t*(L-1) + (l-1) for bwd).
+within bucket b of a family, pair (t, pos) -> tables
+[left, right] at indices [2p, 2p+1] with p = t * len(b.instances) + pos.
+`MatmulOut.final` / `LayerGraph.locate` hide this arithmetic from the
+other stages.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import Dict, List
 
 from repro.field import FQ
-from repro.core.mle import hexpand_point
+from repro.core.mle import fdot, hexpand_point
 from repro.core.sumcheck import (SumcheckProof, combine_final,
                                  sumcheck_prove, sumcheck_verify)
 from repro.core.transcript import Transcript
-from repro.core.pipeline.challenges import ChallengeSchedule
+from repro.core.pipeline.challenges import ChallengeSchedule, instance_slices
 from repro.core.pipeline.config import PipelineConfig
-from repro.core.pipeline.tables import fix_cols, fix_rows, log2_exact
+from repro.core.pipeline.graph import MatmulInstance
+from repro.core.pipeline.tables import dec_scalar, fix_cols, fix_rows
 from repro.core.pipeline.witness import FieldTables
 
 Q_MOD = FQ.modulus
 
-
-def fwd_pair(cfg: PipelineConfig, t: int, l: int) -> int:
-    """Pair index of layer l (1-based) of step t in the fwd sumcheck."""
-    return t * cfg.n_layers + (l - 1)
+FAMILY_LABELS = {"fwd": b"fwd", "bwd": b"bwd", "gw": b"gw"}
 
 
-def bwd_pair(cfg: PipelineConfig, t: int, l: int) -> int:
-    return t * (cfg.n_layers - 1) + (l - 1)
+def slot_axis_point(ch: ChallengeSchedule, family: str) -> List[int]:
+    return {"fwd": ch.u_sf, "bwd": ch.u_sb, "gw": ch.u_sw}[family]
 
 
-def gw_pair(cfg: PipelineConfig, t: int, l: int) -> int:
-    return t * cfg.n_layers + (l - 1)
+def _slot_of(cfg: PipelineConfig, inst: MatmulInstance, ti: int) -> int:
+    if inst.family == "gw":
+        return cfg.wslot(ti, inst.claim_slot)
+    return cfg.slot(ti, inst.claim_slot)
 
 
-def _coefs(cfg: PipelineConfig, e_slot: List[int], layers: range):
-    """e_slot[slot(t, l-1)] for every pair (t, l), in pair order."""
-    return [e_slot[cfg.slot(t, l - 1)]
-            for t in range(cfg.n_steps) for l in layers]
+def bucket_coefs(cfg: PipelineConfig, ch: ChallengeSchedule,
+                 bucket) -> List[int]:
+    """Public pair coefficients e(u_slot)[slot] * padfac, t-major, in the
+    bucket's pair order (identical on both sides of the protocol)."""
+    e_slot = hexpand_point(slot_axis_point(ch, bucket.family))
+    glob = ch.glob(bucket.family)
+    out = []
+    for ti in range(cfg.n_steps):
+        for inst in bucket.instances:
+            _, _, padfac = instance_slices(inst, glob)
+            out.append(e_slot[_slot_of(cfg, inst, ti)] * padfac % Q_MOD)
+    return out
+
+
+def _fix_operands(tabs: FieldTables, inst: MatmulInstance, ti: int,
+                  u_cols: List[int], u_rows: List[int]):
+    """The two length-`inner` sumcheck tables of one (step, instance)."""
+    l = inst.layer
+    if inst.family == "fwd":
+        # Z^l(u_rows, u_cols) = sum_k A^{l-1}(u_rows, k) W^l(k, u_cols)
+        return (fix_rows(tabs.a_tabs[ti][l - 1], u_rows),
+                fix_cols(tabs.w_mats[ti][l - 1], u_cols))
+    if inst.family == "bwd":
+        # G_A^l(u_rows, u_cols) = sum_j G_Z^{l+1}(u_rows, j) W^{l+1}(u_cols, j)
+        return (fix_rows(tabs.gz_tabs[ti][l], u_rows),
+                fix_rows(tabs.w_mats[ti][l], u_cols))
+    # gw: G_W^l(u_rows, u_cols) = sum_b G_Z^l(b, u_rows) A^{l-1}(b, u_cols)
+    return (fix_cols(tabs.gz_tabs[ti][l - 1], u_rows),
+            fix_cols(tabs.a_tabs[ti][l - 1], u_cols))
+
+
+@dataclasses.dataclass
+class FamilyOut:
+    claims: List[int]              # per-bucket initial claims
+    scs: List[SumcheckProof]
+    finals: List[List[int]]
+    points: List[List[int]]        # bound (inner-variable) point per bucket
 
 
 @dataclasses.dataclass
 class MatmulOut:
-    sc_fwd: SumcheckProof
-    sc_bwd: SumcheckProof
-    sc_gw: SumcheckProof
-    fwd_finals: List[int]
-    bwd_finals: List[int]
-    gw_finals: List[int]
-    w1: List[int]          # bound point of the fwd sumcheck (col vars)
-    w2: List[int]          # bwd (col vars)
-    w3: List[int]          # gw (row vars)
+    fams: Dict[str, FamilyOut]
+
+    def point(self, cfg: PipelineConfig, family: str, layer: int) -> List[int]:
+        bi, _ = cfg.graph.locate(family, layer)
+        return self.fams[family].points[bi]
+
+    def final(self, cfg: PipelineConfig, family: str, ti: int, layer: int,
+              idx: int) -> int:
+        """Final value of pair (step ti, layer)'s left (idx=0) or right
+        (idx=1) table in its bucket's sumcheck."""
+        bi, pos = cfg.graph.locate(family, layer)
+        bucket = cfg.graph.buckets[family][bi]
+        p = ti * len(bucket.instances) + pos
+        return self.fams[family].finals[bi][2 * p + idx]
+
+
+def pair_final(cfg: PipelineConfig, finals: List[List[int]], family: str,
+               ti: int, layer: int, idx: int) -> int:
+    """Verifier-side twin of `MatmulOut.final` over raw proof lists."""
+    bi, pos = cfg.graph.locate(family, layer)
+    bucket = cfg.graph.buckets[family][bi]
+    p = ti * len(bucket.instances) + pos
+    return finals[bi][2 * p + idx]
 
 
 def prove(cfg: PipelineConfig, tabs: FieldTables, ch: ChallengeSchedule,
           t: Transcript) -> MatmulOut:
-    T, L = cfg.n_steps, cfg.n_layers
-    ef = hexpand_point(ch.u_sf)
-    eb = hexpand_point(ch.u_sb)
-    ew = hexpand_point(ch.u_sw)
+    fams: Dict[str, FamilyOut] = {}
+    for fam in ("fwd", "bwd", "gw"):
+        label = FAMILY_LABELS[fam]
+        buckets = cfg.graph.buckets[fam]
+        glob = ch.glob(fam)
+        fixed = []                 # per bucket: (tables, products, coefs)
+        for bucket in buckets:
+            tables, products = [], []
+            for ti in range(cfg.n_steps):
+                for inst in bucket.instances:
+                    u_cols, u_rows, _ = instance_slices(inst, glob)
+                    left, right = _fix_operands(tabs, inst, ti,
+                                                u_cols, u_rows)
+                    p = len(tables)
+                    tables += [left, right]
+                    products.append((p, p + 1))
+            fixed.append((tables, products, bucket_coefs(cfg, ch, bucket)))
 
-    # forward: sum_{t,l} ef[slot] Z~^{l,t}(u_r,u_c) = sum_w A W
-    fwd_tables, fwd_products = [], []
-    for ti in range(T):
-        for l in range(1, L + 1):
-            fa = fix_rows(tabs.a_tabs[ti][l - 1], ch.u_r)
-            fw = fix_cols(tabs.w_mats[ti][l - 1], ch.u_c)
-            p = 2 * fwd_pair(cfg, ti, l)
-            fwd_tables += [fa, fw]
-            fwd_products.append((p, p + 1))
-    sc_fwd, w1, fwd_finals = sumcheck_prove(
-        fwd_tables, fwd_products, t, b"fwd",
-        coefs=_coefs(cfg, ef, range(1, L + 1)))
+        # the per-bucket claim split is only transmitted (and only
+        # needed) when the family has more than one bucket; a single
+        # bucket's claim is implicit in the a1..a6 openings
+        claims = []
+        if len(buckets) > 1:
+            for tables, products, coefs in fixed:
+                acc = 0
+                for (i, j), c in zip(products, coefs):
+                    acc = (acc + c * dec_scalar(fdot(tables[i],
+                                                     tables[j]))) % Q_MOD
+                claims.append(acc)
+            t.absorb_ints(label + b"/claims", claims)
 
-    # backward: sum_{t,l} eb[slot] GA~^{l,t}(u_r2,u_c2) = sum GZ^{l+1} W^{l+1}
-    bwd_tables, bwd_products = [], []
-    for ti in range(T):
-        for l in range(1, L):
-            fg = fix_rows(tabs.gz_tabs[ti][l], ch.u_r2)     # GZ^{l+1,t}
-            fw = fix_rows(tabs.w_mats[ti][l], ch.u_c2)      # W^{l+1,t} rows
-            p = 2 * bwd_pair(cfg, ti, l)
-            bwd_tables += [fg, fw]
-            bwd_products.append((p, p + 1))
-    sc_bwd, w2, bwd_finals = sumcheck_prove(
-        bwd_tables, bwd_products, t, b"bwd",
-        coefs=_coefs(cfg, eb, range(1, L)))
+        out = FamilyOut(claims=claims, scs=[], finals=[], points=[])
+        for tables, products, coefs in fixed:
+            sc, w, finals = sumcheck_prove(tables, products, t, label,
+                                           coefs=coefs)
+            out.scs.append(sc)
+            out.points.append(w)
+            out.finals.append(finals)
+        fams[fam] = out
+    return MatmulOut(fams=fams)
 
-    # gw: sum_{t,l} ew[slot] GW~^{l,t}(u_i,u_j) = sum_b GZ^l A^{l-1}
-    gw_tables, gw_products = [], []
-    for ti in range(T):
-        for l in range(1, L + 1):
-            fg = fix_cols(tabs.gz_tabs[ti][l - 1], ch.u_i)
-            fa = fix_cols(tabs.a_tabs[ti][l - 1], ch.u_j)
-            p = 2 * gw_pair(cfg, ti, l)
-            gw_tables += [fg, fa]
-            gw_products.append((p, p + 1))
-    sc_gw, w3, gw_finals = sumcheck_prove(
-        gw_tables, gw_products, t, b"gw",
-        coefs=_coefs(cfg, ew, range(1, L + 1)))
 
-    return MatmulOut(sc_fwd=sc_fwd, sc_bwd=sc_bwd, sc_gw=sc_gw,
-                     fwd_finals=fwd_finals, bwd_finals=bwd_finals,
-                     gw_finals=gw_finals, w1=w1, w2=w2, w3=w3)
+def family_targets(cfg: PipelineConfig, op: Dict[str, int]) -> Dict[str, int]:
+    """Family claim totals from the stacked-commitment openings: the
+    opening points pi1/pi2/pi3 span the whole (elem, node, step) cube,
+    so the linear zkReLU decompositions (3)/(5) turn a1..a6 into the
+    batched matmul claims summed over every bucket."""
+    two_r = pow(2, cfg.r_bits, Q_MOD)
+    two_qr1 = pow(2, cfg.q_bits + cfg.r_bits - 1, Q_MOD)
+    return {
+        "fwd": (two_r * op["a1"] - two_qr1 * op["a2"] + op["a3"]) % Q_MOD,
+        "bwd": (two_r * op["a4"] + op["a5"]) % Q_MOD,
+        "gw": op["a6"] % Q_MOD,
+    }
 
 
 def verify(cfg: PipelineConfig, proof, op, ch: ChallengeSchedule,
-           t: Transcript) -> Tuple[List[int], List[int], List[int]]:
-    """Checks the three sumchecks; returns (w1, w2, w3) bound points.
+           t: Transcript) -> Dict[str, List[List[int]]]:
+    """Checks every bucket sumcheck; returns the bound points per family.
 
     Raises ValueError on any inconsistency (caught by the caller)."""
-    T, L = cfg.n_steps, cfg.n_layers
-    lb, ld = log2_exact(cfg.batch), log2_exact(cfg.width)
-    ef = hexpand_point(ch.u_sf)
-    eb = hexpand_point(ch.u_sb)
-    ew = hexpand_point(ch.u_sw)
-    two_r = pow(2, cfg.r_bits, Q_MOD)
-    two_qr1 = pow(2, cfg.q_bits + cfg.r_bits - 1, Q_MOD)
-
-    claim_fwd = (two_r * op["a1"] - two_qr1 * op["a2"] + op["a3"]) % Q_MOD
-    fwd_products = [(2 * i, 2 * i + 1) for i in range(T * L)]
-    w1, exp_fwd = sumcheck_verify(claim_fwd, proof.sc_fwd, 2, ld, t, b"fwd")
-    if exp_fwd != combine_final(fwd_products, proof.fwd_finals,
-                                coefs=_coefs(cfg, ef, range(1, L + 1))):
-        raise ValueError("fwd-final")
-    t.absorb_ints(b"fwd/final", proof.fwd_finals)
-
-    claim_bwd = (two_r * op["a4"] + op["a5"]) % Q_MOD
-    bwd_products = [(2 * i, 2 * i + 1) for i in range(T * (L - 1))]
-    w2, exp_bwd = sumcheck_verify(claim_bwd, proof.sc_bwd, 2, ld, t, b"bwd")
-    if exp_bwd != combine_final(bwd_products, proof.bwd_finals,
-                                coefs=_coefs(cfg, eb, range(1, L))):
-        raise ValueError("bwd-final")
-    t.absorb_ints(b"bwd/final", proof.bwd_finals)
-
-    claim_gw = op["a6"]
-    gw_products = [(2 * i, 2 * i + 1) for i in range(T * L)]
-    w3, exp_gw = sumcheck_verify(claim_gw, proof.sc_gw, 2, lb, t, b"gw")
-    if exp_gw != combine_final(gw_products, proof.gw_finals,
-                               coefs=_coefs(cfg, ew, range(1, L + 1))):
-        raise ValueError("gw-final")
-    t.absorb_ints(b"gw/final", proof.gw_finals)
-    return w1, w2, w3
+    targets = family_targets(cfg, op)
+    points: Dict[str, List[List[int]]] = {}
+    for fam in ("fwd", "bwd", "gw"):
+        label = FAMILY_LABELS[fam]
+        buckets = cfg.graph.buckets[fam]
+        scs = getattr(proof, f"sc_{fam}")
+        finals = getattr(proof, f"{fam}_finals")
+        claims = getattr(proof, f"{fam}_claims")
+        if len(scs) != len(buckets) or len(finals) != len(buckets):
+            raise ValueError(f"{fam}-bucket-count")
+        if len(buckets) == 1:
+            if claims:
+                raise ValueError(f"{fam}-claim-split")   # must be implicit
+            claims = [targets[fam]]
+        else:
+            if len(claims) != len(buckets):
+                raise ValueError(f"{fam}-claim-split")
+            if sum(claims) % Q_MOD != targets[fam]:
+                raise ValueError(f"{fam}-claim-split")
+            t.absorb_ints(label + b"/claims", claims)
+        points[fam] = []
+        for bi, bucket in enumerate(buckets):
+            n_pairs = cfg.n_steps * len(bucket.instances)
+            products = [(2 * i, 2 * i + 1) for i in range(n_pairs)]
+            w, expected = sumcheck_verify(claims[bi], scs[bi], 2,
+                                          bucket.rounds, t, label)
+            if expected != combine_final(products, finals[bi],
+                                         coefs=bucket_coefs(cfg, ch, bucket)):
+                raise ValueError(f"{fam}-final")
+            t.absorb_ints(label + b"/final", finals[bi])
+            points[fam].append(w)
+    return points

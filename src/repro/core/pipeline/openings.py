@@ -6,8 +6,10 @@ discharged here:
 * the per-step eq. (32) reduction of G_Z^{L,t} to Z''/B/Y claims (the
   loss layer is linear, so the verifier assembles it from openings);
 * one IPA per committed tensor, with ALL of its claims -- across points,
-  layers and aggregated steps -- folded into a single inner product via
-  <T, b1> + rho <T, b2> = <T, b1 + rho b2>;
+  graph nodes and aggregated steps -- folded into a single inner product
+  via <T, b1> + rho <T, b2> = <T, b1 + rho b2>; claims on narrow nodes
+  embed into the stacked commitment by zero-extending their points
+  (`pad_point`), so heterogeneous shapes share the same fold;
 * the per-sample data commitments (Section 4.4) folded homomorphically
   over rows AND steps into two IPAs total;
 * the zkReLU validity argument over the full stacked bit matrices.
@@ -24,8 +26,9 @@ from repro.core import group, ipa, zkrelu
 from repro.core.mle import enc, expand_point, fdot, hexpand_point
 from repro.core.transcript import Transcript
 from repro.core.pipeline import matmul
-from repro.core.pipeline.anchor import AnchorPoints
+from repro.core.pipeline.anchor import output_gz_points
 from repro.core.pipeline.challenges import (ChallengeSchedule, WeightDraws,
+                                            instance_slices, pad_point,
                                             pi_bases)
 from repro.core.pipeline.config import PipelineConfig, PipelineKeys
 from repro.core.pipeline.tables import dec_scalar, kron, weight_table
@@ -57,38 +60,76 @@ def initial_claims(cfg: PipelineConfig, tabs: FieldTables,
     return e_pi1, e_pi2, e_pi3
 
 
-def gz_top_bases(cfg: PipelineConfig, pts: AnchorPoints):
-    """Per-step bases selecting (step t, layer L) of the stacked tensors
-    at pt_b / pt_w, plus the per-step selectors on the stacked labels."""
-    L = cfg.n_layers
-    e_b, e_w = expand_point(pts.pt_b), expand_point(pts.pt_w)
+def gz_top_bases(cfg: PipelineConfig, pt_b: List[int], pt_w: List[int]):
+    """Per-step bases selecting the output node's slot of the stacked
+    aux tensors at pt_b / pt_w, plus the per-step selectors on the
+    stacked labels (whose per-step area is the output node's own padded
+    size, so the label points need no slot padding)."""
+    g = cfg.graph
+    out_slot = g.aux_slot(g.node_for_layer("zkrelu", cfg.n_layers).name)
+    e_b = expand_point(pad_point(pt_b, cfg.la))
+    e_w = expand_point(pad_point(pt_w, cfg.la))
+    e_b_y = expand_point(pt_b)
+    e_w_y = expand_point(pt_w)
     b_gzl_b, b_gzl_w, y_b, y_w = [], [], [], []
     for t in range(cfg.n_steps):
-        eL = weight_table({cfg.slot(t, L - 1): 1}, cfg.s_pad)
+        eL = weight_table({cfg.slot(t, out_slot): 1}, cfg.s_pad)
         e_t = weight_table({t: 1}, cfg.t_pad)
         b_gzl_b.append(kron(eL, e_b))
         b_gzl_w.append(kron(eL, e_w))
-        y_b.append(kron(e_t, e_b))
-        y_w.append(kron(e_t, e_w))
+        y_b.append(kron(e_t, e_b_y))
+        y_w.append(kron(e_t, e_w_y))
     return b_gzl_b, b_gzl_w, y_b, y_w
 
 
 def w_opening(cfg: PipelineConfig, dlt: WeightDraws, ch: ChallengeSchedule,
-              w1, w2, fwd_finals, bwd_finals):
+              points: Dict[str, List[List[int]]],
+              fwd_finals: List[List[int]], bwd_finals: List[List[int]]):
     """Combined bases/claims folding every W^{l,t} claim into two
-    openings of the single stacked-W commitment."""
-    wW1 = weight_table({cfg.slot(t, l - 1): c
-                        for (t, l), c in dlt.w1.items()}, cfg.s_pad)
-    wW2 = weight_table({cfg.slot(t, l): c
-                        for (t, l), c in dlt.w2.items()}, cfg.s_pad)
-    b_w1 = kron(wW1, kron(expand_point(w1), expand_point(ch.u_c)))
-    b_w2 = kron(wW2, kron(expand_point(ch.u_c2), expand_point(w2)))
-    cl_w1 = 0
-    for (t, l), c in dlt.w1.items():
-        cl_w1 = (cl_w1 + c * fwd_finals[2 * matmul.fwd_pair(cfg, t, l) + 1]) % Q_MOD
-    cl_w2 = 0
-    for (t, l), c in dlt.w2.items():
-        cl_w2 = (cl_w2 + c * bwd_finals[2 * matmul.bwd_pair(cfg, t, l) + 1]) % Q_MOD
+    openings of the single stacked-W commitment.  Each claim's point is
+    the bucket's bound inner point plus the instance's own slices, zero-
+    extended to the common weight-slot area; claims sharing a point are
+    grouped into one Kronecker term (a uniform graph gives one group)."""
+    g = cfg.graph
+
+    def _combine(draws, family, w_layer_of, pair_layer_of, final_idx,
+                 finals, point_of):
+        groups: Dict[tuple, Dict[int, int]] = {}
+        claim = 0
+        for (ti, l), c in draws.items():
+            mm = g.node_for_layer("qmatmul", w_layer_of(l))
+            slot = cfg.wslot(ti, g.weight_slot(mm.name))
+            pt = point_of(w_layer_of(l))
+            w = groups.setdefault(pt, {})
+            w[slot] = (w.get(slot, 0) + c) % Q_MOD
+            claim = (claim + c * matmul.pair_final(
+                cfg, finals, family, ti, pair_layer_of(l),
+                final_idx)) % Q_MOD
+        base = None
+        for pt, weights in groups.items():
+            term = kron(weight_table(weights, cfg.sw_pad),
+                        expand_point(pad_point(list(pt), cfg.lw)))
+            base = term if base is None else add(FQ, base, term)
+        return base, claim
+
+    def _fwd_w_point(lyr):
+        inst = cfg.graph.instance("fwd", lyr)
+        bi, _ = cfg.graph.locate("fwd", lyr)
+        u_cols, _, _ = instance_slices(inst, ch.glob_f)
+        return tuple(u_cols) + tuple(points["fwd"][bi])
+
+    def _bwd_w_point(lyr):
+        # W^{lyr} read by the bwd instance of pair lyr-1: rows fixed at
+        # the pair's column slice, columns bound by the bucket sumcheck
+        inst = cfg.graph.instance("bwd", lyr - 1)
+        bi, _ = cfg.graph.locate("bwd", lyr - 1)
+        u_cols, _, _ = instance_slices(inst, ch.glob_b)
+        return tuple(points["bwd"][bi]) + tuple(u_cols)
+
+    b_w1, cl_w1 = _combine(dlt.w1, "fwd", lambda l: l, lambda l: l, 1,
+                           fwd_finals, _fwd_w_point)
+    b_w2, cl_w2 = _combine(dlt.w2, "bwd", lambda l: l + 1, lambda l: l, 1,
+                           bwd_finals, _bwd_w_point)
     return b_w1, b_w2, cl_w1, cl_w2
 
 
@@ -106,18 +147,29 @@ def _combine_claims(t: Transcript, name: str, claims_pts):
     return combined_b, combined_claim
 
 
-def x_fold_openings(cfg: PipelineConfig, ch: ChallengeSchedule, w1, w3,
-                    fwd_finals, gw_finals):
+def x_fold_openings(cfg: PipelineConfig, ch: ChallengeSchedule,
+                    points: Dict[str, List[List[int]]],
+                    fwd_finals: List[List[int]],
+                    gw_finals: List[List[int]]):
     """The two cross-step data-opening specs: (tag, row point, column
-    point, per-step claims).  Per-step claims are batched with a rho
-    challenge on top of the per-row fold, so all T*B per-sample
-    commitments collapse into ONE commitment fold per tag."""
+    point, per-step claims) for the layer-1 instances touching the input
+    node.  Per-step claims are batched with a rho challenge on top of
+    the per-row fold, so all T*B per-sample commitments collapse into
+    ONE commitment fold per tag."""
     T = cfg.n_steps
+    f_inst = cfg.graph.instance("fwd", 1)
+    f_bi, _ = cfg.graph.locate("fwd", 1)
+    _, f_rows, _ = instance_slices(f_inst, ch.glob_f)
+    g_inst = cfg.graph.instance("gw", 1)
+    g_bi, _ = cfg.graph.locate("gw", 1)
+    g_cols, _, _ = instance_slices(g_inst, ch.glob_w)
     return (
-        ("x1", ch.u_r, w1,
-         [fwd_finals[2 * matmul.fwd_pair(cfg, t, 1)] for t in range(T)]),
-        ("x2", w3, ch.u_j,
-         [gw_finals[2 * matmul.gw_pair(cfg, t, 1) + 1] for t in range(T)]),
+        ("x1", f_rows, points["fwd"][f_bi],
+         [matmul.pair_final(cfg, fwd_finals, "fwd", t, 1, 0)
+          for t in range(T)]),
+        ("x2", points["gw"][g_bi], g_cols,
+         [matmul.pair_final(cfg, gw_finals, "gw", t, 1, 1)
+          for t in range(T)]),
     )
 
 
@@ -141,8 +193,9 @@ def prove(cfg: PipelineConfig, keys: PipelineKeys, tabs: FieldTables,
           mat: matmul.MatmulOut, anc, op: Dict[str, int],
           e_pi1, e_pi2, e_pi3, t: Transcript, rng):
     """Runs the whole of step (c) prover-side; returns (ipas, validity)."""
-    T, L = cfg.n_steps, cfg.n_layers
-    pts, u_star = anc.pts, anc.u_star
+    T = cfg.n_steps
+    points = {fam: mat.fams[fam].points for fam in mat.fams}
+    u_star = anc.u_star
     e_star = expand_point(u_star)
     op["a7"] = dec_scalar(fdot(tabs.rz_t, e_star))
     op["a8"] = dec_scalar(fdot(tabs.rga_t, e_star))
@@ -156,7 +209,8 @@ def prove(cfg: PipelineConfig, keys: PipelineKeys, tabs: FieldTables,
     t.absorb_ints(b"vclaims", [v, v_q1, v_r])
 
     # per-step GZ^{L,t} linear reduction claims (eq. 32)
-    b_gzl_b, b_gzl_w, yb_bases, yw_bases = gz_top_bases(cfg, pts)
+    pt_b, pt_w = output_gz_points(cfg, ch, points)
+    b_gzl_b, b_gzl_w, yb_bases, yw_bases = gz_top_bases(cfg, pt_b, pt_w)
     for ti in range(T):
         op[f"zL_b/{ti}"] = dec_scalar(fdot(tabs.zpp_t, b_gzl_b[ti]))
         op[f"bL_b/{ti}"] = dec_scalar(fdot(tabs.bq_t, b_gzl_b[ti]))
@@ -189,8 +243,9 @@ def prove(cfg: PipelineConfig, keys: PipelineKeys, tabs: FieldTables,
                [(e_pi2, op["a5"]), (e_star, op["a8"])])
 
     dlt = WeightDraws.draw(t, cfg)
-    b_w1, b_w2, cl_w1, cl_w2 = w_opening(cfg, dlt, ch, mat.w1, mat.w2,
-                                         mat.fwd_finals, mat.bwd_finals)
+    b_w1, b_w2, cl_w1, cl_w2 = w_opening(
+        cfg, dlt, ch, points, mat.fams["fwd"].finals,
+        mat.fams["bwd"].finals)
     multi_open("w", tabs.w_t, keys.kw, blinds["w"],
                [(b_w1, cl_w1), (b_w2, cl_w2)])
     multi_open("gw", tabs.gw_t, keys.kw, blinds["gw"], [(e_pi3, op["a6"])])
@@ -200,7 +255,7 @@ def prove(cfg: PipelineConfig, keys: PipelineKeys, tabs: FieldTables,
 
     # data openings: per-sample commitments folded over rows AND steps
     for tag, row_pt, col_pt, claims in x_fold_openings(
-            cfg, ch, mat.w1, mat.w3, mat.fwd_finals, mat.gw_finals):
+            cfg, ch, points, mat.fams["fwd"].finals, mat.fams["gw"].finals):
         coefs, combined_claim = _x_coefs(cfg, t, tag, row_pt, claims)
         folded = None
         blind_f = 0
@@ -218,11 +273,11 @@ def prove(cfg: PipelineConfig, keys: PipelineKeys, tabs: FieldTables,
 
 
 def verify(cfg: PipelineConfig, keys: PipelineKeys, proof, coms,
-           ch: ChallengeSchedule, pts: AnchorPoints, u_star, w1, w2, w3,
-           e_pi1, e_pi2, e_pi3, t: Transcript) -> None:
+           ch: ChallengeSchedule, points: Dict[str, List[List[int]]],
+           u_star, e_pi1, e_pi2, e_pi3, t: Transcript) -> None:
     """Verifier side of step (c).  Raises ValueError naming the first
     failing check."""
-    T, L = cfg.n_steps, cfg.n_layers
+    T = cfg.n_steps
     op = proof.openings
     two_q1 = pow(2, cfg.q_bits - 1, Q_MOD)
     e_star = expand_point(u_star)
@@ -238,17 +293,21 @@ def verify(cfg: PipelineConfig, keys: PipelineKeys, proof, coms,
     t.absorb_ints(b"op3", [op[k] for k in gz_top_keys(cfg)])
 
     # per-step GZ^{L,t} linear checks (eq. 32)
+    L = cfg.n_layers
     for ti in range(T):
         gzl_b = (op[f"zL_b/{ti}"] - two_q1 * op[f"bL_b/{ti}"]
                  - op[f"y_b/{ti}"]) % Q_MOD
-        if proof.bwd_finals[2 * matmul.bwd_pair(cfg, ti, L - 1)] != gzl_b:
+        if matmul.pair_final(cfg, proof.bwd_finals, "bwd", ti, L - 1,
+                             0) != gzl_b:
             raise ValueError("gzL-bwd")
         gzl_w = (op[f"zL_w/{ti}"] - two_q1 * op[f"bL_w/{ti}"]
                  - op[f"y_w/{ti}"]) % Q_MOD
-        if proof.gw_finals[2 * matmul.gw_pair(cfg, ti, L)] != gzl_w:
+        if matmul.pair_final(cfg, proof.gw_finals, "gw", ti, L,
+                             0) != gzl_w:
             raise ValueError("gzL-gw")
 
-    b_gzl_b, b_gzl_w, yb_bases, yw_bases = gz_top_bases(cfg, pts)
+    pt_b, pt_w = output_gz_points(cfg, ch, points)
+    b_gzl_b, b_gzl_w, yb_bases, yw_bases = gz_top_bases(cfg, pt_b, pt_w)
 
     def multi_check(name, com_int, key, claims_pts):
         combined_b, combined_claim = _combine_claims(t, name, claims_pts)
@@ -273,7 +332,7 @@ def verify(cfg: PipelineConfig, keys: PipelineKeys, proof, coms,
                 [(e_pi2, op["a5"]), (e_star, op["a8"])])
 
     dlt = WeightDraws.draw(t, cfg)
-    b_w1, b_w2, cl_w1, cl_w2 = w_opening(cfg, dlt, ch, w1, w2,
+    b_w1, b_w2, cl_w1, cl_w2 = w_opening(cfg, dlt, ch, points,
                                          proof.fwd_finals,
                                          proof.bwd_finals)
     multi_check("w", coms.w, keys.kw, [(b_w1, cl_w1), (b_w2, cl_w2)])
@@ -286,7 +345,7 @@ def verify(cfg: PipelineConfig, keys: PipelineKeys, proof, coms,
     import jax.numpy as jnp
     com_pts = jnp.stack([group.encode_group(ci) for ci in coms.x])
     for tag, row_pt, col_pt, claims in x_fold_openings(
-            cfg, ch, w1, w3, proof.fwd_finals, proof.gw_finals):
+            cfg, ch, points, proof.fwd_finals, proof.gw_finals):
         coefs, combined_claim = _x_coefs(cfg, t, tag, row_pt, claims)
         com_fold = group.msm(com_pts, group.exps_from_ints(coefs))
         if not ipa.open_verify(keys.kx, com_fold, expand_point(col_pt),

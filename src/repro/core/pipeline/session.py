@@ -2,11 +2,13 @@
 
 This is the FAC4DNN deployment surface: the trainer calls ``add_step``
 once per batch update and ``prove`` once per aggregation window; the
-committed tensors, the transcript, the three matmul sumchecks, the
+committed tensors, the transcript, the bucketed matmul sumchecks, the
 anchor sumcheck, the zkReLU validity argument and every IPA opening are
-all shared across the window's T steps, so per-step proof size and
-per-step fixed proving cost fall as T grows (see benchmarks/agg_steps.py
-for the measured amortization curve).
+all shared across the window's T steps -- and, through the layer-graph
+shape buckets, across heterogeneous layer shapes -- so per-step proof
+size and per-step fixed proving cost fall as T grows (see
+benchmarks/agg_steps.py for the measured amortization curve, including
+the heterogeneous pyramid cell).
 """
 from __future__ import annotations
 
@@ -54,16 +56,25 @@ class SessionCommitments:
 
 @dataclasses.dataclass
 class AggregatedProof:
-    """One transcript covering all T aggregated steps."""
+    """One transcript covering all T aggregated steps.
+
+    Sumchecks and finals are per shape bucket (one entry per bucket, in
+    the graph's bucket order); the ``*_claims`` lists carry the per-
+    bucket split of the family claim target and stay empty for single-
+    bucket (uniform-width) graphs, whose transcript is bit-identical to
+    the seed's."""
     coms: SessionCommitments
     openings: Dict[str, int]               # claim values, by name
-    sc_fwd: SumcheckProof
-    sc_bwd: SumcheckProof
-    sc_gw: SumcheckProof
+    sc_fwd: List[SumcheckProof]
+    sc_bwd: List[SumcheckProof]
+    sc_gw: List[SumcheckProof]
     sc_anchor: SumcheckProof
-    fwd_finals: List[int]
-    bwd_finals: List[int]
-    gw_finals: List[int]
+    fwd_finals: List[List[int]]
+    bwd_finals: List[List[int]]
+    gw_finals: List[List[int]]
+    fwd_claims: List[int]
+    bwd_claims: List[int]
+    gw_claims: List[int]
     anchor_finals: List[int]
     ipas: Dict[str, ipa.IpaProof]
     validity: zkrelu.ValidityProof
@@ -71,10 +82,12 @@ class AggregatedProof:
 
     def size_bytes(self) -> int:
         n = len(self.coms.as_ints()) + len(self.openings)
-        for sc in (self.sc_fwd, self.sc_bwd, self.sc_gw, self.sc_anchor):
+        for sc in (*self.sc_fwd, *self.sc_bwd, *self.sc_gw, self.sc_anchor):
             n += sum(len(m) for m in sc.messages)
-        n += (len(self.fwd_finals) + len(self.bwd_finals)
-              + len(self.gw_finals) + len(self.anchor_finals))
+        for finals in (self.fwd_finals, self.bwd_finals, self.gw_finals):
+            n += sum(len(f) for f in finals)
+        n += (len(self.fwd_claims) + len(self.bwd_claims)
+              + len(self.gw_claims) + len(self.anchor_finals))
         total = 32 * n
         total += sum(p.size_bytes() for p in self.ipas.values())
         total += self.validity.size_bytes()
@@ -149,10 +162,16 @@ class SessionProver:
             e_pi1, e_pi2, e_pi3, t, rng)
 
         return AggregatedProof(
-            coms=self.coms, openings=op, sc_fwd=mat.sc_fwd,
-            sc_bwd=mat.sc_bwd, sc_gw=mat.sc_gw, sc_anchor=anc.sc_anchor,
-            fwd_finals=mat.fwd_finals, bwd_finals=mat.bwd_finals,
-            gw_finals=mat.gw_finals, anchor_finals=anc.anchor_finals,
+            coms=self.coms, openings=op,
+            sc_fwd=mat.fams["fwd"].scs, sc_bwd=mat.fams["bwd"].scs,
+            sc_gw=mat.fams["gw"].scs, sc_anchor=anc.sc_anchor,
+            fwd_finals=mat.fams["fwd"].finals,
+            bwd_finals=mat.fams["bwd"].finals,
+            gw_finals=mat.fams["gw"].finals,
+            fwd_claims=list(mat.fams["fwd"].claims),
+            bwd_claims=list(mat.fams["bwd"].claims),
+            gw_claims=list(mat.fams["gw"].claims),
+            anchor_finals=anc.anchor_finals,
             ipas=ipas, validity=validity, n_steps=cfg.n_steps)
 
 

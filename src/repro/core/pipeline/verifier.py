@@ -1,10 +1,10 @@
 """Standalone verifier for aggregated pipeline proofs.
 
 Mirrors the prover's transcript schedule exactly: absorb commitments,
-draw the challenge schedule, replay steps (a)/(b)/(c).  Soundness checks
-are expressed as ValueError raises inside the stage modules; this module
-converts them into an accept/reject bit (plus an optional failure trace
-for telemetry).
+draw the challenge schedule, replay steps (a)/(b)/(c) over the graph's
+shape buckets.  Soundness checks are expressed as ValueError raises
+inside the stage modules; this module converts them into an
+accept/reject bit (plus an optional failure trace for telemetry).
 """
 from __future__ import annotations
 
@@ -38,12 +38,10 @@ def verify(keys: PipelineKeys, proof: AggregatedProof,
                                                "a4", "a5", "a6")])
         e_pi1, e_pi2, e_pi3 = pi_bases(ch)
 
-        w1, w2, w3 = matmul_mod.verify(cfg, proof, op, ch, t)    # step (a)
-        pts, u_star = anchor_mod.verify(cfg, proof, ch,          # step (b)
-                                        w1, w2, w3, t)
+        points = matmul_mod.verify(cfg, proof, op, ch, t)        # step (a)
+        u_star = anchor_mod.verify(cfg, proof, ch, points, t)    # step (b)
         openings_mod.verify(cfg, keys, proof, proof.coms, ch,    # step (c)
-                            pts, u_star, w1, w2, w3,
-                            e_pi1, e_pi2, e_pi3, t)
+                            points, u_star, e_pi1, e_pi2, e_pi3, t)
         return True
     # ValueError: failed soundness checks / inconsistent transcript;
     # KeyError/IndexError: structurally malformed proof fields.  Verifier-

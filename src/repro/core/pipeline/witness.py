@@ -1,32 +1,58 @@
 """Witness stacking: T `StepWitness`es -> one stacked proof witness.
 
-The stacked auxiliary tensors put the element variables low, the layer
-variables next, and the step variables on top (little-endian MLE
-ordering), so flat index = (t * l_pad + layer) * d_elem + elem.  Padded
-layers AND padded steps are zero, which keeps every stacked relation
-exact: zero slots contribute nothing to any sumcheck and pass the zkReLU
-range constraints trivially.
+Stacking is driven by the layer graph's slot maps: each aux node's
+tensors land in slot ``cfg.slot(t, graph.aux_slot(node))``, each weight
+node's in ``cfg.wslot(t, graph.weight_slot(node))``, with the element
+variables low, the node variables next, and the step variables on top
+(little-endian MLE ordering).  Heterogeneous shapes are zero-padded
+twice: each (rows, cols) tensor first pads per-dimension to powers of
+two (so its own row/column MLE variables stay aligned), then the padded
+block zero-extends to the common slot area.  Zero padding keeps every
+stacked relation exact: zero slots contribute nothing to any sumcheck
+and pass the zkReLU range constraints trivially.  A uniform-width graph
+makes both paddings no-ops, reproducing the seed layout bit-for-bit.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import Dict, List
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.quantfc import StepWitness
 from repro.core.pipeline.config import PipelineConfig
+from repro.core.pipeline.graph import extract_node_tensors
 from repro.core.pipeline.tables import enc_tensor
 
+AUX_NAMES = ("zpp", "bq", "rz", "gap", "rga")
 
-def _stack_aux(per_step: List[List[np.ndarray]],
+
+def pad2d(tensor: np.ndarray, rows_pad: int, cols_pad: int) -> np.ndarray:
+    """(r, c) int64 -> (rows_pad, cols_pad) with zero padding."""
+    r, c = tensor.shape
+    assert r <= rows_pad and c <= cols_pad, (tensor.shape, rows_pad, cols_pad)
+    if (r, c) == (rows_pad, cols_pad):
+        return tensor
+    out = np.zeros((rows_pad, cols_pad), dtype=tensor.dtype)
+    out[:r, :c] = tensor
+    return out
+
+
+def node_tensors(cfg: PipelineConfig, wit: StepWitness) -> Dict[str, Dict]:
+    return extract_node_tensors(cfg.graph, wit)
+
+
+def _stack_aux(per_step: List[Dict[str, Dict]], name: str,
                cfg: PipelineConfig) -> np.ndarray:
-    """per_step[t] = list of (B, d) int64 -> (d_stack,) with zero padding."""
+    """Aux tensor `name` of every (step, node) -> (d_stack,) stacked."""
+    g = cfg.graph
     out = np.zeros((cfg.t_pad, cfg.l_pad, cfg.d_elem), dtype=np.int64)
-    for t, layers in enumerate(per_step):
-        for i, tensor in enumerate(layers):
-            out[t, i] = tensor.reshape(-1)
+    for t, tensors in enumerate(per_step):
+        for i, node in enumerate(g.aux_nodes):
+            padded = pad2d(tensors[node.name][name],
+                           node.rows_pad, node.cols_pad)
+            out[t, i, : node.elem_pad] = padded.reshape(-1)
     return out.reshape(-1)
 
 
@@ -43,7 +69,7 @@ class StackedWitness:
     w_s: np.ndarray        # (w_stack,)
     gw_s: np.ndarray
     y_s: np.ndarray        # (y_stack,)
-    x: List[np.ndarray]    # T*B per-sample rows (width,), t-major
+    x: List[np.ndarray]    # T*B per-sample rows (x_len,), t-major
 
     @property
     def n_steps(self) -> int:
@@ -56,40 +82,58 @@ def stack_witnesses(steps: List[StepWitness],
         raise ValueError(
             f"session holds {len(steps)} step witnesses, "
             f"config requires exactly {cfg.n_steps}")
+    g = cfg.graph
     for t, wit in enumerate(steps):
         if wit.n_layers != cfg.n_layers:
             raise ValueError(f"step {t}: {wit.n_layers} layers != "
                              f"{cfg.n_layers}")
-        if wit.x.shape != (cfg.batch, cfg.width):
+        if wit.x.shape != (cfg.batch, cfg.widths[0]):
             raise ValueError(f"step {t}: x shape {wit.x.shape} != "
-                             f"{(cfg.batch, cfg.width)}")
+                             f"{(cfg.batch, cfg.widths[0])}")
+        for l in range(1, cfg.n_layers + 1):
+            want = (cfg.widths[l - 1], cfg.widths[l])
+            if wit.w[l - 1].shape != want:
+                raise ValueError(f"step {t}: W^{l} shape "
+                                 f"{wit.w[l - 1].shape} != {want}")
 
-    w_stack = np.zeros((cfg.t_pad, cfg.l_pad, cfg.width * cfg.width),
-                       dtype=np.int64)
+    per_step = [node_tensors(cfg, wit) for wit in steps]
+
+    w_stack = np.zeros((cfg.t_pad, cfg.lw_pad, cfg.w_elem), dtype=np.int64)
     gw_stack = np.zeros_like(w_stack)
-    y_stack = np.zeros((cfg.t_pad, cfg.d_elem), dtype=np.int64)
+    y_stack = np.zeros((cfg.t_pad, cfg.y_elem), dtype=np.int64)
     xs: List[np.ndarray] = []
-    for t, wit in enumerate(steps):
-        for i in range(cfg.n_layers):
-            w_stack[t, i] = wit.w[i].reshape(-1)
-            gw_stack[t, i] = wit.gw[i].reshape(-1)
-        y_stack[t] = wit.y.reshape(-1)
-        xs.extend(wit.x[i] for i in range(cfg.batch))
+    out_node = g.output_node
+    x_node = g.input_node
+    for t, (wit, tensors) in enumerate(zip(steps, per_step)):
+        for i, node in enumerate(g.weight_nodes):
+            rp, cp = g.weight_shape(node)
+            w_stack[t, i, : rp * cp] = pad2d(
+                tensors[node.name]["w"], rp, cp).reshape(-1)
+            gw_stack[t, i, : rp * cp] = pad2d(
+                tensors[node.name]["gw"], cp, rp).reshape(-1)
+        y_stack[t] = pad2d(tensors[out_node.name]["y"], out_node.rows_pad,
+                           out_node.cols_pad).reshape(-1)
+        x_pad = pad2d(wit.x, cfg.batch, x_node.cols_pad)
+        xs.extend(x_pad[i] for i in range(cfg.batch))
 
     return StackedWitness(
         cfg=cfg, steps=list(steps),
-        zpp_s=_stack_aux([w.zpp for w in steps], cfg),
-        bq_s=_stack_aux([w.b for w in steps], cfg),
-        rz_s=_stack_aux([w.rz for w in steps], cfg),
-        gap_s=_stack_aux([w.gap for w in steps], cfg),
-        rga_s=_stack_aux([w.rga for w in steps], cfg),
+        **{f"{name}_s": _stack_aux(per_step, name, cfg)
+           for name in AUX_NAMES},
         w_s=w_stack.reshape(-1), gw_s=gw_stack.reshape(-1),
         y_s=y_stack.reshape(-1), x=xs)
 
 
 @dataclasses.dataclass
 class FieldTables:
-    """The stacked witness re-encoded as Montgomery limb tables (prover)."""
+    """The stacked witness re-encoded as Montgomery limb tables (prover).
+
+    The per-(step, layer) operand tables are padded to per-node power-of-
+    two shapes so `fix_rows`/`fix_cols` see aligned MLE variables:
+    a_tabs[t][l] is A^l (batch, cols_pad of layer l's activation; l=0 is
+    the padded input), gz_tabs[t][l] is G_Z^{l+1}, w_mats[t][l] is
+    W^{l+1} at its padded (in, out) shape.
+    """
     zpp_t: jnp.ndarray
     bq_t: jnp.ndarray
     rz_t: jnp.ndarray
@@ -98,24 +142,35 @@ class FieldTables:
     w_t: jnp.ndarray
     gw_t: jnp.ndarray
     y_t: jnp.ndarray
-    x_tabs: List[jnp.ndarray]            # T*B tables (width, 4), t-major
-    a_tabs: List[List[jnp.ndarray]]      # [t][l] (B, d, 4)
-    gz_tabs: List[List[jnp.ndarray]]     # [t][l] (B, d, 4)
-    w_mats: List[List[jnp.ndarray]]      # [t][l] (d, d, 4)
+    x_tabs: List[jnp.ndarray]            # T*B tables (x_len, 4), t-major
+    a_tabs: List[List[jnp.ndarray]]      # [t][l] (B, cpad_l, 4)
+    gz_tabs: List[List[jnp.ndarray]]     # [t][l] (B, cpad_{l+1}, 4)
+    w_mats: List[List[jnp.ndarray]]      # [t][l] (ipad_{l+1}, opad_{l+1}, 4)
+
+
+def _enc2d(tensor: np.ndarray, rows_pad: int, cols_pad: int) -> jnp.ndarray:
+    return enc_tensor(pad2d(tensor, rows_pad, cols_pad)).reshape(
+        rows_pad, cols_pad, 4)
 
 
 def build_field_tables(sw: StackedWitness) -> FieldTables:
     cfg = sw.cfg
-    B, d = cfg.batch, cfg.width
+    g = cfg.graph
+    B = cfg.batch
+    cpads = [g.input_node.cols_pad] + [
+        g.node_for_layer("zkrelu", l).cols_pad
+        for l in range(1, cfg.n_layers + 1)]
+    wshapes = [g.weight_shape(g.node_for_layer("qmatmul", l))
+               for l in range(1, cfg.n_layers + 1)]
     return FieldTables(
         zpp_t=enc_tensor(sw.zpp_s), bq_t=enc_tensor(sw.bq_s),
         rz_t=enc_tensor(sw.rz_s), gap_t=enc_tensor(sw.gap_s),
         rga_t=enc_tensor(sw.rga_s), w_t=enc_tensor(sw.w_s),
         gw_t=enc_tensor(sw.gw_s), y_t=enc_tensor(sw.y_s),
         x_tabs=[enc_tensor(x) for x in sw.x],
-        a_tabs=[[enc_tensor(a).reshape(B, d, 4) for a in w.a]
+        a_tabs=[[_enc2d(a, B, cpads[l]) for l, a in enumerate(w.a)]
                 for w in sw.steps],
-        gz_tabs=[[enc_tensor(g).reshape(B, d, 4) for g in w.gz]
+        gz_tabs=[[_enc2d(gz, B, cpads[l + 1]) for l, gz in enumerate(w.gz)]
                  for w in sw.steps],
-        w_mats=[[enc_tensor(m).reshape(d, d, 4) for m in w.w]
+        w_mats=[[_enc2d(m, *wshapes[l]) for l, m in enumerate(w.w)]
                 for w in sw.steps])

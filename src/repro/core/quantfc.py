@@ -104,6 +104,24 @@ class StepWitness:
         return len(self.w)
 
 
+def step_widths(wit: "StepWitness"):
+    """The shape table d_0..d_L realized by one step witness."""
+    return (wit.x.shape[1],) + tuple(w.shape[1] for w in wit.w)
+
+
+def step_graph_witness(wit: "StepWitness"):
+    """Graph-native view of a step witness: the layer graph implied by
+    the witness shapes plus per-node named tensors via the op registry's
+    witness extractors (the same extraction path the proof pipeline's
+    witness stacking consumes; the positional lists above remain as the
+    raw training-side carrier)."""
+    from repro.core.pipeline.graph import (build_fcnn_graph,
+                                           extract_node_tensors)
+
+    graph = build_fcnn_graph(step_widths(wit), wit.x.shape[0])
+    return graph, extract_node_tensors(graph, wit)
+
+
 def train_step_witness(x: np.ndarray, y: np.ndarray, ws: List[np.ndarray],
                        cfg: QuantConfig) -> StepWitness:
     """Forward + backward pass of the FCNN in exact integer arithmetic."""
@@ -144,13 +162,29 @@ def synthetic_sgd_trajectory(n_steps: int, n_layers: int, batch: int,
     """n_steps consecutive batch-update witnesses along a real integer-SGD
     trajectory on seeded synthetic data (the shared generator for tests,
     benchmarks and examples, so they all measure the same trajectory)."""
+    return synthetic_sgd_trajectory_widths(
+        n_steps, (width,) * (n_layers + 1), batch, cfg, seed=seed,
+        lr_shift=lr_shift)
+
+
+def synthetic_sgd_trajectory_widths(n_steps: int, widths, batch: int,
+                                    cfg: QuantConfig, seed: int = 0,
+                                    lr_shift: int = 8) -> List[StepWitness]:
+    """Heterogeneous-shape twin of `synthetic_sgd_trajectory`: ``widths``
+    is the full shape table d_0..d_L (pyramid MLPs etc.), matching
+    `pipeline.PipelineConfig.widths`.  The forward/backward integer
+    arithmetic is shape-agnostic already; only the data generator needed
+    the per-layer shapes.  Uniform widths draw the exact same seeded
+    random streams as before, so existing trajectories are unchanged.
+    """
+    widths = tuple(int(w) for w in widths)
     rng = np.random.default_rng(seed)
-    ws = [quantize(rng.uniform(-1, 1, (width, width)) * 0.3, cfg)
-          for _ in range(n_layers)]
+    ws = [quantize(rng.uniform(-1, 1, (widths[l], widths[l + 1])) * 0.3, cfg)
+          for l in range(len(widths) - 1)]
     wits = []
     for _ in range(n_steps):
-        x = quantize(rng.uniform(-1, 1, (batch, width)), cfg)
-        y = quantize(rng.uniform(-1, 1, (batch, width)), cfg)
+        x = quantize(rng.uniform(-1, 1, (batch, widths[0])), cfg)
+        y = quantize(rng.uniform(-1, 1, (batch, widths[-1])), cfg)
         wit = train_step_witness(x, y, ws, cfg)
         wits.append(wit)
         ws = sgd_apply(ws, wit.gw, lr_shift, cfg)
@@ -159,12 +193,16 @@ def synthetic_sgd_trajectory(n_steps: int, n_layers: int, batch: int,
 
 def sgd_apply(ws: List[np.ndarray], gw: List[np.ndarray], lr_shift: int,
               cfg: QuantConfig) -> List[np.ndarray]:
-    """W <- W - G_W / 2^{lr_shift + R}: gradient at scale 2^{2R} mapped back
-    to weight scale 2^R with learning rate 2^{-lr_shift} (provable update:
-    one linear relation + one range-checked remainder; see zkdl.prove)."""
+    """W <- W - G_W^T / 2^{lr_shift + R}: gradient at scale 2^{2R} mapped
+    back to weight scale 2^R with learning rate 2^{-lr_shift} (provable
+    update: one linear relation + one range-checked remainder).
+
+    G_W^l = G_Z^{l,T} A^{l-1} (eq. 34) is (out, in)-shaped while W^l is
+    (in, out), so the update transposes -- the square uniform-width case
+    masked a missing transpose here until heterogeneous shapes arrived."""
     out = []
     lim = 1 << (cfg.q_bits - 1)
     for w, g in zip(ws, gw):
-        step = np.floor_divide(g, 1 << (lr_shift + cfg.r_bits))
+        step = np.floor_divide(g, 1 << (lr_shift + cfg.r_bits)).T
         out.append(np.clip(w - step, -lim, lim - 1))
     return out

@@ -1,13 +1,20 @@
-"""Compatibility shim over `repro.core.pipeline`.
+"""Deprecated compatibility shim over `repro.core.pipeline`.
 
 The Protocol-2 monolith that used to live here is now the staged proof
 pipeline package (see `repro/core/pipeline/README.md` for the module <->
 paper map).  This module keeps the original single-step API alive:
-`ZkdlConfig` is a `PipelineConfig` with ``n_steps=1``, and
-`prove_step`/`verify_step` run a one-step `ProofSession`, which is the
-T=1 degenerate case of the cross-step FAC4DNN aggregation.
+`ZkdlConfig` is a `PipelineConfig` with ``n_steps=1`` and uniform
+widths, so `prove_step`/`verify_step` run a one-step `ProofSession`
+over the uniform layer graph -- the T=1 single-bucket degenerate case
+of the heterogeneous FAC4DNN aggregation, and the SAME witness-stacking
+code path (`pipeline.witness.stack_witnesses`) as every other caller.
+
+New code should use `repro.core.pipeline.ProofSession` directly; the
+entry points below emit a `DeprecationWarning` saying so.
 """
 from __future__ import annotations
+
+import warnings
 
 import numpy as np
 
@@ -34,6 +41,13 @@ __all__ = [
 ]
 
 
+def _deprecated(name: str) -> None:
+    warnings.warn(
+        f"repro.core.zkdl.{name} is deprecated: use "
+        "repro.core.pipeline.ProofSession (n_steps=1 reproduces the "
+        "single-step protocol exactly)", DeprecationWarning, stacklevel=3)
+
+
 class Prover(SessionProver):
     """Single-step prover: `commit` accepts one `StepWitness` directly."""
 
@@ -49,6 +63,7 @@ def verify(keys: ZkdlKeys, proof: ZkdlProof, transcript: Transcript,
 
 def prove_step(keys: ZkdlKeys, wit: StepWitness, rng: np.random.Generator,
                label: bytes = b"zkdl") -> ZkdlProof:
+    _deprecated("prove_step")
     prover = Prover(keys, rng)
     prover.commit(wit)
     return prover.prove(Transcript(label))
@@ -56,4 +71,5 @@ def prove_step(keys: ZkdlKeys, wit: StepWitness, rng: np.random.Generator,
 
 def verify_step(keys: ZkdlKeys, proof: ZkdlProof,
                 label: bytes = b"zkdl") -> bool:
+    _deprecated("verify_step")
     return verify(keys, proof, Transcript(label))

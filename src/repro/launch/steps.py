@@ -21,12 +21,35 @@ from repro.models.config import ModelConfig
 from repro.train import optim
 
 
+def build_proof_pipeline_config(model_cfg, batch: int, n_steps: int,
+                                q_bits: int = 16, r_bits: int = 8,
+                                widths=None):
+    """ArchConfig -> `PipelineConfig`, gated by the proof-graph registry.
+
+    Families without a registered layer-graph builder raise a clear
+    LookupError instead of silently training unproven; ``widths``
+    overrides the uniform d_0..d_L table derived from the model config
+    (heterogeneous pyramids, reduced runs)."""
+    from repro.core.pipeline import PipelineConfig
+    from repro.core.pipeline.graph import proof_graph_for_family
+
+    if widths is None:
+        widths = (model_cfg.d_model,) * (model_cfg.n_layers + 1)
+    widths = tuple(int(w) for w in widths)
+    # registry gate: raises LookupError for unprovable families
+    proof_graph_for_family(model_cfg.family, widths=widths, batch=batch)
+    return PipelineConfig(n_layers=len(widths) - 1, batch=batch,
+                          q_bits=q_bits, r_bits=r_bits, n_steps=n_steps,
+                          widths=widths)
+
+
 def build_zkdl_step(zk_cfg, lr_shift: int = 8):
-    """Train step for the quantized-FCNN (zkDL) family: exact integer
-    SGD whose per-batch witness feeds the proof pipeline.
+    """Train step for a provable integer-SGD family: exact integer SGD
+    whose per-batch witness feeds the proof pipeline (any layer-graph
+    shape table, uniform or pyramid).
 
     Returns ``step(ws, batch) -> (new_ws, StepWitness)`` with batch a
-    dict of int64 arrays {"x": (B, d), "y": (B, d)} at scale 2^R."""
+    dict of int64 arrays {"x": (B, d_0), "y": (B, d_L)} at scale 2^R."""
     from repro.core import quantfc
 
     qc = quantfc.QuantConfig(q_bits=zk_cfg.q_bits, r_bits=zk_cfg.r_bits)

@@ -57,38 +57,44 @@ def build_state(cfg, opt_cfg, mesh, rng_seed: int = 0):
 
 
 def run_zkdl_train(cfg, args) -> int:
-    """Prove-while-train for the quantized-FCNN (zkDL) family: integer
-    SGD with one aggregated proof per --prove-window steps.
+    """Prove-while-train for provable integer-SGD families: one
+    aggregated proof per --prove-window steps, over the family's layer
+    graph (uniform or a heterogeneous pyramid via --widths).
 
         python -m repro.launch.train --arch fcnn-zkdl-16l \
             --layers 2 --d-model 8 --global-batch 4 --steps 8 \
-            --prove-window 4 [--no-verify]
+            --prove-window 4 [--widths 16,8,4,2] [--no-verify]
 
     Without overrides this runs the paper-scale 16x4096 network -- the
     same code path, just slow on a CPU substrate."""
     import numpy as np
     from repro.core import quantfc
-    from repro.core.pipeline import PipelineConfig, make_keys
+    from repro.core.pipeline import make_keys
     from repro.launch import steps as steps_mod
 
-    layers = args.layers or cfg.n_layers
-    width = args.d_model or cfg.d_model
+    if args.widths:
+        widths = tuple(int(w) for w in args.widths.split(","))
+    else:
+        layers = args.layers or cfg.n_layers
+        width = args.d_model or cfg.d_model
+        widths = (width,) * (layers + 1)
     window = max(1, args.prove_window)
-    zk_cfg = PipelineConfig(n_layers=layers, batch=args.global_batch,
-                            width=width, q_bits=16, r_bits=8,
-                            n_steps=window)
+    zk_cfg = steps_mod.build_proof_pipeline_config(
+        cfg, batch=args.global_batch, n_steps=window, widths=widths)
     qc = quantfc.QuantConfig(q_bits=zk_cfg.q_bits, r_bits=zk_cfg.r_bits)
-    print(f"[train] zkdl fcnn: {layers} layers x {width} wide, "
+    shape = ("x".join(str(w) for w in widths) if len(set(widths)) > 1
+             else f"{zk_cfg.n_layers} layers x {widths[0]} wide")
+    print(f"[train] zkdl {cfg.family}: {shape}, "
           f"batch {args.global_batch}, aggregating {window} step(s)/proof",
           flush=True)
 
     keys = make_keys(zk_cfg)
     rng = np.random.default_rng(0)
     ws = [quantfc.quantize(
-        rng.uniform(-1, 1, (width, width)) * 0.3, qc)
-        for _ in range(layers)]
-    data_x = rng.uniform(-1, 1, (args.global_batch * 8, width))
-    data_y = rng.uniform(-1, 1, (args.global_batch * 8, width))
+        rng.uniform(-1, 1, (widths[l], widths[l + 1])) * 0.3, qc)
+        for l in range(zk_cfg.n_layers)]
+    data_x = rng.uniform(-1, 1, (args.global_batch * 8, widths[0]))
+    data_y = rng.uniform(-1, 1, (args.global_batch * 8, widths[-1]))
 
     def on_proof(step, proof, dt):
         print(f"[train] step {step}: aggregated proof over "
@@ -135,18 +141,33 @@ def main(argv=None):
     ap.add_argument("--fail-at", type=int, default=None,
                     help="inject a failure at this step (drills restart)")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--prove", action="store_true",
+                    help="require prove-while-train (families without a "
+                         "registered proof graph fail loudly)")
     ap.add_argument("--prove-window", type=int, default=4,
-                    help="fcnn family: training steps per aggregated proof")
+                    help="provable families: steps per aggregated proof")
+    ap.add_argument("--widths", default=None,
+                    help="provable families: heterogeneous shape table "
+                         "d_0..d_L, e.g. 784,512,256,128,10")
     ap.add_argument("--no-verify", action="store_true",
-                    help="fcnn family: skip verifying emitted proofs")
+                    help="provable families: skip verifying emitted proofs")
     args = ap.parse_args(argv)
 
     from repro.util import enable_compilation_cache
     enable_compilation_cache()
     from repro.configs.registry import get_config
+    from repro.core.pipeline.graph import PROOF_GRAPH_BUILDERS
     arch_cfg = get_config(args.arch)
-    if arch_cfg.family == "fcnn":
+    if arch_cfg.family in PROOF_GRAPH_BUILDERS:
         return run_zkdl_train(arch_cfg, args)
+    if args.prove:
+        # one registry lookup; raises "no proof graph registered for
+        # family ..." with the list of provable families
+        from repro.core.pipeline.graph import proof_graph_for_family
+        try:
+            proof_graph_for_family(arch_cfg.family)
+        except LookupError as exc:
+            raise SystemExit(f"--prove: {exc}") from None
     import jax
     from repro.data import pipeline
     from repro.distributed import hints

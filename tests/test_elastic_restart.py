@@ -36,9 +36,23 @@ print("ELASTIC_OK")
 def test_elastic_restart_smaller_mesh(tmp_path):
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
-    ckpt = str(tmp_path / "elastic")
-    shutil.rmtree(ckpt, ignore_errors=True)
-    proc = subprocess.run([sys.executable, "-c", SCRIPT, ckpt], env=env,
-                          capture_output=True, text=True, timeout=900)
+    # XLA's forced-host-device path intermittently aborts with glibc
+    # heap corruption ("malloc_consolidate(): invalid chunk size",
+    # SIGABRT) during the cross-mesh restore -- a native jax/XLA-CPU
+    # flake, not a repo regression.  Single-threading the host BLAS
+    # lowers the crash rate; retry the subprocess on signal deaths
+    # only -- real assertion failures (missing ELASTIC_OK with a clean
+    # exit) are never retried.
+    env.setdefault("OMP_NUM_THREADS", "1")
+    env.setdefault("OPENBLAS_NUM_THREADS", "1")
+    for attempt in range(3):
+        ckpt = str(tmp_path / f"elastic{attempt}")
+        shutil.rmtree(ckpt, ignore_errors=True)
+        proc = subprocess.run([sys.executable, "-c", SCRIPT, ckpt], env=env,
+                              capture_output=True, text=True, timeout=900)
+        if proc.returncode >= 0 or attempt == 2:
+            break
+        print(f"[elastic] native crash (rc={proc.returncode}); retrying")
     assert "ELASTIC_OK" in proc.stdout, (
+        f"returncode: {proc.returncode}\n"
         f"stdout:\n{proc.stdout[-2000:]}\nstderr:\n{proc.stderr[-3000:]}")

@@ -1,18 +1,27 @@
 """Aggregated proof pipeline tests: T=2 prove/verify roundtrip plus
 tamper rejections (flipped aux bit, wrong step count, stale transcript,
-cross-step claim splicing)."""
+cross-step claim splicing), the heterogeneous pyramid roundtrip, and the
+golden-digest pins that keep the uniform layer-graph path bit-identical
+to the seed protocol."""
 import copy
+import hashlib
 
 import numpy as np
 import pytest
 
-from repro.core.quantfc import QuantConfig, synthetic_sgd_trajectory
+from repro.core.quantfc import (QuantConfig, synthetic_sgd_trajectory,
+                                synthetic_sgd_trajectory_widths)
 from repro.core.pipeline import (PipelineConfig, ProofSession, make_keys,
                                  prove_session, verify_session)
 
 CFG = PipelineConfig(n_layers=2, batch=2, width=4, q_bits=16, r_bits=4,
                      n_steps=2)
 QC = QuantConfig(q_bits=CFG.q_bits, r_bits=CFG.r_bits)
+
+# pyramid MLP: 4 distinct layer widths, multi-bucket in every family
+HET_WIDTHS = (16, 8, 4, 2)
+HET_CFG = PipelineConfig(n_layers=3, batch=2, widths=HET_WIDTHS,
+                         q_bits=16, r_bits=4, n_steps=2)
 
 
 def make_step_witnesses(seed=0, n_steps=CFG.n_steps, cfg=CFG):
@@ -95,3 +104,209 @@ def test_rejects_tampered_opening(keys, proof):
     bad = copy.deepcopy(proof)
     bad.openings["a1"] = (bad.openings["a1"] + 1) % (2**61)
     assert not verify_session(keys, bad)
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous layer graph (FAC4DNN over a pyramid MLP)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def het_keys():
+    return make_keys(HET_CFG)
+
+
+def test_heterogeneous_pyramid_roundtrip(het_keys):
+    """A pyramid MLP with 4 distinct widths proves T=2 steps in ONE
+    aggregated session; every matmul family splits into shape buckets."""
+    buckets = HET_CFG.graph.buckets
+    assert len(buckets["fwd"]) == 3       # inner dims 16 / 8 / 4
+    assert len(buckets["bwd"]) == 2       # inner dims 4 / 2
+    assert len(buckets["gw"]) == 1        # inner dim = batch, always one
+    wits = synthetic_sgd_trajectory_widths(2, HET_WIDTHS, HET_CFG.batch,
+                                           QC, seed=11)
+    proof = prove_session(het_keys, wits, np.random.default_rng(11))
+    trace = []
+    assert verify_session(het_keys, proof, trace=trace), trace
+    assert len(proof.sc_fwd) == 3 and len(proof.fwd_claims) == 3
+    assert len(proof.sc_bwd) == 2 and len(proof.gw_claims) == 0
+
+
+def test_heterogeneous_rejects_tampered_witness(het_keys):
+    wits = synthetic_sgd_trajectory_widths(2, HET_WIDTHS, HET_CFG.batch,
+                                           QC, seed=12)
+    wits[1].gw[1][0, 0] += 1              # forged gradient, narrow layer
+    bad = prove_session(het_keys, wits, np.random.default_rng(12))
+    assert not verify_session(het_keys, bad)
+
+    wits = synthetic_sgd_trajectory_widths(2, HET_WIDTHS, HET_CFG.batch,
+                                           QC, seed=13)
+    wits[0].b[2][0, 0] ^= 1               # flipped ReLU bit, widest slot
+    bad = prove_session(het_keys, wits, np.random.default_rng(13))
+    assert not verify_session(het_keys, bad)
+
+
+def test_heterogeneous_rejects_claim_split_tamper(het_keys):
+    """Moving mass between two buckets' split claims keeps the sum (so
+    the split check passes) but must break a bucket sumcheck."""
+    wits = synthetic_sgd_trajectory_widths(2, HET_WIDTHS, HET_CFG.batch,
+                                           QC, seed=14)
+    proof = prove_session(het_keys, wits, np.random.default_rng(14))
+    bad = copy.deepcopy(proof)
+    bad.fwd_claims[0] = (bad.fwd_claims[0] + 1) % (2**61 - 1)
+    bad.fwd_claims[1] = (bad.fwd_claims[1] - 1) % (2**61 - 1)
+    assert not verify_session(het_keys, bad)
+
+
+def check_stacking_invariants(widths, n_steps, seed, batch=2):
+    """Graph-stacking invariants (shared with the hypothesis twin in
+    test_property_based.py): slot maps are bijections onto their padded
+    axes, every occupied block equals its node's zero-padded tensor, and
+    every element outside the occupied blocks is exactly zero."""
+    from repro.core.pipeline.witness import pad2d, stack_witnesses
+
+    cfg = PipelineConfig(n_layers=len(widths) - 1, batch=batch,
+                         widths=tuple(widths), q_bits=16, r_bits=4,
+                         n_steps=n_steps)
+    wits = synthetic_sgd_trajectory_widths(n_steps, widths, batch, QC,
+                                           seed=seed)
+    sw = stack_witnesses(wits, cfg)
+    g = cfg.graph
+
+    slots = [cfg.slot(t, i) for t in range(cfg.t_pad)
+             for i in range(cfg.l_pad)]
+    assert sorted(slots) == list(range(cfg.s_pad))
+    wslots = [cfg.wslot(t, i) for t in range(cfg.t_pad)
+              for i in range(cfg.lw_pad)]
+    assert sorted(wslots) == list(range(cfg.sw_pad))
+
+    zpp = sw.zpp_s.reshape(cfg.t_pad, cfg.l_pad, cfg.d_elem)
+    occupied = np.zeros_like(zpp, dtype=bool)
+    for t in range(n_steps):
+        for i, node in enumerate(g.aux_nodes):
+            blk = zpp[t, i, : node.elem_pad]
+            want = pad2d(wits[t].zpp[node.layer - 1], node.rows_pad,
+                         node.cols_pad).reshape(-1)
+            np.testing.assert_array_equal(blk, want)
+            occupied[t, i, : node.elem_pad] = True
+    assert (zpp[~occupied] == 0).all()
+
+    w_s = sw.w_s.reshape(cfg.t_pad, cfg.lw_pad, cfg.w_elem)
+    occupied_w = np.zeros_like(w_s, dtype=bool)
+    for t in range(n_steps):
+        for i, node in enumerate(g.weight_nodes):
+            rp, cp = g.weight_shape(node)
+            blk = w_s[t, i, : rp * cp]
+            want = pad2d(wits[t].w[node.layer - 1], rp, cp).reshape(-1)
+            np.testing.assert_array_equal(blk, want)
+            occupied_w[t, i, : rp * cp] = True
+    assert (w_s[~occupied_w] == 0).all()
+
+
+@pytest.mark.parametrize("widths,n_steps", [
+    ((16, 8, 4, 2), 2),       # pyramid, multi-bucket
+    ((6, 4, 3, 2), 1),        # non-pow2: per-dimension padding
+    ((4, 4, 4), 3),           # uniform, padded step axis
+])
+def test_stacking_invariants(widths, n_steps):
+    check_stacking_invariants(widths, n_steps, seed=21)
+
+
+def test_non_pow2_widths_roundtrip():
+    """Non-power-of-two widths pad per dimension inside each slot."""
+    widths = (6, 4, 3, 2)
+    cfg = PipelineConfig(n_layers=3, batch=2, widths=widths, q_bits=16,
+                         r_bits=4, n_steps=1)
+    keys = make_keys(cfg)
+    wits = synthetic_sgd_trajectory_widths(1, widths, cfg.batch, QC,
+                                           seed=15)
+    proof = prove_session(keys, wits, np.random.default_rng(15))
+    trace = []
+    assert verify_session(keys, proof, trace=trace), trace
+
+
+# ---------------------------------------------------------------------------
+# Uniform graphs must reproduce the seed protocol bit-for-bit
+# ---------------------------------------------------------------------------
+
+def _flat_ints(x):
+    if isinstance(x, (int, np.integer)):
+        return [int(x)]
+    out = []
+    for v in x:
+        out.extend(_flat_ints(v))
+    return out
+
+
+def proof_digest(proof):
+    """Canonical digest of every scalar in an AggregatedProof."""
+    h = hashlib.sha256()
+
+    def absorb(tag, ints):
+        h.update(tag.encode())
+        for v in _flat_ints(ints):
+            h.update(int(v).to_bytes(16, "little"))
+
+    absorb("coms", proof.coms.as_ints())
+    absorb("openings", [v for _, v in sorted(proof.openings.items())])
+    for fam in ("fwd", "bwd", "gw"):
+        for sc in getattr(proof, "sc_" + fam):
+            absorb(fam + "/msgs", sc.messages)
+        absorb(fam + "/finals", getattr(proof, fam + "_finals"))
+    absorb("anchor/msgs", proof.sc_anchor.messages)
+    absorb("anchor/finals", proof.anchor_finals)
+    for name in sorted(proof.ipas):
+        p = proof.ipas[name]
+        absorb("ipa/" + name, [p.ls, p.rs, p.sigma])
+    for p, tag in ((proof.validity.ipa_main, "vmain"),
+                   (proof.validity.ipa_rem, "vrem")):
+        absorb(tag, [p.ls, p.rs, p.sigma])
+    return h.hexdigest()
+
+
+# recorded from the pre-graph-IR pipeline (layers=2, batch=2, width=4,
+# q=16, r=4, trajectory seed=7, prover rng seed=7); the T=2 value was
+# re-recorded after the sgd_apply transpose fix changed the seeded
+# trajectory (the pipeline itself was verified bit-identical before and
+# after the graph refactor)
+GOLDEN = {
+    1: "4291af5aeb305e11153525cc1c9c3822cf5981b29040e6db671a045cb072df82",
+    2: "76d21d3bff355b2ce5525ebb2cb1917292cfd62d91ae0bfd6df95fbe8035dd9e",
+}
+
+
+@pytest.mark.parametrize("T", [1, 2])
+def test_uniform_graph_matches_seed_proof_bitforbit(T):
+    cfg = PipelineConfig(n_layers=2, batch=2, width=4, q_bits=16,
+                         r_bits=4, n_steps=T)
+    keys = make_keys(cfg)
+    wits = synthetic_sgd_trajectory(T, 2, 2, 4, QC, seed=7)
+    proof = prove_session(keys, wits, np.random.default_rng(7))
+    assert proof_digest(proof) == GOLDEN[T]
+    assert proof.fwd_claims == []         # single bucket: split implicit
+
+
+def test_uniform_stacking_matches_seed_layout():
+    """Graph-driven stacking reproduces the seed's positional formula
+    flat[(t * l_pad + (l-1)) * B*d + row * d + col] exactly."""
+    from repro.core.pipeline.witness import stack_witnesses
+
+    wits = synthetic_sgd_trajectory(CFG.n_steps, CFG.n_layers, CFG.batch,
+                                    CFG.width, QC, seed=9)
+    sw = stack_witnesses(wits, CFG)
+    B, d = CFG.batch, CFG.width
+    for name, per_layer in (("zpp_s", lambda w: w.zpp),
+                            ("bq_s", lambda w: w.b),
+                            ("rz_s", lambda w: w.rz),
+                            ("gap_s", lambda w: w.gap),
+                            ("rga_s", lambda w: w.rga)):
+        seed_flat = np.zeros((CFG.t_pad, CFG.l_pad, B * d), dtype=np.int64)
+        for t, w in enumerate(wits):
+            for i, tensor in enumerate(per_layer(w)):
+                seed_flat[t, i] = tensor.reshape(-1)
+        np.testing.assert_array_equal(getattr(sw, name),
+                                      seed_flat.reshape(-1), err_msg=name)
+    seed_w = np.zeros((CFG.t_pad, CFG.l_pad, d * d), dtype=np.int64)
+    for t, w in enumerate(wits):
+        for i in range(CFG.n_layers):
+            seed_w[t, i] = w.w[i].reshape(-1)
+    np.testing.assert_array_equal(sw.w_s, seed_w.reshape(-1))

@@ -71,6 +71,21 @@ def test_modmul_property(xs, ys):
         assert int(got[i]) == (xs[i] * ys[i]) % Q
 
 
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.sampled_from([2, 3, 4, 6, 8]), min_size=3, max_size=5),
+       st.sampled_from([1, 2]), st.integers(0, 10**6))
+def test_graph_stacking_invariants(widths, n_steps, seed):
+    """Graph-driven witness stacking under random shape tables: the
+    slot-index map is a bijection, every occupied block holds its
+    node's (zero-padded) tensor exactly, and everything outside the
+    occupied blocks is exactly zero (padded rows/cols, padded nodes,
+    padded steps).  The checker is shared with the deterministic
+    tier-1 twin in test_proof_session.py."""
+    from test_proof_session import check_stacking_invariants
+
+    check_stacking_invariants(tuple(widths), n_steps, seed)
+
+
 @settings(max_examples=15, deadline=None)
 @given(st.integers(1, 9), st.integers(1, 9), st.integers(1, 9),
        st.integers(0, 2**32 - 1))
