@@ -10,13 +10,21 @@ T * row(1), so amortization = per_step(T) / per_step(1).
     PYTHONPATH=src python benchmarks/agg_steps.py \
         [--steps-list 1,2,4,8] [--width 4] [--batch 2] [--layers 2] \
         [--repeats 2] [--no-verify] [--out BENCH_agg_steps.json] \
+        [--phases-out BENCH_prover_phases.json] \
         [--het-widths 16,8,4,2] [--smoke]
 
 Emits BENCH_agg_steps.json with the full curve, the monotonicity
 verdicts on the T=1..4 prefix, and a heterogeneous cell comparing a
 pyramid MLP against a uniform MLP of (approximately) equal parameter
-count in one aggregated session.  ``--smoke`` is the CI guard: tiny
-shapes, every cell must verify, no JSON written.
+count in one aggregated session.  Both prove and verify run an untimed
+warm-up first; the warm-up durations are recorded separately as
+``prove_compile_s`` / ``verify_compile_s`` so jit compilation never
+pollutes (or de-monotonizes) the reported numbers.  Each row also
+carries the per-phase prover profile (commit / matmul / anchor /
+openings wall clock, see `repro.core.pipeline.profile`), emitted
+standalone as BENCH_prover_phases.json.  ``--smoke`` is the CI guard:
+tiny shapes, every cell must verify and the phase profile must account
+for ~all prove time, no JSON written.
 """
 from __future__ import annotations
 
@@ -31,8 +39,8 @@ def bench_T(T: int, layers: int, batch: int, width: int, q_bits: int,
             r_bits: int, repeats: int, verify: bool, widths=None):
     from repro.core.quantfc import (QuantConfig,
                                     synthetic_sgd_trajectory_widths)
-    from repro.core.pipeline import (PipelineConfig, make_keys,
-                                     prove_session, verify_session)
+    from repro.core.pipeline import (PipelineConfig, ProofSession,
+                                     make_keys, verify_session)
 
     if widths is None:
         widths = (width,) * (layers + 1)
@@ -43,22 +51,36 @@ def bench_T(T: int, layers: int, batch: int, width: int, q_bits: int,
     keys = make_keys(cfg)
     wits = synthetic_sgd_trajectory_widths(T, widths, batch, qc, seed=T)
 
-    # warmup run (jit compilation / caches), then best-of-N timed runs
-    proof = prove_session(keys, wits, np.random.default_rng(0))
-    best = float("inf")
-    for rep in range(repeats):
+    def prove_once(seed):
+        session = ProofSession(keys, np.random.default_rng(seed))
+        for w in wits:
+            session.add_step(w)
         t0 = time.perf_counter()
-        proof = prove_session(keys, wits, np.random.default_rng(rep + 1))
-        best = min(best, time.perf_counter() - t0)
+        proof = session.prove()
+        return time.perf_counter() - t0, proof, session.last_profile
 
-    ok = None
+    # warmup run (jit compilation / caches), then best-of-N timed runs;
+    # the warmup duration is recorded SEPARATELY so compile time never
+    # leaks into (and never jitters) the reported prove/verify numbers
+    prove_compile_s, proof, _ = prove_once(0)
+    best, phases = float("inf"), None
+    for rep in range(repeats):
+        dt, proof, prof = prove_once(rep + 1)
+        if dt < best:
+            best, phases = dt, prof
+
+    ok, verify_s, verify_compile_s = None, None, None
     if verify:
         t0 = time.perf_counter()
-        ok = verify_session(keys, proof)
-        verify_s = time.perf_counter() - t0
+        ok = verify_session(keys, proof)          # untimed warm-up cell
+        verify_compile_s = time.perf_counter() - t0
         assert ok, f"aggregated proof rejected at T={T}"
-    else:
-        verify_s = None
+        verify_s = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            ok = verify_session(keys, proof)
+            verify_s = min(verify_s, time.perf_counter() - t0)
+        assert ok, f"aggregated proof rejected at T={T}"
 
     return {
         "T": T,
@@ -66,8 +88,11 @@ def bench_T(T: int, layers: int, batch: int, width: int, q_bits: int,
         "per_step_s": best / T,
         "proof_bytes": proof.size_bytes(),
         "per_step_bytes": proof.size_bytes() / T,
+        "prove_compile_s": prove_compile_s,
         "verify_s": verify_s,
+        "verify_compile_s": verify_compile_s,
         "verify_ok": ok,
+        "phases": phases.as_dict() if phases is not None else None,
     }
 
 
@@ -135,9 +160,13 @@ def main(argv=None):
                     help="skip the heterogeneous comparison cell")
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: tiny shapes, 1 repeat, asserts every "
-                         "cell verifies, writes no JSON unless --out is "
-                         "passed explicitly")
+                         "cell verifies AND the phase profile accounts "
+                         "for ~all prove time, writes no JSON unless "
+                         "--out/--phases-out are passed explicitly")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--phases-out", default=None,
+                    help="per-phase prover profile JSON "
+                         "(default BENCH_prover_phases.json)")
     args = ap.parse_args(argv)
     if args.smoke:
         args.steps_list = "1,2"
@@ -148,6 +177,8 @@ def main(argv=None):
         args.het_uniform_layers = 2
     if args.out is None:
         args.out = None if args.smoke else "BENCH_agg_steps.json"
+    if args.phases_out is None:
+        args.phases_out = None if args.smoke else "BENCH_prover_phases.json"
 
     from repro.util import enable_compilation_cache
     enable_compilation_cache()
@@ -184,12 +215,26 @@ def main(argv=None):
     if not args.no_het:
         result["heterogeneous"] = bench_heterogeneous(args)
 
+    phases_result = {
+        "config": result["config"],
+        "rows": [{"T": r["T"], "prove_s": r["prove_s"],
+                  **(r["phases"] or {})} for r in rows],
+    }
     if args.smoke:
         assert all(r["verify_ok"] for r in rows), "smoke: a cell rejected"
         if not args.no_het:
             assert result["heterogeneous"]["verify_ok"], \
                 "smoke: heterogeneous cell rejected"
-        print("agg_steps: smoke ok (all cells verified)", flush=True)
+        # the phase profiler must attribute (nearly) all of prove time
+        for r in rows:
+            ph = r["phases"]
+            assert ph is not None, f"smoke: no phase profile at T={r['T']}"
+            assert ph["accounted_s"] <= ph["total_s"] * 1.001 + 1e-6 and \
+                ph["accounted_s"] >= ph["total_s"] * 0.85, \
+                f"smoke: phases {ph['accounted_s']:.3f}s do not sum to " \
+                f"prove total {ph['total_s']:.3f}s at T={r['T']}"
+        print("agg_steps: smoke ok (all cells verified; phases account "
+              "for prove time)", flush=True)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(result, f, indent=1)
@@ -198,6 +243,10 @@ def main(argv=None):
               f"{result['monotonic_per_step_time_1_to_4']}, "
               f"per-step size monotonic(1..4)="
               f"{result['monotonic_per_step_size_1_to_4']}", flush=True)
+    if args.phases_out:
+        with open(args.phases_out, "w") as f:
+            json.dump(phases_result, f, indent=1)
+        print(f"agg_steps: wrote {args.phases_out}", flush=True)
     return result
 
 

@@ -15,6 +15,8 @@ fi
 
 python -m pytest -x -q "$@"
 
-# benchmark-path smoke: tiny shapes, every cell must verify (keeps the
-# aggregation benchmark from rotting between PRs)
+# benchmark-path smoke: tiny shapes, every cell must verify and the
+# per-phase prover profiler must account for ~all prove time (keeps the
+# aggregation benchmark AND the phase attribution from rotting between
+# PRs)
 python benchmarks/agg_steps.py --smoke

@@ -99,11 +99,12 @@ def _seg_combine(x, y):
     return v, f1 | f2
 
 
-@functools.partial(jax.jit, static_argnames=("nwin", "window"))
-def _msm_impl(points, exps_std, nwin: int, window: int = WINDOW):
-    """Pippenger MSM; windows processed high->low inside one lax.scan so
-    the compiled program contains a single window body.  ``window`` is a
-    static length-adapted digit width (see `best_window`)."""
+def _msm_core(points, exps_std, nwin: int, window: int = WINDOW):
+    """Pippenger MSM body; windows processed high->low inside one lax.scan
+    so the compiled program contains a single window body.  ``window`` is a
+    static length-adapted digit width (see `best_window`).  Pure traced
+    code (no jit wrapper) so `_msm_impl` can inline it and `_msm_many_impl`
+    can vmap it over a batch of independent MSMs."""
     one = identity()
     nbucket = 1 << window
 
@@ -156,6 +157,22 @@ def _msm_impl(points, exps_std, nwin: int, window: int = WINDOW):
     return total
 
 
+@functools.partial(jax.jit, static_argnames=("nwin", "window"))
+def _msm_impl(points, exps_std, nwin: int, window: int = WINDOW):
+    return _msm_core(points, exps_std, nwin, window)
+
+
+@functools.partial(jax.jit, static_argnames=("nwin", "window"))
+def _msm_many_impl(points, exps_std, nwin: int, window: int):
+    """R independent MSMs over a shared window schedule, ONE executable.
+
+    ``points``/``exps_std`` are (R, n, 4); the sort -> segmented-scan ->
+    scatter Pippenger body is vmapped over the leading batch axis, so all
+    R reductions run inside a single XLA program instead of R dispatches."""
+    return jax.vmap(lambda p, e: _msm_core(p, e, nwin, window))(
+        points, exps_std)
+
+
 def _pad4(n: int) -> int:
     """Next power of four >= n (fewer distinct compiled MSM shapes)."""
     m = 1
@@ -184,6 +201,37 @@ def msm(points, exps_std, nbits: int = 61, window: int | None = None):
         window = best_window(m, nbits)
     nwin = (nbits + window - 1) // window
     return _msm_impl(points, exps_std, nwin, window)
+
+
+def msm_many(points, exps_std, nbits: int = 61, window: int | None = None):
+    """R independent MSMs sharing one window schedule: (R, n, 4) points
+    and standard-form exponents -> (R, 4) group elements.
+
+    ``points`` may also be a single (n, 4) generator vector shared by all
+    rows (the Pedersen commit-many case); it is broadcast across R.  Rows
+    are padded with zero exponents to a power of TWO (the fused IPA
+    rounds feed exact powers of two; `msm`'s power-of-four pad would
+    double their sort width), so each row equals the sequential
+    ``msm(points[r], exps[r])`` bit-for-bit while the whole batch costs
+    ONE dispatch."""
+    exps_std = jnp.asarray(exps_std)
+    assert exps_std.ndim == 3
+    r, n = exps_std.shape[0], exps_std.shape[1]
+    points = jnp.asarray(points)
+    if points.ndim == 2:
+        points = jnp.broadcast_to(points[None], (r, n, 4))
+    assert points.shape == (r, n, 4), (points.shape, exps_std.shape)
+    m = max(2, 1 << (n - 1).bit_length())
+    if m != n:
+        points = jnp.concatenate(
+            [points, jnp.broadcast_to(identity(), (r, m - n, 4)).astype(jnp.uint32)],
+            axis=1)
+        exps_std = jnp.concatenate(
+            [exps_std, jnp.zeros((r, m - n, 4), jnp.uint32)], axis=1)
+    if window is None:
+        window = best_window(m, nbits)
+    nwin = (nbits + window - 1) // window
+    return _msm_many_impl(points, exps_std, nwin, window)
 
 
 def msm_field(points, scalars_mont, nbits: int = 61):
@@ -222,20 +270,18 @@ _GEN_CACHE: dict = {}
 
 
 def derive_generators(label: bytes, n: int):
-    """n independent subgroup generators; hash-to-group (t -> t^2 mod p)."""
+    """n independent subgroup generators; hash-to-group (t -> t^2 mod p).
+
+    The per-generator hash is inherently sequential (one SHA-256 each),
+    but the square / Montgomery-lift / limb-packing all run as batched
+    numpy object-array ops instead of a per-generator Python loop."""
     cached = _GEN_CACHE.get(label)
     if cached is not None and cached.shape[0] >= n:
         return jnp.asarray(cached[:n])
-    out = np.empty((n, 4), dtype=np.uint32)
-    r2 = pow(2, 128, P)
-    for i in range(n):
-        t = hash_to_int(label + i.to_bytes(8, "little"), P)
-        if t < 2:
-            t = 2
-        g = (t * t) % P                      # square -> QR subgroup
-        gm = (g * pow(2, 64, P)) % P         # to Montgomery form
-        for j in range(4):
-            out[i, j] = (gm >> (16 * j)) & 0xFFFF
+    ts = np.array([max(hash_to_int(label + i.to_bytes(8, "little"), P), 2)
+                   for i in range(n)], dtype=object)
+    gm = (ts * ts % P) * pow(2, 64, P) % P   # square -> QR, then Montgomery
+    out = ints_to_limbs_np(gm)
     _GEN_CACHE[label] = out
     return jnp.asarray(out)
 
@@ -252,15 +298,32 @@ def decode_group(a) -> int:
     return int(limbs_to_ints(std)[()])
 
 
+def decode_group_many(a) -> list:
+    """(R, 4) group elements -> list of R python ints, ONE host transfer."""
+    std = np.asarray(from_mont(FP, jnp.asarray(a)))
+    return [int(v) for v in limbs_to_ints(std)]
+
+
 def encode_group(x: int):
     gm = (x % P) * pow(2, 64, P) % P
     return jnp.asarray(int_to_limbs(gm))
 
 
 def exps_from_ints(vals) -> jnp.ndarray:
-    """Python ints (mod q) -> standard-form limb array for msm/g_pow."""
-    arr = np.array([int(v) % Q for v in vals], dtype=object)
-    return jnp.asarray(ints_to_limbs_np(arr))
+    """Python ints (mod q) -> standard-form limb array for msm/g_pow.
+
+    Values already reduced into int64 range (the common case: transcript
+    challenges and fold coefficients are canonical field elements) skip
+    the mod; everything routes through the field's vectorized
+    `ints_to_limbs` packer."""
+    arr = np.asarray(list(vals), dtype=object)
+    try:
+        a64 = arr.astype(np.int64)
+        if (a64 >= 0).all() and (a64 < Q).all():
+            return jnp.asarray(ints_to_limbs_np(a64))
+    except (OverflowError, TypeError):
+        pass
+    return jnp.asarray(ints_to_limbs_np(arr % Q))
 
 
 def ints_to_limbs_np(arr: np.ndarray) -> np.ndarray:

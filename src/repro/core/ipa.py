@@ -12,16 +12,26 @@ Honest-verifier zero knowledge comes from per-round blinding factors on
 L/R plus a final Schnorr/sigma opening instead of revealing the folded
 scalars.  The prover is JAX (limb arrays); the verifier mixes host ints
 with vectorized JAX for the O(n) generator folds.
+
+Prover rounds are FUSED: each round issues exactly one jitted multi-MSM
+for the L/R cross terms (the two half-length MSMs, the u^{c} claim term
+and the h^{rho} blind ride as extra rows/columns of `group.msm_many`),
+one host transfer decoding both L and R, and one jitted fold of every
+vector/generator half -- instead of the ~20 eager group-op dispatches
+the unfused path paid per round.  All arithmetic is bit-identical to the
+unfused primitives (`tests/test_ipa.py` pins the parity, blinds
+included), so transcripts do not change.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.field import FQ, FP, add, mont_mul, from_mont, decode
+from repro.field import FQ, FP, add, mont_mul, from_mont, decode, int_to_limbs
 from repro.core import group
 from repro.core.mle import enc, fdot
 from repro.core.transcript import Transcript
@@ -83,6 +93,95 @@ def _u_gen():
 
 
 # ---------------------------------------------------------------------------
+# Fused prover rounds (one multi-MSM + one fold dispatch per round).
+# ---------------------------------------------------------------------------
+
+def _exp1(e: int) -> jnp.ndarray:
+    """One python-int exponent (mod q) -> (4,) standard-form limbs."""
+    return jnp.asarray(int_to_limbs(int(e) % Q))
+
+
+def _lr_extras(up, h, c_l, c_r, rho_l, rho_r):
+    """The up^{claim} * h^{rho} tails of both L/R as a tiny two-row MSM
+    (kept OUT of the main MSM so its row length stays a power of two --
+    appending two columns would force the Pippenger pad to the next
+    power of four, quadrupling the sort width)."""
+    pts = jnp.broadcast_to(jnp.stack([up, h])[None], (2, 2, 4))
+    exps = jnp.stack([jnp.stack([c_l, rho_l]), jnp.stack([c_r, rho_r])])
+    return group.msm_many(pts, exps)
+
+
+@jax.jit
+def _open_round_lr(gens, a, b, up, h, rho_l, rho_r):
+    """L/R of one `open` round fused into one executable:
+
+    L = gens_hi^{a_lo} * up^{<a_lo, b_hi>} * h^{rho_l}
+    R = gens_lo^{a_hi} * up^{<a_hi, b_lo>} * h^{rho_r}
+    """
+    n2 = a.shape[0] // 2
+    c_l = from_mont(FQ, fdot(a[:n2], b[n2:]))
+    c_r = from_mont(FQ, fdot(a[n2:], b[:n2]))
+    a_std = from_mont(FQ, a)
+    main = group.msm_many(jnp.stack([gens[n2:], gens[:n2]]),
+                          jnp.stack([a_std[:n2], a_std[n2:]]))
+    return group.g_mul(main, _lr_extras(up, h, c_l, c_r, rho_l, rho_r))
+
+
+@jax.jit
+def _pair_round_lr(gg, hh, a, b, up, h_blind, rho_l, rho_r):
+    """L/R of one `pair` round: both half-MSMs per side fused into one row."""
+    n2 = a.shape[0] // 2
+    c_l = from_mont(FQ, fdot(a[:n2], b[n2:]))
+    c_r = from_mont(FQ, fdot(a[n2:], b[:n2]))
+    a_std = from_mont(FQ, a)
+    b_std = from_mont(FQ, b)
+    main = group.msm_many(
+        jnp.stack([jnp.concatenate([gg[n2:], hh[:n2]]),
+                   jnp.concatenate([gg[:n2], hh[n2:]])]),
+        jnp.stack([jnp.concatenate([a_std[:n2], b_std[n2:]]),
+                   jnp.concatenate([a_std[n2:], b_std[:n2]])]))
+    return group.g_mul(main, _lr_extras(up, h_blind, c_l, c_r, rho_l, rho_r))
+
+
+def _fold_halves(vec, lo_m, hi_m):
+    n2 = vec.shape[0] // 2
+    return add(FQ, mont_mul(FQ, vec[:n2], lo_m[None]),
+               mont_mul(FQ, vec[n2:], hi_m[None]))
+
+
+@jax.jit
+def _open_fold(a, b, gens, al_m, ali_m, al_std, ali_std):
+    """a' = al*a_L + al^-1*a_R, b' = al^-1*b_L + al*b_R, gens' likewise.
+
+    The generator fold runs as ONE g_pow square-and-multiply scan over
+    both halves (the 61-round scan is latency-bound on small vectors, so
+    one wide scan beats two narrow ones)."""
+    n2 = a.shape[0] // 2
+    a2 = _fold_halves(a, al_m, ali_m)
+    b2 = _fold_halves(b, ali_m, al_m)
+    exps = jnp.concatenate([jnp.broadcast_to(ali_std, (n2, 4)),
+                            jnp.broadcast_to(al_std, (n2, 4))])
+    powed = group.g_pow(gens, exps)
+    g2 = group.g_mul(powed[:n2], powed[n2:])
+    return a2, b2, g2
+
+
+@jax.jit
+def _pair_fold(a, b, gg, hh, al_m, ali_m, al_std, ali_std):
+    n2 = a.shape[0] // 2
+    a2 = _fold_halves(a, al_m, ali_m)
+    b2 = _fold_halves(b, ali_m, al_m)
+    exps = jnp.concatenate([jnp.broadcast_to(ali_std, (n2, 4)),
+                            jnp.broadcast_to(al_std, (n2, 4)),
+                            jnp.broadcast_to(al_std, (n2, 4)),
+                            jnp.broadcast_to(ali_std, (n2, 4))])
+    powed = group.g_pow(jnp.concatenate([gg, hh]), exps)
+    gg2 = group.g_mul(powed[:n2], powed[n2:2 * n2])
+    hh2 = group.g_mul(powed[2 * n2:3 * n2], powed[3 * n2:])
+    return a2, b2, gg2, hh2
+
+
+# ---------------------------------------------------------------------------
 # Variant 1: committed a, public b.
 # ---------------------------------------------------------------------------
 
@@ -101,34 +200,25 @@ def open_prove(key, a_mont, b_mont, blind: int, claim: int,
         n2 = n // 2
         rho_l = int(rng.integers(0, Q, dtype=np.uint64)) % Q
         rho_r = int(rng.integers(0, Q, dtype=np.uint64)) % Q
-        c_l = _dec_scalar(fdot(a[:n2], b[n2:]))
-        c_r = _dec_scalar(fdot(a[n2:], b[:n2]))
-        lval = group.g_mul(
-            group.g_mul(group.msm_field(gens[n2:], a[:n2]),
-                        group.g_pow_int(up, c_l)),
-            group.g_pow_int(key.h, rho_l))
-        rval = group.g_mul(
-            group.g_mul(group.msm_field(gens[:n2], a[n2:]),
-                        group.g_pow_int(up, c_r)),
-            group.g_pow_int(key.h, rho_r))
-        li, ri = group.decode_group(lval), group.decode_group(rval)
+        lr = _open_round_lr(gens, a, b, up, key.h,
+                            _exp1(rho_l), _exp1(rho_r))
+        li, ri = group.decode_group_many(lr)
         ls.append(li); rs.append(ri)
         transcript.absorb_ints(b"ipa/lr", [li, ri])
         al = transcript.challenge_int(b"ipa/alpha", Q)
         ali = pow(al, Q - 2, Q)
-        a = _fold_vec(a, al, ali)       # a' = al*a_L + al^-1*a_R
-        b = _fold_vec(b, ali, al)       # b' = al^-1*b_L + al*b_R
-        gens = _fold_gens(gens, ali, al)
+        a, b, gens = _open_fold(a, b, gens, enc(al), enc(ali),
+                                _exp1(al), _exp1(ali))
         rho = (al * al % Q * rho_l + rho + ali * ali % Q * rho_r) % Q
         n = n2
 
     # final Schnorr opening of P_f = base^{a} h^{rho}, base = g_f * up^{b_f}
-    a_f = _dec_scalar(a[0])
-    b_f = _dec_scalar(b[0])
-    base = group.g_mul(gens[0], group.g_pow_int(up, b_f))
+    a_f, b_f = (int(v) for v in decode(FQ, jnp.stack([a[0], b[0]])))
     s = int(rng.integers(0, Q, dtype=np.uint64)) % Q
     s_rho = int(rng.integers(0, Q, dtype=np.uint64)) % Q
-    kk = group.g_mul(group.g_pow_int(base, s), group.g_pow_int(key.h, s_rho))
+    # K = base^s h^{s_rho} = gens_f^s * up^{s b_f} * h^{s_rho}: one 3-term MSM
+    kk = group.msm(jnp.stack([gens[0], up, key.h]),
+                   group.exps_from_ints([s, s * b_f % Q, s_rho]))
     ki = group.decode_group(kk)
     transcript.absorb_int(b"ipa/K", ki)
     e = transcript.challenge_int(b"ipa/e", Q)
@@ -155,9 +245,9 @@ def open_verify(key, com, b_mont, claim: int, proof: IpaProof,
         ali = pow(al, Q - 2, Q)
         alphas.append(al)
         b = _fold_vec(b, ali, al)
-        p = group.g_mul(
-            group.g_mul(group.g_pow_int(group.encode_group(li), al * al % Q), p),
-            group.g_pow_int(group.encode_group(ri), ali * ali % Q))
+        p = group.g_mul(p, group.msm(
+            jnp.stack([group.encode_group(li), group.encode_group(ri)]),
+            group.exps_from_ints([al * al % Q, ali * ali % Q])))
 
     s = _s_vector(n, alphas, low_exp_is_inv=True)
     g_f = group.msm_field(gens, s)
@@ -190,41 +280,33 @@ def pair_prove(g_gens, h_gens, h_blind, a_mont, b_mont, blind: int, claim: int,
         n2 = n // 2
         rho_l = int(rng.integers(0, Q, dtype=np.uint64)) % Q
         rho_r = int(rng.integers(0, Q, dtype=np.uint64)) % Q
-        c_l = _dec_scalar(fdot(a[:n2], b[n2:]))
-        c_r = _dec_scalar(fdot(a[n2:], b[:n2]))
-        lval = group.g_mul(group.g_mul(
-            group.msm_field(gg[n2:], a[:n2]),
-            group.msm_field(hh[:n2], b[n2:])),
-            group.g_mul(group.g_pow_int(up, c_l), group.g_pow_int(h_blind, rho_l)))
-        rval = group.g_mul(group.g_mul(
-            group.msm_field(gg[:n2], a[n2:]),
-            group.msm_field(hh[n2:], b[:n2])),
-            group.g_mul(group.g_pow_int(up, c_r), group.g_pow_int(h_blind, rho_r)))
-        li, ri = group.decode_group(lval), group.decode_group(rval)
+        lr = _pair_round_lr(gg, hh, a, b, up, h_blind,
+                            _exp1(rho_l), _exp1(rho_r))
+        li, ri = group.decode_group_many(lr)
         ls.append(li); rs.append(ri)
         transcript.absorb_ints(b"ipa2/lr", [li, ri])
         al = transcript.challenge_int(b"ipa2/alpha", Q)
         ali = pow(al, Q - 2, Q)
-        a = _fold_vec(a, al, ali)
-        b = _fold_vec(b, ali, al)
-        gg = _fold_gens(gg, ali, al)
-        hh = _fold_gens(hh, al, ali)
+        a, b, gg, hh = _pair_fold(a, b, gg, hh, enc(al), enc(ali),
+                                  _exp1(al), _exp1(ali))
         rho = (al * al % Q * rho_l + rho + ali * ali % Q * rho_r) % Q
         n = n2
 
-    a_f, b_f = _dec_scalar(a[0]), _dec_scalar(b[0])
-    g_f, h_f = gg[0], hh[0]
+    a_f, b_f = (int(v) for v in decode(FQ, jnp.stack([a[0], b[0]])))
     s_a = int(rng.integers(0, Q, dtype=np.uint64)) % Q
     s_b = int(rng.integers(0, Q, dtype=np.uint64)) % Q
     s_rho = int(rng.integers(0, Q, dtype=np.uint64)) % Q
     t_rho = int(rng.integers(0, Q, dtype=np.uint64)) % Q
-    amsg = group.g_mul(
-        group.g_mul(group.g_pow_int(g_f, s_a), group.g_pow_int(h_f, s_b)),
-        group.g_mul(group.g_pow_int(up, (a_f * s_b + b_f * s_a) % Q),
-                    group.g_pow_int(h_blind, s_rho)))
-    bmsg = group.g_mul(group.g_pow_int(up, s_a * s_b % Q),
-                       group.g_pow_int(h_blind, t_rho))
-    ai, bi = group.decode_group(amsg), group.decode_group(bmsg)
+    # A = g_f^{s_a} h_f^{s_b} up^{a_f s_b + b_f s_a} h^{s_rho}
+    # B = up^{s_a s_b} h^{t_rho}: one two-row multi-MSM, one decode
+    one = group.identity()
+    pts = jnp.stack([
+        jnp.stack([gg[0], hh[0], up, h_blind]),
+        jnp.stack([up, h_blind, one, one])])
+    exps = jnp.stack([
+        group.exps_from_ints([s_a, s_b, (a_f * s_b + b_f * s_a) % Q, s_rho]),
+        group.exps_from_ints([s_a * s_b % Q, t_rho, 0, 0])])
+    ai, bi = group.decode_group_many(group.msm_many(pts, exps))
     transcript.absorb_ints(b"ipa2/AB", [ai, bi])
     e = transcript.challenge_int(b"ipa2/e", Q)
     z_a = (a_f * e + s_a) % Q
@@ -247,9 +329,9 @@ def pair_verify(g_gens, h_gens, h_blind, com, claim: int, proof: IpaProof,
         al = transcript.challenge_int(b"ipa2/alpha", Q)
         ali = pow(al, Q - 2, Q)
         alphas.append(al)
-        p = group.g_mul(
-            group.g_mul(group.g_pow_int(group.encode_group(li), al * al % Q), p),
-            group.g_pow_int(group.encode_group(ri), ali * ali % Q))
+        p = group.g_mul(p, group.msm(
+            jnp.stack([group.encode_group(li), group.encode_group(ri)]),
+            group.exps_from_ints([al * al % Q, ali * ali % Q])))
 
     s = _s_vector(n, alphas, low_exp_is_inv=True)
     s_inv = _s_vector(n, alphas, low_exp_is_inv=False)

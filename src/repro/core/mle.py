@@ -136,6 +136,34 @@ def fdot(a, b):
     return fsum(mont_mul(FQ, a, b))
 
 
+@jax.jit
+def weighted_sum(tables, coefs):
+    """sum_k coefs[k] * tables[k] for (k,n,4) tables and (k,4) coefs.
+
+    ONE dispatch replacing the per-term eager mont_mul/add loop of the
+    claim-folding paths (IPA multi-claim combine, the per-sample data
+    fold): the scale runs elementwise and the k-axis reduces as a
+    halving tree, all inside a single executable."""
+    acc = mont_mul(FQ, tables, coefs[:, None, :])
+    while acc.shape[0] > 1:
+        if acc.shape[0] % 2 == 1:
+            acc = jnp.concatenate(
+                [acc, jnp.zeros((1,) + acc.shape[1:], jnp.uint32)], axis=0)
+        acc = add(FQ, acc[0::2], acc[1::2])
+    return acc[0]
+
+
+_fdot_many_impl = jax.jit(jax.vmap(fdot, in_axes=(None, 0)))
+
+
+def fdot_many(table, bases):
+    """<table, bases[k]> for each k: (n,4) x (k,n,4) -> (k,4) in ONE
+    dispatch (the per-step opening claims all evaluate the same stacked
+    tensor against a batch of public bases).  Just `fdot` vmapped over
+    the bases, so the reduction tree stays the shared `fsum` one."""
+    return _fdot_many_impl(table, bases)
+
+
 # ---------------------------------------------------------------------------
 # Host-side (verifier) modular arithmetic over FQ as python ints.
 # ---------------------------------------------------------------------------

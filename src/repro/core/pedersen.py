@@ -38,6 +38,38 @@ def make_key(label: bytes, n: int) -> CommitKey:
     return CommitKey(gens, h, label)
 
 
+def commit_many(rows):
+    """R Pedersen commitments in ONE multi-MSM dispatch -> (R, 4) elements.
+
+    ``rows`` is a list of ``(key, values_mont, blind)`` triples; rows may
+    use different keys and different vector lengths (shorter rows pad
+    with zero exponents, which Pippenger skips).  Each row's blind rides
+    as one extra ``(h, blind)`` term of its own MSM, so row r equals
+    ``commit(key_r, values_r, blind_r)`` bit-for-bit while the whole
+    batch is a single `group.msm_many` executable.  There is deliberately
+    no ``nbits`` knob: the blind columns are full-width scalars, so the
+    shared window schedule must always cover 61 bits.
+    """
+    vals = [v.reshape(-1, 4) for _, v, _ in rows]
+    n_max = max(v.shape[0] for v in vals)
+    one = group.identity()
+    pts, exps = [], []
+    for (key, _, _), v in zip(rows, vals):
+        n = v.shape[0]
+        assert n <= key.n, (n, key.n)
+        pad = n_max - n
+        pts.append(jnp.concatenate(
+            [key.gens[:n]]
+            + ([jnp.broadcast_to(one, (pad, 4)).astype(jnp.uint32)] if pad else [])
+            + [key.h[None]]))
+        exps.append(jnp.concatenate(
+            [v] + ([jnp.zeros((pad, 4), jnp.uint32)] if pad else [])))
+    exps_std = from_mont(FQ, jnp.stack(exps))
+    blind_std = group.exps_from_ints([int(b) % Q for _, _, b in rows])
+    exps_std = jnp.concatenate([exps_std, blind_std[:, None, :]], axis=1)
+    return group.msm_many(jnp.stack(pts), exps_std)
+
+
 def commit(key: CommitKey, values_mont, blind: int, nbits: int = 61):
     """Commit to an FQ vector (Montgomery limb form). Returns group element."""
     values_mont = values_mont.reshape(-1, 4)

@@ -21,9 +21,13 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-from repro.field import FQ, add, mont_mul
+import jax.numpy as jnp
+import numpy as np
+
+from repro.field import FQ, add, encode_i64
 from repro.core import group, ipa, zkrelu
-from repro.core.mle import enc, expand_point, fdot, hexpand_point
+from repro.core.mle import (enc_vec, expand_point, fdot, fdot_many,
+                            hexpand_point, weighted_sum)
 from repro.core.transcript import Transcript
 from repro.core.pipeline import matmul
 from repro.core.pipeline.anchor import output_gz_points
@@ -31,7 +35,8 @@ from repro.core.pipeline.challenges import (ChallengeSchedule, WeightDraws,
                                             instance_slices, pad_point,
                                             pi_bases)
 from repro.core.pipeline.config import PipelineConfig, PipelineKeys
-from repro.core.pipeline.tables import dec_scalar, kron, weight_table
+from repro.core.pipeline.tables import (dec_scalar, dec_scalars, kron,
+                                        kron_many, weight_table)
 from repro.core.pipeline.witness import FieldTables
 
 Q_MOD = FQ.modulus
@@ -64,22 +69,27 @@ def gz_top_bases(cfg: PipelineConfig, pt_b: List[int], pt_w: List[int]):
     """Per-step bases selecting the output node's slot of the stacked
     aux tensors at pt_b / pt_w, plus the per-step selectors on the
     stacked labels (whose per-step area is the output node's own padded
-    size, so the label points need no slot padding)."""
+    size, so the label points need no slot padding).
+
+    Returns four (T, n, 4) stacks (index [ti] for one step's basis); the
+    T Kronecker products per point batch into one `kron_many` dispatch
+    over a stacked one-hot selector matrix."""
     g = cfg.graph
+    T = cfg.n_steps
     out_slot = g.aux_slot(g.node_for_layer("zkrelu", cfg.n_layers).name)
     e_b = expand_point(pad_point(pt_b, cfg.la))
     e_w = expand_point(pad_point(pt_w, cfg.la))
     e_b_y = expand_point(pt_b)
     e_w_y = expand_point(pt_w)
-    b_gzl_b, b_gzl_w, y_b, y_w = [], [], [], []
-    for t in range(cfg.n_steps):
-        eL = weight_table({cfg.slot(t, out_slot): 1}, cfg.s_pad)
-        e_t = weight_table({t: 1}, cfg.t_pad)
-        b_gzl_b.append(kron(eL, e_b))
-        b_gzl_w.append(kron(eL, e_w))
-        y_b.append(kron(e_t, e_b_y))
-        y_w.append(kron(e_t, e_w_y))
-    return b_gzl_b, b_gzl_w, y_b, y_w
+    sel_slot = np.zeros((T, cfg.s_pad), dtype=np.int64)
+    sel_t = np.zeros((T, cfg.t_pad), dtype=np.int64)
+    for t in range(T):
+        sel_slot[t, cfg.slot(t, out_slot)] = 1
+        sel_t[t, t] = 1
+    eL = jnp.asarray(encode_i64(FQ, sel_slot))
+    e_t = jnp.asarray(encode_i64(FQ, sel_t))
+    return (kron_many(eL, e_b), kron_many(eL, e_w),
+            kron_many(e_t, e_b_y), kron_many(e_t, e_w_y))
 
 
 def w_opening(cfg: PipelineConfig, dlt: WeightDraws, ch: ChallengeSchedule,
@@ -135,15 +145,16 @@ def w_opening(cfg: PipelineConfig, dlt: WeightDraws, ch: ChallengeSchedule,
 
 def _combine_claims(t: Transcript, name: str, claims_pts):
     """Fold several (public vector, claim) pairs for one tensor into one
-    (vector, claim) via transcript powers of rho."""
+    (vector, claim) via transcript powers of rho.  The vector side is a
+    single `weighted_sum` dispatch over the stacked bases."""
     rho = t.challenge_int(b"rho/" + name.encode(), Q_MOD)
-    combined_b, combined_claim, rpow = None, 0, 1
-    for b_pub, claim in claims_pts:
-        scaled = mont_mul(FQ, b_pub, enc(rpow)[None])
-        combined_b = scaled if combined_b is None else add(FQ, combined_b,
-                                                           scaled)
+    coefs, combined_claim, rpow = [], 0, 1
+    for _, claim in claims_pts:
+        coefs.append(rpow)
         combined_claim = (combined_claim + rpow * claim) % Q_MOD
         rpow = rpow * rho % Q_MOD
+    combined_b = weighted_sum(jnp.stack([b for b, _ in claims_pts]),
+                              enc_vec(coefs))
     return combined_b, combined_claim
 
 
@@ -208,16 +219,23 @@ def prove(cfg: PipelineConfig, keys: PipelineKeys, tabs: FieldTables,
     v_r = ((1 - upp) * op["a7"] + upp * op["a8"]) % Q_MOD
     t.absorb_ints(b"vclaims", [v, v_q1, v_r])
 
-    # per-step GZ^{L,t} linear reduction claims (eq. 32)
+    # per-step GZ^{L,t} linear reduction claims (eq. 32): the 6T stacked-
+    # tensor evaluations batch into three fdot_many dispatches (one per
+    # tensor) and three host transfers instead of 6T of each
     pt_b, pt_w = output_gz_points(cfg, ch, points)
     b_gzl_b, b_gzl_w, yb_bases, yw_bases = gz_top_bases(cfg, pt_b, pt_w)
+    gzl_bases = jnp.concatenate([b_gzl_b, b_gzl_w])
+    zl_vals = dec_scalars(fdot_many(tabs.zpp_t, gzl_bases))
+    bl_vals = dec_scalars(fdot_many(tabs.bq_t, gzl_bases))
+    y_vals = dec_scalars(fdot_many(tabs.y_t,
+                                   jnp.concatenate([yb_bases, yw_bases])))
     for ti in range(T):
-        op[f"zL_b/{ti}"] = dec_scalar(fdot(tabs.zpp_t, b_gzl_b[ti]))
-        op[f"bL_b/{ti}"] = dec_scalar(fdot(tabs.bq_t, b_gzl_b[ti]))
-        op[f"y_b/{ti}"] = dec_scalar(fdot(tabs.y_t, yb_bases[ti]))
-        op[f"zL_w/{ti}"] = dec_scalar(fdot(tabs.zpp_t, b_gzl_w[ti]))
-        op[f"bL_w/{ti}"] = dec_scalar(fdot(tabs.bq_t, b_gzl_w[ti]))
-        op[f"y_w/{ti}"] = dec_scalar(fdot(tabs.y_t, yw_bases[ti]))
+        op[f"zL_b/{ti}"] = zl_vals[ti]
+        op[f"bL_b/{ti}"] = bl_vals[ti]
+        op[f"y_b/{ti}"] = y_vals[ti]
+        op[f"zL_w/{ti}"] = zl_vals[T + ti]
+        op[f"bL_w/{ti}"] = bl_vals[T + ti]
+        op[f"y_w/{ti}"] = y_vals[T + ti]
     t.absorb_ints(b"op3", [op[k] for k in gz_top_keys(cfg)])
 
     ipas: Dict[str, ipa.IpaProof] = {}
@@ -253,16 +271,14 @@ def prove(cfg: PipelineConfig, keys: PipelineKeys, tabs: FieldTables,
                [(yb_bases[ti], op[f"y_b/{ti}"]) for ti in range(T)]
                + [(yw_bases[ti], op[f"y_w/{ti}"]) for ti in range(T)])
 
-    # data openings: per-sample commitments folded over rows AND steps
+    # data openings: per-sample commitments folded over rows AND steps;
+    # the T*B-row table fold is ONE weighted_sum dispatch per tag
+    x_stack = jnp.stack(tabs.x_tabs)
     for tag, row_pt, col_pt, claims in x_fold_openings(
             cfg, ch, points, mat.fams["fwd"].finals, mat.fams["gw"].finals):
         coefs, combined_claim = _x_coefs(cfg, t, tag, row_pt, claims)
-        folded = None
-        blind_f = 0
-        for j, c in enumerate(coefs):
-            s = mont_mul(FQ, tabs.x_tabs[j], enc(c)[None])
-            folded = s if folded is None else add(FQ, folded, s)
-            blind_f = (blind_f + c * x_blinds[j]) % Q_MOD
+        folded = weighted_sum(x_stack, enc_vec(coefs))
+        blind_f = sum(c * xb for c, xb in zip(coefs, x_blinds)) % Q_MOD
         ipas[tag] = ipa.open_prove(keys.kx, folded, expand_point(col_pt),
                                    blind_f, combined_claim, t, rng)
 
@@ -342,7 +358,6 @@ def verify(cfg: PipelineConfig, keys: PipelineKeys, proof, coms,
                 + [(yw_bases[ti], op[f"y_w/{ti}"]) for ti in range(T)])
 
     # data openings: fold the per-sample commitments homomorphically
-    import jax.numpy as jnp
     com_pts = jnp.stack([group.encode_group(ci) for ci in coms.x])
     for tag, row_pt, col_pt, claims in x_fold_openings(
             cfg, ch, points, proof.fwd_finals, proof.gw_finals):

@@ -1,0 +1,52 @@
+"""Per-phase prover wall-clock profiler.
+
+The aggregated prover runs in well-separated phases (witness stacking,
+the commitment phase, challenge derivation, the bucketed matmul
+sumchecks, the anchor sumcheck, and the step-(c) openings); attributing
+prove time to phases is what lets a perf PR claim "the win came from the
+commitment batching" instead of pointing at end-to-end noise.  The
+profiler is always on -- a handful of ``perf_counter`` calls per prove
+-- and surfaces through ``ProofSession.last_profile``, the
+``benchmarks/agg_steps.py`` rows, and ``BENCH_prover_phases.json``.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Dict
+
+
+# canonical phase order (rendering / JSON emission)
+PHASES = ("stack", "commit", "challenges", "matmul", "anchor", "openings")
+
+
+@dataclasses.dataclass
+class PhaseProfile:
+    """Accumulated per-phase seconds plus the end-to-end total."""
+
+    phases_s: Dict[str, float] = dataclasses.field(default_factory=dict)
+    total_s: float = 0.0
+
+    @contextlib.contextmanager
+    def phase(self, name: str):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.phases_s[name] = (self.phases_s.get(name, 0.0)
+                                   + time.perf_counter() - t0)
+
+    @property
+    def accounted_s(self) -> float:
+        """Sum of the recorded phases (should be ~total_s; the residual
+        is proof-object assembly and python glue)."""
+        return sum(self.phases_s.values())
+
+    def as_dict(self) -> Dict:
+        ordered = {k: self.phases_s[k] for k in PHASES if k in self.phases_s}
+        ordered.update({k: v for k, v in self.phases_s.items()
+                        if k not in ordered})
+        return {"total_s": self.total_s,
+                "accounted_s": self.accounted_s,
+                "phases_s": ordered}

@@ -13,6 +13,7 @@ the heterogeneous pyramid cell).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -26,6 +27,7 @@ from repro.core.pipeline import matmul as matmul_mod
 from repro.core.pipeline import openings as openings_mod
 from repro.core.pipeline.challenges import ChallengeSchedule
 from repro.core.pipeline.config import PipelineConfig, PipelineKeys
+from repro.core.pipeline.profile import PhaseProfile
 from repro.core.pipeline.tables import enc_tensor, rand_scalar
 from repro.core.pipeline.witness import (StackedWitness, build_field_tables,
                                          stack_witnesses)
@@ -97,13 +99,19 @@ class AggregatedProof:
 class SessionProver:
     """Two-phase prover over a stacked witness: commit, then prove."""
 
-    def __init__(self, keys: PipelineKeys, rng: np.random.Generator):
+    def __init__(self, keys: PipelineKeys, rng: np.random.Generator,
+                 profile: Optional[PhaseProfile] = None):
         self.keys = keys
         self.cfg = keys.cfg
         self.rng = rng
+        self.profile = profile if profile is not None else PhaseProfile()
 
     # -- commitment phase --------------------------------------------------
     def commit(self, sw: StackedWitness) -> SessionCommitments:
+        with self.profile.phase("commit"):
+            return self._commit(sw)
+
+    def _commit(self, sw: StackedWitness) -> SessionCommitments:
         cfg, keys, rng = self.cfg, self.keys, self.rng
         self.sw = sw
         self.tabs = build_field_tables(sw)
@@ -111,25 +119,25 @@ class SessionProver:
                        ("y", "w", "gw", "zpp", "bq", "rz", "gap", "rga")}
         self.x_blinds = [rand_scalar(rng) for _ in sw.x]
 
-        # NOTE: narrow MSM windows (nbits < 61) are only sound for
-        # UNSIGNED tensors -- negative values map to ~61-bit field elements.
-        qb = cfg.q_bits
-        com_x = [group.decode_group(pedersen.commit(
-            keys.kx, enc_tensor(x), b))
-            for x, b in zip(sw.x, self.x_blinds)]
-        com_y = pedersen.commit(keys.ky, self.tabs.y_t, self.blinds["y"])
-        com_w = pedersen.commit(keys.kw, self.tabs.w_t, self.blinds["w"])
-        com_gw = pedersen.commit(keys.kw, self.tabs.gw_t, self.blinds["gw"])
-        com_zpp = pedersen.commit(keys.kd, self.tabs.zpp_t,
-                                  self.blinds["zpp"], nbits=qb)
+        # All multi-exponentiation commitments batch into TWO msm_many
+        # dispatches: one for the T*B per-sample data rows, one for the
+        # stacked tensors (each row's blind rides as an extra (h, blind)
+        # MSM term, so every element matches the sequential
+        # `pedersen.commit` bit-for-bit).
+        com_x = group.decode_group_many(pedersen.commit_many(
+            [(keys.kx, enc_tensor(x), b)
+             for x, b in zip(sw.x, self.x_blinds)]))
+        com_y, com_w, com_gw, com_zpp, com_rz, com_gap, com_rga = \
+            group.decode_group_many(pedersen.commit_many([
+                (keys.ky, self.tabs.y_t, self.blinds["y"]),
+                (keys.kw, self.tabs.w_t, self.blinds["w"]),
+                (keys.kw, self.tabs.gw_t, self.blinds["gw"]),
+                (keys.kd, self.tabs.zpp_t, self.blinds["zpp"]),
+                (keys.kd, self.tabs.rz_t, self.blinds["rz"]),
+                (keys.kd, self.tabs.gap_t, self.blinds["gap"]),
+                (keys.kd, self.tabs.rga_t, self.blinds["rga"])]))
         com_bq = pedersen.commit_bits(keys.k_bq, sw.bq_s.astype(np.uint32),
                                       self.blinds["bq"])
-        com_rz = pedersen.commit(keys.kd, self.tabs.rz_t,
-                                 self.blinds["rz"], nbits=cfg.r_bits + 1)
-        com_gap = pedersen.commit(keys.kd, self.tabs.gap_t,
-                                  self.blinds["gap"])
-        com_rga = pedersen.commit(keys.kd, self.tabs.rga_t,
-                                  self.blinds["rga"], nbits=cfg.r_bits + 1)
 
         self.aux_bits = zkrelu.build_aux_bits(
             sw.zpp_s, sw.gap_s, sw.bq_s, sw.rz_s, sw.rga_s,
@@ -137,29 +145,32 @@ class SessionProver:
         vcoms, self.vblinds = zkrelu.commit_validity(keys.validity,
                                                      self.aux_bits, rng)
         self.coms = SessionCommitments(
-            x=com_x, y=group.decode_group(com_y), w=group.decode_group(com_w),
-            gw=group.decode_group(com_gw), zpp=group.decode_group(com_zpp),
-            bq=group.decode_group(com_bq), rz=group.decode_group(com_rz),
-            gap=group.decode_group(com_gap), rga=group.decode_group(com_rga),
-            validity=vcoms)
+            x=com_x, y=com_y, w=com_w, gw=com_gw, zpp=com_zpp,
+            bq=group.decode_group(com_bq), rz=com_rz,
+            gap=com_gap, rga=com_rga, validity=vcoms)
         return self.coms
 
     # -- interactive phase (Fiat-Shamir) -----------------------------------
     def prove(self, transcript: Transcript) -> AggregatedProof:
         cfg, keys, rng = self.cfg, self.keys, self.rng
+        prof = self.profile
         t = transcript
-        t.absorb_ints(b"coms", self.coms.as_ints())
-        ch = ChallengeSchedule.draw(t, cfg)
+        with prof.phase("challenges"):
+            t.absorb_ints(b"coms", self.coms.as_ints())
+            ch = ChallengeSchedule.draw(t, cfg)
 
-        op: Dict[str, int] = {}
-        e_pi1, e_pi2, e_pi3 = openings_mod.initial_claims(
-            cfg, self.tabs, ch, op, t)
-        mat = matmul_mod.prove(cfg, self.tabs, ch, t)            # step (a)
-        anc = anchor_mod.prove(cfg, self.tabs, ch, mat, t)       # step (b)
-        ipas, validity = openings_mod.prove(                     # step (c)
-            cfg, keys, self.tabs, self.blinds, self.x_blinds,
-            self.aux_bits, self.vblinds, ch, mat, anc, op,
-            e_pi1, e_pi2, e_pi3, t, rng)
+            op: Dict[str, int] = {}
+            e_pi1, e_pi2, e_pi3 = openings_mod.initial_claims(
+                cfg, self.tabs, ch, op, t)
+        with prof.phase("matmul"):
+            mat = matmul_mod.prove(cfg, self.tabs, ch, t)        # step (a)
+        with prof.phase("anchor"):
+            anc = anchor_mod.prove(cfg, self.tabs, ch, mat, t)   # step (b)
+        with prof.phase("openings"):
+            ipas, validity = openings_mod.prove(                 # step (c)
+                cfg, keys, self.tabs, self.blinds, self.x_blinds,
+                self.aux_bits, self.vblinds, ch, mat, anc, op,
+                e_pi1, e_pi2, e_pi3, t, rng)
 
         return AggregatedProof(
             coms=self.coms, openings=op,
@@ -187,6 +198,8 @@ class ProofSession:
         self.rng = rng if rng is not None else np.random.default_rng()
         self.label = label
         self._steps: List[StepWitness] = []
+        #: per-phase wall-clock profile of the most recent prove() call
+        self.last_profile: Optional[PhaseProfile] = None
 
     @property
     def n_pending(self) -> int:
@@ -207,10 +220,16 @@ class ProofSession:
 
     def prove(self) -> AggregatedProof:
         """Stack the queued witnesses and emit the aggregated proof."""
-        sw = stack_witnesses(self._steps, self.cfg)
-        prover = SessionProver(self.keys, self.rng)
+        prof = PhaseProfile()
+        t0 = time.perf_counter()
+        with prof.phase("stack"):
+            sw = stack_witnesses(self._steps, self.cfg)
+        prover = SessionProver(self.keys, self.rng, profile=prof)
         prover.commit(sw)
-        return prover.prove(Transcript(self.label))
+        proof = prover.prove(Transcript(self.label))
+        prof.total_s = time.perf_counter() - t0
+        self.last_profile = prof
+        return proof
 
     def verify(self, proof: AggregatedProof) -> bool:
         from repro.core.pipeline.verifier import verify_session

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 from typing import Dict, List
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -43,6 +44,22 @@ def enc_tensor(x: np.ndarray) -> jnp.ndarray:
 
 def dec_scalar(x) -> int:
     return int(decode(FQ, x)[()])
+
+
+def dec_scalars(x) -> List[int]:
+    """(k, 4) limb array -> k python ints, one host transfer."""
+    return [int(v) for v in decode(FQ, x)]
+
+
+def kron_many(his, lo) -> jnp.ndarray:
+    """Batched `kron`: (k,a,4) x (b,4) -> (k,a*b,4), one dispatch."""
+    return _kron_many(his, lo)
+
+
+@jax.jit
+def _kron_many(his, lo):
+    out = mont_mul(FQ, his[:, :, None, :], lo[None, None, :, :])
+    return out.reshape(his.shape[0], -1, 4)
 
 
 def fix_rows(table: jnp.ndarray, point: List[int]) -> jnp.ndarray:

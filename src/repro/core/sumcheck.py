@@ -18,11 +18,16 @@ arithmetic.  Both drive the shared Fiat-Shamir transcript.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.field import FQ, add, sub, mont_mul, decode
 from repro.core import mle
-from repro.core.mle import enc, fsum, hadd, hmul, lagrange_eval
+from repro.core.mle import enc, enc_vec, fsum, hadd, hmul, lagrange_eval
 from repro.core.transcript import Transcript
 
 Q = FQ.modulus
@@ -38,6 +43,51 @@ def _decode_scalar(x) -> int:
     return int(decode(FQ, x)[()])
 
 
+def _decode_scalars(x) -> List[int]:
+    return [int(v) for v in decode(FQ, x)]
+
+
+@functools.partial(jax.jit, static_argnames=("degree",))
+def _round_msgs(stack, idx, coef_limbs, degree: int):
+    """All degree+1 round-poly evaluations for a (K, n, 4) table stack in
+    ONE executable: returns (degree+1, 4) sums.
+
+    ``idx`` is the (P, degree) product-index matrix, ragged products
+    padded with index K -- a synthetic Montgomery-ONE table appended to
+    the eval stack (multiplying a canonical element by the Montgomery
+    unit is exact identity, so padded factors change nothing).  The
+    per-product work is a gather + a degree-step vectorized multiply,
+    keeping the XLA graph small for any product count."""
+    evens, odds = stack[:, 0::2], stack[:, 1::2]
+    diffs = sub(FQ, odds, evens)
+    one_row = jnp.broadcast_to(enc(1), (1,) + evens.shape[1:]).astype(jnp.uint32)
+    zero_row = jnp.zeros((1,) + evens.shape[1:], jnp.uint32)
+    evens = jnp.concatenate([evens, one_row])
+    odds = jnp.concatenate([odds, one_row])
+    diffs = jnp.concatenate([diffs, zero_row])
+    evals = [evens, odds]
+    cur = odds
+    for _ in range(2, degree + 1):
+        cur = add(FQ, cur, diffs)
+        evals.append(cur)
+    msgs = []
+    for t in range(degree + 1):
+        ev = evals[t]
+        term = ev[idx[:, 0]]
+        for k in range(1, degree):
+            term = mont_mul(FQ, term, ev[idx[:, k]])
+        term = mont_mul(FQ, term, coef_limbs[:, None, :])
+        msgs.append(fsum(term.reshape(-1, 4)))
+    return jnp.stack(msgs)
+
+
+@jax.jit
+def _fold_stack(stack, r_l):
+    """Fix variable 0 of every table in the (K, n, 4) stack at r."""
+    evens, odds = stack[:, 0::2], stack[:, 1::2]
+    return add(FQ, evens, mont_mul(FQ, sub(FQ, odds, evens), r_l[None, None]))
+
+
 def sumcheck_prove(
     tables: List,
     products: Sequence[Tuple[int, ...]],
@@ -50,53 +100,45 @@ def sumcheck_prove(
     ``coefs`` (optional) gives one public field coefficient per product:
     claim = sum_b sum_p coefs[p] * prod_k T_k(b) -- the random-linear-
     combination batching of per-layer GKR claims (Fig. 3 / Example 4.5).
+
+    The K tables live as one (K, n, 4) stack and every round issues
+    exactly two fused dispatches (round-poly evaluations, then the fold)
+    plus one host transfer for the Fiat-Shamir absorb, instead of O(K *
+    degree) eager ops and degree+1 transfers.
     """
     n = tables[0].shape[0]
     assert all(t.shape[0] == n for t in tables)
     degree = max(len(p) for p in products)
-    tables = list(tables)
     rounds = n.bit_length() - 1
     assert n == 1 << rounds
-    coef_limbs = None
     if coefs is not None:
-        coef_limbs = [enc(int(c) % Q) for c in coefs]
+        coef_limbs = enc_vec([int(c) % Q for c in coefs])
+    else:
+        coef_limbs = jnp.broadcast_to(enc(1), (len(products), 4))
+    k_one = len(tables)            # index of the synthetic ONE pad table
+    idx = jnp.asarray(np.array(
+        [list(p) + [k_one] * (degree - len(p)) for p in products],
+        dtype=np.int32))
 
+    stack = jnp.stack(tables)
     messages: List[List[int]] = []
     point: List[int] = []
+    pallas = mle.fold_backend() == "pallas"
     for _ in range(rounds):
-        evens = [t[0::2] for t in tables]
-        odds = [t[1::2] for t in tables]
-        diffs = [sub(FQ, o, e) for o, e in zip(odds, evens)]
-        # evals[t][k] = table k evaluated at X=t (as (n/2,4) residual table)
-        evals = [evens, odds]
-        cur = odds
-        for _ in range(2, degree + 1):
-            cur = [add(FQ, c, d) for c, d in zip(cur, diffs)]
-            evals.append(cur)
-        msg = []
-        for t in range(degree + 1):
-            acc = None
-            for pi, prod in enumerate(products):
-                term = evals[t][prod[0]]
-                for k in prod[1:]:
-                    term = mont_mul(FQ, term, evals[t][k])
-                if coef_limbs is not None:
-                    term = mont_mul(FQ, term, coef_limbs[pi][None])
-                acc = term if acc is None else add(FQ, acc, term)
-            msg.append(_decode_scalar(fsum(acc)))
+        msg = _decode_scalars(_round_msgs(stack, idx, coef_limbs, degree))
         messages.append(msg)
         transcript.absorb_ints(label + b"/round", msg)
         r = transcript.challenge_int(label + b"/r", Q)
         point.append(r)
         r_l = enc(r)
-        if mle.fold_backend() == "pallas":
+        if pallas:
             # fused fold kernel: one VMEM pass per table instead of
             # materializing diff and diff*r (see kernels/sumcheck_fold)
-            tables = [mle.fold(t, r_l) for t in tables]
+            stack = jnp.stack([mle.fold(stack[k], r_l)
+                               for k in range(stack.shape[0])])
         else:
-            tables = [add(FQ, e, mont_mul(FQ, d, r_l[None]))
-                      for e, d in zip(evens, diffs)]
-    final_values = [_decode_scalar(t[0]) for t in tables]
+            stack = _fold_stack(stack, r_l)
+    final_values = _decode_scalars(stack[:, 0])
     transcript.absorb_ints(label + b"/final", final_values)
     return SumcheckProof(messages), point, final_values
 

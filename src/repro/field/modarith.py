@@ -90,16 +90,26 @@ def int_to_limbs(x: int) -> np.ndarray:
 
 
 def ints_to_limbs(xs) -> np.ndarray:
-    """Vectorized python-int array -> (..., 4) uint32 limb array."""
+    """Vectorized python-int array -> (..., 4) uint32 limb array.
+
+    Non-negative values below 2^64 (every canonical field element) pack
+    via pure-numpy uint64 shifts; arbitrary python ints fall back to
+    batched object-array shifts (still no per-element Python loop)."""
     arr = np.asarray(xs, dtype=object)
-    out = np.empty(arr.shape + (NLIMB,), dtype=np.uint32)
     flat = arr.reshape(-1)
-    oflat = out.reshape(-1, NLIMB)
-    for i, v in enumerate(flat):
-        v = int(v)
+    out = np.empty(flat.shape + (NLIMB,), dtype=np.uint32)
+    try:
+        u = flat.astype(np.uint64)
+    except (OverflowError, TypeError):
+        u = None
+    if u is None:
         for j in range(NLIMB):
-            oflat[i, j] = (v >> (WORD * j)) & WMASK
-    return out
+            out[:, j] = ((flat >> (WORD * j)) & WMASK).astype(np.uint32)
+    else:
+        for j in range(NLIMB):
+            out[:, j] = ((u >> np.uint64(WORD * j))
+                         & np.uint64(WMASK)).astype(np.uint32)
+    return out.reshape(arr.shape + (NLIMB,))
 
 
 def limbs_to_ints(limbs) -> np.ndarray:
@@ -241,8 +251,12 @@ def inv(spec: FieldSpec, a):
     return pow_const(spec, a, spec.modulus - 2)
 
 
+@functools.partial(jax.jit, static_argnames=("spec",))
 def batch_inv(spec: FieldSpec, a):
-    """Montgomery batch inversion of a flat (n, 4) array: one inv + 3n muls."""
+    """Montgomery batch inversion of a flat (n, 4) array: one inv + 3n muls.
+
+    jit'd: the two lax.scans otherwise re-trace (and re-compile) on every
+    eager call because their body closures are fresh function objects."""
     n = a.shape[0]
     if n == 0:
         return a
@@ -287,17 +301,19 @@ def encode_int(spec: FieldSpec, x: int) -> np.ndarray:
 
 
 def encode_ints(spec: FieldSpec, xs) -> np.ndarray:
-    """Array of python/np ints -> (..., 4) uint32 Montgomery form (host)."""
+    """Array of python/np ints -> (..., 4) uint32 Montgomery form (host).
+
+    int64-range inputs (bit matrices, reduced challenge products, witness
+    tensors) take the vectorized `encode_i64` path; arbitrary-precision
+    inputs run the same computation as batched object-array ops."""
     arr = np.asarray(xs, dtype=object)
+    try:
+        return encode_i64(spec, arr.astype(np.int64)).reshape(
+            arr.shape + (NLIMB,))
+    except (OverflowError, TypeError):
+        pass
     r = pow(2, 64, spec.modulus)
-    m = spec.modulus
-    flat = arr.reshape(-1)
-    out = np.empty((flat.shape[0], NLIMB), dtype=np.uint32)
-    for i, v in enumerate(flat):
-        w = (int(v) * r) % m
-        for j in range(NLIMB):
-            out[i, j] = (w >> (WORD * j)) & WMASK
-    return out.reshape(arr.shape + (NLIMB,))
+    return ints_to_limbs(arr * r % spec.modulus)
 
 
 def decode(spec: FieldSpec, a) -> np.ndarray:

@@ -1,0 +1,129 @@
+"""Parity tests for the batched commitment engine.
+
+The multi-MSM entry point (`group.msm_many`), the batched Pedersen
+commitments (`pedersen.commit_many`) and the vectorized host encoders
+must all be BIT-IDENTICAL to their sequential counterparts: the prover
+batches purely for dispatch count, and any drift would change transcript
+bytes (pinned separately by the golden digests in
+tests/test_proof_session.py).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.field import FQ, FP, NLIMB, encode_ints, int_to_limbs, ints_to_limbs
+from repro.core import group, pedersen
+
+Q = FQ.modulus
+P = FP.modulus
+
+
+def rand_ints(rng, n, lo=0, hi=Q):
+    return [int(v) for v in rng.integers(lo, hi, size=n, dtype=np.uint64)]
+
+
+def field_vec(vals):
+    return jnp.asarray(encode_ints(FQ, np.array(vals, dtype=object)))
+
+
+# ---------------------------------------------------------------------------
+# msm_many == sequential msm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("r,n", [(1, 4), (3, 16), (7, 33), (2, 128)])
+def test_msm_many_matches_sequential_msm(r, n):
+    rng = np.random.default_rng(r * 100 + n)
+    gens = group.derive_generators(b"batch-msm", n)
+    exps = jnp.stack([group.exps_from_ints(rand_ints(rng, n))
+                      for _ in range(r)])
+    batched = group.msm_many(gens, exps)
+    for i in range(r):
+        want = group.decode_group(group.msm(gens, exps[i]))
+        assert group.decode_group(batched[i]) == want
+
+
+def test_msm_many_per_row_points_and_zero_exponents():
+    rng = np.random.default_rng(5)
+    n = 8
+    pts = jnp.stack([group.derive_generators(b"batch-a", n),
+                     group.derive_generators(b"batch-b", n)])
+    rows = [rand_ints(rng, n), [0] * n]     # second row all-zero exps
+    exps = jnp.stack([group.exps_from_ints(v) for v in rows])
+    batched = group.msm_many(pts, exps)
+    for i in range(2):
+        want = group.decode_group(group.msm(pts[i], exps[i]))
+        assert group.decode_group(batched[i]) == want
+    assert group.decode_group(batched[1]) == group.decode_group(
+        group.identity())
+
+
+def test_msm_many_window_override_matches_default():
+    rng = np.random.default_rng(6)
+    n = 16
+    gens = group.derive_generators(b"batch-w", n)
+    exps = jnp.stack([group.exps_from_ints(rand_ints(rng, n))
+                      for _ in range(3)])
+    a = group.msm_many(gens, exps)
+    b = group.msm_many(gens, exps, window=8)
+    assert group.decode_group_many(a) == group.decode_group_many(b)
+
+
+# ---------------------------------------------------------------------------
+# commit_many == sequential pedersen.commit (blinds included)
+# ---------------------------------------------------------------------------
+
+def test_commit_many_matches_sequential_commits():
+    rng = np.random.default_rng(7)
+    k1 = pedersen.make_key(b"batch-c1", 32)
+    k2 = pedersen.make_key(b"batch-c2", 8)
+    rows = []
+    for key, n in ((k1, 32), (k2, 8), (k1, 16)):   # mixed keys AND lengths
+        vals = field_vec(rand_ints(rng, n))
+        blind = int(rng.integers(0, Q, dtype=np.uint64))
+        rows.append((key, vals, blind))
+    rows.append((k2, field_vec(rand_ints(rng, 8)), 0))   # blind-free row
+    batched = group.decode_group_many(pedersen.commit_many(rows))
+    for got, (key, vals, blind) in zip(batched, rows):
+        want = group.decode_group(pedersen.commit(key, vals, blind))
+        assert got == want
+
+
+# ---------------------------------------------------------------------------
+# vectorized host encoders == per-element reference
+# ---------------------------------------------------------------------------
+
+def test_derive_generators_match_per_element_reference():
+    from repro.field import hash_to_int
+    label = b"zkdl/gens/parity-check"
+    gens = np.asarray(group.derive_generators(label, 9))
+    for i in range(9):
+        t = max(hash_to_int(label + i.to_bytes(8, "little"), P), 2)
+        gm = (t * t % P) * pow(2, 64, P) % P
+        np.testing.assert_array_equal(gens[i], int_to_limbs(gm))
+
+
+def test_exps_from_ints_fast_and_slow_paths_agree():
+    small = [0, 1, Q - 1, 12345]                     # int64-range fast path
+    big = [Q + 5, -3, 2**200 + 17, Q - 1]            # object fallback
+    for vals in (small, big):
+        got = np.asarray(group.exps_from_ints(vals))
+        for i, v in enumerate(vals):
+            np.testing.assert_array_equal(got[i], int_to_limbs(int(v) % Q))
+
+
+def test_encode_ints_fast_and_slow_paths_agree():
+    r = pow(2, 64, Q)
+    for vals in ([0, 1, -5, 2**40], [2**100, -(2**90), Q - 1]):
+        got = encode_ints(FQ, np.array(vals, dtype=object))
+        for i, v in enumerate(vals):
+            np.testing.assert_array_equal(got[i],
+                                          int_to_limbs(int(v) * r % Q))
+
+
+def test_ints_to_limbs_negative_and_huge_values():
+    vals = np.array([-1, -(2**70), 2**64 - 1, 5], dtype=object)
+    got = ints_to_limbs(vals)
+    assert got.shape == (4, NLIMB)
+    for i, v in enumerate(vals):
+        for j in range(NLIMB):
+            assert got[i, j] == (int(v) >> (16 * j)) & 0xFFFF

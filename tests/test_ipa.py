@@ -104,3 +104,105 @@ def test_proof_is_logarithmic():
         proof = ipa.open_prove(key, a, b, 5, claim, tp, rng)
         sizes[n] = proof.size_bytes()
     assert sizes[64] - sizes[16] == sizes[256] - sizes[64]  # +2 group els per 4x
+
+
+# ---------------------------------------------------------------------------
+# Fused-round parity: the jitted ipa round (one multi-MSM + one fold
+# dispatch) must be bit-identical to the unfused sequence of primitive
+# group ops, blinds included.
+# ---------------------------------------------------------------------------
+
+def _unfused_open_round(gens, a, b, up, h, rho_l, rho_r):
+    """The pre-fusion round: two half MSMs, two claim exps, two blind
+    exps, sequential folds (kept here as the parity oracle)."""
+    from repro.core.mle import fdot
+    from repro.field import decode
+    n2 = a.shape[0] // 2
+    c_l = int(decode(FQ, fdot(a[:n2], b[n2:]))[()])
+    c_r = int(decode(FQ, fdot(a[n2:], b[:n2]))[()])
+    lval = group.g_mul(
+        group.g_mul(group.msm_field(gens[n2:], a[:n2]),
+                    group.g_pow_int(up, c_l)),
+        group.g_pow_int(h, rho_l))
+    rval = group.g_mul(
+        group.g_mul(group.msm_field(gens[:n2], a[n2:]),
+                    group.g_pow_int(up, c_r)),
+        group.g_pow_int(h, rho_r))
+    return lval, rval
+
+
+def _unfused_pair_round(gg, hh, a, b, up, h_blind, rho_l, rho_r):
+    from repro.core.mle import fdot
+    from repro.field import decode
+    n2 = a.shape[0] // 2
+    c_l = int(decode(FQ, fdot(a[:n2], b[n2:]))[()])
+    c_r = int(decode(FQ, fdot(a[n2:], b[:n2]))[()])
+    lval = group.g_mul(group.g_mul(
+        group.msm_field(gg[n2:], a[:n2]),
+        group.msm_field(hh[:n2], b[n2:])),
+        group.g_mul(group.g_pow_int(up, c_l), group.g_pow_int(h_blind, rho_l)))
+    rval = group.g_mul(group.g_mul(
+        group.msm_field(gg[:n2], a[n2:]),
+        group.msm_field(hh[n2:], b[:n2])),
+        group.g_mul(group.g_pow_int(up, c_r), group.g_pow_int(h_blind, rho_r)))
+    return lval, rval
+
+
+@pytest.mark.parametrize("n", [4, 32])
+def test_fused_open_round_matches_unfused(n):
+    rng = np.random.default_rng(300 + n)
+    key = pedersen.make_key(b"fused-o", n)
+    up = group.derive_generators(b"fused-up", 1)[0]
+    a = field_vec([int(rng.integers(0, Q, dtype=np.uint64)) for _ in range(n)])
+    b = field_vec([int(rng.integers(0, Q, dtype=np.uint64)) for _ in range(n)])
+    rho_l = int(rng.integers(0, Q, dtype=np.uint64)) % Q
+    rho_r = int(rng.integers(0, Q, dtype=np.uint64)) % Q
+    fused = ipa._open_round_lr(key.gens[:n], a, b, up, key.h,
+                               ipa._exp1(rho_l), ipa._exp1(rho_r))
+    want = _unfused_open_round(key.gens[:n], a, b, up, key.h, rho_l, rho_r)
+    assert group.decode_group_many(fused) == [group.decode_group(w)
+                                              for w in want]
+
+    al = 987654321
+    ali = pow(al, Q - 2, Q)
+    from repro.core.mle import enc
+    a2, b2, g2 = ipa._open_fold(a, b, key.gens[:n], enc(al), enc(ali),
+                                ipa._exp1(al), ipa._exp1(ali))
+    np.testing.assert_array_equal(np.asarray(a2),
+                                  np.asarray(ipa._fold_vec(a, al, ali)))
+    np.testing.assert_array_equal(np.asarray(b2),
+                                  np.asarray(ipa._fold_vec(b, ali, al)))
+    np.testing.assert_array_equal(
+        np.asarray(g2), np.asarray(ipa._fold_gens(key.gens[:n], ali, al)))
+
+
+@pytest.mark.parametrize("n", [8, 64])
+def test_fused_pair_round_matches_unfused(n):
+    rng = np.random.default_rng(400 + n)
+    gg = group.derive_generators(b"fused-G", n)
+    hh = group.derive_generators(b"fused-H", n)
+    hb = group.derive_generators(b"fused-hb", 1)[0]
+    up = group.derive_generators(b"fused-up", 1)[0]
+    a = field_vec([int(rng.integers(0, Q, dtype=np.uint64)) for _ in range(n)])
+    b = field_vec([int(rng.integers(0, Q, dtype=np.uint64)) for _ in range(n)])
+    rho_l = int(rng.integers(0, Q, dtype=np.uint64)) % Q
+    rho_r = int(rng.integers(0, Q, dtype=np.uint64)) % Q
+    fused = ipa._pair_round_lr(gg, hh, a, b, up, hb,
+                               ipa._exp1(rho_l), ipa._exp1(rho_r))
+    want = _unfused_pair_round(gg, hh, a, b, up, hb, rho_l, rho_r)
+    assert group.decode_group_many(fused) == [group.decode_group(w)
+                                              for w in want]
+
+    al = 192837465
+    ali = pow(al, Q - 2, Q)
+    from repro.core.mle import enc
+    a2, b2, gg2, hh2 = ipa._pair_fold(a, b, gg, hh, enc(al), enc(ali),
+                                      ipa._exp1(al), ipa._exp1(ali))
+    np.testing.assert_array_equal(np.asarray(a2),
+                                  np.asarray(ipa._fold_vec(a, al, ali)))
+    np.testing.assert_array_equal(np.asarray(b2),
+                                  np.asarray(ipa._fold_vec(b, ali, al)))
+    np.testing.assert_array_equal(np.asarray(gg2),
+                                  np.asarray(ipa._fold_gens(gg, ali, al)))
+    np.testing.assert_array_equal(np.asarray(hh2),
+                                  np.asarray(ipa._fold_gens(hh, al, ali)))

@@ -310,3 +310,46 @@ def test_uniform_stacking_matches_seed_layout():
         for i in range(CFG.n_layers):
             seed_w[t, i] = w.w[i].reshape(-1)
     np.testing.assert_array_equal(sw.w_s, seed_w.reshape(-1))
+
+
+def test_batched_commit_phase_matches_sequential_commits(keys):
+    """The commit phase's two msm_many dispatches must reproduce the
+    per-tensor `pedersen.commit` elements exactly (same blinds), so
+    batching can never alter a transcript byte."""
+    from repro.core import group, pedersen
+    from repro.core.pipeline.session import SessionProver
+    from repro.core.pipeline.tables import enc_tensor
+    from repro.core.pipeline.witness import stack_witnesses
+
+    sw = stack_witnesses(make_step_witnesses(seed=31), CFG)
+    prover = SessionProver(keys, np.random.default_rng(31))
+    coms = prover.commit(sw)
+    tabs, blinds = prover.tabs, prover.blinds
+    seq = {
+        "y": pedersen.commit(keys.ky, tabs.y_t, blinds["y"]),
+        "w": pedersen.commit(keys.kw, tabs.w_t, blinds["w"]),
+        "gw": pedersen.commit(keys.kw, tabs.gw_t, blinds["gw"]),
+        "zpp": pedersen.commit(keys.kd, tabs.zpp_t, blinds["zpp"]),
+        "rz": pedersen.commit(keys.kd, tabs.rz_t, blinds["rz"]),
+        "gap": pedersen.commit(keys.kd, tabs.gap_t, blinds["gap"]),
+        "rga": pedersen.commit(keys.kd, tabs.rga_t, blinds["rga"]),
+    }
+    for name, el in seq.items():
+        assert getattr(coms, name) == group.decode_group(el), name
+    for ci, x, xb in zip(coms.x, sw.x, prover.x_blinds):
+        assert ci == group.decode_group(
+            pedersen.commit(keys.kx, enc_tensor(x), xb))
+
+
+def test_prover_phase_profile_accounts_for_total(keys):
+    """The per-phase profiler must cover ~all of prove() wall clock."""
+    session = ProofSession(keys, np.random.default_rng(33))
+    for w in make_step_witnesses(seed=33):
+        session.add_step(w)
+    session.prove()
+    prof = session.last_profile
+    assert prof is not None and prof.total_s > 0
+    assert set(prof.phases_s) >= {"stack", "commit", "challenges",
+                                  "matmul", "anchor", "openings"}
+    assert prof.accounted_s <= prof.total_s * 1.001 + 1e-6
+    assert prof.accounted_s >= prof.total_s * 0.9
