@@ -40,7 +40,8 @@ def bench_T(T: int, layers: int, batch: int, width: int, q_bits: int,
     from repro.core.quantfc import (QuantConfig,
                                     synthetic_sgd_trajectory_widths)
     from repro.core.pipeline import (PipelineConfig, ProofSession,
-                                     make_keys, verify_session)
+                                     encode_proof, make_keys,
+                                     verify_session)
 
     if widths is None:
         widths = (width,) * (layers + 1)
@@ -82,12 +83,15 @@ def bench_T(T: int, layers: int, batch: int, width: int, q_bits: int,
             verify_s = min(verify_s, time.perf_counter() - t0)
         assert ok, f"aggregated proof rejected at T={T}"
 
+    # proof size is the CANONICAL WIRE FORMAT (len(encode_proof)), not
+    # an in-memory estimate: what actually crosses the network per window
+    proof_bytes = len(encode_proof(proof))
     return {
         "T": T,
         "prove_s": best,
         "per_step_s": best / T,
-        "proof_bytes": proof.size_bytes(),
-        "per_step_bytes": proof.size_bytes() / T,
+        "proof_bytes": proof_bytes,
+        "per_step_bytes": proof_bytes / T,
         "prove_compile_s": prove_compile_s,
         "verify_s": verify_s,
         "verify_compile_s": verify_compile_s,

@@ -2,7 +2,7 @@
 conventional sequential (layer-by-layer, Liu et al. 2021-style) proof
 generation as network depth L grows.
 
-Parallel column: the production `zkdl.Prover` -- one batched sumcheck per
+Parallel column: the production `pipeline.ProofSession` (T=1) -- one batched sumcheck per
 step over the STACKED tensors, one validity IPA, one multi-opened IPA per
 tensor; proving time ~O(DQ + log L) and size ~O(log(DQL)).
 
@@ -22,7 +22,10 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import ipa, mle, pedersen, zkdl, zkrelu
+from repro.core import ipa, mle, pedersen, zkrelu
+from repro.core.pipeline import (PipelineConfig, ProofSession, encode_proof,
+                                 make_keys)
+from repro.core.pipeline.tables import dec_scalar, fix_cols, fix_rows
 from repro.core.sumcheck import sumcheck_prove
 from repro.core.transcript import Transcript
 from repro.field import FQ, add, mont_mul, sub
@@ -94,21 +97,21 @@ def prove_sequential(keys: SequentialKeys, wit, rng) -> Dict:
         a_tab = _enc_tensor(wit.a[l]).reshape(bs, width, 4)
         w_tab = _enc_tensor(wit.w[l]).reshape(width, width, 4)
         gz_tab = _enc_tensor(wit.gz[l]).reshape(bs, width, 4)
-        fa = zkdl._fix_rows(a_tab, u_r)
-        fw = zkdl._fix_cols(w_tab, u_c)
+        fa = fix_rows(a_tab, u_r)
+        fw = fix_cols(w_tab, u_c)
         sc1, _, f1 = sumcheck_prove([fa, fw], [(0, 1)], t, b"fwd")
         size_bytes += 32 * (sum(len(m) for m in sc1.messages) + len(f1))
         if l + 1 < L:
             gz2 = _enc_tensor(wit.gz[l + 1]).reshape(bs, width, 4)
             w2 = _enc_tensor(wit.w[l + 1]).reshape(width, width, 4)
-            fg = zkdl._fix_rows(gz2, u_r)
-            fw2 = zkdl._fix_rows(w2, u_c)
+            fg = fix_rows(gz2, u_r)
+            fw2 = fix_rows(w2, u_c)
             sc2, _, f2 = sumcheck_prove([fg, fw2], [(0, 1)], t, b"bwd")
             size_bytes += 32 * (sum(len(m) for m in sc2.messages) + len(f2))
         u_i = t.challenge_ints(b"u_i", Q_MOD, ld)
         u_j = t.challenge_ints(b"u_j", Q_MOD, ld)
-        fgw = zkdl._fix_cols(gz_tab, u_i)
-        fa2 = zkdl._fix_cols(a_tab, u_j)
+        fgw = fix_cols(gz_tab, u_i)
+        fa2 = fix_cols(a_tab, u_j)
         sc3, _, f3 = sumcheck_prove([fgw, fa2], [(0, 1)], t, b"gw")
         size_bytes += 32 * (sum(len(m) for m in sc3.messages) + len(f3))
 
@@ -125,11 +128,11 @@ def prove_sequential(keys: SequentialKeys, wit, rng) -> Dict:
         upp = t.challenge_int(b"upp", Q_MOD)
         u_relu = u_star + [upp]
         e_star = mle.expand_point(u_star)
-        v_zpp = int(mle.hmul(1, zkdl._dec(mle.fdot(zpp_t, e_star))))
-        v_gap = zkdl._dec(mle.fdot(gap_t, e_star))
-        v_bq = zkdl._dec(mle.fdot(bq_t, e_star))
-        v_rz = zkdl._dec(mle.fdot(rz_t, e_star))
-        v_rga = zkdl._dec(mle.fdot(rga_t, e_star))
+        v_zpp = int(mle.hmul(1, dec_scalar(mle.fdot(zpp_t, e_star))))
+        v_gap = dec_scalar(mle.fdot(gap_t, e_star))
+        v_bq = dec_scalar(mle.fdot(bq_t, e_star))
+        v_rz = dec_scalar(mle.fdot(rz_t, e_star))
+        v_rga = dec_scalar(mle.fdot(rga_t, e_star))
         v = ((1 - upp) * v_zpp + upp * v_gap) % Q_MOD
         v_r = ((1 - upp) * v_rz + upp * v_rga) % Q_MOD
         t.absorb_ints(b"vclaims", [v, v_bq, v_r])
@@ -142,24 +145,23 @@ def prove_sequential(keys: SequentialKeys, wit, rng) -> Dict:
                                  ("gap", gap_t, blinds["gap"]),
                                  ("rga", rga_t, blinds["rga"])):
             key = keys.k_bq if name == "bq" else keys.kd
-            claim = zkdl._dec(mle.fdot(tab, e_star))
+            claim = dec_scalar(mle.fdot(tab, e_star))
             pr = ipa.open_prove(key, tab, e_star, blind, claim, t, rng)
             size_bytes += pr.size_bytes()
     return {"size_kB": size_bytes / 1024}
 
 
 def run_parallel(width: int, bs: int, depth: int):
-    cfg = zkdl.ZkdlConfig(n_layers=depth, batch=bs, width=width,
-                          q_bits=Q_BITS, r_bits=R_BITS)
-    keys = zkdl.make_keys(cfg)
+    cfg = PipelineConfig(n_layers=depth, batch=bs, width=width,
+                         q_bits=Q_BITS, r_bits=R_BITS, n_steps=1)
+    keys = make_keys(cfg)
     wit = make_witness(width, bs, n_layers=depth)
-    rng = np.random.default_rng(depth)
-    prover = zkdl.Prover(keys, rng)
+    session = ProofSession(keys, np.random.default_rng(depth))
+    session.add_step(wit)
     t0 = time.perf_counter()
-    prover.commit(wit)
-    proof = prover.prove(Transcript(b"zkdl"))
+    proof = session.prove()
     dt = time.perf_counter() - t0
-    return dt, proof.size_bytes() / 1024
+    return dt, len(encode_proof(proof)) / 1024
 
 
 def run_sequential(width: int, bs: int, depth: int):

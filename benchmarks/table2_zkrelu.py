@@ -22,9 +22,10 @@ from typing import List, Tuple
 
 import numpy as np
 
-from repro.core import quantfc, scbd, zkdl
+from repro.core import quantfc, scbd
+from repro.core.pipeline import (PipelineConfig, ProofSession, encode_proof,
+                                 make_keys, verify_session)
 from repro.core.quantfc import QuantConfig, train_step_witness
-from repro.core.transcript import Transcript
 
 Q_BITS = 16
 R_BITS = 8
@@ -47,21 +48,21 @@ def make_witness(width: int, bs: int, n_layers: int = 2, seed: int = 0):
 
 
 def run_zkrelu_cell(width: int, bs: int, verify: bool = False):
-    cfg = zkdl.ZkdlConfig(n_layers=2, batch=bs, width=width,
-                          q_bits=Q_BITS, r_bits=R_BITS)
-    keys = zkdl.make_keys(cfg)
+    cfg = PipelineConfig(n_layers=2, batch=bs, width=width,
+                         q_bits=Q_BITS, r_bits=R_BITS, n_steps=1)
+    keys = make_keys(cfg)
     wit = make_witness(width, bs)
-    rng = np.random.default_rng(1)
-    prover = zkdl.Prover(keys, rng)
+    session = ProofSession(keys, np.random.default_rng(1))
+    session.add_step(wit)
     t0 = time.perf_counter()
-    prover.commit(wit)
-    proof = prover.prove(Transcript(b"zkdl"))
+    proof = session.prove()
     t_prove = time.perf_counter() - t0
     ok = None
     if verify:
-        ok = zkdl.verify_step(keys, proof)
+        ok = verify_session(keys, proof)
         assert ok, "zkReLU proof rejected"
-    return {"time_s": t_prove, "size_kB": proof.size_bytes() / 1024,
+    return {"time_s": t_prove,
+            "size_kB": len(encode_proof(proof)) / 1024,
             "n_aux": 5 * 2 * bs * width, "verified": ok}
 
 

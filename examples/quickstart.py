@@ -1,12 +1,14 @@
-"""Quickstart: verifiable training with the aggregated proof pipeline.
+"""Quickstart: the graph-first compile -> prove -> verify lifecycle.
 
-Trains a small quantized FCNN for T batch updates, aggregates them into
-ONE zero-knowledge proof via `ProofSession` (zkReLU + batched matmul
-sumchecks over layers AND steps + aux-validity IPA -- the FAC4DNN
-aggregation), and verifies it as the trusted verifier would.
+Builds a proof graph with `GraphBuilder` (optionally with a residual
+skip connection), compiles it ONCE into a (ProvingKey, VerifyingKey)
+pair, trains a small quantized FCNN for T batch updates, aggregates
+them into ONE zero-knowledge proof via `ProofSession`, SERIALIZES the
+proof to its canonical byte format, and verifies it from bytes alone —
+exactly what a remote verifier holding only vk.bin would do.
 
     PYTHONPATH=src python examples/quickstart.py \
-        [--width 16] [--batch 4] [--agg-steps 2]
+        [--width 16] [--batch 4] [--agg-steps 2] [--residual]
 """
 import argparse
 import time
@@ -21,59 +23,70 @@ def main():
     ap.add_argument("--layers", type=int, default=2)
     ap.add_argument("--agg-steps", type=int, default=2,
                     help="training steps aggregated into one proof")
+    ap.add_argument("--residual", action="store_true",
+                    help="add a skip connection (needs >= 3 layers; "
+                         "exercises the residual claim routing)")
     args = ap.parse_args()
 
     from repro.util import enable_compilation_cache
     enable_compilation_cache()
-    from repro.core.quantfc import QuantConfig, synthetic_sgd_trajectory
-    from repro.core.pipeline import (PipelineConfig, ProofSession,
-                                     make_keys, verify_session)
+    from repro.core.quantfc import (QuantConfig,
+                                    synthetic_sgd_trajectory_widths)
+    from repro.core.pipeline import (GraphBuilder, ProofSession,
+                                     VerifyingKey, compile, encode_proof,
+                                     graph_skips, graph_widths,
+                                     verify_bytes)
 
     T = args.agg_steps
-    cfg = PipelineConfig(n_layers=args.layers, batch=args.batch,
-                         width=args.width, q_bits=16, r_bits=8, n_steps=T)
-    print(f"[quickstart] FCNN: {args.layers} layers x {args.width} wide, "
-          f"batch {args.batch}, {T} aggregated step(s) -- Example 4.5 + "
-          f"FAC4DNN cross-step stacking")
+    layers = max(args.layers, 3) if args.residual else args.layers
 
+    # 1. build the proof graph (the single source of truth for shapes)
+    b = GraphBuilder(batch=args.batch).input(args.width)
+    for l in range(1, layers + 1):
+        if args.residual and l == 3:
+            b.residual(to=1)               # operand of layer 3 = A^2 + A^1
+        b.dense(args.width).relu()
+    graph = b.output()
+    shape = "x".join(str(w) for w in graph_widths(graph))
+    print(f"[quickstart] graph: {shape}, batch {args.batch}, "
+          f"skips {graph_skips(graph) or '{}'}, {T} aggregated step(s)")
+
+    # 2. compile: one-time setup, reusable across sessions
     qc = QuantConfig(q_bits=16, r_bits=8)
     t0 = time.time()
-    keys = make_keys(cfg)
-    print(f"[quickstart] commitment keys: {time.time()-t0:.2f}s")
+    pk, vk = compile(graph, qc, n_steps=T)
+    vk_bytes = vk.to_bytes()
+    print(f"[quickstart] compile: {time.time()-t0:.2f}s "
+          f"(vk serializes to {len(vk_bytes)} bytes)")
 
-    def make_trajectory(tamper_last=False):
-        wits = synthetic_sgd_trajectory(T, args.layers, args.batch,
-                                        args.width, qc, seed=0)
+    def prove_trajectory(tamper_last=False):
+        wits = synthetic_sgd_trajectory_widths(
+            T, graph_widths(graph), args.batch, qc, seed=0,
+            skips=graph_skips(graph))
         if tamper_last:
             wits[-1].gw[0][0, 0] += 1      # forged weight gradient
-        return wits
-
-    def prove_trajectory(wits):
-        session = ProofSession(keys, np.random.default_rng(1))
+        session = ProofSession(pk, np.random.default_rng(1))
         for wit in wits:
             session.add_step(wit)
-        return session.prove()
+        return encode_proof(session.prove())
 
+    # 3. prove: T steps -> ONE proof -> canonical bytes
     t0 = time.time()
-    honest = make_trajectory()
-    print(f"[quickstart] {T} witnesses (exact int fwd+bwd, eqs 30-35): "
-          f"{time.time()-t0:.2f}s")
-
-    t0 = time.time()
-    proof = prove_trajectory(honest)
+    proof_bytes = prove_trajectory()
     print(f"[quickstart] PROVE ({T} steps, one proof): {time.time()-t0:.1f}s,"
-          f" proof size {proof.size_bytes()/1024:.1f} kB "
-          f"({proof.size_bytes()/1024/T:.1f} kB/step)")
+          f" serialized {len(proof_bytes)/1024:.1f} kB "
+          f"({len(proof_bytes)/1024/T:.2f} kB/step)")
 
+    # 4. verify FROM BYTES with a vk rebuilt from bytes — no session,
+    #    no prover state, exactly the remote-verifier path
     t0 = time.time()
-    ok = verify_session(keys, proof)
-    print(f"[quickstart] VERIFY: {time.time()-t0:.1f}s -> "
-          f"{'ACCEPT' if ok else 'REJECT'}")
+    ok = verify_bytes(VerifyingKey.from_bytes(vk_bytes), proof_bytes)
+    print(f"[quickstart] VERIFY (from serialized bytes): "
+          f"{time.time()-t0:.1f}s -> {'ACCEPT' if ok else 'REJECT'}")
     assert ok
 
     # a tampered gradient in the LAST aggregated step must be rejected
-    ok_bad = verify_session(keys, prove_trajectory(make_trajectory(
-        tamper_last=True)))
+    ok_bad = verify_bytes(vk, prove_trajectory(tamper_last=True))
     print(f"[quickstart] tampered-gradient proof -> "
           f"{'ACCEPT (!!)' if ok_bad else 'REJECT (as it must)'}")
     assert not ok_bad

@@ -2,14 +2,18 @@
 streaming ONE aggregated proof per --agg-window batch updates (the
 FAC4DNN cross-step aggregation), with checkpoint/restart.
 
-This is the paper's deployment story in miniature: the trainer runs
-quantized SGD, queues each step's witness in a `ProofSession`, and every
-window emits a single (commitments, proof) transcript to the trusted
-verifier; interrupt and resume at any window boundary from the
-checkpoint.
+This is the paper's deployment story in miniature, under the graph-first
+lifecycle: `compile()` freezes the proof graph into a (pk, vk) pair
+once; the trainer runs quantized SGD, queues each step's witness in a
+`ProofSession(pk)`, and every window emits one proof SERIALIZED to
+``proof_<step>.bin`` next to ``vk.bin`` — the trusted verifier (here: a
+`verify_bytes` call against a vk re-read from disk, in real life: a
+different machine) needs nothing else.  Interrupt and resume at any
+window boundary from the checkpoint.
 
     PYTHONPATH=src python examples/train_and_prove.py \
-        --steps 4 --width 16 --batch 8 [--agg-window 2] [--no-verify]
+        --steps 4 --width 16 --batch 8 [--agg-window 2] [--no-verify] \
+        [--proof-dir /tmp/zkdl_proofs]
 
 Scaling note: width 4096 x 16 layers (the paper's 200M-param experiment)
 is the same code path; per-step proving cost on this CPU substrate is the
@@ -34,21 +38,29 @@ def main():
                     help="training steps aggregated into each proof")
     ap.add_argument("--no-verify", action="store_true")
     ap.add_argument("--ckpt", default="/tmp/zkdl_train_ckpt.npz")
+    ap.add_argument("--proof-dir", default="/tmp/zkdl_proofs",
+                    help="where vk.bin and per-window proof_<step>.bin land")
     args = ap.parse_args()
 
     from repro.util import enable_compilation_cache
     enable_compilation_cache()
     from repro.core import quantfc
     from repro.core.quantfc import QuantConfig, train_step_witness
-    from repro.core.pipeline import PipelineConfig, make_keys
+    from repro.core.pipeline import (VerifyingKey, build_fcnn_graph,
+                                     compile, encode_proof, verify_bytes)
     from repro.launch.steps import ZkdlProveHook
 
     qc = QuantConfig(q_bits=16, r_bits=8)
     window = max(1, args.agg_window)
-    cfg = PipelineConfig(n_layers=args.layers, batch=args.batch,
-                         width=args.width, q_bits=16, r_bits=8,
-                         n_steps=window)
-    keys = make_keys(cfg)
+    # session label = the public transcript domain separator; the
+    # verifier must bind to the same one or (correctly) reject
+    label = b"zkdl/train"
+    graph = build_fcnn_graph((args.width,) * (args.layers + 1), args.batch)
+    pk, vk = compile(graph, qc, n_steps=window)
+    os.makedirs(args.proof_dir, exist_ok=True)
+    vk_path = os.path.join(args.proof_dir, "vk.bin")
+    with open(vk_path, "wb") as f:
+        f.write(vk.to_bytes())
     rng = np.random.default_rng(0)
 
     # synthetic dataset (fixed): batches cycle deterministically
@@ -69,18 +81,33 @@ def main():
             for _ in range(args.layers)]
 
     # the hook owns the session window: every `window` observed steps it
-    # proves (and verifies) one aggregated transcript, then the callback
-    # checkpoints on the window boundary
+    # proves one aggregated transcript; the callback serializes it,
+    # verifies FROM BYTES against the on-disk vk (the deployment
+    # contract), then checkpoints on the window boundary
     def on_proof(step, proof, tp):
+        raw = encode_proof(proof)
+        pf = os.path.join(args.proof_dir, f"proof_{step:06d}.bin")
+        with open(pf, "wb") as f:
+            f.write(raw)
+        verdict = ""
+        if not args.no_verify:
+            with open(vk_path, "rb") as f:
+                vk_disk = VerifyingKey.from_bytes(f.read())
+            ok = verify_bytes(vk_disk, raw, label=label)
+            if not ok:
+                raise RuntimeError(f"serialized proof REJECTED at {step}")
+            verdict = ", verified-from-bytes"
         print(f"[train] step {step}: aggregated proof over "
-              f"{proof.n_steps} steps, {proof.size_bytes()/1024:.1f} kB"
-              f" in {tp:.1f}s ({tp/proof.n_steps:.1f}s/step, "
-              f"verified={not args.no_verify})", flush=True)
+              f"{proof.n_steps} steps -> {pf} ({len(raw)/1024:.1f} kB"
+              f" in {tp:.1f}s, {tp/proof.n_steps:.1f}s/step{verdict})",
+              flush=True)
         np.savez(args.ckpt, step=step + 1,
                  **{f"w{i}": ws[i] for i in range(args.layers)})
 
-    hook = ZkdlProveHook(keys, rng, verify=not args.no_verify,
-                         on_proof=on_proof)
+    # the hook's in-process verify is redundant with the from-bytes
+    # check above, so switch it off
+    hook = ZkdlProveHook(pk, rng, verify=False, on_proof=on_proof,
+                         label=label)
     for step in range(start, args.steps):
         lo = (step * args.batch) % data_x.shape[0]
         xb = quantfc.quantize(data_x[lo:lo + args.batch], qc)
@@ -92,11 +119,9 @@ def main():
         hook.observe(step, wit)
 
     done = args.steps - start
-    sizes = [p.size_bytes() for _, p, _ in hook.proofs]
-    mean_kb = (np.mean(sizes) / 1024) if sizes else 0.0
-    print(f"[train] {done} steps done; {len(sizes)} aggregated "
-          f"proofs (mean {mean_kb:.1f} kB, window {window}); "
-          f"checkpoint at {args.ckpt}")
+    n_proofs = len(hook.proofs)
+    print(f"[train] {done} steps done; {n_proofs} aggregated proofs in "
+          f"{args.proof_dir} (window {window}); checkpoint at {args.ckpt}")
     if hook.n_pending:
         # checkpoints land on window boundaries only: the trailing
         # partial window is UNPROVEN and not persisted -- a resumed run

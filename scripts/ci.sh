@@ -20,3 +20,54 @@ python -m pytest -x -q "$@"
 # aggregation benchmark AND the phase attribution from rotting between
 # PRs)
 python benchmarks/agg_steps.py --smoke
+
+# cross-process verify smoke: prove + serialize (proof.bin, vk.bin) in
+# one process, verify in a FRESH process that imports only the verifier
+# modules -- the deployment contract of the compile/prove/verify split.
+SMOKE_DIR="$(mktemp -d)"
+trap 'rm -rf "$SMOKE_DIR"' EXIT
+python - "$SMOKE_DIR" <<'PY'
+import sys
+
+import numpy as np
+
+from repro.util import enable_compilation_cache
+enable_compilation_cache()
+from repro.core.quantfc import QuantConfig, synthetic_sgd_trajectory_widths
+from repro.core.pipeline import (GraphBuilder, ProofSession,
+                                 compile as zk_compile, encode_proof,
+                                 graph_skips, graph_widths)
+
+out = sys.argv[1]
+qc = QuantConfig(q_bits=16, r_bits=4)
+graph = (GraphBuilder(batch=2).input(4)
+         .dense(4).relu().dense(4).relu()
+         .residual(to=1).dense(4).relu().output())
+pk, vk = zk_compile(graph, qc, n_steps=2)
+wits = synthetic_sgd_trajectory_widths(2, graph_widths(graph), 2, qc,
+                                       seed=3, skips=graph_skips(graph))
+session = ProofSession(pk, np.random.default_rng(3))
+for w in wits:
+    session.add_step(w)
+open(f"{out}/proof.bin", "wb").write(encode_proof(session.prove()))
+open(f"{out}/vk.bin", "wb").write(vk.to_bytes())
+print("ci: wrote proof.bin + vk.bin")
+PY
+python - "$SMOKE_DIR" <<'PY'
+import sys
+
+from repro.util import enable_compilation_cache
+enable_compilation_cache()
+# fresh process, verifier modules only: no session, no prover state
+from repro.core.pipeline.proofio import decode_vk
+from repro.core.pipeline.verifier import verify_bytes
+
+out = sys.argv[1]
+vk = decode_vk(open(f"{out}/vk.bin", "rb").read())
+raw = open(f"{out}/proof.bin", "rb").read()
+assert verify_bytes(vk, raw), "ci: cross-process verify REJECTED"
+bad = bytearray(raw)
+bad[len(bad) // 2] ^= 1
+assert not verify_bytes(vk, bytes(bad)), "ci: tampered proof ACCEPTED"
+print("ci: cross-process verify ok (accept + tamper-reject)")
+PY

@@ -43,10 +43,15 @@ Q_MOD = FQ.modulus
 @dataclasses.dataclass(frozen=True)
 class AnchorClaim:
     """One step-(a) claim on an uncommitted activation / gradient tensor:
-    its aux slot, its element point (in the tensor's own variables), the
-    drawn batching coefficient, and where its value lives in the bucket
-    sumcheck finals (family, layer, left/right index)."""
-    slot: int
+    its aux slot(s), its element point (in the tensor's own variables),
+    the drawn batching coefficient, and where its value lives in the
+    bucket sumcheck finals (family, layer, left/right index).
+
+    ``slots`` has one entry for a chain operand; a residual-sum operand
+    lists every producer slot — the claimed sumcheck value is then
+    A1(p) + A2(p), matched on the table side by the SAME coefficient on
+    each producer's slot selector (linear split, no extra transcript)."""
+    slots: Tuple[int, ...]
     point: Tuple[int, ...]
     coef: int
     family: str
@@ -91,24 +96,31 @@ def collect_claims(cfg: PipelineConfig, ch: ChallengeSchedule,
     g = cfg.graph
     a_claims: List[AnchorClaim] = []
     g_claims: List[AnchorClaim] = []
-    for (ti, l), c in al.a1.items():      # A^l from fwd instance l+1
+
+    def _operand_slots(family: str, layer: int) -> Tuple[int, ...]:
+        """Producer slot(s) of the instance's activation operand: a chain
+        operand is its own zkrelu slot; a residual sum lists both
+        producers (the claim value splits linearly across them)."""
+        return g.producer_aux_slots(g.instance(family, layer).a_node)
+
+    for (ti, l), c in al.a1.items():      # operand A of fwd instance l+1
         a_claims.append(AnchorClaim(
-            slot=g.aux_slot(g.node_for_layer("zkrelu", l).name),
+            slots=_operand_slots("fwd", l + 1),
             point=_act_point(cfg, ch, points, "fwd", l + 1),
             coef=c, family="fwd", layer=l + 1, idx=0, step=ti))
-    for (ti, l), c in al.a2.items():      # A^l from gw instance l+1
+    for (ti, l), c in al.a2.items():      # operand A of gw instance l+1
         a_claims.append(AnchorClaim(
-            slot=g.aux_slot(g.node_for_layer("zkrelu", l).name),
+            slots=_operand_slots("gw", l + 1),
             point=_gw_point(cfg, ch, points, l + 1, 1),
             coef=c, family="gw", layer=l + 1, idx=1, step=ti))
     for (ti, l), c in al.g1.items():      # G_Z^l from bwd instance l-1
         g_claims.append(AnchorClaim(
-            slot=g.aux_slot(g.node_for_layer("zkrelu", l).name),
+            slots=(g.aux_slot(g.node_for_layer("zkrelu", l).name),),
             point=_act_point(cfg, ch, points, "bwd", l - 1),
             coef=c, family="bwd", layer=l - 1, idx=0, step=ti))
     for (ti, l), c in al.g2.items():      # G_Z^l from gw instance l
         g_claims.append(AnchorClaim(
-            slot=g.aux_slot(g.node_for_layer("zkrelu", l).name),
+            slots=(g.aux_slot(g.node_for_layer("zkrelu", l).name),),
             point=_gw_point(cfg, ch, points, l, 0),
             coef=c, family="gw", layer=l, idx=0, step=ti))
     return a_claims, g_claims
@@ -122,8 +134,9 @@ def _group_claims(cfg: PipelineConfig, claims: List[AnchorClaim]
     groups: Dict[Tuple[int, ...], Dict[int, int]] = {}
     for cl in claims:
         w = groups.setdefault(cl.point, {})
-        slot = cfg.slot(cl.step, cl.slot)
-        w[slot] = (w.get(slot, 0) + cl.coef) % Q_MOD
+        for s in cl.slots:
+            slot = cfg.slot(cl.step, s)
+            w[slot] = (w.get(slot, 0) + cl.coef) % Q_MOD
     return groups
 
 

@@ -1,0 +1,94 @@
+"""The graph-first prover lifecycle: compile -> prove -> verify.
+
+    graph = (GraphBuilder(batch=4).input(16)
+             .dense(16).relu().dense(16).relu()
+             .residual(to=1).dense(16).relu().output())
+    pk, vk = compile(graph, quant=QuantConfig(16, 8), n_steps=T)
+
+    session = ProofSession(pk)
+    for wit in witnesses:                  # T of them
+        session.add_step(wit)
+    proof_bytes = encode_proof(session.prove())
+
+    # any other process, from bytes alone:
+    vk = decode_vk(vk_bytes)
+    assert verify_bytes(vk, proof_bytes)
+
+`compile` is the one-time setup phase: it freezes the graph's bucket and
+slot layout into a `PipelineConfig` and derives every Pedersen/zkReLU
+generator table — reusable across sessions, trajectories and processes.
+The `ProvingKey` carries the full generator tables (big, prover-side
+only); the `VerifyingKey` carries just the graph + quantization geometry
+and re-derives its generators deterministically on first use, so its
+serialized form (`VerifyingKey.to_bytes`) is a few hundred bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+from repro.core.quantfc import QuantConfig
+from repro.core.pipeline.config import (PipelineConfig, PipelineKeys,
+                                        make_keys)
+from repro.core.pipeline.graph import LayerGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class ProvingKey:
+    """Prover-side setup artifact: config + full generator tables."""
+    keys: PipelineKeys
+
+    @property
+    def cfg(self) -> PipelineConfig:
+        return self.keys.cfg
+
+    @property
+    def graph(self) -> LayerGraph:
+        return self.keys.cfg.graph
+
+
+@dataclasses.dataclass(frozen=True)
+class VerifyingKey:
+    """Verifier-side setup artifact: graph + quantization geometry.
+
+    Generator tables derive lazily (deterministic label-based
+    derivation, identical to the prover's), so the key serializes to a
+    few hundred bytes and `verify_bytes` needs no session state."""
+    cfg: PipelineConfig
+
+    @functools.cached_property
+    def keys(self) -> PipelineKeys:
+        return make_keys(self.cfg)
+
+    @property
+    def graph(self) -> LayerGraph:
+        return self.cfg.graph
+
+    def to_bytes(self) -> bytes:
+        from repro.core.pipeline.proofio import encode_vk
+        return encode_vk(self)
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "VerifyingKey":
+        from repro.core.pipeline.proofio import decode_vk
+        return decode_vk(data)
+
+
+def compile(graph: LayerGraph, quant: Optional[QuantConfig] = None,
+            n_steps: int = 1) -> Tuple[ProvingKey, VerifyingKey]:
+    """One-time setup for a proof graph: freeze the bucket/slot layout
+    and derive the commitment generators.
+
+    The graph is the single source of truth — shapes, slot maps, shape
+    buckets and the challenge-schedule geometry all derive from it; only
+    the quantization (`quant`) and the aggregation window (`n_steps`)
+    are free parameters.  Returns ``(ProvingKey, VerifyingKey)``; both
+    wrap the same deterministic generator derivation, so a vk
+    reconstructed from bytes in another process verifies proofs made
+    with this pk."""
+    quant = quant if quant is not None else QuantConfig()
+    cfg = PipelineConfig.from_graph(graph, q_bits=quant.q_bits,
+                                    r_bits=quant.r_bits, n_steps=n_steps)
+    keys = make_keys(cfg)
+    return ProvingKey(keys=keys), VerifyingKey(cfg=cfg)

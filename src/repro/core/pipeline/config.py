@@ -21,7 +21,8 @@ import functools
 from typing import Optional, Tuple
 
 from repro.core import pedersen, zkrelu
-from repro.core.pipeline.graph import LayerGraph, build_fcnn_graph
+from repro.core.pipeline.graph import (LayerGraph, LayerOp, build_fcnn_graph,
+                                       graph_widths)
 from repro.core.pipeline.tables import log2_exact, next_pow2
 
 
@@ -34,6 +35,9 @@ class PipelineConfig:
     r_bits: int = 8
     n_steps: int = 1      # T: training steps aggregated into one proof
     widths: Optional[Tuple[int, ...]] = None   # shape table d_0..d_L
+    #: explicit graph nodes (residual MLPs etc.); None -> chain fcnn
+    #: built from `widths`.  `compile()` is the usual way to set this.
+    graph_spec: Optional[Tuple[LayerOp, ...]] = None
 
     def __post_init__(self):
         assert self.n_layers >= 2, "pipeline needs >= 2 layers (eq. 33)"
@@ -50,6 +54,17 @@ class PipelineConfig:
                 "widths must be d_0..d_L (n_layers + 1 entries)"
             assert all(w >= 1 for w in self.widths)
 
+    @classmethod
+    def from_graph(cls, graph: LayerGraph, q_bits: int = 16,
+                   r_bits: int = 8, n_steps: int = 1) -> "PipelineConfig":
+        """Derive the full config from a `LayerGraph`: the graph is the
+        single source of truth for shapes; only the quantization and the
+        aggregation window are free parameters."""
+        widths = graph_widths(graph)
+        return cls(n_layers=len(widths) - 1, batch=graph.batch,
+                   q_bits=q_bits, r_bits=r_bits, n_steps=n_steps,
+                   widths=widths, graph_spec=graph.nodes)
+
     @property
     def is_uniform(self) -> bool:
         return len(set(self.widths)) == 1
@@ -57,6 +72,8 @@ class PipelineConfig:
     @functools.cached_property
     def graph(self) -> LayerGraph:
         """The layer-graph IR every pipeline stage iterates over."""
+        if self.graph_spec is not None:
+            return LayerGraph(self.graph_spec)
         return build_fcnn_graph(self.widths, self.batch)
 
     # -- stacked-axis geometry (all powers of two) ------------------------
@@ -156,6 +173,14 @@ class PipelineKeys:
     ky: pedersen.CommitKey        # labels, stacked over steps (y_stack)
     k_bq: pedersen.CommitKey      # B_{Q-1} under the G-column basis
     validity: zkrelu.ValidityKeys
+
+    def slot_key(self, spec) -> pedersen.CommitKey:
+        """The commitment key of one schema `TensorSlot` (bit-matrix
+        slots use k_bq via `pedersen.commit_bits` instead)."""
+        if spec.bits:
+            return self.k_bq
+        return {"aux": self.kd, "weight": self.kw,
+                "label": self.ky}[spec.axis]
 
 
 def make_keys(cfg: PipelineConfig) -> PipelineKeys:

@@ -82,18 +82,45 @@ class MatmulInstance:
     """One matmul relation of one layer (replicated per training step).
 
     The claim tensor is the product result: Z^l for fwd (eq. 30),
-    G_A^l for bwd (eq. 33), G_W^l for gw (eq. 34).  ``claim_slot`` is
-    the stacked-axis slot the claim reduces to (aux slot for fwd/bwd,
-    weight slot for gw); ``inner`` is the padded inner dimension — the
-    sumcheck table length and therefore the bucket key.
+    G_A^l for bwd (eq. 33), G_W^l for gw (eq. 34).  ``claim_slots`` are
+    the stacked-axis slots the claim reduces to (aux slots for fwd/bwd,
+    weight slot for gw) — more than one exactly when the claim tensor is
+    the gradient of a residual sum, whose committed decomposition splits
+    linearly over every producer slot; ``inner`` is the padded inner
+    dimension — the sumcheck table length and therefore the bucket key.
     """
     family: str
     layer: int
     claim_rows: int        # padded rows of the claim tensor
     claim_cols: int        # padded cols of the claim tensor
     inner: int             # padded contraction length (bucket key)
-    claim_slot: int        # slot index on the aux (fwd/bwd) or weight (gw) axis
+    claim_slots: Tuple[int, ...]   # aux (fwd/bwd) or weight (gw) slot indices
     a_node: str            # activation operand node name ("" for bwd)
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSlot:
+    """One named committed-tensor family an op kind contributes to.
+
+    ``axis`` names the stacked commitment the tensors land in: "aux"
+    (per-(step, aux-node) slots under key kd), "weight" (per-(step,
+    weight-node) slots under kw) or "label" (per-step, under ky).
+    ``bits`` marks the B_{Q-1} bit matrix, committed under the zkReLU
+    G-column basis via `pedersen.commit_bits` instead of an MSM.
+    ``pad_shape(op, graph)`` gives the padded (rows, cols) of one node's
+    tensor inside its slot; None means the node's own padded shape.
+
+    The ordered union of these specs over a graph's nodes
+    (`LayerGraph.commit_slots`) IS the commitment schema: witness
+    stacking, the commit phase, blind drawing, transcript absorption and
+    proof serialization all iterate it, so a new op kind only declares
+    its slots here and every downstream layer picks them up.
+    """
+    name: str
+    axis: str                  # "aux" | "weight" | "label"
+    bits: bool = False
+    pad_shape: Optional[Callable[["LayerOp", "LayerGraph"],
+                                 Tuple[int, int]]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +132,7 @@ class OpSpec:
     validate: Callable[["LayerOp", "LayerGraph"], None]
     extract: Callable[["LayerOp", object], Dict[str, np.ndarray]]
     relations: Callable[["LayerOp", "LayerGraph"], List[MatmulInstance]]
+    slots: Tuple[TensorSlot, ...] = ()
 
 
 OP_REGISTRY: Dict[str, OpSpec] = {}
@@ -174,11 +202,24 @@ def _extract_output_grad(op: LayerOp, wit) -> Dict[str, np.ndarray]:
 
 
 def _extract_residual(op: LayerOp, wit) -> Dict[str, np.ndarray]:
-    raise NotImplementedError(
-        "residual_add is a first-class IR node (shape-checked, claim-"
-        "routable through the anchor: a claim on A1+A2 splits linearly "
-        "onto both producer slots) but quantfc witness generation does "
-        "not emit residual trajectories yet — see ROADMAP.md")
+    # A residual sum commits nothing of its own: its value is implied by
+    # its producers' committed decompositions, and every claim on it
+    # splits linearly onto their slots (see producer_aux_slots).
+    return {}
+
+
+def _validate_residual(op: LayerOp, graph: "LayerGraph") -> None:
+    if len(op.inputs) != 2:
+        raise ValueError(f"{op.name}: residual_add takes exactly 2 inputs")
+    _validate_same_shape(op, graph)
+    for src in op.inputs:
+        kind = graph.node(src).kind
+        if kind not in ("zkrelu", "residual_add"):
+            raise ValueError(
+                f"{op.name}: residual producer {src!r} is a {kind!r} node; "
+                "claims on a residual sum must discharge onto committed "
+                "activation slots, so both producers must be zkrelu (or "
+                "nested residual_add) nodes")
 
 
 def _relations_qmatmul(op: LayerOp, graph: "LayerGraph") -> List[MatmulInstance]:
@@ -188,10 +229,14 @@ def _relations_qmatmul(op: LayerOp, graph: "LayerGraph") -> List[MatmulInstance]
     gw  (eq. 34): G_W^l = G_Z^{l,T} A^{l-1}, claim on weight slot l.
     bwd (eq. 33): G_A^{l-1} = G_Z^l W^{l,T} — attached to layer l because
     it contracts over layer l's OUT width and reads W^l; the claim lands
-    on layer l-1's aux slot.  Layer 1 has no upstream activation, so it
-    emits no bwd instance (and its A-operand is the input node, whose
-    claims discharge through the per-sample data commitments instead of
-    the anchor).
+    on the producer slot(s) of layer l's OPERAND: the upstream zkrelu
+    node for a chain, BOTH producer slots when the operand is a residual
+    sum (the gradient of A1 + A2 flows to both branches, and each
+    branch's committed gap/rga decomposes its accumulated total, so the
+    instance enters its bucket with the SUM of both slot coefficients).
+    Layer 1 has no upstream activation, so it emits no bwd instance (and
+    its A-operand is the input node, whose claims discharge through the
+    per-sample data commitments instead of the anchor).
     """
     (src,) = op.inputs
     a = graph.node(src)
@@ -200,30 +245,46 @@ def _relations_qmatmul(op: LayerOp, graph: "LayerGraph") -> List[MatmulInstance]
     out.append(MatmulInstance(
         family="fwd", layer=op.layer, claim_rows=op.rows_pad,
         claim_cols=op.cols_pad, inner=a.cols_pad,
-        claim_slot=graph.aux_slot(act.name), a_node=src))
+        claim_slots=(graph.aux_slot(act.name),), a_node=src))
     if op.layer > 1:
-        prev_act = graph.node_for_layer("zkrelu", op.layer - 1)
         out.append(MatmulInstance(
-            family="bwd", layer=op.layer - 1, claim_rows=prev_act.rows_pad,
-            claim_cols=prev_act.cols_pad, inner=op.cols_pad,
-            claim_slot=graph.aux_slot(prev_act.name), a_node=""))
+            family="bwd", layer=op.layer - 1, claim_rows=a.rows_pad,
+            claim_cols=a.cols_pad, inner=op.cols_pad,
+            claim_slots=graph.producer_aux_slots(src), a_node=""))
     out.append(MatmulInstance(
         family="gw", layer=op.layer, claim_rows=op.cols_pad,
         claim_cols=a.cols_pad, inner=op.rows_pad,
-        claim_slot=graph.weight_slot(op.name), a_node=src))
+        claim_slots=(graph.weight_slot(op.name),), a_node=src))
     return out
+
+
+def _w_shape(op: LayerOp, graph: "LayerGraph") -> Tuple[int, int]:
+    return graph.weight_shape(op)
+
+
+def _gw_shape(op: LayerOp, graph: "LayerGraph") -> Tuple[int, int]:
+    rp, cp = graph.weight_shape(op)
+    return cp, rp           # G_W^l = G_Z^{l,T} A^{l-1} is (out, in)
 
 
 register_op(OpSpec("input", False, False, _validate_input,
                    _no_tensors, _no_relations))
 register_op(OpSpec("qmatmul", False, True, _validate_qmatmul,
-                   _extract_qmatmul, _relations_qmatmul))
+                   _extract_qmatmul, _relations_qmatmul,
+                   slots=(TensorSlot("w", "weight", pad_shape=_w_shape),
+                          TensorSlot("gw", "weight", pad_shape=_gw_shape))))
 register_op(OpSpec("zkrelu", True, False, _validate_same_shape,
-                   _extract_zkrelu, _no_relations))
-register_op(OpSpec("residual_add", False, False, _validate_same_shape,
+                   _extract_zkrelu, _no_relations,
+                   slots=(TensorSlot("zpp", "aux"),
+                          TensorSlot("bq", "aux", bits=True),
+                          TensorSlot("rz", "aux"),
+                          TensorSlot("gap", "aux"),
+                          TensorSlot("rga", "aux"))))
+register_op(OpSpec("residual_add", False, False, _validate_residual,
                    _extract_residual, _no_relations))
 register_op(OpSpec("output_grad", False, False, _validate_same_shape,
-                   _extract_output_grad, _no_relations))
+                   _extract_output_grad, _no_relations,
+                   slots=(TensorSlot("y", "label"),)))
 
 
 # ---------------------------------------------------------------------------
@@ -292,6 +353,72 @@ class LayerGraph:
 
     def weight_slot(self, name: str) -> int:
         return [n.name for n in self.weight_nodes].index(name)
+
+    def producer_aux_slots(self, name: str) -> Tuple[int, ...]:
+        """The aux slots a claim on node `name`'s value decomposes onto.
+
+        A zkrelu node is its own slot; a residual_add resolves through
+        both producers (a claim on A1 + A2 at point p IS the sum of the
+        claims on A1 and A2 at p, so it splits linearly onto every
+        producer slot — the FAC4DNN claim routing for skip connections).
+        """
+        node = self.node(name)
+        if OP_REGISTRY[node.kind].owns_aux_slot:
+            return (self.aux_slot(name),)
+        if node.kind == "residual_add":
+            out: List[int] = []
+            for src in node.inputs:
+                out.extend(self.producer_aux_slots(src))
+            return tuple(out)
+        raise ValueError(f"{name}: {node.kind!r} node owns no aux slot and "
+                         "is not a residual sum of slot owners")
+
+    # -- commitment schema ------------------------------------------------
+    @functools.cached_property
+    def commit_slots(self) -> Tuple[TensorSlot, ...]:
+        """The ordered named-tensor commitment schema of this graph: the
+        union of every node's `OpSpec.slots`, label axis first, then
+        weight, then aux (the canonical transcript absorption order),
+        declaration order within an axis.  Witness stacking, the commit
+        phase, blind drawing and proof serialization all iterate this —
+        a new op kind's tensors flow through by declaring slots alone."""
+        axis_rank = {"label": 0, "weight": 1, "aux": 2}
+        seen, out = set(), []
+        for op in self.nodes:
+            for s in OP_REGISTRY[op.kind].slots:
+                if s.name not in seen:
+                    seen.add(s.name)
+                    out.append(s)
+        return tuple(sorted(out, key=lambda s: axis_rank[s.axis]))
+
+    def slot_nodes(self, spec: TensorSlot) -> Tuple[LayerOp, ...]:
+        """The nodes contributing tensors to one named commitment slot,
+        in stacked-slot order."""
+        if spec.axis == "aux":
+            return self.aux_nodes
+        if spec.axis == "weight":
+            return self.weight_nodes
+        return (self.output_node,)
+
+    def slot_pad_shape(self, spec: TensorSlot, op: LayerOp) -> Tuple[int, int]:
+        if spec.pad_shape is not None:
+            return spec.pad_shape(op, self)
+        return op.rows_pad, op.cols_pad
+
+    # -- node activation values (prover-side operand resolution) ----------
+    def node_value(self, name: str, wit) -> np.ndarray:
+        """The int64 forward value of an activation-producing node in one
+        `StepWitness`: input -> x, zkrelu layer l -> A^l, residual_add ->
+        the elementwise sum of its producers (computed, never committed)."""
+        node = self.node(name)
+        if node.kind == "input":
+            return wit.x
+        if node.kind == "zkrelu":
+            return wit.a[node.layer]
+        if node.kind == "residual_add":
+            vals = [self.node_value(src, wit) for src in node.inputs]
+            return vals[0] + vals[1]
+        raise ValueError(f"{name}: {node.kind!r} has no activation value")
 
     # -- padded geometry --------------------------------------------------
     @property
@@ -416,6 +543,141 @@ def build_fcnn_graph(widths: Tuple[int, ...], batch: int) -> LayerGraph:
     nodes.append(LayerOp("loss", "output_grad", (prev,),
                          (batch, widths[L]), layer=L))
     return LayerGraph(tuple(nodes))
+
+
+def build_residual_fcnn_graph(widths: Tuple[int, ...], batch: int,
+                              skips: Dict[int, int]) -> LayerGraph:
+    """A residual MLP: ``skips`` maps matmul layer l -> earlier
+    activation layer j (1 <= j <= l - 2), meaning layer l's operand is
+    A^{l-1} + A^j (both zkrelu outputs, so shapes must match:
+    widths[l-1] == widths[j]).  Equivalent to `GraphBuilder` with a
+    ``residual(to=...)`` before each skipped dense."""
+    widths = tuple(int(w) for w in widths)
+    L = len(widths) - 1
+    b = GraphBuilder(batch).input(widths[0])
+    for l in range(1, L + 1):
+        if l in skips:
+            b.residual(to=skips[l])
+        b.dense(widths[l]).relu()
+    return b.output()
+
+
+class GraphBuilder:
+    """Fluent frontend for proof graphs:
+
+        graph = (GraphBuilder(batch=4)
+                 .input(16).dense(16).relu()
+                 .dense(16).relu()
+                 .residual(to=1)          # tip := act2 + act1
+                 .dense(8).relu()
+                 .output())
+
+    ``dense(h)`` appends a quantized matmul to width h consuming the
+    current tip, ``relu()`` its zkReLU rescale/activation, and
+    ``residual(to=...)`` replaces the tip with tip + (an earlier
+    activation, by layer index or node name) so the NEXT dense consumes
+    the sum.  ``output()`` closes the graph and returns the validated
+    `LayerGraph`."""
+
+    def __init__(self, batch: int):
+        self.batch = int(batch)
+        self._nodes: List[LayerOp] = []
+        self._tip: Optional[str] = None
+        self._layer = 0
+        self._n_res = 0
+
+    def _shape(self, name: str) -> Tuple[int, int]:
+        for n in self._nodes:
+            if n.name == name:
+                return n.shape
+        raise KeyError(name)
+
+    def _expect(self, what: str, ok: bool) -> None:
+        if not ok:
+            raise ValueError(f"GraphBuilder: {what}")
+
+    def input(self, d: int) -> "GraphBuilder":
+        self._expect("input() must come first", not self._nodes)
+        self._nodes.append(LayerOp("x", "input", (), (self.batch, int(d))))
+        self._tip = "x"
+        return self
+
+    def dense(self, h: int) -> "GraphBuilder":
+        self._expect("dense() needs an input/relu/residual tip",
+                     self._tip is not None and not self._tip.startswith("mm"))
+        self._layer += 1
+        l = self._layer
+        self._nodes.append(LayerOp(f"mm{l}", "qmatmul", (self._tip,),
+                                   (self.batch, int(h)), layer=l))
+        self._tip = f"mm{l}"
+        return self
+
+    def relu(self) -> "GraphBuilder":
+        self._expect("relu() must follow dense()",
+                     self._tip is not None and self._tip.startswith("mm"))
+        l = self._layer
+        self._nodes.append(LayerOp(f"act{l}", "zkrelu", (self._tip,),
+                                   self._shape(self._tip), layer=l))
+        self._tip = f"act{l}"
+        return self
+
+    def residual(self, to) -> "GraphBuilder":
+        """tip := tip + act{to}; `to` is an activation layer index or a
+        node name of an earlier zkrelu / residual node."""
+        self._expect("residual() must follow relu()",
+                     self._tip is not None and self._tip.startswith("act"))
+        src = f"act{to}" if isinstance(to, int) else str(to)
+        self._expect(f"residual target {src!r} must be an earlier node",
+                     any(n.name == src for n in self._nodes))
+        self._expect(
+            f"residual shapes differ: {self._shape(self._tip)} vs "
+            f"{self._shape(src)}", self._shape(self._tip) == self._shape(src))
+        self._n_res += 1
+        name = f"res{self._n_res}"
+        self._nodes.append(LayerOp(name, "residual_add", (self._tip, src),
+                                   self._shape(self._tip), layer=self._layer))
+        self._tip = name
+        return self
+
+    def output(self) -> LayerGraph:
+        self._expect("output() must follow relu()",
+                     self._tip is not None and self._tip.startswith("act"))
+        self._expect("graph needs >= 2 layers (eq. 33)", self._layer >= 2)
+        self._nodes.append(LayerOp("loss", "output_grad", (self._tip,),
+                                   self._shape(self._tip), layer=self._layer))
+        return LayerGraph(tuple(self._nodes))
+
+def graph_skips(graph: LayerGraph) -> Dict[int, int]:
+    """Recover the matmul-layer -> skip-source-layer map of a (possibly
+    residual) chain-backbone graph — the shape quantfc's witness
+    generator consumes.
+
+    Raises for NESTED residual sums: the IR validates them (and the
+    claim routing handles them), but quantfc's chain emitter only
+    computes single-level skips, so silently flattening one would
+    produce witnesses inconsistent with the graph's claim routing."""
+    out: Dict[int, int] = {}
+    for n in graph.nodes:
+        if n.kind == "qmatmul":
+            src = graph.node(n.inputs[0])
+            if src.kind == "residual_add":
+                tip, skip = (graph.node(s) for s in src.inputs)
+                if tip.kind != "zkrelu" or skip.kind != "zkrelu":
+                    raise ValueError(
+                        f"{src.name}: nested residual_add producers are "
+                        "valid IR but quantfc's witness emitter supports "
+                        "single-level skips only (both producers must be "
+                        "zkrelu nodes)")
+                out[n.layer] = skip.layer
+    return out
+
+
+def graph_widths(graph: LayerGraph) -> Tuple[int, ...]:
+    """The chain shape table d_0..d_L of a graph (input width, then one
+    out-width per qmatmul layer, in layer order)."""
+    mms = sorted((n for n in graph.nodes if n.kind == "qmatmul"),
+                 key=lambda n: n.layer)
+    return (graph.input_node.shape[1],) + tuple(n.shape[1] for n in mms)
 
 
 PROOF_GRAPH_BUILDERS: Dict[str, Callable[..., LayerGraph]] = {

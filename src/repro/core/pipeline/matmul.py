@@ -47,23 +47,29 @@ def slot_axis_point(ch: ChallengeSchedule, family: str) -> List[int]:
     return {"fwd": ch.u_sf, "bwd": ch.u_sb, "gw": ch.u_sw}[family]
 
 
-def _slot_of(cfg: PipelineConfig, inst: MatmulInstance, ti: int) -> int:
+def _slots_of(cfg: PipelineConfig, inst: MatmulInstance,
+              ti: int) -> List[int]:
     if inst.family == "gw":
-        return cfg.wslot(ti, inst.claim_slot)
-    return cfg.slot(ti, inst.claim_slot)
+        return [cfg.wslot(ti, s) for s in inst.claim_slots]
+    return [cfg.slot(ti, s) for s in inst.claim_slots]
 
 
 def bucket_coefs(cfg: PipelineConfig, ch: ChallengeSchedule,
                  bucket) -> List[int]:
-    """Public pair coefficients e(u_slot)[slot] * padfac, t-major, in the
-    bucket's pair order (identical on both sides of the protocol)."""
+    """Public pair coefficients sum_s e(u_slot)[slot(t, s)] * padfac,
+    t-major, in the bucket's pair order (identical on both sides of the
+    protocol).  The sum over an instance's claim slots is the residual
+    backward split: the gradient of A1 + A2 feeds both producers'
+    committed gap/rga decompositions, so ONE sumcheck pair carries both
+    slot coefficients."""
     e_slot = hexpand_point(slot_axis_point(ch, bucket.family))
     glob = ch.glob(bucket.family)
     out = []
     for ti in range(cfg.n_steps):
         for inst in bucket.instances:
             _, _, padfac = instance_slices(inst, glob)
-            out.append(e_slot[_slot_of(cfg, inst, ti)] * padfac % Q_MOD)
+            c = sum(e_slot[s] for s in _slots_of(cfg, inst, ti)) % Q_MOD
+            out.append(c * padfac % Q_MOD)
     return out
 
 

@@ -35,25 +35,31 @@ from repro.core.pipeline.witness import (StackedWitness, build_field_tables,
 
 @dataclasses.dataclass
 class SessionCommitments:
-    """Everything the trainer publishes before the interaction; the x
-    list holds the per-sample data commitments of ALL T steps, t-major
-    (Section 4.4 folded-data path)."""
+    """Everything the trainer publishes before the interaction, keyed by
+    the graph's commitment schema (`LayerGraph.commit_slots`): ``slots``
+    maps each declared tensor-slot name ("y", "w", "zpp", ...) to its
+    stacked Pedersen commitment, in schema order; the x list holds the
+    per-sample data commitments of ALL T steps, t-major (Section 4.4
+    folded-data path).  Slot commitments are also readable as attributes
+    (``coms.zpp``)."""
     x: List[int]
-    y: int
-    w: int
-    gw: int
-    zpp: int
-    bq: int
-    rz: int
-    gap: int
-    rga: int
+    slots: Dict[str, int]
     validity: zkrelu.ValidityCommitments
 
+    def __getattr__(self, name: str):
+        if name.startswith("_") or name == "slots":
+            raise AttributeError(name)
+        try:
+            return self.slots[name]
+        except KeyError:
+            raise AttributeError(name) from None
+
     def as_ints(self) -> List[int]:
-        return (self.x + [self.y, self.w, self.gw, self.zpp, self.bq,
-                          self.rz, self.gap, self.rga,
-                          self.validity.com_b_ip, self.validity.com_bq1p,
-                          self.validity.com_br_ip])
+        """Transcript absorption order: x rows, then the schema slots in
+        declaration order, then the validity commitments."""
+        return (self.x + list(self.slots.values())
+                + [self.validity.com_b_ip, self.validity.com_bq1p,
+                   self.validity.com_br_ip])
 
 
 @dataclasses.dataclass
@@ -83,26 +89,30 @@ class AggregatedProof:
     n_steps: int = 1
 
     def size_bytes(self) -> int:
-        n = len(self.coms.as_ints()) + len(self.openings)
-        for sc in (*self.sc_fwd, *self.sc_bwd, *self.sc_gw, self.sc_anchor):
-            n += sum(len(m) for m in sc.messages)
-        for finals in (self.fwd_finals, self.bwd_finals, self.gw_finals):
-            n += sum(len(f) for f in finals)
-        n += (len(self.fwd_claims) + len(self.bwd_claims)
-              + len(self.gw_claims) + len(self.anchor_finals))
-        total = 32 * n
-        total += sum(p.size_bytes() for p in self.ipas.values())
-        total += self.validity.size_bytes()
-        return total
+        """Exact wire size: the length of the canonical byte encoding
+        (`proofio.encode_proof`), not an in-memory estimate."""
+        from repro.core.pipeline.proofio import encode_proof
+        return len(encode_proof(self))
+
+
+def _as_pipeline_keys(keys) -> PipelineKeys:
+    """Accept either a raw `PipelineKeys` or a `ProvingKey` wrapper (the
+    `compile()` artifact) everywhere the prover takes key material."""
+    if isinstance(keys, PipelineKeys):
+        return keys
+    inner = getattr(keys, "keys", None)
+    if isinstance(inner, PipelineKeys):
+        return inner
+    raise TypeError(f"expected PipelineKeys or ProvingKey, got {keys!r}")
 
 
 class SessionProver:
     """Two-phase prover over a stacked witness: commit, then prove."""
 
-    def __init__(self, keys: PipelineKeys, rng: np.random.Generator,
+    def __init__(self, keys, rng: np.random.Generator,
                  profile: Optional[PhaseProfile] = None):
-        self.keys = keys
-        self.cfg = keys.cfg
+        self.keys = _as_pipeline_keys(keys)
+        self.cfg = self.keys.cfg
         self.rng = rng
         self.profile = profile if profile is not None else PhaseProfile()
 
@@ -113,41 +123,40 @@ class SessionProver:
 
     def _commit(self, sw: StackedWitness) -> SessionCommitments:
         cfg, keys, rng = self.cfg, self.keys, self.rng
+        schema = cfg.graph.commit_slots
         self.sw = sw
         self.tabs = build_field_tables(sw)
-        self.blinds = {name: rand_scalar(rng) for name in
-                       ("y", "w", "gw", "zpp", "bq", "rz", "gap", "rga")}
+        self.blinds = {spec.name: rand_scalar(rng) for spec in schema}
         self.x_blinds = [rand_scalar(rng) for _ in sw.x]
 
         # All multi-exponentiation commitments batch into TWO msm_many
         # dispatches: one for the T*B per-sample data rows, one for the
-        # stacked tensors (each row's blind rides as an extra (h, blind)
-        # MSM term, so every element matches the sequential
-        # `pedersen.commit` bit-for-bit).
+        # stacked slot tensors in schema order (each row's blind rides
+        # as an extra (h, blind) MSM term, so every element matches the
+        # sequential `pedersen.commit` bit-for-bit).  Bit-matrix slots
+        # (B_{Q-1}) commit under the zkReLU G-column basis instead.
         com_x = group.decode_group_many(pedersen.commit_many(
             [(keys.kx, enc_tensor(x), b)
              for x, b in zip(sw.x, self.x_blinds)]))
-        com_y, com_w, com_gw, com_zpp, com_rz, com_gap, com_rga = \
-            group.decode_group_many(pedersen.commit_many([
-                (keys.ky, self.tabs.y_t, self.blinds["y"]),
-                (keys.kw, self.tabs.w_t, self.blinds["w"]),
-                (keys.kw, self.tabs.gw_t, self.blinds["gw"]),
-                (keys.kd, self.tabs.zpp_t, self.blinds["zpp"]),
-                (keys.kd, self.tabs.rz_t, self.blinds["rz"]),
-                (keys.kd, self.tabs.gap_t, self.blinds["gap"]),
-                (keys.kd, self.tabs.rga_t, self.blinds["rga"])]))
-        com_bq = pedersen.commit_bits(keys.k_bq, sw.bq_s.astype(np.uint32),
-                                      self.blinds["bq"])
+        msm_specs = [s for s in schema if not s.bits]
+        msm_coms = group.decode_group_many(pedersen.commit_many(
+            [(keys.slot_key(s), self.tabs.tabs[s.name],
+              self.blinds[s.name]) for s in msm_specs]))
+        slot_coms = {s.name: c for s, c in zip(msm_specs, msm_coms)}
+        for s in schema:
+            if s.bits:
+                slot_coms[s.name] = group.decode_group(pedersen.commit_bits(
+                    keys.k_bq, sw.tensors[s.name].astype(np.uint32),
+                    self.blinds[s.name]))
+        slot_coms = {s.name: slot_coms[s.name] for s in schema}
 
         self.aux_bits = zkrelu.build_aux_bits(
             sw.zpp_s, sw.gap_s, sw.bq_s, sw.rz_s, sw.rga_s,
             cfg.q_bits, cfg.r_bits)
         vcoms, self.vblinds = zkrelu.commit_validity(keys.validity,
                                                      self.aux_bits, rng)
-        self.coms = SessionCommitments(
-            x=com_x, y=com_y, w=com_w, gw=com_gw, zpp=com_zpp,
-            bq=group.decode_group(com_bq), rz=com_rz,
-            gap=com_gap, rga=com_rga, validity=vcoms)
+        self.coms = SessionCommitments(x=com_x, slots=slot_coms,
+                                       validity=vcoms)
         return self.coms
 
     # -- interactive phase (Fiat-Shamir) -----------------------------------
@@ -190,11 +199,11 @@ class ProofSession:
     """Streaming front end: add step witnesses as training progresses,
     then emit the single aggregated proof for the window."""
 
-    def __init__(self, keys: PipelineKeys,
+    def __init__(self, keys,
                  rng: Optional[np.random.Generator] = None,
                  label: bytes = b"zkdl"):
-        self.keys = keys
-        self.cfg = keys.cfg
+        self.keys = _as_pipeline_keys(keys)
+        self.cfg = self.keys.cfg
         self.rng = rng if rng is not None else np.random.default_rng()
         self.label = label
         self._steps: List[StepWitness] = []

@@ -32,6 +32,11 @@ def verify(keys: PipelineKeys, proof: AggregatedProof,
             raise ValueError("step-count")
         if len(proof.coms.x) != cfg.n_steps * cfg.batch:
             raise ValueError("x-commitment-count")
+        # the slot names AND their order are part of the format contract
+        # (transcript absorption order + every coms.<name> lookup below)
+        if list(proof.coms.slots) != [s.name for s in
+                                      cfg.graph.commit_slots]:
+            raise ValueError("commitment-schema")
         t.absorb_ints(b"coms", proof.coms.as_ints())
         ch = ChallengeSchedule.draw(t, cfg)
         t.absorb_ints(b"op1", [op[k] for k in ("a1", "a2", "a3",
@@ -58,3 +63,22 @@ def verify_session(keys: PipelineKeys, proof: AggregatedProof,
                    label: bytes = b"zkdl",
                    trace: list | None = None) -> bool:
     return verify(keys, proof, Transcript(label), trace=trace)
+
+
+def verify_bytes(vk, proof_bytes: bytes, label: bytes = b"zkdl",
+                 trace: list | None = None) -> bool:
+    """The deployment-side verifier: accept/reject from SERIALIZED bytes
+    and a `VerifyingKey` alone — no session, no prover state.  Malformed
+    byte streams reject (with the decode error in ``trace``) rather than
+    raise: a forged proof must never crash the verifier."""
+    from repro.core.pipeline.proofio import ProofDecodeError, decode_proof
+    from repro.core.pipeline.session import _as_pipeline_keys
+
+    try:
+        proof = decode_proof(proof_bytes)
+    except ProofDecodeError as exc:
+        if trace is not None:
+            trace.append(f"decode: {exc}")
+        return False
+    return verify(_as_pipeline_keys(vk), proof, Transcript(label),
+                  trace=trace)

@@ -1,16 +1,22 @@
 """Witness stacking: T `StepWitness`es -> one stacked proof witness.
 
-Stacking is driven by the layer graph's slot maps: each aux node's
-tensors land in slot ``cfg.slot(t, graph.aux_slot(node))``, each weight
-node's in ``cfg.wslot(t, graph.weight_slot(node))``, with the element
-variables low, the node variables next, and the step variables on top
-(little-endian MLE ordering).  Heterogeneous shapes are zero-padded
-twice: each (rows, cols) tensor first pads per-dimension to powers of
-two (so its own row/column MLE variables stay aligned), then the padded
-block zero-extends to the common slot area.  Zero padding keeps every
-stacked relation exact: zero slots contribute nothing to any sumcheck
-and pass the zkReLU range constraints trivially.  A uniform-width graph
-makes both paddings no-ops, reproducing the seed layout bit-for-bit.
+Stacking is driven entirely by the layer graph's commitment schema
+(`LayerGraph.commit_slots`): each named tensor slot an `OpSpec` declares
+("zpp", "w", "y", ...) becomes one stacked int64 vector, with each
+node's tensor landing at ``cfg.slot(t, graph.aux_slot(node))`` (aux
+axis) / ``cfg.wslot(t, graph.weight_slot(node))`` (weight axis) /
+step ``t`` (label axis), element variables low, node variables next,
+step variables on top (little-endian MLE ordering).  A new op kind's
+tensors flow through by declaring `TensorSlot`s — nothing here names a
+specific tensor.
+
+Heterogeneous shapes are zero-padded twice: each (rows, cols) tensor
+first pads per-dimension to powers of two (so its own row/column MLE
+variables stay aligned), then the padded block zero-extends to the
+common slot area.  Zero padding keeps every stacked relation exact:
+zero slots contribute nothing to any sumcheck and pass the zkReLU range
+constraints trivially.  A uniform-width graph makes both paddings
+no-ops, reproducing the seed layout bit-for-bit.
 """
 from __future__ import annotations
 
@@ -24,9 +30,6 @@ from repro.core.quantfc import StepWitness
 from repro.core.pipeline.config import PipelineConfig
 from repro.core.pipeline.graph import extract_node_tensors
 from repro.core.pipeline.tables import enc_tensor
-
-AUX_NAMES = ("zpp", "bq", "rz", "gap", "rga")
-
 
 def pad2d(tensor: np.ndarray, rows_pad: int, cols_pad: int) -> np.ndarray:
     """(r, c) int64 -> (rows_pad, cols_pad) with zero padding."""
@@ -43,37 +46,49 @@ def node_tensors(cfg: PipelineConfig, wit: StepWitness) -> Dict[str, Dict]:
     return extract_node_tensors(cfg.graph, wit)
 
 
-def _stack_aux(per_step: List[Dict[str, Dict]], name: str,
-               cfg: PipelineConfig) -> np.ndarray:
-    """Aux tensor `name` of every (step, node) -> (d_stack,) stacked."""
-    g = cfg.graph
-    out = np.zeros((cfg.t_pad, cfg.l_pad, cfg.d_elem), dtype=np.int64)
-    for t, tensors in enumerate(per_step):
-        for i, node in enumerate(g.aux_nodes):
-            padded = pad2d(tensors[node.name][name],
-                           node.rows_pad, node.cols_pad)
-            out[t, i, : node.elem_pad] = padded.reshape(-1)
-    return out.reshape(-1)
-
-
 @dataclasses.dataclass
 class StackedWitness:
-    """Stacked int64 tensors plus the per-step raw witnesses."""
+    """Slot-keyed stacked int64 tensors plus the per-step raw witnesses.
+
+    ``tensors[name]`` is the stacked vector of commitment slot `name`
+    (d_stack for aux slots, w_stack for weight, y_stack for label); the
+    legacy ``<name>_s`` attributes resolve through it.
+    """
     cfg: PipelineConfig
     steps: List[StepWitness]
-    zpp_s: np.ndarray      # (d_stack,)
-    bq_s: np.ndarray
-    rz_s: np.ndarray
-    gap_s: np.ndarray
-    rga_s: np.ndarray
-    w_s: np.ndarray        # (w_stack,)
-    gw_s: np.ndarray
-    y_s: np.ndarray        # (y_stack,)
+    tensors: Dict[str, np.ndarray]
     x: List[np.ndarray]    # T*B per-sample rows (x_len,), t-major
 
     @property
     def n_steps(self) -> int:
         return len(self.steps)
+
+    def __getattr__(self, name: str):
+        if name.endswith("_s"):
+            try:
+                return self.tensors[name[:-2]]
+            except KeyError:
+                pass
+        raise AttributeError(name)
+
+
+def _stack_slot(cfg: PipelineConfig, spec, per_step) -> np.ndarray:
+    """One commitment slot's tensors of every (step, node) -> stacked."""
+    g = cfg.graph
+    if spec.axis == "aux":
+        out = np.zeros((cfg.t_pad, cfg.l_pad, cfg.d_elem), dtype=np.int64)
+    elif spec.axis == "weight":
+        out = np.zeros((cfg.t_pad, cfg.lw_pad, cfg.w_elem), dtype=np.int64)
+    else:                                     # label: per-step, no node axis
+        out = np.zeros((cfg.t_pad, 1, cfg.y_elem), dtype=np.int64)
+    for t, tensors in enumerate(per_step):
+        for i, node in enumerate(g.slot_nodes(spec)):
+            if spec.name not in tensors[node.name]:
+                continue
+            rp, cp = g.slot_pad_shape(spec, node)
+            out[t, i, : rp * cp] = pad2d(tensors[node.name][spec.name],
+                                         rp, cp).reshape(-1)
+    return out.reshape(-1)
 
 
 def stack_witnesses(steps: List[StepWitness],
@@ -97,55 +112,44 @@ def stack_witnesses(steps: List[StepWitness],
                                  f"{wit.w[l - 1].shape} != {want}")
 
     per_step = [node_tensors(cfg, wit) for wit in steps]
+    tensors = {spec.name: _stack_slot(cfg, spec, per_step)
+               for spec in g.commit_slots}
 
-    w_stack = np.zeros((cfg.t_pad, cfg.lw_pad, cfg.w_elem), dtype=np.int64)
-    gw_stack = np.zeros_like(w_stack)
-    y_stack = np.zeros((cfg.t_pad, cfg.y_elem), dtype=np.int64)
-    xs: List[np.ndarray] = []
-    out_node = g.output_node
     x_node = g.input_node
-    for t, (wit, tensors) in enumerate(zip(steps, per_step)):
-        for i, node in enumerate(g.weight_nodes):
-            rp, cp = g.weight_shape(node)
-            w_stack[t, i, : rp * cp] = pad2d(
-                tensors[node.name]["w"], rp, cp).reshape(-1)
-            gw_stack[t, i, : rp * cp] = pad2d(
-                tensors[node.name]["gw"], cp, rp).reshape(-1)
-        y_stack[t] = pad2d(tensors[out_node.name]["y"], out_node.rows_pad,
-                           out_node.cols_pad).reshape(-1)
+    xs: List[np.ndarray] = []
+    for wit in steps:
         x_pad = pad2d(wit.x, cfg.batch, x_node.cols_pad)
         xs.extend(x_pad[i] for i in range(cfg.batch))
 
-    return StackedWitness(
-        cfg=cfg, steps=list(steps),
-        **{f"{name}_s": _stack_aux(per_step, name, cfg)
-           for name in AUX_NAMES},
-        w_s=w_stack.reshape(-1), gw_s=gw_stack.reshape(-1),
-        y_s=y_stack.reshape(-1), x=xs)
+    return StackedWitness(cfg=cfg, steps=list(steps), tensors=tensors, x=xs)
 
 
 @dataclasses.dataclass
 class FieldTables:
     """The stacked witness re-encoded as Montgomery limb tables (prover).
 
-    The per-(step, layer) operand tables are padded to per-node power-of-
-    two shapes so `fix_rows`/`fix_cols` see aligned MLE variables:
-    a_tabs[t][l] is A^l (batch, cols_pad of layer l's activation; l=0 is
-    the padded input), gz_tabs[t][l] is G_Z^{l+1}, w_mats[t][l] is
-    W^{l+1} at its padded (in, out) shape.
+    ``tabs[name]`` is commitment slot `name`'s stacked table (legacy
+    ``<name>_t`` attributes resolve through it).  The per-(step, layer)
+    operand tables are padded to per-node power-of-two shapes so
+    `fix_rows`/`fix_cols` see aligned MLE variables: a_tabs[t][l] is the
+    OPERAND of matmul l+1 — the resolved value of its input node, which
+    for a residual sum is A1 + A2 (computed, never committed; claims on
+    it split onto the producer slots) — gz_tabs[t][l] is G_Z^{l+1},
+    w_mats[t][l] is W^{l+1} at its padded (in, out) shape.
     """
-    zpp_t: jnp.ndarray
-    bq_t: jnp.ndarray
-    rz_t: jnp.ndarray
-    gap_t: jnp.ndarray
-    rga_t: jnp.ndarray
-    w_t: jnp.ndarray
-    gw_t: jnp.ndarray
-    y_t: jnp.ndarray
+    tabs: Dict[str, jnp.ndarray]
     x_tabs: List[jnp.ndarray]            # T*B tables (x_len, 4), t-major
     a_tabs: List[List[jnp.ndarray]]      # [t][l] (B, cpad_l, 4)
     gz_tabs: List[List[jnp.ndarray]]     # [t][l] (B, cpad_{l+1}, 4)
     w_mats: List[List[jnp.ndarray]]      # [t][l] (ipad_{l+1}, opad_{l+1}, 4)
+
+    def __getattr__(self, name: str):
+        if name.endswith("_t"):
+            try:
+                return self.tabs[name[:-2]]
+            except KeyError:
+                pass
+        raise AttributeError(name)
 
 
 def _enc2d(tensor: np.ndarray, rows_pad: int, cols_pad: int) -> jnp.ndarray:
@@ -157,20 +161,16 @@ def build_field_tables(sw: StackedWitness) -> FieldTables:
     cfg = sw.cfg
     g = cfg.graph
     B = cfg.batch
-    cpads = [g.input_node.cols_pad] + [
-        g.node_for_layer("zkrelu", l).cols_pad
-        for l in range(1, cfg.n_layers + 1)]
-    wshapes = [g.weight_shape(g.node_for_layer("qmatmul", l))
-               for l in range(1, cfg.n_layers + 1)]
+    mms = [g.node_for_layer("qmatmul", l)
+           for l in range(1, cfg.n_layers + 1)]
+    operands = [g.node(mm.inputs[0]) for mm in mms]
+    wshapes = [g.weight_shape(mm) for mm in mms]
     return FieldTables(
-        zpp_t=enc_tensor(sw.zpp_s), bq_t=enc_tensor(sw.bq_s),
-        rz_t=enc_tensor(sw.rz_s), gap_t=enc_tensor(sw.gap_s),
-        rga_t=enc_tensor(sw.rga_s), w_t=enc_tensor(sw.w_s),
-        gw_t=enc_tensor(sw.gw_s), y_t=enc_tensor(sw.y_s),
+        tabs={name: enc_tensor(t) for name, t in sw.tensors.items()},
         x_tabs=[enc_tensor(x) for x in sw.x],
-        a_tabs=[[_enc2d(a, B, cpads[l]) for l, a in enumerate(w.a)]
-                for w in sw.steps],
-        gz_tabs=[[_enc2d(gz, B, cpads[l + 1]) for l, gz in enumerate(w.gz)]
-                 for w in sw.steps],
+        a_tabs=[[_enc2d(g.node_value(op.name, w), B, op.cols_pad)
+                 for op in operands] for w in sw.steps],
+        gz_tabs=[[_enc2d(gz, B, mms[l].cols_pad)
+                  for l, gz in enumerate(w.gz)] for w in sw.steps],
         w_mats=[[_enc2d(m, *wshapes[l]) for l, m in enumerate(w.w)]
                 for w in sw.steps])

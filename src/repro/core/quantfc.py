@@ -83,6 +83,12 @@ class StepWitness:
     """Every tensor of one batch update, keyed by name, values int64.
 
     Shapes: x (B,d), y (B,d), w[l] (d,d), and per-layer (B,d) tensors.
+    ``skips`` records the residual topology the step was computed under
+    (matmul layer l -> earlier activation layer j, 1-indexed): layer l's
+    operand was A^{l-1} + A^j, and the backward gradients in gap/rga are
+    the ACCUMULATED totals arriving at each activation (direct path plus
+    every skip), which is exactly what their committed decompositions
+    must cover for the split claim routing to balance.
     """
     cfg: QuantConfig
     x: np.ndarray
@@ -94,10 +100,11 @@ class StepWitness:
     rz: List[np.ndarray]
     a: List[np.ndarray]        # a[0] = x, a[l] = relu output of layer l
     gz: List[np.ndarray]       # gz[l], l = 1..L (1-indexed: gz[l-1])
-    ga: List[np.ndarray]       # ga[l] for l = 1..L-1
+    ga: List[np.ndarray]       # ga[l] for l = 1..L-1 (accumulated totals)
     gap: List[np.ndarray]
     rga: List[np.ndarray]
     gw: List[np.ndarray]
+    skips: Dict[int, int] = dataclasses.field(default_factory=dict)
 
     @property
     def n_layers(self) -> int:
@@ -111,25 +118,53 @@ def step_widths(wit: "StepWitness"):
 
 def step_graph_witness(wit: "StepWitness"):
     """Graph-native view of a step witness: the layer graph implied by
-    the witness shapes plus per-node named tensors via the op registry's
-    witness extractors (the same extraction path the proof pipeline's
-    witness stacking consumes; the positional lists above remain as the
-    raw training-side carrier)."""
+    the witness shapes AND its residual topology, plus per-node named
+    tensors via the op registry's witness extractors (the same
+    extraction path the proof pipeline's witness stacking consumes; the
+    positional lists above remain as the raw training-side carrier)."""
     from repro.core.pipeline.graph import (build_fcnn_graph,
+                                           build_residual_fcnn_graph,
                                            extract_node_tensors)
 
-    graph = build_fcnn_graph(step_widths(wit), wit.x.shape[0])
+    if wit.skips:
+        graph = build_residual_fcnn_graph(step_widths(wit),
+                                          wit.x.shape[0], wit.skips)
+    else:
+        graph = build_fcnn_graph(step_widths(wit), wit.x.shape[0])
     return graph, extract_node_tensors(graph, wit)
 
 
 def train_step_witness(x: np.ndarray, y: np.ndarray, ws: List[np.ndarray],
-                       cfg: QuantConfig) -> StepWitness:
-    """Forward + backward pass of the FCNN in exact integer arithmetic."""
+                       cfg: QuantConfig,
+                       skips: Dict[int, int] | None = None) -> StepWitness:
+    """Forward + backward pass in exact integer arithmetic.
+
+    ``skips`` (matmul layer l -> activation layer j, 1-indexed, with
+    1 <= j <= l - 2) adds residual connections: layer l's operand is
+    A^{l-1} + A^j (forward skip), and the backward pass accumulates the
+    gradient of each residual sum into BOTH branches before the eq. (5)
+    rescale decomposition (backward split) — gap/rga therefore decompose
+    the total gradient arriving at each activation, matching the
+    pipeline's claim routing onto both producer slots.
+    """
+    skips = dict(skips or {})
     n_layers = len(ws)
+    # 0-indexed matmul m consumes a[m] (+ a[skip0[m]] on a skip)
+    skip0 = {}
+    for l, j in skips.items():
+        if not (1 <= j <= l - 2):
+            raise ValueError(f"skip {l}->{j}: need 1 <= j <= l-2")
+        if ws[l - 1].shape[0] != ws[j - 1].shape[1]:
+            raise ValueError(f"skip {l}->{j}: width mismatch "
+                             f"{ws[l - 1].shape[0]} != {ws[j - 1].shape[1]}")
+        skip0[l - 1] = j
     a = [x.astype(np.int64)]
+    a_in = []                  # resolved operand of each matmul
     z, zpp, bb, rz = [], [], [], []
     for l in range(n_layers):
-        zl = a[-1] @ ws[l]
+        op = a[-1] + a[skip0[l]] if l in skip0 else a[-1]
+        a_in.append(op)
+        zl = op @ ws[l]
         aux = relu_aux(zl, cfg)
         z.append(zl)
         zpp.append(aux["zpp"]); bb.append(aux["b"]); rz.append(aux["rz"])
@@ -143,17 +178,24 @@ def train_step_witness(x: np.ndarray, y: np.ndarray, ws: List[np.ndarray],
     ga = [None] * (n_layers - 1)
     gap = [None] * (n_layers - 1)
     rga = [None] * (n_layers - 1)
+    acc = [None] * n_layers    # accumulated gradient arriving at a[k]
     gz[n_layers - 1] = gz_last
-    for l in range(n_layers - 2, -1, -1):
-        gal = gz[l + 1] @ ws[l + 1].T
-        aux = grad_aux(gal, cfg)
-        ga[l] = gal
-        gap[l] = aux["gap"]; rga[l] = aux["rga"]
-        gz[l] = (1 - bb[l]) * aux["gap"]
-    gw = [gz[l].T @ a[l] for l in range(n_layers)]
+    for m in range(n_layers - 1, 0, -1):
+        g_in = gz[m] @ ws[m].T           # gradient wrt matmul m's operand
+        acc[m] = g_in if acc[m] is None else acc[m] + g_in
+        if m in skip0:                   # backward split: both branches
+            j = skip0[m]
+            acc[j] = g_in if acc[j] is None else acc[j] + g_in
+        # all consumers of a[m] (matmul m + skips from later layers,
+        # already processed) have contributed: decompose the total
+        aux = grad_aux(acc[m], cfg)
+        ga[m - 1] = acc[m]
+        gap[m - 1] = aux["gap"]; rga[m - 1] = aux["rga"]
+        gz[m - 1] = (1 - bb[m - 1]) * aux["gap"]
+    gw = [gz[l].T @ a_in[l] for l in range(n_layers)]
     return StepWitness(cfg=cfg, x=a[0], y=y.astype(np.int64), w=list(ws),
                        z=z, zpp=zpp, b=bb, rz=rz, a=a, gz=gz, ga=ga,
-                       gap=gap, rga=rga, gw=gw)
+                       gap=gap, rga=rga, gw=gw, skips=skips)
 
 
 def synthetic_sgd_trajectory(n_steps: int, n_layers: int, batch: int,
@@ -169,13 +211,17 @@ def synthetic_sgd_trajectory(n_steps: int, n_layers: int, batch: int,
 
 def synthetic_sgd_trajectory_widths(n_steps: int, widths, batch: int,
                                     cfg: QuantConfig, seed: int = 0,
-                                    lr_shift: int = 8) -> List[StepWitness]:
+                                    lr_shift: int = 8,
+                                    skips: Dict[int, int] | None = None
+                                    ) -> List[StepWitness]:
     """Heterogeneous-shape twin of `synthetic_sgd_trajectory`: ``widths``
     is the full shape table d_0..d_L (pyramid MLPs etc.), matching
     `pipeline.PipelineConfig.widths`.  The forward/backward integer
     arithmetic is shape-agnostic already; only the data generator needed
-    the per-layer shapes.  Uniform widths draw the exact same seeded
-    random streams as before, so existing trajectories are unchanged.
+    the per-layer shapes.  ``skips`` threads the residual topology of
+    `train_step_witness` through every step.  Uniform widths (without
+    skips) draw the exact same seeded random streams as before, so
+    existing trajectories are unchanged.
     """
     widths = tuple(int(w) for w in widths)
     rng = np.random.default_rng(seed)
@@ -185,7 +231,7 @@ def synthetic_sgd_trajectory_widths(n_steps: int, widths, batch: int,
     for _ in range(n_steps):
         x = quantize(rng.uniform(-1, 1, (batch, widths[0])), cfg)
         y = quantize(rng.uniform(-1, 1, (batch, widths[-1])), cfg)
-        wit = train_step_witness(x, y, ws, cfg)
+        wit = train_step_witness(x, y, ws, cfg, skips=skips)
         wits.append(wit)
         ws = sgd_apply(ws, wit.gw, lr_shift, cfg)
     return wits

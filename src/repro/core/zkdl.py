@@ -1,75 +1,37 @@
-"""Deprecated compatibility shim over `repro.core.pipeline`.
+"""REMOVED: the `repro.core.zkdl` compat shim is retired.
 
-The Protocol-2 monolith that used to live here is now the staged proof
-pipeline package (see `repro/core/pipeline/README.md` for the module <->
-paper map).  This module keeps the original single-step API alive:
-`ZkdlConfig` is a `PipelineConfig` with ``n_steps=1`` and uniform
-widths, so `prove_step`/`verify_step` run a one-step `ProofSession`
-over the uniform layer graph -- the T=1 single-bucket degenerate case
-of the heterogeneous FAC4DNN aggregation, and the SAME witness-stacking
-code path (`pipeline.witness.stack_witnesses`) as every other caller.
+The Protocol-2 monolith became the staged `repro.core.pipeline` package
+(PR 1), the shim's single-step wrappers became the T=1 degenerate case
+of `ProofSession` (PR 2), and the public surface is now the graph-first
+compile -> prove -> verify lifecycle.  This one-release stub raises with
+a migration hint on any attribute access; it will be deleted next
+release.
 
-New code should use `repro.core.pipeline.ProofSession` directly; the
-entry points below emit a `DeprecationWarning` saying so.
+Migration map:
+
+    zkdl.ZkdlConfig(...)        -> pipeline.PipelineConfig(..., n_steps=1)
+                                   or pipeline.compile(graph, quant)
+    zkdl.make_keys(cfg)         -> pipeline.make_keys(cfg) / compile()
+    zkdl.Prover(keys, rng)      -> pipeline.ProofSession(keys, rng)
+                                   (.add_step(wit); .prove())
+    zkdl.prove_step(keys, w, r) -> pipeline.prove_session(keys, [w], r)
+    zkdl.verify_step(keys, p)   -> pipeline.verify_session(keys, p)
+    zkdl.verify(keys, p, t)     -> pipeline.verify(keys, p, t)
+                                   (serialized: pipeline.verify_bytes)
 """
 from __future__ import annotations
 
-import warnings
-
-import numpy as np
-
-from repro.core.pipeline import verifier as _verifier
-from repro.core.pipeline.config import (PipelineConfig as ZkdlConfig,
-                                        PipelineKeys as ZkdlKeys,
-                                        make_keys)
-from repro.core.pipeline.session import (AggregatedProof as ZkdlProof,
-                                         SessionCommitments as ZkdlCommitments,
-                                         SessionProver)
-from repro.core.pipeline.tables import (dec_scalar as _dec,
-                                        enc_tensor as _enc_tensor,
-                                        fix_cols as _fix_cols,
-                                        fix_rows as _fix_rows,
-                                        kron as _kron,
-                                        weight_table as _weight_table)
-from repro.core.pipeline.witness import stack_witnesses
-from repro.core.quantfc import StepWitness
-from repro.core.transcript import Transcript
-
-__all__ = [
-    "ZkdlConfig", "ZkdlKeys", "ZkdlProof", "ZkdlCommitments",
-    "make_keys", "Prover", "prove_step", "verify_step", "verify",
-]
+_HINT = (
+    "repro.core.zkdl was removed: use repro.core.pipeline instead "
+    "(compile(graph, quant) -> (ProvingKey, VerifyingKey); "
+    "ProofSession(pk).add_step(wit) / .prove(); verify_bytes(vk, "
+    "encode_proof(proof)) — n_steps=1 reproduces the old single-step "
+    "protocol exactly).  See the migration map in repro/core/zkdl.py "
+    "and repro/core/pipeline/README.md."
+)
 
 
-def _deprecated(name: str) -> None:
-    warnings.warn(
-        f"repro.core.zkdl.{name} is deprecated: use "
-        "repro.core.pipeline.ProofSession (n_steps=1 reproduces the "
-        "single-step protocol exactly)", DeprecationWarning, stacklevel=3)
-
-
-class Prover(SessionProver):
-    """Single-step prover: `commit` accepts one `StepWitness` directly."""
-
-    def commit(self, wit: StepWitness):
-        assert self.cfg.n_steps == 1, "use ProofSession for n_steps > 1"
-        return super().commit(stack_witnesses([wit], self.cfg))
-
-
-def verify(keys: ZkdlKeys, proof: ZkdlProof, transcript: Transcript,
-           trace: list | None = None) -> bool:
-    return _verifier.verify(keys, proof, transcript, trace=trace)
-
-
-def prove_step(keys: ZkdlKeys, wit: StepWitness, rng: np.random.Generator,
-               label: bytes = b"zkdl") -> ZkdlProof:
-    _deprecated("prove_step")
-    prover = Prover(keys, rng)
-    prover.commit(wit)
-    return prover.prove(Transcript(label))
-
-
-def verify_step(keys: ZkdlKeys, proof: ZkdlProof,
-                label: bytes = b"zkdl") -> bool:
-    _deprecated("verify_step")
-    return verify(keys, proof, Transcript(label))
+def __getattr__(name: str):
+    if name.startswith("__"):
+        raise AttributeError(name)
+    raise ImportError(f"repro.core.zkdl.{name} is gone — {_HINT}")

@@ -24,12 +24,16 @@ from repro.train import optim
 def build_proof_pipeline_config(model_cfg, batch: int, n_steps: int,
                                 q_bits: int = 16, r_bits: int = 8,
                                 widths=None):
-    """ArchConfig -> `PipelineConfig`, gated by the proof-graph registry.
+    """ArchConfig -> graph-first `PipelineConfig`, gated by the
+    proof-graph registry.
 
     Families without a registered layer-graph builder raise a clear
     LookupError instead of silently training unproven; ``widths``
     overrides the uniform d_0..d_L table derived from the model config
-    (heterogeneous pyramids, reduced runs)."""
+    (heterogeneous pyramids, reduced runs).  The registered graph is the
+    config's single source of truth (`PipelineConfig.from_graph`);
+    callers wanting the full setup artifacts should pass the same graph
+    to `repro.core.pipeline.compile`."""
     from repro.core.pipeline import PipelineConfig
     from repro.core.pipeline.graph import proof_graph_for_family
 
@@ -37,10 +41,10 @@ def build_proof_pipeline_config(model_cfg, batch: int, n_steps: int,
         widths = (model_cfg.d_model,) * (model_cfg.n_layers + 1)
     widths = tuple(int(w) for w in widths)
     # registry gate: raises LookupError for unprovable families
-    proof_graph_for_family(model_cfg.family, widths=widths, batch=batch)
-    return PipelineConfig(n_layers=len(widths) - 1, batch=batch,
-                          q_bits=q_bits, r_bits=r_bits, n_steps=n_steps,
-                          widths=widths)
+    graph = proof_graph_for_family(model_cfg.family, widths=widths,
+                                   batch=batch)
+    return PipelineConfig.from_graph(graph, q_bits=q_bits, r_bits=r_bits,
+                                     n_steps=n_steps)
 
 
 def build_zkdl_step(zk_cfg, lr_shift: int = 8):

@@ -69,7 +69,7 @@ def run_zkdl_train(cfg, args) -> int:
     same code path, just slow on a CPU substrate."""
     import numpy as np
     from repro.core import quantfc
-    from repro.core.pipeline import make_keys
+    from repro.core.pipeline import compile as zk_compile
     from repro.launch import steps as steps_mod
 
     if args.widths:
@@ -88,7 +88,10 @@ def run_zkdl_train(cfg, args) -> int:
           f"batch {args.global_batch}, aggregating {window} step(s)/proof",
           flush=True)
 
-    keys = make_keys(zk_cfg)
+    # one-time setup over the registered graph: the pk drives every
+    # window's session; the vk alone (serializable, a few hundred
+    # bytes) is what a remote verifier would hold
+    pk, vk = zk_compile(zk_cfg.graph, qc, n_steps=zk_cfg.n_steps)
     rng = np.random.default_rng(0)
     ws = [quantfc.quantize(
         rng.uniform(-1, 1, (widths[l], widths[l + 1])) * 0.3, qc)
@@ -102,7 +105,7 @@ def run_zkdl_train(cfg, args) -> int:
               f"in {dt:.1f}s ({dt / proof.n_steps:.1f}s/step, "
               f"verified={not args.no_verify})", flush=True)
 
-    hook = steps_mod.ZkdlProveHook(keys, rng, verify=not args.no_verify,
+    hook = steps_mod.ZkdlProveHook(pk, rng, verify=not args.no_verify,
                                    on_proof=on_proof)
     step_fn = steps_mod.build_zkdl_step(zk_cfg)
     for step in range(args.steps):

@@ -1,0 +1,213 @@
+"""Byte-format contract tests: canonical encoding goldens, roundtrip
+equality, per-section tamper rejection, vk serialization, and the
+acceptance path — a residual MLP built with `GraphBuilder` whose proof
+verifies FROM SERIALIZED BYTES in a separate process."""
+import hashlib
+import os
+import struct
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.quantfc import (QuantConfig, synthetic_sgd_trajectory,
+                                synthetic_sgd_trajectory_widths)
+from repro.core.pipeline import (GraphBuilder, ProofSession, VerifyingKey,
+                                 compile as zk_compile, decode_proof,
+                                 encode_proof, graph_skips, graph_widths,
+                                 prove_session, verify_bytes)
+from repro.core.pipeline.proofio import (MAGIC_PROOF, ProofDecodeError,
+                                         _SECTIONS)
+
+QC = QuantConfig(q_bits=16, r_bits=4)
+
+
+def _make_uniform(T):
+    graph = GraphBuilder(batch=2).input(4).dense(4).relu() \
+        .dense(4).relu().output()
+    pk, vk = zk_compile(graph, QC, n_steps=T)
+    wits = synthetic_sgd_trajectory(T, 2, 2, 4, QC, seed=7)
+    return pk, vk, prove_session(pk, wits, np.random.default_rng(7))
+
+
+@pytest.fixture(scope="module")
+def uniform_t2():
+    return _make_uniform(2)
+
+
+# recorded canonical encodings of the seed-7 uniform trajectory (the
+# same proofs whose scalar digests are pinned in test_proof_session.py);
+# any byte-format or transcript change must re-record BOTH goldens
+GOLDEN_SHA256 = {
+    1: "9e95b41d9994c440b7a576901486ea25ab80eb3f63b57d8f0737192a1c90f2c4",
+    2: "b943dd6a0ee4708a777c7da850c99084f090b4d61e618b5d0ad758e762f8a1f9",
+}
+
+
+@pytest.mark.parametrize("T", [1, 2])
+def test_golden_serialized_bytes(T):
+    _, _, proof = _make_uniform(T)
+    raw = encode_proof(proof)
+    assert hashlib.sha256(raw).hexdigest() == GOLDEN_SHA256[T]
+
+
+def test_roundtrip_identity(uniform_t2):
+    _, vk, proof = uniform_t2
+    raw = encode_proof(proof)
+    decoded = decode_proof(raw)
+    assert decoded == proof
+    assert encode_proof(decoded) == raw          # canonical: re-encode fixed
+    assert verify_bytes(vk, raw)
+
+
+def _section_spans(raw):
+    """(name, payload_start, payload_len) for each framed section."""
+    assert raw[:4] == MAGIC_PROOF
+    pos, spans = 6, []
+    for name in _SECTIONS:
+        tag = raw[pos]
+        (length,) = struct.unpack("<I", raw[pos + 1: pos + 5])
+        assert tag == len(spans) + 1
+        spans.append((name, pos + 5, length))
+        pos += 5 + length
+    assert pos == len(raw)
+    return spans
+
+
+def test_tamper_each_section_rejects(uniform_t2):
+    """Flipping ONE byte in EVERY section must reject (either a framing
+    error or a diverged transcript) — no byte of the wire format is
+    slack."""
+    _, vk, proof = uniform_t2
+    raw = encode_proof(proof)
+    for name, start, length in _section_spans(raw):
+        assert length > 0, name
+        bad = bytearray(raw)
+        bad[start + length // 2] ^= 1
+        assert not verify_bytes(vk, bytes(bad)), f"tampered {name} accepted"
+
+
+def test_malformed_streams_reject(uniform_t2):
+    _, vk, proof = uniform_t2
+    raw = encode_proof(proof)
+    assert not verify_bytes(vk, b"")                        # empty
+    assert not verify_bytes(vk, b"JUNK" + raw[4:])          # bad magic
+    assert not verify_bytes(vk, raw[:-3])                   # truncated
+    assert not verify_bytes(vk, raw + b"\x00")              # trailing
+    wrong_ver = bytearray(raw)
+    wrong_ver[4] = 99
+    assert not verify_bytes(vk, bytes(wrong_ver))           # version
+    with pytest.raises(ProofDecodeError):
+        decode_proof(raw[:-3])
+
+
+def test_renamed_slot_rejects_without_crash(uniform_t2):
+    """A well-framed forgery renaming a commitment slot (dict order —
+    and hence the transcript — unchanged) must REJECT via the schema
+    check, never crash the verifier with an attribute error."""
+    _, vk, proof = uniform_t2
+    forged = decode_proof(encode_proof(proof))
+    forged.coms.slots = {("zqq" if k == "zpp" else k): v
+                         for k, v in forged.coms.slots.items()}
+    trace = []
+    assert not verify_bytes(vk, encode_proof(forged), trace=trace)
+    assert trace == ["commitment-schema"]
+
+
+def test_invalid_geometry_vk_rejects_as_decode_error():
+    """A well-framed vk whose graph fails config derivation (1 layer)
+    must raise ProofDecodeError, not leak an AssertionError."""
+    from repro.core.pipeline import LayerOp
+    from repro.core.pipeline.proofio import encode_vk
+
+    nodes = (LayerOp("x", "input", (), (2, 4)),
+             LayerOp("mm1", "qmatmul", ("x",), (2, 4), layer=1),
+             LayerOp("act1", "zkrelu", ("mm1",), (2, 4), layer=1),
+             LayerOp("loss", "output_grad", ("act1",), (2, 4), layer=1))
+
+    class _FakeVK:
+        class cfg:
+            q_bits, r_bits, n_steps = 16, 4, 1
+
+            class graph:
+                pass
+    _FakeVK.cfg.graph.nodes = nodes
+    with pytest.raises(ProofDecodeError, match="invalid graph"):
+        VerifyingKey.from_bytes(encode_vk(_FakeVK))
+
+
+def test_nested_residual_skip_map_raises():
+    """Nested residual_add is valid IR, but quantfc's emitter supports
+    single-level skips only — graph_skips must refuse loudly instead of
+    silently dropping the inner branch."""
+    graph = (GraphBuilder(batch=2).input(4)
+             .dense(4).relu().dense(4).relu().residual(to=1)
+             .dense(4).relu().residual(to="res1")
+             .dense(4).relu().output())
+    with pytest.raises(ValueError, match="single-level"):
+        graph_skips(graph)
+
+
+def test_vk_roundtrip(uniform_t2):
+    _, vk, proof = uniform_t2
+    blob = vk.to_bytes()
+    assert len(blob) < 1024                      # graph + geometry only
+    vk2 = VerifyingKey.from_bytes(blob)
+    assert vk2.cfg == vk.cfg
+    assert vk2.to_bytes() == blob
+    assert verify_bytes(vk2, encode_proof(proof))
+    with pytest.raises(ProofDecodeError):
+        VerifyingKey.from_bytes(blob[:-2])
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: residual MLP via GraphBuilder -> serialized bytes -> a
+# SEPARATE process (importing only the verifier modules) accepts, and
+# rejects a tampered byte.
+# ---------------------------------------------------------------------------
+
+_VERIFY_SCRIPT = r"""
+import sys
+from repro.util import enable_compilation_cache
+enable_compilation_cache()
+from repro.core.pipeline.proofio import decode_vk
+from repro.core.pipeline.verifier import verify_bytes
+
+vk = decode_vk(open(sys.argv[1], "rb").read())
+raw = open(sys.argv[2], "rb").read()
+ok = verify_bytes(vk, raw)
+bad = bytearray(raw)
+bad[len(bad) // 2] ^= 1
+rej = not verify_bytes(vk, bytes(bad))
+print("CROSS_PROCESS_" + ("OK" if (ok and rej) else
+                          f"FAIL ok={ok} tamper_rejected={rej}"))
+"""
+
+
+def test_residual_mlp_cross_process_verify(tmp_path):
+    graph = (GraphBuilder(batch=2).input(4)
+             .dense(4).relu().dense(4).relu()
+             .residual(to=1)
+             .dense(4).relu()
+             .output())
+    assert graph_skips(graph) == {3: 1}
+    pk, vk = zk_compile(graph, QC, n_steps=2)
+    wits = synthetic_sgd_trajectory_widths(
+        2, graph_widths(graph), 2, QC, seed=21, skips=graph_skips(graph))
+    session = ProofSession(pk, np.random.default_rng(21))
+    for w in wits:
+        session.add_step(w)
+    raw = encode_proof(session.prove())
+
+    vk_path, pf_path = tmp_path / "vk.bin", tmp_path / "proof.bin"
+    vk_path.write_bytes(vk.to_bytes())
+    pf_path.write_bytes(raw)
+
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _VERIFY_SCRIPT, str(vk_path), str(pf_path)],
+        capture_output=True, text=True, timeout=600, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert "CROSS_PROCESS_OK" in proc.stdout, (
+        f"stdout:\n{proc.stdout[-2000:]}\nstderr:\n{proc.stderr[-2000:]}")

@@ -1,26 +1,31 @@
-"""End-to-end tests for the full zkDL protocol (Protocol 2)."""
+"""Single-step protocol tests (T=1 `ProofSession`), witness-relation
+invariants (chain and residual topologies), and the retired
+`repro.core.zkdl` stub contract."""
 import numpy as np
 import pytest
 
-from repro.core import quantfc, zkdl
+from repro.core import quantfc
 from repro.core.quantfc import QuantConfig, train_step_witness
+from repro.core.pipeline import (PipelineConfig, ProofSession, make_keys,
+                                 prove_session, verify_session)
 
-CFG = zkdl.ZkdlConfig(n_layers=3, batch=4, width=8, q_bits=16, r_bits=4)
+CFG = PipelineConfig(n_layers=3, batch=4, width=8, q_bits=16, r_bits=4,
+                     n_steps=1)
 
 
-def make_witness(seed=0, cfg=CFG):
+def make_witness(seed=0, cfg=CFG, skips=None):
     rng = np.random.default_rng(seed)
     qc = QuantConfig(q_bits=cfg.q_bits, r_bits=cfg.r_bits)
     x = quantfc.quantize(rng.uniform(-1, 1, (cfg.batch, cfg.width)), qc)
     y = quantfc.quantize(rng.uniform(-1, 1, (cfg.batch, cfg.width)), qc)
     ws = [quantfc.quantize(rng.uniform(-1, 1, (cfg.width, cfg.width)) * 0.3, qc)
           for _ in range(cfg.n_layers)]
-    return train_step_witness(x, y, ws, qc)
+    return train_step_witness(x, y, ws, qc, skips=skips)
 
 
 @pytest.fixture(scope="module")
 def keys():
-    return zkdl.make_keys(CFG)
+    return make_keys(CFG)
 
 
 def test_witness_relations():
@@ -38,43 +43,76 @@ def test_witness_relations():
         assert (wit.gz[l] == (1 - wit.b[l]) * wit.gap[l]).all()
 
 
+def test_residual_witness_relations():
+    """Forward skip: layer 3's operand is A^2 + A^1; backward split: the
+    gradient of the sum feeds BOTH branches, and gap/rga decompose each
+    branch's accumulated total (eq. 5 over the sum)."""
+    wit = make_witness(seed=8, skips={3: 1})
+    r = wit.a[2] + wit.a[1]                       # residual operand
+    assert (wit.z[2] == r @ wit.w[2]).all()       # forward skip
+    assert (wit.gw[2] == wit.gz[2].T @ r).all()   # gw over the sum
+    scale = 1 << wit.cfg.r_bits
+    g_r = wit.gz[2] @ wit.w[2].T                  # gradient of the sum
+    # branch act2: only consumer is the residual -> total = g_r
+    assert (scale * wit.gap[1] + wit.rga[1] == g_r).all()
+    # branch act1: direct path (matmul 2) PLUS the skip
+    g_direct = wit.gz[1] @ wit.w[1].T
+    assert (scale * wit.gap[0] + wit.rga[0] == g_direct + g_r).all()
+    assert (wit.gz[0] == (1 - wit.b[0]) * wit.gap[0]).all()
+    assert wit.skips == {3: 1}
+
+
+def test_residual_skip_validation():
+    with pytest.raises(ValueError, match="skip"):
+        make_witness(seed=8, skips={2: 1})        # j must be <= l - 2
+
+
 def test_prove_verify_accepts(keys):
-    rng = np.random.default_rng(1)
-    wit = make_witness(seed=1)
-    proof = zkdl.prove_step(keys, wit, rng)
-    assert zkdl.verify_step(keys, proof)
+    proof = prove_session(keys, [make_witness(seed=1)],
+                          np.random.default_rng(1))
+    assert verify_session(keys, proof)
     # proof is compact: well under 100 kB at this toy size
     assert proof.size_bytes() < 100_000
 
 
 def test_rejects_tampered_gradient(keys):
-    rng = np.random.default_rng(2)
     wit = make_witness(seed=2)
     wit.gw[1][0, 0] += 1          # forged weight gradient
-    proof = zkdl.prove_step(keys, wit, rng)
-    assert not zkdl.verify_step(keys, proof)
+    proof = prove_session(keys, [wit], np.random.default_rng(2))
+    assert not verify_session(keys, proof)
 
 
 def test_rejects_tampered_relu_mask(keys):
-    rng = np.random.default_rng(3)
     wit = make_witness(seed=3)
     wit.b[0][0, 0] ^= 1           # flip a ReLU sign bit
-    proof = zkdl.prove_step(keys, wit, rng)
-    assert not zkdl.verify_step(keys, proof)
+    proof = prove_session(keys, [wit], np.random.default_rng(3))
+    assert not verify_session(keys, proof)
 
 
 def test_rejects_tampered_forward(keys):
-    rng = np.random.default_rng(4)
     wit = make_witness(seed=4)
     wit.zpp[1][0, 0] = (wit.zpp[1][0, 0] + 1) % (1 << (CFG.q_bits - 1))
-    proof = zkdl.prove_step(keys, wit, rng)
-    assert not zkdl.verify_step(keys, proof)
+    proof = prove_session(keys, [wit], np.random.default_rng(4))
+    assert not verify_session(keys, proof)
 
 
 def test_rejects_proof_reuse_other_witness(keys):
-    rng = np.random.default_rng(5)
-    proof = zkdl.prove_step(keys, make_witness(seed=5), rng)
-    proof2 = zkdl.prove_step(keys, make_witness(seed=6),
-                             np.random.default_rng(6))
+    proof = prove_session(keys, [make_witness(seed=5)],
+                          np.random.default_rng(5))
+    proof2 = prove_session(keys, [make_witness(seed=6)],
+                           np.random.default_rng(6))
     proof.ipas["w"] = proof2.ipas["w"]   # splice a foreign opening
-    assert not zkdl.verify_step(keys, proof)
+    assert not verify_session(keys, proof)
+
+
+# ---------------------------------------------------------------------------
+# The retired shim: import works, any use raises with a migration hint
+# ---------------------------------------------------------------------------
+
+def test_zkdl_stub_raises_with_migration_hint():
+    from repro.core import zkdl    # importing the stub itself is fine
+
+    for name in ("ZkdlConfig", "make_keys", "Prover", "prove_step",
+                 "verify_step", "verify"):
+        with pytest.raises(ImportError, match="repro.core.pipeline"):
+            getattr(zkdl, name)
