@@ -15,10 +15,12 @@ fi
 
 python -m pytest -x -q "$@"
 
-# benchmark-path smoke: tiny shapes, every cell must verify and the
-# per-phase prover profiler must account for ~all prove time (keeps the
-# aggregation benchmark AND the phase attribution from rotting between
-# PRs)
+# benchmark-path smoke: tiny shapes, every cell (T=1/2/8 + het) must
+# verify, the per-phase prover profiler (incl. the openings sub-phases)
+# must account for ~all prove time, and the serialized per-step proof at
+# T=8 must stay STRICTLY smaller than the recorded v1 baseline
+# (0.48 kB/step) — the one-IPA opening's size win is a CI invariant,
+# not just a benchmark number
 python benchmarks/agg_steps.py --smoke
 
 # cross-process verify smoke: prove + serialize (proof.bin, vk.bin) in

@@ -239,6 +239,38 @@ def msm_field(points, scalars_mont, nbits: int = 61):
     return msm(points, from_mont(FQ, scalars_mont), nbits)
 
 
+@functools.partial(jax.jit, static_argnames=("nbits",))
+def pow_table(bases, nbits: int = 61):
+    """Precomputed squaring chains: (n,4) bases -> (nbits,n,4) with
+    table[j] = bases^{2^j}.  For a FIXED basis (commitment generators),
+    building this once at key setup halves every later exponentiation:
+    `g_pow_table` needs only the conditional multiplies, no runtime
+    squarings."""
+    def step(acc, _):
+        return g_mul(acc, acc), acc
+    _, tab = jax.lax.scan(step, bases, None, length=nbits)
+    return tab
+
+
+@functools.partial(jax.jit, static_argnames=("nbits",))
+def g_pow_table(table, exps_std, nbits: int = 61):
+    """Elementwise bases^exps via a `pow_table`: one conditional multiply
+    per bit (half the work of `g_pow`'s square-and-multiply).  Exponents
+    in standard limb form; bit-identical to `g_pow` on the same bases."""
+    result = jnp.broadcast_to(identity(),
+                              table.shape[1:]).astype(jnp.uint32)
+
+    def step(res, xs):
+        j, tab_j = xs
+        limb = jnp.take(exps_std, j >> 4, axis=-1)
+        bit = ((limb >> (j & 15)) & 1).astype(bool)
+        return jnp.where(bit[..., None], g_mul(res, tab_j), res), None
+
+    result, _ = jax.lax.scan(
+        step, result, (jnp.arange(nbits, dtype=jnp.uint32), table))
+    return result
+
+
 @jax.jit
 def tree_prod(elems):
     """Product of all group elements in (n,4)."""

@@ -33,10 +33,17 @@ import numpy as np
 
 from repro.field import FQ, FP, add, mont_mul, from_mont, decode, int_to_limbs
 from repro.core import group
+from repro.core import mle
 from repro.core.mle import enc, fdot
 from repro.core.transcript import Transcript
 
 Q = FQ.modulus
+
+
+def _sub(prof, name: str):
+    """Sub-phase context of an optional `PhaseProfile` (else a no-op)."""
+    from repro.core.pipeline.profile import subphase
+    return subphase(prof, name)
 
 
 @dataclasses.dataclass
@@ -166,6 +173,64 @@ def _open_fold(a, b, gens, al_m, ali_m, al_std, ali_std):
     return a2, b2, g2
 
 
+def _open_fold_dispatch(a, b, gens, al_m, ali_m, al_std, ali_std):
+    """`_open_fold`, routed through the Pallas `kernels/sumcheck_fold`
+    backend when ZKDL_FOLD_BACKEND=pallas (`mle.fold_backend`): the two
+    scalar halves-folds stream through `fold_halves` and the generator
+    fold through the fused square-and-multiply `pow_mul_halves` kernel.
+    Bit-identical to the XLA path (tests/test_fold_dispatch.py)."""
+    if mle.fold_backend() == "pallas":
+        from repro.kernels.sumcheck_fold import fold_halves, pow_mul_halves
+        a2 = fold_halves(a, al_m, ali_m)
+        b2 = fold_halves(b, ali_m, al_m)
+        g2 = pow_mul_halves(gens, ali_std, al_std)
+        return a2, b2, g2
+    return _open_fold(a, b, gens, al_m, ali_m, al_std, ali_std)
+
+
+@jax.jit
+def _pair_round_lr_w(gg, h_base, w, a, b, up, h_blind, rho_l, rho_r):
+    """First pair round with the H basis held as h_base^{w} (the zkReLU
+    H' = H^{1/e} basis, never materialized): the weight rides in the
+    MSM exponents — hh_lo^{b_hi} == h_base_lo^{w_lo * b_hi} — so the
+    result is bit-identical to `_pair_round_lr` on the explicit basis."""
+    n2 = a.shape[0] // 2
+    c_l = from_mont(FQ, fdot(a[:n2], b[n2:]))
+    c_r = from_mont(FQ, fdot(a[n2:], b[:n2]))
+    a_std = from_mont(FQ, a)
+    wl = from_mont(FQ, mont_mul(FQ, w[:n2], b[n2:]))
+    wr = from_mont(FQ, mont_mul(FQ, w[n2:], b[:n2]))
+    main = group.msm_many(
+        jnp.stack([jnp.concatenate([gg[n2:], h_base[:n2]]),
+                   jnp.concatenate([gg[:n2], h_base[n2:]])]),
+        jnp.stack([jnp.concatenate([a_std[:n2], wl]),
+                   jnp.concatenate([a_std[n2:], wr])]))
+    return group.g_mul(main, _lr_extras(up, h_blind, c_l, c_r, rho_l, rho_r))
+
+
+@jax.jit
+def _pair_fold_first(a, b, g_table, h_table, w, al_m, ali_m,
+                     al_std, ali_std):
+    """First pair fold over FIXED bases via precomputed squaring tables
+    (`group.pow_table`): one conditional multiply per exponent bit
+    instead of square-and-multiply, with the H-side weight vector w
+    folded into the table exponents (hh'_i = h_base_i^{w_i * al|ali}).
+    Bit-identical to `_pair_fold` on the materialized bases."""
+    n2 = a.shape[0] // 2
+    a2 = _fold_halves(a, al_m, ali_m)
+    b2 = _fold_halves(b, ali_m, al_m)
+    g_exps = jnp.concatenate([jnp.broadcast_to(ali_std, (n2, 4)),
+                              jnp.broadcast_to(al_std, (n2, 4))])
+    powed_g = group.g_pow_table(g_table, g_exps)
+    gg2 = group.g_mul(powed_g[:n2], powed_g[n2:])
+    w_coef = jnp.concatenate([jnp.broadcast_to(al_m, (n2, 4)),
+                              jnp.broadcast_to(ali_m, (n2, 4))])
+    h_exps = from_mont(FQ, mont_mul(FQ, w, w_coef))
+    powed_h = group.g_pow_table(h_table, h_exps)
+    hh2 = group.g_mul(powed_h[:n2], powed_h[n2:])
+    return a2, b2, gg2, hh2
+
+
 @jax.jit
 def _pair_fold(a, b, gg, hh, al_m, ali_m, al_std, ali_std):
     n2 = a.shape[0] // 2
@@ -186,7 +251,8 @@ def _pair_fold(a, b, gg, hh, al_m, ali_m, al_std, ali_std):
 # ---------------------------------------------------------------------------
 
 def open_prove(key, a_mont, b_mont, blind: int, claim: int,
-               transcript: Transcript, rng: np.random.Generator) -> IpaProof:
+               transcript: Transcript, rng: np.random.Generator,
+               prof=None) -> IpaProof:
     n = a_mont.shape[0]
     assert n & (n - 1) == 0 and b_mont.shape[0] == n
     gens = key.gens[:n]
@@ -196,34 +262,36 @@ def open_prove(key, a_mont, b_mont, blind: int, claim: int,
 
     a, b, rho = a_mont, b_mont, int(blind)
     ls, rs = [], []
-    while n > 1:
-        n2 = n // 2
-        rho_l = int(rng.integers(0, Q, dtype=np.uint64)) % Q
-        rho_r = int(rng.integers(0, Q, dtype=np.uint64)) % Q
-        lr = _open_round_lr(gens, a, b, up, key.h,
-                            _exp1(rho_l), _exp1(rho_r))
-        li, ri = group.decode_group_many(lr)
-        ls.append(li); rs.append(ri)
-        transcript.absorb_ints(b"ipa/lr", [li, ri])
-        al = transcript.challenge_int(b"ipa/alpha", Q)
-        ali = pow(al, Q - 2, Q)
-        a, b, gens = _open_fold(a, b, gens, enc(al), enc(ali),
-                                _exp1(al), _exp1(ali))
-        rho = (al * al % Q * rho_l + rho + ali * ali % Q * rho_r) % Q
-        n = n2
+    with _sub(prof, "ipa-rounds"):
+        while n > 1:
+            n2 = n // 2
+            rho_l = int(rng.integers(0, Q, dtype=np.uint64)) % Q
+            rho_r = int(rng.integers(0, Q, dtype=np.uint64)) % Q
+            lr = _open_round_lr(gens, a, b, up, key.h,
+                                _exp1(rho_l), _exp1(rho_r))
+            li, ri = group.decode_group_many(lr)
+            ls.append(li); rs.append(ri)
+            transcript.absorb_ints(b"ipa/lr", [li, ri])
+            al = transcript.challenge_int(b"ipa/alpha", Q)
+            ali = pow(al, Q - 2, Q)
+            a, b, gens = _open_fold_dispatch(a, b, gens, enc(al), enc(ali),
+                                             _exp1(al), _exp1(ali))
+            rho = (al * al % Q * rho_l + rho + ali * ali % Q * rho_r) % Q
+            n = n2
 
-    # final Schnorr opening of P_f = base^{a} h^{rho}, base = g_f * up^{b_f}
-    a_f, b_f = (int(v) for v in decode(FQ, jnp.stack([a[0], b[0]])))
-    s = int(rng.integers(0, Q, dtype=np.uint64)) % Q
-    s_rho = int(rng.integers(0, Q, dtype=np.uint64)) % Q
-    # K = base^s h^{s_rho} = gens_f^s * up^{s b_f} * h^{s_rho}: one 3-term MSM
-    kk = group.msm(jnp.stack([gens[0], up, key.h]),
-                   group.exps_from_ints([s, s * b_f % Q, s_rho]))
-    ki = group.decode_group(kk)
-    transcript.absorb_int(b"ipa/K", ki)
-    e = transcript.challenge_int(b"ipa/e", Q)
-    z = (s + e * a_f) % Q
-    z_rho = (s_rho + e * rho) % Q
+    with _sub(prof, "sigma"):
+        # final Schnorr opening of P_f = base^a h^rho, base = g_f up^{b_f}
+        a_f, b_f = (int(v) for v in decode(FQ, jnp.stack([a[0], b[0]])))
+        s = int(rng.integers(0, Q, dtype=np.uint64)) % Q
+        s_rho = int(rng.integers(0, Q, dtype=np.uint64)) % Q
+        # K = base^s h^{s_rho} = gens_f^s up^{s b_f} h^{s_rho}: one 3-term MSM
+        kk = group.msm(jnp.stack([gens[0], up, key.h]),
+                       group.exps_from_ints([s, s * b_f % Q, s_rho]))
+        ki = group.decode_group(kk)
+        transcript.absorb_int(b"ipa/K", ki)
+        e = transcript.challenge_int(b"ipa/e", Q)
+        z = (s + e * a_f) % Q
+        z_rho = (s_rho + e * rho) % Q
     return IpaProof(ls, rs, [ki, z, z_rho])
 
 
@@ -263,90 +331,196 @@ def open_verify(key, com, b_mont, claim: int, proof: IpaProof,
 
 # ---------------------------------------------------------------------------
 # Variant 2: both vectors committed as C = h^rho G^a H^b (zkReLU eq. 19).
+#
+# Independent pair statements sharing one transcript run their rounds in
+# LOCKSTEP (`pair_prove_many`): each round dispatches every active
+# statement's fused L/R multi-MSM asynchronously and pays ONE host
+# transfer decoding all of them, so S statements cost max_i(rounds_i)
+# round-trip syncs instead of sum_i(rounds_i) — the zkReLU validity
+# argument's main + remainder IPAs are exactly this shape.  The
+# per-statement arithmetic (and therefore extraction) is unchanged; only
+# the transcript interleaving differs, mirrored by `pair_verify_many`.
 # ---------------------------------------------------------------------------
+
+def pair_prove_many(stmts, transcript: Transcript,
+                    rng: np.random.Generator) -> List[IpaProof]:
+    """Prove S pair statements with interleaved rounds.
+
+    ``stmts`` is a list of ``(g_gens, h_gens, h_blind, a_mont, b_mont,
+    blind, claim)``, optionally extended with an 8th element
+    ``accel = (g_table, h_base, h_table, w_mont)`` declaring that both
+    bases are FIXED with precomputed squaring tables and that the true
+    H basis is ``h_base^{w}`` (zkReLU's H' = H^{1/e}) — the first round
+    then runs `_pair_round_lr_w` / `_pair_fold_first` without ever
+    materializing H', bit-identically to the explicit path.  Transcript
+    order per round: each active statement's (L, R) is absorbed and its
+    alpha drawn, statement by statement in list order."""
+    states = []
+    for stmt in stmts:
+        gg, hh, hb, a, b, blind, claim = stmt[:7]
+        accel = stmt[7] if len(stmt) > 7 else None
+        n = a.shape[0]
+        assert n & (n - 1) == 0 and b.shape[0] == n
+        # an accel statement needs >= 1 round: the fold is what
+        # materializes hh for the sigma finale
+        assert accel is None or n > 1, "accel statement needs n >= 2"
+        transcript.absorb_int(b"ipa2/claim", claim)
+        x = transcript.challenge_int(b"ipa2/x", Q)
+        states.append({"n": n, "gg": gg[:n],
+                       "hh": hh[:n] if hh is not None else None,
+                       "hb": hb, "a": a, "b": b, "rho": int(blind),
+                       "up": group.g_pow_int(_u_gen(), x),
+                       "accel": accel, "ls": [], "rs": []})
+
+    while any(st["n"] > 1 for st in states):
+        active = [st for st in states if st["n"] > 1]
+        lrs, blind_draws = [], []
+        for st in active:
+            rho_l = int(rng.integers(0, Q, dtype=np.uint64)) % Q
+            rho_r = int(rng.integers(0, Q, dtype=np.uint64)) % Q
+            blind_draws.append((rho_l, rho_r))
+            if st["accel"] is not None:
+                _, h_base, _, w = st["accel"]
+                lrs.append(_pair_round_lr_w(st["gg"], h_base, w, st["a"],
+                                            st["b"], st["up"], st["hb"],
+                                            _exp1(rho_l), _exp1(rho_r)))
+            else:
+                lrs.append(_pair_round_lr(st["gg"], st["hh"], st["a"],
+                                          st["b"], st["up"], st["hb"],
+                                          _exp1(rho_l), _exp1(rho_r)))
+        flat = group.decode_group_many(jnp.concatenate(lrs))  # one transfer
+        for k, (st, (rho_l, rho_r)) in enumerate(zip(active, blind_draws)):
+            li, ri = flat[2 * k], flat[2 * k + 1]
+            st["ls"].append(li); st["rs"].append(ri)
+            transcript.absorb_ints(b"ipa2/lr", [li, ri])
+            al = transcript.challenge_int(b"ipa2/alpha", Q)
+            ali = pow(al, Q - 2, Q)
+            if st["accel"] is not None:
+                g_table, _, h_table, w = st["accel"]
+                st["a"], st["b"], st["gg"], st["hh"] = _pair_fold_first(
+                    st["a"], st["b"], g_table, h_table, w, enc(al),
+                    enc(ali), _exp1(al), _exp1(ali))
+                st["accel"] = None
+            else:
+                st["a"], st["b"], st["gg"], st["hh"] = _pair_fold(
+                    st["a"], st["b"], st["gg"], st["hh"], enc(al),
+                    enc(ali), _exp1(al), _exp1(ali))
+            st["rho"] = (al * al % Q * rho_l + st["rho"]
+                         + ali * ali % Q * rho_r) % Q
+            st["n"] //= 2
+
+    # sigma finales: ALL statements' folded scalars decode in one
+    # transfer, and every A/B commitment rides one batched multi-MSM
+    finals = decode(FQ, jnp.stack([st[k][0] for st in states
+                                   for k in ("a", "b")]))
+    one = group.identity()
+    pts, exps, sigmas = [], [], []
+    for i, st in enumerate(states):
+        a_f, b_f = int(finals[2 * i]), int(finals[2 * i + 1])
+        s_a = int(rng.integers(0, Q, dtype=np.uint64)) % Q
+        s_b = int(rng.integers(0, Q, dtype=np.uint64)) % Q
+        s_rho = int(rng.integers(0, Q, dtype=np.uint64)) % Q
+        t_rho = int(rng.integers(0, Q, dtype=np.uint64)) % Q
+        # A = g_f^{s_a} h_f^{s_b} up^{a_f s_b + b_f s_a} h^{s_rho}
+        # B = up^{s_a s_b} h^{t_rho}
+        pts.append(jnp.stack([st["gg"][0], st["hh"][0], st["up"],
+                              st["hb"]]))
+        pts.append(jnp.stack([st["up"], st["hb"], one, one]))
+        exps.append(group.exps_from_ints(
+            [s_a, s_b, (a_f * s_b + b_f * s_a) % Q, s_rho]))
+        exps.append(group.exps_from_ints([s_a * s_b % Q, t_rho, 0, 0]))
+        sigmas.append((a_f, b_f, s_a, s_b, s_rho, t_rho))
+    ab_flat = group.decode_group_many(
+        group.msm_many(jnp.stack(pts), jnp.stack(exps)))
+
+    proofs = []
+    for i, st in enumerate(states):
+        a_f, b_f, s_a, s_b, s_rho, t_rho = sigmas[i]
+        ai, bi = ab_flat[2 * i], ab_flat[2 * i + 1]
+        transcript.absorb_ints(b"ipa2/AB", [ai, bi])
+        e = transcript.challenge_int(b"ipa2/e", Q)
+        z_a = (a_f * e + s_a) % Q
+        z_b = (b_f * e + s_b) % Q
+        z_rho = (st["rho"] * e % Q * e + s_rho * e + t_rho) % Q
+        proofs.append(IpaProof(st["ls"], st["rs"],
+                               [ai, bi, z_a, z_b, z_rho]))
+    return proofs
+
+
+def pair_verify_many(stmts, proofs: List[IpaProof],
+                     transcript: Transcript) -> bool:
+    """Verify S pair statements proven by `pair_prove_many`.
+
+    ``stmts`` is a list of ``(g_gens, h_gens, h_blind, com, claim, n)``;
+    replays the interleaved transcript schedule and checks every sigma
+    equation (all group comparisons decode in one transfer)."""
+    states = []
+    for (gg, hh, hb, com, claim, n), proof in zip(stmts, proofs):
+        assert n & (n - 1) == 0
+        transcript.absorb_int(b"ipa2/claim", claim)
+        x = transcript.challenge_int(b"ipa2/x", Q)
+        up = group.g_pow_int(_u_gen(), x)
+        if len(proof.ls) != n.bit_length() - 1 or \
+                len(proof.rs) != len(proof.ls):
+            return False
+        states.append({"n": n, "n0": n, "gg": gg, "hh": hh, "hb": hb,
+                       "up": up, "proof": proof, "round": 0, "alphas": [],
+                       "p": group.g_mul(com, group.g_pow_int(up, claim))})
+
+    while any(st["n"] > 1 for st in states):
+        for st in states:
+            if st["n"] <= 1:
+                continue
+            li = st["proof"].ls[st["round"]]
+            ri = st["proof"].rs[st["round"]]
+            transcript.absorb_ints(b"ipa2/lr", [li, ri])
+            al = transcript.challenge_int(b"ipa2/alpha", Q)
+            ali = pow(al, Q - 2, Q)
+            st["alphas"].append(al)
+            st["p"] = group.g_mul(st["p"], group.msm(
+                jnp.stack([group.encode_group(li),
+                           group.encode_group(ri)]),
+                group.exps_from_ints([al * al % Q, ali * ali % Q])))
+            st["round"] += 1
+            st["n"] //= 2
+
+    sides = []
+    for st in states:
+        n = st["n0"]
+        s = _s_vector(n, st["alphas"], low_exp_is_inv=True)
+        s_inv = _s_vector(n, st["alphas"], low_exp_is_inv=False)
+        g_f = group.msm_field(st["gg"][:n], s)
+        h_f = group.msm_field(st["hh"][:n], s_inv)
+        if len(st["proof"].sigma) != 5:
+            return False
+        ai, bi, z_a, z_b, z_rho = st["proof"].sigma
+        transcript.absorb_ints(b"ipa2/AB", [ai, bi])
+        e = transcript.challenge_int(b"ipa2/e", Q)
+        lhs = group.g_mul(
+            group.g_mul(group.g_pow_int(st["p"], e * e % Q),
+                        group.g_pow_int(group.encode_group(ai), e)),
+            group.encode_group(bi))
+        rhs = group.g_mul(
+            group.g_mul(group.g_pow_int(g_f, z_a * e % Q),
+                        group.g_pow_int(h_f, z_b * e % Q)),
+            group.g_mul(group.g_pow_int(st["up"], z_a * z_b % Q),
+                        group.g_pow_int(st["hb"], z_rho)))
+        sides.extend([lhs, rhs])
+    flat = group.decode_group_many(jnp.stack(sides))
+    return all(flat[2 * i] == flat[2 * i + 1] for i in range(len(states)))
+
 
 def pair_prove(g_gens, h_gens, h_blind, a_mont, b_mont, blind: int, claim: int,
                transcript: Transcript, rng: np.random.Generator) -> IpaProof:
-    n = a_mont.shape[0]
-    assert n & (n - 1) == 0 and b_mont.shape[0] == n
-    transcript.absorb_int(b"ipa2/claim", claim)
-    x = transcript.challenge_int(b"ipa2/x", Q)
-    up = group.g_pow_int(_u_gen(), x)
-
-    a, b, rho = a_mont, b_mont, int(blind)
-    gg, hh = g_gens[:n], h_gens[:n]
-    ls, rs = [], []
-    while n > 1:
-        n2 = n // 2
-        rho_l = int(rng.integers(0, Q, dtype=np.uint64)) % Q
-        rho_r = int(rng.integers(0, Q, dtype=np.uint64)) % Q
-        lr = _pair_round_lr(gg, hh, a, b, up, h_blind,
-                            _exp1(rho_l), _exp1(rho_r))
-        li, ri = group.decode_group_many(lr)
-        ls.append(li); rs.append(ri)
-        transcript.absorb_ints(b"ipa2/lr", [li, ri])
-        al = transcript.challenge_int(b"ipa2/alpha", Q)
-        ali = pow(al, Q - 2, Q)
-        a, b, gg, hh = _pair_fold(a, b, gg, hh, enc(al), enc(ali),
-                                  _exp1(al), _exp1(ali))
-        rho = (al * al % Q * rho_l + rho + ali * ali % Q * rho_r) % Q
-        n = n2
-
-    a_f, b_f = (int(v) for v in decode(FQ, jnp.stack([a[0], b[0]])))
-    s_a = int(rng.integers(0, Q, dtype=np.uint64)) % Q
-    s_b = int(rng.integers(0, Q, dtype=np.uint64)) % Q
-    s_rho = int(rng.integers(0, Q, dtype=np.uint64)) % Q
-    t_rho = int(rng.integers(0, Q, dtype=np.uint64)) % Q
-    # A = g_f^{s_a} h_f^{s_b} up^{a_f s_b + b_f s_a} h^{s_rho}
-    # B = up^{s_a s_b} h^{t_rho}: one two-row multi-MSM, one decode
-    one = group.identity()
-    pts = jnp.stack([
-        jnp.stack([gg[0], hh[0], up, h_blind]),
-        jnp.stack([up, h_blind, one, one])])
-    exps = jnp.stack([
-        group.exps_from_ints([s_a, s_b, (a_f * s_b + b_f * s_a) % Q, s_rho]),
-        group.exps_from_ints([s_a * s_b % Q, t_rho, 0, 0])])
-    ai, bi = group.decode_group_many(group.msm_many(pts, exps))
-    transcript.absorb_ints(b"ipa2/AB", [ai, bi])
-    e = transcript.challenge_int(b"ipa2/e", Q)
-    z_a = (a_f * e + s_a) % Q
-    z_b = (b_f * e + s_b) % Q
-    z_rho = (rho * e % Q * e + s_rho * e + t_rho) % Q
-    return IpaProof(ls, rs, [ai, bi, z_a, z_b, z_rho])
+    """Single-statement pair argument (S=1 lockstep degenerates to the
+    classic sequential schedule)."""
+    (proof,) = pair_prove_many(
+        [(g_gens, h_gens, h_blind, a_mont, b_mont, blind, claim)],
+        transcript, rng)
+    return proof
 
 
 def pair_verify(g_gens, h_gens, h_blind, com, claim: int, proof: IpaProof,
                 transcript: Transcript, n: int) -> bool:
-    assert n & (n - 1) == 0
-    transcript.absorb_int(b"ipa2/claim", claim)
-    x = transcript.challenge_int(b"ipa2/x", Q)
-    up = group.g_pow_int(_u_gen(), x)
-    p = group.g_mul(com, group.g_pow_int(up, claim))
-
-    alphas = []
-    for li, ri in zip(proof.ls, proof.rs):
-        transcript.absorb_ints(b"ipa2/lr", [li, ri])
-        al = transcript.challenge_int(b"ipa2/alpha", Q)
-        ali = pow(al, Q - 2, Q)
-        alphas.append(al)
-        p = group.g_mul(p, group.msm(
-            jnp.stack([group.encode_group(li), group.encode_group(ri)]),
-            group.exps_from_ints([al * al % Q, ali * ali % Q])))
-
-    s = _s_vector(n, alphas, low_exp_is_inv=True)
-    s_inv = _s_vector(n, alphas, low_exp_is_inv=False)
-    g_f = group.msm_field(g_gens[:n], s)
-    h_f = group.msm_field(h_gens[:n], s_inv)
-    ai, bi, z_a, z_b, z_rho = proof.sigma
-    transcript.absorb_ints(b"ipa2/AB", [ai, bi])
-    e = transcript.challenge_int(b"ipa2/e", Q)
-    lhs = group.g_mul(
-        group.g_mul(group.g_pow_int(p, e * e % Q),
-                    group.g_pow_int(group.encode_group(ai), e)),
-        group.encode_group(bi))
-    rhs = group.g_mul(
-        group.g_mul(group.g_pow_int(g_f, z_a * e % Q),
-                    group.g_pow_int(h_f, z_b * e % Q)),
-        group.g_mul(group.g_pow_int(up, z_a * z_b % Q),
-                    group.g_pow_int(h_blind, z_rho)))
-    return group.decode_group(lhs) == group.decode_group(rhs)
+    return pair_verify_many([(g_gens, h_gens, h_blind, com, claim, n)],
+                            [proof], transcript)

@@ -87,6 +87,12 @@ def compile(graph: LayerGraph, quant: Optional[QuantConfig] = None,
     wrap the same deterministic generator derivation, so a vk
     reconstructed from bytes in another process verifies proofs made
     with this pk."""
+    # setup is the natural choke point every prover/verifier process
+    # passes through: enabling the persistent XLA compilation cache here
+    # (idempotent config flips) turns the ~tens-of-seconds first-prove
+    # jit cost into a disk-cache hit for every later process
+    from repro.util import enable_compilation_cache
+    enable_compilation_cache()
     quant = quant if quant is not None else QuantConfig()
     cfg = PipelineConfig.from_graph(graph, q_bits=quant.q_bits,
                                     r_bits=quant.r_bits, n_steps=n_steps)

@@ -4,9 +4,12 @@
 ``widths`` is the full MLP shape vector d_0..d_L (input width, then one
 out-width per layer), so heterogeneous pyramids like 784-512-256-128-10
 are first-class.  The scalar ``width`` remains as the uniform shorthand
-(``widths=None`` means every d_i = width), and with ``n_steps=1`` and
-uniform widths every size below degenerates to the seed layout, so the
-single-step keys are bit-identical to the old `zkdl.make_keys`.
+(``widths=None`` means every d_i = width).
+
+Commitment keys are carved out of ONE unified generator vector
+(`cfg.agg_blocks` / `make_keys`): every committed tensor slot owns a
+disjoint slice of the direct-sum basis the single aggregated opening
+IPA runs over (see openings.py), all sharing one blinding generator.
 
 All committed tensors are stacked over graph slots AND training steps
 (the layer-stacking trick of eq. 27, applied per FAC4DNN to the whole
@@ -18,9 +21,11 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
-from repro.core import pedersen, zkrelu
+import jax.numpy as jnp
+
+from repro.core import group, pedersen, zkrelu
 from repro.core.pipeline.graph import (LayerGraph, LayerOp, build_fcnn_graph,
                                        graph_widths)
 from repro.core.pipeline.tables import log2_exact, next_pow2
@@ -141,6 +146,37 @@ class PipelineConfig:
         assert 0 <= t < self.t_pad and 0 <= node_idx < self.lw_pad
         return t * self.lw_pad + node_idx
 
+    # -- unified direct-sum opening layout (see openings.py) --------------
+    def slot_stack_len(self, spec) -> int:
+        """Stacked commitment length of one schema `TensorSlot`."""
+        return {"aux": self.d_stack, "weight": self.w_stack,
+                "label": self.y_stack}[spec.axis]
+
+    @functools.cached_property
+    def agg_blocks(self) -> Tuple[Tuple[str, int, int], ...]:
+        """The direct-sum block table of the ONE aggregated opening IPA:
+        ``(name, offset, length)`` per block, schema slots first (in
+        `commit_slots` order — the transcript absorption order), then the
+        two homomorphic data-fold blocks "x1"/"x2".  Block k's evaluation
+        vector is weighted by rho^k, so this order is part of the
+        protocol."""
+        out, off = [], 0
+        for spec in self.graph.commit_slots:
+            n = self.slot_stack_len(spec)
+            out.append((spec.name, off, n))
+            off += n
+        for tag in ("x1", "x2"):
+            out.append((tag, off, self.x_len))
+            off += self.x_len
+        return tuple(out)
+
+    @property
+    def agg_len(self) -> int:
+        """Unified opening vector length: the block sum padded to a
+        power of two (pad generators are fresh; pad witness is zero)."""
+        last = self.agg_blocks[-1]
+        return next_pow2(last[1] + last[2])
+
     # -- challenge-point sizes (see challenges.py) ------------------------
     @property
     def lb(self) -> int:
@@ -166,30 +202,66 @@ class PipelineConfig:
 
 @dataclasses.dataclass(frozen=True)
 class PipelineKeys:
+    """Commitment key material laid out for the ONE aggregated opening.
+
+    ``k_agg`` is the unified direct-sum basis of `cfg.agg_blocks`: every
+    commitment slot's generators are a DISJOINT slice of it (disjointness
+    is what makes the cross-slot batching sound — shared generators would
+    let a prover shift witness mass between blocks), all under one shared
+    blinding generator so the per-slot blinds sum into the aggregated
+    Schnorr opening.  Two exceptions to freshness: the ``bq`` block is
+    the zkReLU G-column basis (its commitment doubles as the validity
+    argument's B_{Q-1} commitment), and the "x2" block reuses the "x1"
+    slice, because both data folds derive homomorphically from the same
+    per-sample commitments — those fold claims are additionally pinned by
+    the bucket sumcheck finals they must equal.
+    """
     cfg: PipelineConfig
-    kd: pedersen.CommitKey        # stacked aux tensors (d_stack)
-    kw: pedersen.CommitKey        # stacked W / G_W (sw_pad * w_elem)
-    kx: pedersen.CommitKey        # per-sample data vectors (x_len)
-    ky: pedersen.CommitKey        # labels, stacked over steps (y_stack)
-    k_bq: pedersen.CommitKey      # B_{Q-1} under the G-column basis
+    k_agg: pedersen.CommitKey     # unified basis (agg_len), one blind gen
+    slot_keys: Dict[str, pedersen.CommitKey]   # schema slot -> basis slice
+    kx: pedersen.CommitKey        # per-sample data vectors (x1/x2 slice)
     validity: zkrelu.ValidityKeys
+
+    @property
+    def k_bq(self) -> pedersen.CommitKey:
+        """B_{Q-1} bit commitments (zkReLU G-column basis slice)."""
+        return self.slot_keys["bq"]
 
     def slot_key(self, spec) -> pedersen.CommitKey:
         """The commitment key of one schema `TensorSlot` (bit-matrix
         slots use k_bq via `pedersen.commit_bits` instead)."""
-        if spec.bits:
-            return self.k_bq
-        return {"aux": self.kd, "weight": self.kw,
-                "label": self.ky}[spec.axis]
+        return self.slot_keys[spec.name]
 
 
 def make_keys(cfg: PipelineConfig) -> PipelineKeys:
     vk = zkrelu.make_validity_keys(cfg.d_stack, cfg.q_bits, cfg.r_bits)
+    h = vk.h_blind
+    # one deterministic derivation covers every fresh block plus the
+    # power-of-two pad tail; bq (g_col) and x2 (the x1 slice) are spliced
+    # in at their offsets
+    blocks = cfg.agg_blocks
+    fresh_len = sum(n for name, _, n in blocks
+                    if name not in ("bq", "x2"))
+    total = blocks[-1][1] + blocks[-1][2]
+    fresh = group.derive_generators(b"zkdl/gens/agg",
+                                    fresh_len + (cfg.agg_len - total))
+    parts, taken, slot_gens = [], 0, {}
+    for name, _, n in blocks:
+        if name == "bq":
+            gens = vk.g_col
+        elif name == "x2":
+            gens = slot_gens["x1"]
+        else:
+            gens = fresh[taken: taken + n]
+            taken += n
+        slot_gens[name] = gens
+        parts.append(gens)
+    parts.append(fresh[taken:])                       # pad tail
+    k_agg = pedersen.CommitKey(jnp.concatenate(parts), h, b"zkdl/agg")
+    slot_keys = {s.name: pedersen.CommitKey(slot_gens[s.name], h,
+                                            b"zkdl/slot/" + s.name.encode())
+                 for s in cfg.graph.commit_slots}
     return PipelineKeys(
-        cfg=cfg,
-        kd=pedersen.make_key(b"zkdl/aux", cfg.d_stack),
-        kw=pedersen.make_key(b"zkdl/w", cfg.w_stack),
-        kx=pedersen.make_key(b"zkdl/x", cfg.x_len),
-        ky=pedersen.make_key(b"zkdl/y", cfg.y_stack),
-        k_bq=pedersen.CommitKey(vk.g_col, vk.h_blind, b"zkdl/bq"),
+        cfg=cfg, k_agg=k_agg, slot_keys=slot_keys,
+        kx=pedersen.CommitKey(slot_gens["x1"], h, b"zkdl/x"),
         validity=vk)

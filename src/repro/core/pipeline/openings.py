@@ -1,35 +1,51 @@
-"""Step (c): derived claims, folded IPA openings, and zkReLU validity.
+"""Step (c): derived claims, the ONE direct-sum opening IPA, and zkReLU
+validity.
 
 Everything the anchor reduced to point-claims on COMMITTED tensors is
 discharged here:
 
 * the per-step eq. (32) reduction of G_Z^{L,t} to Z''/B/Y claims (the
   loss layer is linear, so the verifier assembles it from openings);
-* one IPA per committed tensor, with ALL of its claims -- across points,
-  graph nodes and aggregated steps -- folded into a single inner product
-  via <T, b1> + rho <T, b2> = <T, b1 + rho b2>; claims on narrow nodes
+* per committed tensor, ALL of its claims -- across points, graph nodes
+  and aggregated steps -- fold into a single (basis, claim) pair via
+  <T, b1> + rho <T, b2> = <T, b1 + rho b2>; claims on narrow nodes
   embed into the stacked commitment by zero-extending their points
   (`pad_point`), so heterogeneous shapes share the same fold;
-* the per-sample data commitments (Section 4.4) folded homomorphically
-  over rows AND steps into two IPAs total;
+* the per-sample data commitments (Section 4.4) fold homomorphically
+  over rows AND steps into two more (basis, claim) blocks;
+* then ALL of those per-tensor blocks aggregate into ONE inner-product
+  argument: a batching challenge rho weights block k's evaluation vector
+  by rho^k, the witness is the direct sum ``a = (+)_k a_k`` over the
+  block-concatenated generator basis of `cfg.agg_blocks` (disjoint
+  slices of one unified key, zero-padded to the next power of two), the
+  blinds sum, and a single log(agg_len)-round IPA plus one Schnorr
+  replaces the K per-tensor arguments -- one round schedule, one L/R
+  chain, 2 log(N) + 3 group elements on the wire instead of
+  sum_k (2 log(n_k) + 3);
 * the zkReLU validity argument over the full stacked bit matrices.
 
-The proof therefore carries O(log(T L D Q)) group elements for T steps,
-against O(T log(L D Q)) for T independent proofs.
+Soundness of the cross-tensor batching rests on the blocks' generator
+slices being pairwise disjoint (see `make_keys`); the one shared slice
+-- "x1"/"x2", both derived from the same per-sample data commitments --
+is additionally pinned because both fold claims must equal bucket
+sumcheck finals the verifier computes itself.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+import dataclasses
+from typing import Dict, List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.field import FQ, add, encode_i64
+from repro.field import FQ, add, encode_i64, mont_mul
 from repro.core import group, ipa, zkrelu
-from repro.core.mle import (enc_vec, expand_point, fdot, fdot_many,
+from repro.core.mle import (enc, enc_vec, expand_point, fdot, fdot_many,
                             hexpand_point, weighted_sum)
 from repro.core.transcript import Transcript
 from repro.core.pipeline import matmul
+from repro.core.pipeline import profile as profile_mod
 from repro.core.pipeline.anchor import output_gz_points
 from repro.core.pipeline.challenges import (ChallengeSchedule, WeightDraws,
                                             instance_slices, pad_point,
@@ -198,12 +214,99 @@ def _x_coefs(cfg: PipelineConfig, t: Transcript, tag: str, row_pt,
     return coefs, combined_claim
 
 
-def prove(cfg: PipelineConfig, keys: PipelineKeys, tabs: FieldTables,
-          blinds: Dict[str, int], x_blinds: List[int],
-          aux_bits: zkrelu.AuxBits, vblinds, ch: ChallengeSchedule,
-          mat: matmul.MatmulOut, anc, op: Dict[str, int],
-          e_pi1, e_pi2, e_pi3, t: Transcript, rng):
-    """Runs the whole of step (c) prover-side; returns (ipas, validity)."""
+# ---------------------------------------------------------------------------
+# Direct-sum aggregation of every per-tensor opening into ONE IPA.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AggClaim:
+    """One block of the direct-sum opening: a committed tensor's combined
+    evaluation vector and claim.  The prover side carries the witness
+    table and blind; the verifier side the commitment group element."""
+    name: str
+    basis: jnp.ndarray                      # (block_len, 4) Montgomery
+    claim: int
+    table: Optional[jnp.ndarray] = None     # prover witness (Montgomery)
+    blind: int = 0
+    com: Optional[jnp.ndarray] = None       # verifier commitment point
+
+
+def slot_claim_lists(cfg: PipelineConfig, op: Dict[str, int], e_pi1, e_pi2,
+                     e_pi3, e_star, f_zpp: int, f_gap: int, v_q1: int,
+                     gz_bases) -> Dict[str, list]:
+    """The per-tensor (public basis, claim) lists both sides fold with
+    `_combine_claims` -- one shared enumeration, so the prover and the
+    standalone verifier can never drift apart.  The "w" list (which
+    needs the transcript-drawn `WeightDraws`) is appended by the
+    caller."""
+    T = cfg.n_steps
+    b_gzl_b, b_gzl_w, yb_bases, yw_bases = gz_bases
+    return {
+        "zpp": [(e_pi1, op["a1"]), (e_star, f_zpp)]
+        + [(b_gzl_b[ti], op[f"zL_b/{ti}"]) for ti in range(T)]
+        + [(b_gzl_w[ti], op[f"zL_w/{ti}"]) for ti in range(T)],
+        "bq": [(e_pi1, op["a2"]), (e_star, v_q1)]
+        + [(b_gzl_b[ti], op[f"bL_b/{ti}"]) for ti in range(T)]
+        + [(b_gzl_w[ti], op[f"bL_w/{ti}"]) for ti in range(T)],
+        "rz": [(e_pi1, op["a3"]), (e_star, op["a7"])],
+        "gap": [(e_pi2, op["a4"]), (e_star, f_gap)],
+        "rga": [(e_pi2, op["a5"]), (e_star, op["a8"])],
+        "gw": [(e_pi3, op["a6"])],
+        "y": [(yb_bases[ti], op[f"y_b/{ti}"]) for ti in range(T)]
+        + [(yw_bases[ti], op[f"y_w/{ti}"]) for ti in range(T)],
+    }
+
+
+def direct_sum(cfg: PipelineConfig, t: Transcript,
+               blocks: Dict[str, AggClaim]):
+    """Draw the batching challenge and assemble the aggregated statement:
+    block k's basis scales by rho^k (so the single inner product equals
+    the rho-weighted sum of the per-block claims), blocks concatenate at
+    their `cfg.agg_blocks` offsets, and the tail zero-pads to the
+    power-of-two `cfg.agg_len`."""
+    rho = t.challenge_int(b"rho/agg", Q_MOD)
+    parts, claim, rpow = [], 0, 1
+    for name, _, n in cfg.agg_blocks:
+        blk = blocks[name]
+        assert blk.basis.shape[0] == n, (name, blk.basis.shape, n)
+        parts.append(mont_mul(FQ, blk.basis, enc(rpow)[None]))
+        claim = (claim + rpow * blk.claim) % Q_MOD
+        rpow = rpow * rho % Q_MOD
+    b_agg = _pad_concat(cfg, parts)
+    return b_agg, claim, rho
+
+
+def _pad_concat(cfg: PipelineConfig, parts) -> jnp.ndarray:
+    total = sum(p.shape[0] for p in parts)
+    pad = cfg.agg_len - total
+    if pad:
+        parts = list(parts) + [jnp.zeros((pad, 4), jnp.uint32)]
+    return jnp.concatenate(parts)
+
+
+def stacked_witness(cfg: PipelineConfig,
+                    blocks: Dict[str, AggClaim]) -> jnp.ndarray:
+    """Prover side: the direct-sum witness a = (+)_k a_k, zero-padded
+    (zero IS the Montgomery encoding of zero, so pad generators never
+    contribute)."""
+    return _pad_concat(cfg, [blocks[name].table
+                             for name, _, _ in cfg.agg_blocks])
+
+
+def _sub(prof, name: str):
+    return profile_mod.subphase(prof, name)
+
+
+def prover_blocks(cfg: PipelineConfig, tabs: FieldTables,
+                  blinds: Dict[str, int], x_blinds: List[int],
+                  ch: ChallengeSchedule, mat: matmul.MatmulOut, anc,
+                  op: Dict[str, int], e_pi1, e_pi2, e_pi3, t: Transcript):
+    """Derived claims, every per-tensor combine and the two data folds:
+    the complete prover-side block table of the direct-sum opening, plus
+    the zkReLU claim context ``(u_relu, v, v_q1, v_r)``.  Factored out
+    of `prove` so tests can pin the value-level parity of the
+    aggregation (every block claim is a true inner product of its
+    witness, and the aggregated claim is their rho-weighted sum)."""
     T = cfg.n_steps
     points = {fam: mat.fams[fam].points for fam in mat.fams}
     u_star = anc.u_star
@@ -238,54 +341,65 @@ def prove(cfg: PipelineConfig, keys: PipelineKeys, tabs: FieldTables,
         op[f"y_w/{ti}"] = y_vals[T + ti]
     t.absorb_ints(b"op3", [op[k] for k in gz_top_keys(cfg)])
 
-    ipas: Dict[str, ipa.IpaProof] = {}
-
-    def multi_open(name, table, key, blind, claims_pts):
-        combined_b, combined_claim = _combine_claims(t, name, claims_pts)
-        ipas[name] = ipa.open_prove(key, table, combined_b, blind,
-                                    combined_claim, t, rng)
-
-    multi_open("zpp", tabs.zpp_t, keys.kd, blinds["zpp"],
-               [(e_pi1, op["a1"]), (e_star, f_zpp)]
-               + [(b_gzl_b[ti], op[f"zL_b/{ti}"]) for ti in range(T)]
-               + [(b_gzl_w[ti], op[f"zL_w/{ti}"]) for ti in range(T)])
-    multi_open("bq", tabs.bq_t, keys.k_bq, blinds["bq"],
-               [(e_pi1, op["a2"]), (e_star, v_q1)]
-               + [(b_gzl_b[ti], op[f"bL_b/{ti}"]) for ti in range(T)]
-               + [(b_gzl_w[ti], op[f"bL_w/{ti}"]) for ti in range(T)])
-    multi_open("rz", tabs.rz_t, keys.kd, blinds["rz"],
-               [(e_pi1, op["a3"]), (e_star, op["a7"])])
-    multi_open("gap", tabs.gap_t, keys.kd, blinds["gap"],
-               [(e_pi2, op["a4"]), (e_star, f_gap)])
-    multi_open("rga", tabs.rga_t, keys.kd, blinds["rga"],
-               [(e_pi2, op["a5"]), (e_star, op["a8"])])
-
     dlt = WeightDraws.draw(t, cfg)
     b_w1, b_w2, cl_w1, cl_w2 = w_opening(
         cfg, dlt, ch, points, mat.fams["fwd"].finals,
         mat.fams["bwd"].finals)
-    multi_open("w", tabs.w_t, keys.kw, blinds["w"],
-               [(b_w1, cl_w1), (b_w2, cl_w2)])
-    multi_open("gw", tabs.gw_t, keys.kw, blinds["gw"], [(e_pi3, op["a6"])])
-    multi_open("y", tabs.y_t, keys.ky, blinds["y"],
-               [(yb_bases[ti], op[f"y_b/{ti}"]) for ti in range(T)]
-               + [(yw_bases[ti], op[f"y_w/{ti}"]) for ti in range(T)])
+    lists = slot_claim_lists(cfg, op, e_pi1, e_pi2, e_pi3, e_star,
+                             f_zpp, f_gap, v_q1,
+                             (b_gzl_b, b_gzl_w, yb_bases, yw_bases))
+    lists["w"] = [(b_w1, cl_w1), (b_w2, cl_w2)]
 
-    # data openings: per-sample commitments folded over rows AND steps;
+    blocks: Dict[str, AggClaim] = {}
+    for name, _, _ in cfg.agg_blocks:
+        if name in ("x1", "x2"):
+            continue
+        comb_b, comb_c = _combine_claims(t, name, lists[name])
+        blocks[name] = AggClaim(name, comb_b, comb_c,
+                                table=tabs.tabs[name],
+                                blind=blinds[name])
+
+    # data blocks: per-sample commitments folded over rows AND steps;
     # the T*B-row table fold is ONE weighted_sum dispatch per tag
     x_stack = jnp.stack(tabs.x_tabs)
     for tag, row_pt, col_pt, claims in x_fold_openings(
-            cfg, ch, points, mat.fams["fwd"].finals, mat.fams["gw"].finals):
+            cfg, ch, points, mat.fams["fwd"].finals,
+            mat.fams["gw"].finals):
         coefs, combined_claim = _x_coefs(cfg, t, tag, row_pt, claims)
         folded = weighted_sum(x_stack, enc_vec(coefs))
-        blind_f = sum(c * xb for c, xb in zip(coefs, x_blinds)) % Q_MOD
-        ipas[tag] = ipa.open_prove(keys.kx, folded, expand_point(col_pt),
-                                   blind_f, combined_claim, t, rng)
+        blind_f = sum(c * xb
+                      for c, xb in zip(coefs, x_blinds)) % Q_MOD
+        blocks[tag] = AggClaim(tag, expand_point(col_pt),
+                               combined_claim, table=folded,
+                               blind=blind_f)
+    return blocks, (u_relu, v, v_q1, v_r)
 
-    validity = zkrelu.prove_validity(
-        keys.validity, aux_bits, vblinds, u_relu,
-        v, v_q1, v_r, blinds["bq"], t, rng)
-    return ipas, validity
+
+def prove(cfg: PipelineConfig, keys: PipelineKeys, tabs: FieldTables,
+          blinds: Dict[str, int], x_blinds: List[int],
+          aux_bits: zkrelu.AuxBits, vblinds, ch: ChallengeSchedule,
+          mat: matmul.MatmulOut, anc, op: Dict[str, int],
+          e_pi1, e_pi2, e_pi3, t: Transcript, rng, prof=None):
+    """Runs the whole of step (c) prover-side; returns (ipa_agg,
+    validity).  ``prof`` (a `PhaseProfile`) attributes the sub-phases
+    claim-combine / ipa-rounds / sigma / zkrelu-validity."""
+    with _sub(prof, "claim-combine"):
+        blocks, (u_relu, v, v_q1, v_r) = prover_blocks(
+            cfg, tabs, blinds, x_blinds, ch, mat, anc, op,
+            e_pi1, e_pi2, e_pi3, t)
+        b_agg, claim_agg, _ = direct_sum(cfg, t, blocks)
+        a_agg = stacked_witness(cfg, blocks)
+        blind_agg = sum(blk.blind for blk in blocks.values()) % Q_MOD
+        jax.block_until_ready((a_agg, b_agg))
+
+    ipa_agg = ipa.open_prove(keys.k_agg, a_agg, b_agg, blind_agg,
+                             claim_agg, t, rng, prof=prof)
+
+    with _sub(prof, "zkrelu-validity"):
+        validity = zkrelu.prove_validity(
+            keys.validity, aux_bits, vblinds, u_relu,
+            v, v_q1, v_r, blinds["bq"], t, rng)
+    return ipa_agg, validity
 
 
 def verify(cfg: PipelineConfig, keys: PipelineKeys, proof, coms,
@@ -325,47 +439,43 @@ def verify(cfg: PipelineConfig, keys: PipelineKeys, proof, coms,
     pt_b, pt_w = output_gz_points(cfg, ch, points)
     b_gzl_b, b_gzl_w, yb_bases, yw_bases = gz_top_bases(cfg, pt_b, pt_w)
 
-    def multi_check(name, com_int, key, claims_pts):
-        combined_b, combined_claim = _combine_claims(t, name, claims_pts)
-        ok = ipa.open_verify(key, group.encode_group(com_int), combined_b,
-                             combined_claim, proof.ipas[name], t)
-        if not ok:
-            raise ValueError("open-" + name)
-
-    multi_check("zpp", coms.zpp, keys.kd,
-                [(e_pi1, op["a1"]), (e_star, f_zpp)]
-                + [(b_gzl_b[ti], op[f"zL_b/{ti}"]) for ti in range(T)]
-                + [(b_gzl_w[ti], op[f"zL_w/{ti}"]) for ti in range(T)])
-    multi_check("bq", coms.bq, keys.k_bq,
-                [(e_pi1, op["a2"]), (e_star, v_q1)]
-                + [(b_gzl_b[ti], op[f"bL_b/{ti}"]) for ti in range(T)]
-                + [(b_gzl_w[ti], op[f"bL_w/{ti}"]) for ti in range(T)])
-    multi_check("rz", coms.rz, keys.kd,
-                [(e_pi1, op["a3"]), (e_star, op["a7"])])
-    multi_check("gap", coms.gap, keys.kd,
-                [(e_pi2, op["a4"]), (e_star, f_gap)])
-    multi_check("rga", coms.rga, keys.kd,
-                [(e_pi2, op["a5"]), (e_star, op["a8"])])
-
     dlt = WeightDraws.draw(t, cfg)
     b_w1, b_w2, cl_w1, cl_w2 = w_opening(cfg, dlt, ch, points,
                                          proof.fwd_finals,
                                          proof.bwd_finals)
-    multi_check("w", coms.w, keys.kw, [(b_w1, cl_w1), (b_w2, cl_w2)])
-    multi_check("gw", coms.gw, keys.kw, [(e_pi3, op["a6"])])
-    multi_check("y", coms.y, keys.ky,
-                [(yb_bases[ti], op[f"y_b/{ti}"]) for ti in range(T)]
-                + [(yw_bases[ti], op[f"y_w/{ti}"]) for ti in range(T)])
+    lists = slot_claim_lists(cfg, op, e_pi1, e_pi2, e_pi3, e_star,
+                             f_zpp, f_gap, v_q1,
+                             (b_gzl_b, b_gzl_w, yb_bases, yw_bases))
+    lists["w"] = [(b_w1, cl_w1), (b_w2, cl_w2)]
 
-    # data openings: fold the per-sample commitments homomorphically
+    blocks: Dict[str, AggClaim] = {}
+    for name, _, _ in cfg.agg_blocks:
+        if name in ("x1", "x2"):
+            continue
+        comb_b, comb_c = _combine_claims(t, name, lists[name])
+        blocks[name] = AggClaim(
+            name, comb_b, comb_c,
+            com=group.encode_group(coms.slots[name]))
+
+    # data blocks: fold the per-sample commitments homomorphically
     com_pts = jnp.stack([group.encode_group(ci) for ci in coms.x])
     for tag, row_pt, col_pt, claims in x_fold_openings(
             cfg, ch, points, proof.fwd_finals, proof.gw_finals):
         coefs, combined_claim = _x_coefs(cfg, t, tag, row_pt, claims)
         com_fold = group.msm(com_pts, group.exps_from_ints(coefs))
-        if not ipa.open_verify(keys.kx, com_fold, expand_point(col_pt),
-                               combined_claim, proof.ipas[tag], t):
-            raise ValueError("open-" + tag)
+        blocks[tag] = AggClaim(tag, expand_point(col_pt), combined_claim,
+                               com=com_fold)
+
+    # the direct-sum commitment is the product of every block's
+    # commitment (shared blind generator; zero pad witness); one IPA
+    # check replaces the per-tensor checks
+    b_agg, claim_agg, _ = direct_sum(cfg, t, blocks)
+    com_agg = blocks[cfg.agg_blocks[0][0]].com
+    for name, _, _ in cfg.agg_blocks[1:]:
+        com_agg = group.g_mul(com_agg, blocks[name].com)
+    if not ipa.open_verify(keys.k_agg, com_agg, b_agg, claim_agg,
+                           proof.ipa_agg, t):
+        raise ValueError("open-agg")
 
     if not zkrelu.verify_validity(
             keys.validity, coms.validity, coms.bq, v, v_q1, v_r, u_relu,

@@ -20,7 +20,8 @@ appears exactly once, in tag order:
     3 OPEN      claim openings, name-keyed
     4 SC        per-family bucket sumchecks + the anchor sumcheck
     5 FINALS    per-family bucket finals + claim splits + anchor finals
-    6 IPAS      folded IPA openings, name-keyed
+    6 IPA       the ONE direct-sum opening IPA (v2; v1 carried a
+                name-keyed dict of per-tensor IPAs here)
     7 VALIDITY  the two zkReLU validity IPAs
 
 Scalars are 8-byte words: both the proof field (61-bit) and the group
@@ -28,6 +29,11 @@ field (62-bit) fit.  The encoding is canonical — encode(decode(b)) == b
 and decode(encode(p)) == p — so byte digests are stable and any
 single-byte tamper either fails framing (`ProofDecodeError`) or changes
 a transcript value and is rejected by verification.
+
+Version negotiation is explicit: v2 readers reject v1 streams (whose
+per-slot opening arguments and key layout no longer exist) with a
+dedicated `ProofDecodeError` naming the migration, and reject unknown
+future versions rather than guessing.
 """
 from __future__ import annotations
 
@@ -40,14 +46,30 @@ from repro.core.sumcheck import SumcheckProof
 
 MAGIC_PROOF = b"ZKDL"
 MAGIC_VK = b"ZKVK"
-VERSION = 1
+# v2: the per-slot IPA dict collapsed into ONE direct-sum opening IPA,
+# and commitment keys moved to the unified generator layout — v1 bytes
+# (and v1 verifying keys, whose generators derive differently) cannot
+# verify under v2 keys, so decode refuses them instead of mis-verifying
+VERSION = 2
 
-_SECTIONS = ("META", "COMS", "OPEN", "SC", "FINALS", "IPAS", "VALIDITY")
+_SECTIONS = ("META", "COMS", "OPEN", "SC", "FINALS", "IPA", "VALIDITY")
 FAMILIES = ("fwd", "bwd", "gw")
 
 
 class ProofDecodeError(ValueError):
     """Malformed / truncated / version-mismatched byte stream."""
+
+
+def _check_version(ver: int, what: str) -> None:
+    if ver == VERSION:
+        return
+    if ver == 1:
+        raise ProofDecodeError(
+            f"{what} format v1 (per-slot IPA openings) is no longer "
+            "supported: v2 aggregates every opening into one direct-sum "
+            "IPA over a new key layout — re-prove under v2 keys")
+    raise ProofDecodeError(f"unsupported {what} version {ver} "
+                           f"(this decoder speaks v{VERSION})")
 
 
 # -- primitives -------------------------------------------------------------
@@ -218,11 +240,8 @@ def encode_proof(proof) -> bytes:
     _w_scalars(b, proof.anchor_finals, count="u16")
     section(5, b)
 
-    b = io.BytesIO()                                   # 6 IPAS
-    _w_u16(b, len(proof.ipas))
-    for name in sorted(proof.ipas):
-        _w_str(b, name)
-        _w_ipa(b, proof.ipas[name])
+    b = io.BytesIO()                                   # 6 IPA (direct sum)
+    _w_ipa(b, proof.ipa_agg)
     section(6, b)
 
     b = io.BytesIO()                                   # 7 VALIDITY
@@ -241,9 +260,7 @@ def decode_proof(data: bytes):
     r = _Reader(data)
     if r.take(4) != MAGIC_PROOF:
         raise ProofDecodeError("bad magic (not a zkDL proof)")
-    ver = r.u16()
-    if ver != VERSION:
-        raise ProofDecodeError(f"unsupported proof version {ver}")
+    _check_version(r.u16(), "proof")
 
     sections: Dict[int, _Reader] = {}
     for tag_want in range(1, len(_SECTIONS) + 1):
@@ -287,10 +304,7 @@ def decode_proof(data: bytes):
     anchor_finals = s.scalars(count="u16")
 
     s = sections[6]
-    ipas = {}
-    for _ in range(s.u16()):
-        name = s.str_()
-        ipas[name] = _r_ipa(s)
+    ipa_agg = _r_ipa(s)
 
     s = sections[7]
     validity = zkrelu.ValidityProof(ipa_main=_r_ipa(s), ipa_rem=_r_ipa(s))
@@ -308,7 +322,7 @@ def decode_proof(data: bytes):
         gw_finals=finals["gw"],
         fwd_claims=claims["fwd"], bwd_claims=claims["bwd"],
         gw_claims=claims["gw"],
-        anchor_finals=anchor_finals, ipas=ipas, validity=validity,
+        anchor_finals=anchor_finals, ipa_agg=ipa_agg, validity=validity,
         n_steps=n_steps)
 
 
@@ -349,9 +363,7 @@ def decode_vk(data: bytes):
     r = _Reader(data)
     if r.take(4) != MAGIC_VK:
         raise ProofDecodeError("bad magic (not a zkDL verifying key)")
-    ver = r.u16()
-    if ver != VERSION:
-        raise ProofDecodeError(f"unsupported vk version {ver}")
+    _check_version(r.u16(), "vk")
     q_bits, r_bits = r.u8(), r.u8()
     n_steps = r.u32()
     nodes = []

@@ -84,7 +84,9 @@ class AggregatedProof:
     bwd_claims: List[int]
     gw_claims: List[int]
     anchor_finals: List[int]
-    ipas: Dict[str, ipa.IpaProof]
+    #: the ONE direct-sum opening IPA covering every committed-tensor
+    #: and data-fold claim (see openings.py)
+    ipa_agg: ipa.IpaProof
     validity: zkrelu.ValidityProof
     n_steps: int = 1
 
@@ -176,10 +178,10 @@ class SessionProver:
         with prof.phase("anchor"):
             anc = anchor_mod.prove(cfg, self.tabs, ch, mat, t)   # step (b)
         with prof.phase("openings"):
-            ipas, validity = openings_mod.prove(                 # step (c)
+            ipa_agg, validity = openings_mod.prove(              # step (c)
                 cfg, keys, self.tabs, self.blinds, self.x_blinds,
                 self.aux_bits, self.vblinds, ch, mat, anc, op,
-                e_pi1, e_pi2, e_pi3, t, rng)
+                e_pi1, e_pi2, e_pi3, t, rng, prof=prof)
 
         return AggregatedProof(
             coms=self.coms, openings=op,
@@ -192,7 +194,7 @@ class SessionProver:
             bwd_claims=list(mat.fams["bwd"].claims),
             gw_claims=list(mat.fams["gw"].claims),
             anchor_finals=anc.anchor_finals,
-            ipas=ipas, validity=validity, n_steps=cfg.n_steps)
+            ipa_agg=ipa_agg, validity=validity, n_steps=cfg.n_steps)
 
 
 class ProofSession:

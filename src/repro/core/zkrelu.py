@@ -28,6 +28,7 @@ R-bit s-vector and no k-term (their own (19)-analogue), as the paper's
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional
 
 import jax.numpy as jnp
@@ -90,6 +91,35 @@ class ValidityKeys:
     def h_col(self) -> jnp.ndarray:
         idx = np.arange(self.ds) * self.q_bits + (self.q_bits - 1)
         return self.h_big[idx]
+
+    # precomputed squaring chains (`group.pow_table`) for the fixed
+    # bases: built lazily once per key, they let the validity IPAs run
+    # their FIRST (widest) round with one conditional multiply per
+    # exponent bit and skip materializing H' = H^{1/e} entirely.
+    # Memory: each table is 61x its basis (976 bytes/element), so the
+    # accel path only engages below POW_TABLE_MAX_ELEMS — larger keys
+    # fall back to the explicit (bit-identical) H' path rather than
+    # pinning hundreds of MB per table on the key.
+    @functools.cached_property
+    def g_big_table(self) -> jnp.ndarray:
+        return group.pow_table(self.g_big)
+
+    @functools.cached_property
+    def h_big_table(self) -> jnp.ndarray:
+        return group.pow_table(self.h_big)
+
+    @functools.cached_property
+    def g_r_table(self) -> jnp.ndarray:
+        return group.pow_table(self.g_r)
+
+    @functools.cached_property
+    def h_r_table(self) -> jnp.ndarray:
+        return group.pow_table(self.h_r)
+
+
+# accel tables above this basis length would pin > ~64 MB each on the
+# key; past it the first-round speedup no longer justifies the memory
+POW_TABLE_MAX_ELEMS = 1 << 16
 
 
 def make_validity_keys(ds: int, q_bits: int, r_bits: int) -> ValidityKeys:
@@ -286,9 +316,7 @@ def prove_validity(keys: ValidityKeys, bits: AuxBits, blinds: ValidityBlinds,
     claim = _main_claim(v_k, vp_k, z)
     blind_k = (blinds.r + k * (r_q1 + blinds.rq1p)) % Q_MOD
 
-    h_prime = _h_prime_basis(keys.h_big, e_relu, e_bit)
-    proof_main = ipa.pair_prove(keys.g_big, h_prime, keys.h_blind,
-                                a_vec, b_vec, blind_k, claim, transcript, rng)
+    w_main = _h_weights(e_relu, e_bit)
 
     # ---- remainder matrix (no k-term, unsigned s-vector) ----------------
     brk = jnp.asarray(encode_ints(FQ, bits.br_mat.astype(object))).reshape(-1, 4)
@@ -298,9 +326,29 @@ def prove_validity(keys: ValidityKeys, bits: AuxBits, blinds: ValidityBlinds,
     a_r = sub(FQ, brk, jnp.broadcast_to(enc(z_r), brk.shape).astype(jnp.uint32))
     b_r, _ = _transformed_b_vector(brp_neg, e_relu, e_bit_r, s_r, z_r, 2 * ds)
     claim_r = _main_claim(v_r, 1, z_r, s_sum=(1 << rb) - 1)
-    h_prime_r = _h_prime_basis(keys.h_r, e_relu, e_bit_r)
-    proof_rem = ipa.pair_prove(keys.g_r, h_prime_r, keys.h_blind,
-                               a_r, b_r, blinds.rr, claim_r, transcript, rng)
+    w_rem = _h_weights(e_relu, e_bit_r)
+
+    # the main and remainder arguments are independent statements on one
+    # transcript: lockstep rounds pay max(rounds) syncs, not their sum,
+    # and (below the table memory cap) the accel tuples run the wide
+    # first round off the fixed-basis squaring tables with H' = H^{1/e}
+    # kept in exponent form — bit-identical to the explicit fallback
+    def stmt(g_basis, g_table, h_basis, h_table, w, e_bit_vec, a, b,
+             blind, cl):
+        if g_basis.shape[0] <= POW_TABLE_MAX_ELEMS:
+            return (g_basis, None, keys.h_blind, a, b, blind, cl,
+                    (g_table(), h_basis, h_table(), w))
+        h_prime = _h_prime_basis(h_basis, e_relu, e_bit_vec)
+        return (g_basis, h_prime, keys.h_blind, a, b, blind, cl)
+
+    proof_main, proof_rem = ipa.pair_prove_many(
+        [stmt(keys.g_big, lambda: keys.g_big_table, keys.h_big,
+              lambda: keys.h_big_table, w_main, e_bit,
+              a_vec, b_vec, blind_k, claim),
+         stmt(keys.g_r, lambda: keys.g_r_table, keys.h_r,
+              lambda: keys.h_r_table, w_rem, e_bit_r,
+              a_r, b_r, blinds.rr, claim_r)],
+        transcript, rng)
     return ValidityProof(ipa_main=proof_main, ipa_rem=proof_rem)
 
 
@@ -312,12 +360,19 @@ def _vp_k(k: int, u_relu: List[int], u_bit: List[int], qb: int) -> int:
     return (1 + (k - 1) * beta % Q_MOD * ((1 - upp) % Q_MOD)) % Q_MOD
 
 
-def _h_prime_basis(h_big, e_relu, e_bit):
-    """H'_i = H_i^{1/e_i}, e = e_relu (x) e_bit (Algorithm 1 basis)."""
+def _h_weights(e_relu, e_bit):
+    """1/e for e = e_relu (x) e_bit — the H-basis weights (Montgomery)."""
     e_full = mont_mul(FQ, e_relu[:, None, :], e_bit[None, :, :]).reshape(-1, 4)
-    e_inv = batch_inv(FQ, e_full)
+    return batch_inv(FQ, e_full)
+
+
+def _h_prime_basis(h_big, e_relu, e_bit):
+    """H'_i = H_i^{1/e_i}, e = e_relu (x) e_bit (Algorithm 1 basis).
+
+    Verifier-side only: the prover keeps the weights in exponent form
+    (`ipa.pair_prove_many` accel statements) and never materializes H'."""
     from repro.field import from_mont
-    return group.g_pow(h_big, from_mont(FQ, e_inv))
+    return group.g_pow(h_big, from_mont(FQ, _h_weights(e_relu, e_bit)))
 
 
 def transform_commitment(keys: ValidityKeys, com_b_ip: int, com_bq1_ip: int,
@@ -376,16 +431,13 @@ def verify_validity(keys: ValidityKeys, coms: ValidityCommitments,
     e_relu = expand_point(u_relu)
     e_bit = expand_point(u_bit)[:qb]
     h_prime = _h_prime_basis(keys.h_big, e_relu, e_bit)
-    ok_main = ipa.pair_verify(keys.g_big, h_prime, keys.h_blind, com_t,
-                              claim, proof.ipa_main, transcript,
-                              2 * ds * qb)
 
     claim_r = _main_claim(v_r, 1, z_r, s_sum=(1 << rb) - 1)
     com_tr = transform_commitment(keys, coms.com_br_ip, None, None, z_r,
                                   u_bit_r, remainder=True)
     e_bit_r = expand_point(u_bit_r)[:rb]
     h_prime_r = _h_prime_basis(keys.h_r, e_relu, e_bit_r)
-    ok_rem = ipa.pair_verify(keys.g_r, h_prime_r, keys.h_blind, com_tr,
-                             claim_r, proof.ipa_rem, transcript,
-                             2 * ds * rb)
-    return ok_main and ok_rem
+    return ipa.pair_verify_many(
+        [(keys.g_big, h_prime, keys.h_blind, com_t, claim, 2 * ds * qb),
+         (keys.g_r, h_prime_r, keys.h_blind, com_tr, claim_r, 2 * ds * rb)],
+        [proof.ipa_main, proof.ipa_rem], transcript)

@@ -1,1 +1,3 @@
-from repro.kernels.sumcheck_fold.ops import fold, fold_planes_call  # noqa: F401
+from repro.kernels.sumcheck_fold.ops import (fold, fold_halves,  # noqa: F401
+                                             fold_planes_call,
+                                             pow_mul_halves)

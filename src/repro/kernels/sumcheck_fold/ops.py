@@ -1,14 +1,18 @@
-"""jit'd public wrapper for the fused sumcheck fold kernel."""
+"""jit'd public wrappers for the fused fold kernels: the sumcheck
+variable-0 fold, the IPA two-coefficient halves fold, and the IPA
+generator fold (fused lo^{e_lo} * hi^{e_hi})."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.field.modarith import NLIMB, FieldSpec
-from repro.field import FQ
+from repro.field import FP, FQ
 from repro.kernels.limb_planes import LANE, pack_planes, unpack_planes
 from repro.kernels.sumcheck_fold.kernel import (DEFAULT_BLOCK_ROWS,
-                                                fold_planes)
+                                                fold_halves_planes,
+                                                fold_planes,
+                                                pow_mul_planes)
 
 
 def _interpret_default() -> bool:
@@ -42,3 +46,53 @@ def fold(table, r_limbs, *, spec: FieldSpec = FQ,
     out = fold_planes_call(ep, op, r_tile, spec=spec, block_rows=br,
                            interpret=interpret)
     return unpack_planes(out, n // 2)
+
+
+def _limb_tile(limbs) -> jnp.ndarray:
+    return jnp.broadcast_to(jnp.asarray(limbs).reshape(NLIMB, 1, 1),
+                            (NLIMB, 1, LANE)).astype(jnp.uint32)
+
+
+def _halves_planes(table):
+    n = table.shape[0]
+    assert n % 2 == 0 and table.shape[-1] == NLIMB
+    lp, _ = pack_planes(table[: n // 2])
+    hp, _ = pack_planes(table[n // 2:])
+    return lp, hp, n // 2
+
+
+def _block_rows(rows: int, block_rows: int | None) -> int:
+    br = block_rows or min(DEFAULT_BLOCK_ROWS, rows)
+    while rows % br:
+        br //= 2
+    return br
+
+
+def fold_halves(table, c_lo_m, c_hi_m, *, spec: FieldSpec = FQ,
+                block_rows: int | None = None,
+                interpret: bool | None = None):
+    """The IPA scalar halves fold: (n,4) table + two Montgomery-form
+    (4,) coefficients -> (n/2,4) c_lo * table[:n/2] + c_hi * table[n/2:]."""
+    if interpret is None:
+        interpret = _interpret_default()
+    lp, hp, n2 = _halves_planes(table)
+    out = fold_halves_planes(lp, hp, _limb_tile(c_lo_m), _limb_tile(c_hi_m),
+                             spec=spec,
+                             block_rows=_block_rows(lp.shape[1], block_rows),
+                             interpret=interpret)
+    return unpack_planes(out, n2)
+
+
+def pow_mul_halves(gens, e_lo_std, e_hi_std, *, spec: FieldSpec = FP,
+                   block_rows: int | None = None,
+                   interpret: bool | None = None):
+    """The IPA generator fold: (n,4) group elements + two STANDARD-form
+    (4,) exponents -> (n/2,4) gens[:n/2]^{e_lo} * gens[n/2:]^{e_hi}."""
+    if interpret is None:
+        interpret = _interpret_default()
+    lp, hp, n2 = _halves_planes(gens)
+    out = pow_mul_planes(lp, hp, _limb_tile(e_lo_std), _limb_tile(e_hi_std),
+                         spec=spec,
+                         block_rows=_block_rows(lp.shape[1], block_rows),
+                         interpret=interpret)
+    return unpack_planes(out, n2)

@@ -4,6 +4,7 @@ sets xla_force_host_platform_device_count), plus the quarantine marker +
 centralized retry policy for tests whose SUBPROCESSES die on known
 native (XLA-CPU) signals."""
 import subprocess
+import time
 
 import pytest
 
@@ -53,6 +54,10 @@ def run_flaky_subprocess(request):
                 return proc
             print(f"[flaky_subprocess] {request.node.name}: native crash "
                   f"(rc={proc.returncode}), attempt {attempt + 1}/{retries}")
+            # the native crash is load-sensitive (small-core containers
+            # hit it back-to-back); let the machine settle before retrying
+            if attempt + 1 < retries:
+                time.sleep(2.0 * (attempt + 1))
         return proc
 
     return run

@@ -1,0 +1,155 @@
+"""Value-level parity pins for the direct-sum one-IPA opening.
+
+The aggregated argument is only sound if three exact identities hold:
+every per-tensor combined claim is a TRUE inner product of its witness
+block, the aggregated claim is exactly the rho-weighted sum of the
+per-block claims against the rho-scaled direct-sum basis, and the
+homomorphic product of the published commitments equals a Pedersen
+commitment to the concatenated witness under the unified key with the
+summed blind.  These tests replay the prover pipeline up to the
+aggregation boundary and check all three on real session state.
+"""
+import numpy as np
+import pytest
+
+from repro.field import FQ
+from repro.core import group, pedersen
+from repro.core.mle import fdot
+from repro.core.quantfc import QuantConfig, synthetic_sgd_trajectory
+from repro.core.transcript import Transcript
+from repro.core.pipeline import PipelineConfig, make_keys
+from repro.core.pipeline import anchor as anchor_mod
+from repro.core.pipeline import matmul as matmul_mod
+from repro.core.pipeline import openings as openings_mod
+from repro.core.pipeline.challenges import ChallengeSchedule
+from repro.core.pipeline.session import SessionProver
+from repro.core.pipeline.tables import dec_scalar
+from repro.core.pipeline.witness import stack_witnesses
+
+Q = FQ.modulus
+
+CFG = PipelineConfig(n_layers=2, batch=2, width=4, q_bits=16, r_bits=4,
+                     n_steps=2)
+QC = QuantConfig(q_bits=CFG.q_bits, r_bits=CFG.r_bits)
+
+
+@pytest.fixture(scope="module")
+def keys():
+    return make_keys(CFG)
+
+
+@pytest.fixture(scope="module")
+def prover_state(keys):
+    """Session state replayed to the aggregation boundary: the block
+    table, the transcript positioned at the rho/agg draw, and the
+    commitments."""
+    wits = synthetic_sgd_trajectory(CFG.n_steps, CFG.n_layers, CFG.batch,
+                                    CFG.width, QC, seed=51)
+    sw = stack_witnesses(wits, CFG)
+    prover = SessionProver(keys, np.random.default_rng(51))
+    coms = prover.commit(sw)
+    t = Transcript(b"zkdl")
+    t.absorb_ints(b"coms", coms.as_ints())
+    ch = ChallengeSchedule.draw(t, CFG)
+    op = {}
+    e_pi1, e_pi2, e_pi3 = openings_mod.initial_claims(
+        CFG, prover.tabs, ch, op, t)
+    mat = matmul_mod.prove(CFG, prover.tabs, ch, t)
+    anc = anchor_mod.prove(CFG, prover.tabs, ch, mat, t)
+    blocks, _ = openings_mod.prover_blocks(
+        CFG, prover.tabs, prover.blinds, prover.x_blinds, ch, mat, anc,
+        op, e_pi1, e_pi2, e_pi3, t)
+    return prover, coms, blocks, t
+
+
+def test_layout_blocks_are_disjoint_slices_of_the_unified_key(keys):
+    """Offsets tile without overlap, lengths match the stacked
+    commitment sizes, and each slot's commitment key IS its slice of the
+    unified basis (so the direct-sum commitment algebra is exact)."""
+    blocks = CFG.agg_blocks
+    expect_off = 0
+    for name, off, n in blocks:
+        assert off == expect_off, name
+        assert n & (n - 1) == 0, name
+        expect_off += n
+    assert CFG.agg_len >= expect_off
+    assert CFG.agg_len & (CFG.agg_len - 1) == 0
+    off_of = {name: (off, n) for name, off, n in blocks}
+    for spec in CFG.graph.commit_slots:
+        off, n = off_of[spec.name]
+        key = keys.slot_keys[spec.name]
+        assert key.n == n == CFG.slot_stack_len(spec)
+        np.testing.assert_array_equal(
+            np.asarray(key.gens), np.asarray(keys.k_agg.gens[off:off + n]))
+        # shared blinding generator: the per-slot blinds must sum
+        np.testing.assert_array_equal(np.asarray(key.h),
+                                      np.asarray(keys.k_agg.h))
+    # the two data-fold blocks share the per-sample basis (their claims
+    # are additionally pinned by the bucket sumcheck finals)
+    for tag in ("x1", "x2"):
+        off, n = off_of[tag]
+        np.testing.assert_array_equal(
+            np.asarray(keys.kx.gens),
+            np.asarray(keys.k_agg.gens[off:off + n]))
+    # every FRESH slot slice is pairwise distinct from every other block
+    names = [b[0] for b in blocks]
+    gens = {name: np.asarray(keys.k_agg.gens[off:off + n])
+            for name, off, n in blocks}
+    for i, a in enumerate(names):
+        for b in names[i + 1:]:
+            if (a, b) == ("x1", "x2"):
+                continue
+            m = min(len(gens[a]), len(gens[b]))
+            assert not (gens[a][:m] == gens[b][:m]).all(), (a, b)
+
+
+def test_block_claims_are_true_inner_products(prover_state):
+    """Each per-tensor combined claim equals <witness block, combined
+    basis> — the per-slot rho folds preserve values exactly."""
+    _, _, blocks, _ = prover_state
+    for name, _, n in CFG.agg_blocks:
+        blk = blocks[name]
+        assert blk.table.shape[0] == n, name
+        assert blk.basis.shape[0] == n, name
+        assert dec_scalar(fdot(blk.table, blk.basis)) == blk.claim, name
+
+
+def test_aggregated_claim_is_rho_weighted_sum(prover_state):
+    """The direct-sum statement: claim_agg == sum_k rho^k v_k, and the
+    concatenated witness against the rho-scaled concatenated basis
+    evaluates to exactly that claim."""
+    _, _, blocks, t = prover_state
+    b_agg, claim_agg, rho = openings_mod.direct_sum(CFG, t, blocks)
+    want, rpow = 0, 1
+    for name, _, _ in CFG.agg_blocks:
+        want = (want + rpow * blocks[name].claim) % Q
+        rpow = rpow * rho % Q
+    assert claim_agg == want
+    a_agg = openings_mod.stacked_witness(CFG, blocks)
+    assert a_agg.shape[0] == b_agg.shape[0] == CFG.agg_len
+    assert dec_scalar(fdot(a_agg, b_agg)) == claim_agg
+
+
+def test_homomorphic_commitment_matches_direct_sum_commitment(
+        keys, prover_state):
+    """Product of the published per-block commitments == Pedersen
+    commitment of the concatenated witness under the unified key with
+    the summed blinds — the identity the verifier's single IPA check
+    rests on."""
+    prover, coms, blocks, _ = prover_state
+    a_agg = openings_mod.stacked_witness(CFG, blocks)
+    blind_agg = sum(blk.blind for blk in blocks.values()) % Q
+    direct = pedersen.commit(keys.k_agg, a_agg, blind_agg)
+
+    acc = None
+    for name, _, _ in CFG.agg_blocks:
+        blk = blocks[name]
+        if name in ("x1", "x2"):
+            # the data blocks' commitments are what the verifier's MSM
+            # over the per-sample commitments folds to: commit the
+            # folded table directly (same element by homomorphism)
+            el = pedersen.commit(keys.kx, blk.table, blk.blind)
+        else:
+            el = group.encode_group(coms.slots[name])
+        acc = el if acc is None else group.g_mul(acc, el)
+    assert group.decode_group(acc) == group.decode_group(direct)

@@ -1,8 +1,8 @@
 """Aggregated proof pipeline tests: T=2 prove/verify roundtrip plus
 tamper rejections (flipped aux bit, wrong step count, stale transcript,
 cross-step claim splicing), the heterogeneous pyramid roundtrip, and the
-golden-digest pins that keep the uniform layer-graph path bit-identical
-to the seed protocol."""
+golden-digest pins that freeze the uniform-graph transcript of the v2
+one-IPA opening protocol."""
 import copy
 import hashlib
 
@@ -254,28 +254,32 @@ def proof_digest(proof):
         absorb(fam + "/finals", getattr(proof, fam + "_finals"))
     absorb("anchor/msgs", proof.sc_anchor.messages)
     absorb("anchor/finals", proof.anchor_finals)
-    for name in sorted(proof.ipas):
-        p = proof.ipas[name]
-        absorb("ipa/" + name, [p.ls, p.rs, p.sigma])
+    absorb("ipa/agg", [proof.ipa_agg.ls, proof.ipa_agg.rs,
+                       proof.ipa_agg.sigma])
     for p, tag in ((proof.validity.ipa_main, "vmain"),
                    (proof.validity.ipa_rem, "vrem")):
         absorb(tag, [p.ls, p.rs, p.sigma])
     return h.hexdigest()
 
 
-# recorded from the pre-graph-IR pipeline (layers=2, batch=2, width=4,
-# q=16, r=4, trajectory seed=7, prover rng seed=7); the T=2 value was
-# re-recorded after the sgd_apply transpose fix changed the seeded
-# trajectory (the pipeline itself was verified bit-identical before and
-# after the graph refactor)
+# recorded for the v2 one-IPA opening protocol (layers=2, batch=2,
+# width=4, q=16, r=4, trajectory seed=7, prover rng seed=7).  History:
+# originally recorded from the pre-graph-IR pipeline and kept
+# bit-identical through the IR / batching / serialization refactors;
+# re-recorded for PR 5, whose unified commitment-key layout and
+# direct-sum aggregated opening change the transcript by design (both
+# pipelines verified the same seeded trajectories before re-recording)
 GOLDEN = {
-    1: "4291af5aeb305e11153525cc1c9c3822cf5981b29040e6db671a045cb072df82",
-    2: "76d21d3bff355b2ce5525ebb2cb1917292cfd62d91ae0bfd6df95fbe8035dd9e",
+    1: "0b2e26fc02d5812cf9f422729b65ee7f04dce7ef04c2d098065469025fcf6d7c",
+    2: "4a7aea6204993c7ff45239a47b72995525406299acdc2b1bca1c11440a1ff3b8",
 }
 
 
 @pytest.mark.parametrize("T", [1, 2])
-def test_uniform_graph_matches_seed_proof_bitforbit(T):
+def test_uniform_graph_transcript_pinned(T):
+    """Any unintended transcript / witness / rng change must show up as
+    a digest mismatch; intended protocol changes re-record GOLDEN (and
+    the byte goldens in test_proofio.py) explicitly."""
     cfg = PipelineConfig(n_layers=2, batch=2, width=4, q_bits=16,
                          r_bits=4, n_steps=T)
     keys = make_keys(cfg)
@@ -325,15 +329,9 @@ def test_batched_commit_phase_matches_sequential_commits(keys):
     prover = SessionProver(keys, np.random.default_rng(31))
     coms = prover.commit(sw)
     tabs, blinds = prover.tabs, prover.blinds
-    seq = {
-        "y": pedersen.commit(keys.ky, tabs.y_t, blinds["y"]),
-        "w": pedersen.commit(keys.kw, tabs.w_t, blinds["w"]),
-        "gw": pedersen.commit(keys.kw, tabs.gw_t, blinds["gw"]),
-        "zpp": pedersen.commit(keys.kd, tabs.zpp_t, blinds["zpp"]),
-        "rz": pedersen.commit(keys.kd, tabs.rz_t, blinds["rz"]),
-        "gap": pedersen.commit(keys.kd, tabs.gap_t, blinds["gap"]),
-        "rga": pedersen.commit(keys.kd, tabs.rga_t, blinds["rga"]),
-    }
+    seq = {name: pedersen.commit(keys.slot_keys[name], tabs.tabs[name],
+                                 blinds[name])
+           for name in ("y", "w", "gw", "zpp", "rz", "gap", "rga")}
     for name, el in seq.items():
         assert getattr(coms, name) == group.decode_group(el), name
     for ci, x, xb in zip(coms.x, sw.x, prover.x_blinds):

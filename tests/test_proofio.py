@@ -36,12 +36,12 @@ def uniform_t2():
     return _make_uniform(2)
 
 
-# recorded canonical encodings of the seed-7 uniform trajectory (the
+# recorded canonical v2 encodings of the seed-7 uniform trajectory (the
 # same proofs whose scalar digests are pinned in test_proof_session.py);
 # any byte-format or transcript change must re-record BOTH goldens
 GOLDEN_SHA256 = {
-    1: "9e95b41d9994c440b7a576901486ea25ab80eb3f63b57d8f0737192a1c90f2c4",
-    2: "b943dd6a0ee4708a777c7da850c99084f090b4d61e618b5d0ad758e762f8a1f9",
+    1: "de0af887d1f39d09af82457d9f9e004f237b80ae15914ac24b9f165c2238306a",
+    2: "c5ceaeee850aebafa369d075692376c300be212325b17f1c00b938c0f58896ff",
 }
 
 
@@ -100,6 +100,51 @@ def test_malformed_streams_reject(uniform_t2):
     assert not verify_bytes(vk, bytes(wrong_ver))           # version
     with pytest.raises(ProofDecodeError):
         decode_proof(raw[:-3])
+
+
+def test_version_negotiation_rejects_v1_with_migration_hint(uniform_t2):
+    """v1 streams (per-slot IPA dict, old key layout) must reject with a
+    message naming the migration — not a generic 'unsupported' and never
+    a crash from misparsing the old IPAS section layout."""
+    _, vk, proof = uniform_t2
+    as_v1 = bytearray(encode_proof(proof))
+    as_v1[4:6] = struct.pack("<H", 1)
+    with pytest.raises(ProofDecodeError, match="v1.*no longer supported"):
+        decode_proof(bytes(as_v1))
+    trace = []
+    assert not verify_bytes(vk, bytes(as_v1), trace=trace)
+    assert "v1" in trace[0]
+
+    vk_v1 = bytearray(vk.to_bytes())
+    vk_v1[4:6] = struct.pack("<H", 1)
+    with pytest.raises(ProofDecodeError, match="v1"):
+        VerifyingKey.from_bytes(bytes(vk_v1))
+
+    for future in (3, 250):
+        fut = bytearray(encode_proof(proof))
+        fut[4:6] = struct.pack("<H", future)
+        with pytest.raises(ProofDecodeError, match="unsupported"):
+            decode_proof(bytes(fut))
+
+
+def test_single_ipa_section_tamper_rejects(uniform_t2):
+    """Per-element tamper inside the one-IPA section: every L/R element
+    and every sigma scalar of the aggregated opening is load-bearing."""
+    _, vk, proof = uniform_t2
+    raw = encode_proof(proof)
+    name, start, length = _section_spans(raw)[5]
+    assert name == "IPA"
+    n_rounds = len(proof.ipa_agg.ls)
+    # u16 round count | ls | rs | u8 sigma count | sigma
+    assert length == 2 + 8 * 2 * n_rounds + 1 + 8 * len(proof.ipa_agg.sigma)
+    for off in (0,                       # round-count framing
+                2,                       # first L
+                2 + 8 * n_rounds,        # first R
+                2 + 8 * 2 * n_rounds + 1,        # sigma K
+                length - 8):             # last sigma scalar
+        bad = bytearray(raw)
+        bad[start + off] ^= 1
+        assert not verify_bytes(vk, bytes(bad)), f"IPA tamper at {off}"
 
 
 def test_renamed_slot_rejects_without_crash(uniform_t2):

@@ -101,7 +101,7 @@ def test_rejects_proof_reuse_other_witness(keys):
                           np.random.default_rng(5))
     proof2 = prove_session(keys, [make_witness(seed=6)],
                            np.random.default_rng(6))
-    proof.ipas["w"] = proof2.ipas["w"]   # splice a foreign opening
+    proof.ipa_agg = proof2.ipa_agg       # splice a foreign opening
     assert not verify_session(keys, proof)
 
 
