@@ -71,5 +71,16 @@ assert verify_bytes(vk, raw), "ci: cross-process verify REJECTED"
 bad = bytearray(raw)
 bad[len(bad) // 2] ^= 1
 assert not verify_bytes(vk, bytes(bad)), "ci: tampered proof ACCEPTED"
-print("ci: cross-process verify ok (accept + tamper-reject)")
+# legacy-version negotiation: the same bytes restamped as format v2
+# (separate zkReLU validity IPAs) must reject with the migration
+# message, never crash or misparse the section table
+import struct
+as_v2 = bytearray(raw)
+as_v2[4:6] = struct.pack("<H", 2)
+trace = []
+assert not verify_bytes(vk, bytes(as_v2), trace=trace), \
+    "ci: v2-stamped proof ACCEPTED"
+assert "v2" in trace[0] and "no longer supported" in trace[0], \
+    f"ci: v2 rejection lacks the migration message: {trace}"
+print("ci: cross-process verify ok (accept + tamper-reject + v2-reject)")
 PY

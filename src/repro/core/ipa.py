@@ -135,13 +135,19 @@ def _open_round_lr(gens, a, b, up, h, rho_l, rho_r):
 
 
 @jax.jit
-def _pair_round_lr(gg, hh, a, b, up, h_blind, rho_l, rho_r):
-    """L/R of one `pair` round: both half-MSMs per side fused into one row."""
+def _pair_round_lr(gg, hh, a, b, up, h_blind, rho_l, rho_r,
+                   gam_g_m, gam_h_m):
+    """L/R of one `pair` round: both half-MSMs per side fused into one row.
+
+    The stored bases carry deferred outer exponents (see `_pair_fold`):
+    the true bases are gg^{gam_g} / hh^{gam_h}, so the deferral rides
+    the MSM scalars for free — gg_true^{a} == gg^{gam_g * a} — and the
+    emitted L/R equal the eager-fold values bit for bit."""
     n2 = a.shape[0] // 2
     c_l = from_mont(FQ, fdot(a[:n2], b[n2:]))
     c_r = from_mont(FQ, fdot(a[n2:], b[:n2]))
-    a_std = from_mont(FQ, a)
-    b_std = from_mont(FQ, b)
+    a_std = from_mont(FQ, mont_mul(FQ, a, gam_g_m[None]))
+    b_std = from_mont(FQ, mont_mul(FQ, b, gam_h_m[None]))
     main = group.msm_many(
         jnp.stack([jnp.concatenate([gg[n2:], hh[:n2]]),
                    jnp.concatenate([gg[:n2], hh[n2:]])]),
@@ -210,21 +216,24 @@ def _pair_round_lr_w(gg, h_base, w, a, b, up, h_blind, rho_l, rho_r):
 
 @jax.jit
 def _pair_fold_first(a, b, g_table, h_table, w, al_m, ali_m,
-                     al_std, ali_std):
+                     al2_std, ali2_m):
     """First pair fold over FIXED bases via precomputed squaring tables
     (`group.pow_table`): one conditional multiply per exponent bit
     instead of square-and-multiply, with the H-side weight vector w
-    folded into the table exponents (hh'_i = h_base_i^{w_i * al|ali}).
-    Bit-identical to `_pair_fold` on the materialized bases."""
+    folded into the table exponents.  Like `_pair_fold`, the outer
+    exponents are DEFERRED (gam_g = ali, gam_h = al after this round):
+    the G side materializes gg_lo * gg_hi^{al^2} — only the hi half of
+    the table is powed — and the H side h_base^{w_lo | w_hi * ali^2}.
+    Bit-identical to an eager fold of the materialized bases once the
+    deferred exponents are applied."""
     n2 = a.shape[0] // 2
     a2 = _fold_halves(a, al_m, ali_m)
     b2 = _fold_halves(b, ali_m, al_m)
-    g_exps = jnp.concatenate([jnp.broadcast_to(ali_std, (n2, 4)),
-                              jnp.broadcast_to(al_std, (n2, 4))])
-    powed_g = group.g_pow_table(g_table, g_exps)
-    gg2 = group.g_mul(powed_g[:n2], powed_g[n2:])
-    w_coef = jnp.concatenate([jnp.broadcast_to(al_m, (n2, 4)),
-                              jnp.broadcast_to(ali_m, (n2, 4))])
+    powed_g = group.g_pow_table(g_table[:, n2:],
+                                jnp.broadcast_to(al2_std, (n2, 4)))
+    gg2 = group.g_mul(g_table[0, :n2], powed_g)
+    w_coef = jnp.concatenate([jnp.broadcast_to(enc(1), (n2, 4)),
+                              jnp.broadcast_to(ali2_m, (n2, 4))])
     h_exps = from_mont(FQ, mont_mul(FQ, w, w_coef))
     powed_h = group.g_pow_table(h_table, h_exps)
     hh2 = group.g_mul(powed_h[:n2], powed_h[n2:])
@@ -232,17 +241,25 @@ def _pair_fold_first(a, b, g_table, h_table, w, al_m, ali_m,
 
 
 @jax.jit
-def _pair_fold(a, b, gg, hh, al_m, ali_m, al_std, ali_std):
+def _pair_fold(a, b, gg, hh, al_m, ali_m, al2_std, ali2_std):
+    """Pair fold with the OUTER generator exponent deferred.
+
+    The true folded bases are (gg_lo * gg_hi^{al^2})^{ali} and
+    (hh_lo * hh_hi^{ali^2})^{al}; only the inner merges are
+    materialized — ONE g_pow over n elements instead of 2n — while the
+    outer ali / al accumulate into the per-statement deferred exponents
+    gam_g / gam_h held as host ints by `pair_prove_many`.  Those fold
+    into later L/R MSM scalars (two cheap field muls) and are applied
+    once to the two surviving generators before the sigma finale, so
+    every emitted group element is bit-identical to folding eagerly."""
     n2 = a.shape[0] // 2
     a2 = _fold_halves(a, al_m, ali_m)
     b2 = _fold_halves(b, ali_m, al_m)
-    exps = jnp.concatenate([jnp.broadcast_to(ali_std, (n2, 4)),
-                            jnp.broadcast_to(al_std, (n2, 4)),
-                            jnp.broadcast_to(al_std, (n2, 4)),
-                            jnp.broadcast_to(ali_std, (n2, 4))])
-    powed = group.g_pow(jnp.concatenate([gg, hh]), exps)
-    gg2 = group.g_mul(powed[:n2], powed[n2:2 * n2])
-    hh2 = group.g_mul(powed[2 * n2:3 * n2], powed[3 * n2:])
+    exps = jnp.concatenate([jnp.broadcast_to(al2_std, (n2, 4)),
+                            jnp.broadcast_to(ali2_std, (n2, 4))])
+    powed = group.g_pow(jnp.concatenate([gg[n2:], hh[n2:]]), exps)
+    gg2 = group.g_mul(gg[:n2], powed[:n2])
+    hh2 = group.g_mul(hh[:n2], powed[n2:])
     return a2, b2, gg2, hh2
 
 
@@ -343,7 +360,8 @@ def open_verify(key, com, b_mont, claim: int, proof: IpaProof,
 # ---------------------------------------------------------------------------
 
 def pair_prove_many(stmts, transcript: Transcript,
-                    rng: np.random.Generator) -> List[IpaProof]:
+                    rng: np.random.Generator,
+                    prof=None) -> List[IpaProof]:
     """Prove S pair statements with interleaved rounds.
 
     ``stmts`` is a list of ``(g_gens, h_gens, h_blind, a_mont, b_mont,
@@ -354,7 +372,9 @@ def pair_prove_many(stmts, transcript: Transcript,
     then runs `_pair_round_lr_w` / `_pair_fold_first` without ever
     materializing H', bit-identically to the explicit path.  Transcript
     order per round: each active statement's (L, R) is absorbed and its
-    alpha drawn, statement by statement in list order."""
+    alpha drawn, statement by statement in list order.  ``prof`` is an
+    optional `PhaseProfile`: rounds book under the "ipa-rounds"
+    sub-phase, the sigma finales under "sigma"."""
     states = []
     for stmt in stmts:
         gg, hh, hb, a, b, blind, claim = stmt[:7]
@@ -370,81 +390,101 @@ def pair_prove_many(stmts, transcript: Transcript,
                        "hh": hh[:n] if hh is not None else None,
                        "hb": hb, "a": a, "b": b, "rho": int(blind),
                        "up": group.g_pow_int(_u_gen(), x),
-                       "accel": accel, "ls": [], "rs": []})
+                       "accel": accel, "ls": [], "rs": [],
+                       # deferred outer exponents: true bases are
+                       # gg^{gam_g} / hh^{gam_h} (see `_pair_fold`)
+                       "gam_g": 1, "gam_h": 1})
 
-    while any(st["n"] > 1 for st in states):
-        active = [st for st in states if st["n"] > 1]
-        lrs, blind_draws = [], []
-        for st in active:
-            rho_l = int(rng.integers(0, Q, dtype=np.uint64)) % Q
-            rho_r = int(rng.integers(0, Q, dtype=np.uint64)) % Q
-            blind_draws.append((rho_l, rho_r))
-            if st["accel"] is not None:
-                _, h_base, _, w = st["accel"]
-                lrs.append(_pair_round_lr_w(st["gg"], h_base, w, st["a"],
-                                            st["b"], st["up"], st["hb"],
-                                            _exp1(rho_l), _exp1(rho_r)))
-            else:
-                lrs.append(_pair_round_lr(st["gg"], st["hh"], st["a"],
-                                          st["b"], st["up"], st["hb"],
-                                          _exp1(rho_l), _exp1(rho_r)))
-        flat = group.decode_group_many(jnp.concatenate(lrs))  # one transfer
-        for k, (st, (rho_l, rho_r)) in enumerate(zip(active, blind_draws)):
-            li, ri = flat[2 * k], flat[2 * k + 1]
-            st["ls"].append(li); st["rs"].append(ri)
-            transcript.absorb_ints(b"ipa2/lr", [li, ri])
-            al = transcript.challenge_int(b"ipa2/alpha", Q)
-            ali = pow(al, Q - 2, Q)
-            if st["accel"] is not None:
-                g_table, _, h_table, w = st["accel"]
-                st["a"], st["b"], st["gg"], st["hh"] = _pair_fold_first(
-                    st["a"], st["b"], g_table, h_table, w, enc(al),
-                    enc(ali), _exp1(al), _exp1(ali))
-                st["accel"] = None
-            else:
-                st["a"], st["b"], st["gg"], st["hh"] = _pair_fold(
-                    st["a"], st["b"], st["gg"], st["hh"], enc(al),
-                    enc(ali), _exp1(al), _exp1(ali))
-            st["rho"] = (al * al % Q * rho_l + st["rho"]
-                         + ali * ali % Q * rho_r) % Q
-            st["n"] //= 2
+    with _sub(prof, "ipa-rounds"):
+        while any(st["n"] > 1 for st in states):
+            active = [st for st in states if st["n"] > 1]
+            lrs, blind_draws = [], []
+            for st in active:
+                rho_l = int(rng.integers(0, Q, dtype=np.uint64)) % Q
+                rho_r = int(rng.integers(0, Q, dtype=np.uint64)) % Q
+                blind_draws.append((rho_l, rho_r))
+                if st["accel"] is not None:
+                    _, h_base, _, w = st["accel"]
+                    lrs.append(_pair_round_lr_w(st["gg"], h_base, w, st["a"],
+                                                st["b"], st["up"], st["hb"],
+                                                _exp1(rho_l), _exp1(rho_r)))
+                else:
+                    lrs.append(_pair_round_lr(st["gg"], st["hh"], st["a"],
+                                              st["b"], st["up"], st["hb"],
+                                              _exp1(rho_l), _exp1(rho_r),
+                                              enc(st["gam_g"]),
+                                              enc(st["gam_h"])))
+            flat = group.decode_group_many(jnp.concatenate(lrs))  # 1 transfer
+            for k, (st, (rho_l, rho_r)) in enumerate(zip(active,
+                                                         blind_draws)):
+                li, ri = flat[2 * k], flat[2 * k + 1]
+                st["ls"].append(li); st["rs"].append(ri)
+                transcript.absorb_ints(b"ipa2/lr", [li, ri])
+                al = transcript.challenge_int(b"ipa2/alpha", Q)
+                ali = pow(al, Q - 2, Q)
+                al2, ali2 = al * al % Q, ali * ali % Q
+                if st["accel"] is not None:
+                    g_table, _, h_table, w = st["accel"]
+                    st["a"], st["b"], st["gg"], st["hh"] = _pair_fold_first(
+                        st["a"], st["b"], g_table, h_table, w, enc(al),
+                        enc(ali), _exp1(al2), enc(ali2))
+                    st["accel"] = None
+                else:
+                    st["a"], st["b"], st["gg"], st["hh"] = _pair_fold(
+                        st["a"], st["b"], st["gg"], st["hh"], enc(al),
+                        enc(ali), _exp1(al2), _exp1(ali2))
+                st["gam_g"] = st["gam_g"] * ali % Q
+                st["gam_h"] = st["gam_h"] * al % Q
+                st["rho"] = (al2 * rho_l + st["rho"] + ali2 * rho_r) % Q
+                st["n"] //= 2
 
-    # sigma finales: ALL statements' folded scalars decode in one
-    # transfer, and every A/B commitment rides one batched multi-MSM
-    finals = decode(FQ, jnp.stack([st[k][0] for st in states
-                                   for k in ("a", "b")]))
-    one = group.identity()
-    pts, exps, sigmas = [], [], []
-    for i, st in enumerate(states):
-        a_f, b_f = int(finals[2 * i]), int(finals[2 * i + 1])
-        s_a = int(rng.integers(0, Q, dtype=np.uint64)) % Q
-        s_b = int(rng.integers(0, Q, dtype=np.uint64)) % Q
-        s_rho = int(rng.integers(0, Q, dtype=np.uint64)) % Q
-        t_rho = int(rng.integers(0, Q, dtype=np.uint64)) % Q
-        # A = g_f^{s_a} h_f^{s_b} up^{a_f s_b + b_f s_a} h^{s_rho}
-        # B = up^{s_a s_b} h^{t_rho}
-        pts.append(jnp.stack([st["gg"][0], st["hh"][0], st["up"],
-                              st["hb"]]))
-        pts.append(jnp.stack([st["up"], st["hb"], one, one]))
-        exps.append(group.exps_from_ints(
-            [s_a, s_b, (a_f * s_b + b_f * s_a) % Q, s_rho]))
-        exps.append(group.exps_from_ints([s_a * s_b % Q, t_rho, 0, 0]))
-        sigmas.append((a_f, b_f, s_a, s_b, s_rho, t_rho))
-    ab_flat = group.decode_group_many(
-        group.msm_many(jnp.stack(pts), jnp.stack(exps)))
+    with _sub(prof, "sigma"):
+        # apply the deferred outer exponents to the two surviving
+        # generators of every statement in ONE batched g_pow (a gam of 1
+        # — no rounds, or already materialized — is an exact no-op)
+        gam_fin = group.g_pow(
+            jnp.stack([st[k][0] for st in states for k in ("gg", "hh")]),
+            jnp.stack([_exp1(st[g]) for st in states
+                       for g in ("gam_g", "gam_h")]))
+        for i, st in enumerate(states):
+            st["gg"] = gam_fin[2 * i][None]
+            st["hh"] = gam_fin[2 * i + 1][None]
+        # sigma finales: ALL statements' folded scalars decode in one
+        # transfer, and every A/B commitment rides one batched multi-MSM
+        finals = decode(FQ, jnp.stack([st[k][0] for st in states
+                                       for k in ("a", "b")]))
+        one = group.identity()
+        pts, exps, sigmas = [], [], []
+        for i, st in enumerate(states):
+            a_f, b_f = int(finals[2 * i]), int(finals[2 * i + 1])
+            s_a = int(rng.integers(0, Q, dtype=np.uint64)) % Q
+            s_b = int(rng.integers(0, Q, dtype=np.uint64)) % Q
+            s_rho = int(rng.integers(0, Q, dtype=np.uint64)) % Q
+            t_rho = int(rng.integers(0, Q, dtype=np.uint64)) % Q
+            # A = g_f^{s_a} h_f^{s_b} up^{a_f s_b + b_f s_a} h^{s_rho}
+            # B = up^{s_a s_b} h^{t_rho}
+            pts.append(jnp.stack([st["gg"][0], st["hh"][0], st["up"],
+                                  st["hb"]]))
+            pts.append(jnp.stack([st["up"], st["hb"], one, one]))
+            exps.append(group.exps_from_ints(
+                [s_a, s_b, (a_f * s_b + b_f * s_a) % Q, s_rho]))
+            exps.append(group.exps_from_ints([s_a * s_b % Q, t_rho, 0, 0]))
+            sigmas.append((a_f, b_f, s_a, s_b, s_rho, t_rho))
+        ab_flat = group.decode_group_many(
+            group.msm_many(jnp.stack(pts), jnp.stack(exps)))
 
-    proofs = []
-    for i, st in enumerate(states):
-        a_f, b_f, s_a, s_b, s_rho, t_rho = sigmas[i]
-        ai, bi = ab_flat[2 * i], ab_flat[2 * i + 1]
-        transcript.absorb_ints(b"ipa2/AB", [ai, bi])
-        e = transcript.challenge_int(b"ipa2/e", Q)
-        z_a = (a_f * e + s_a) % Q
-        z_b = (b_f * e + s_b) % Q
-        z_rho = (st["rho"] * e % Q * e + s_rho * e + t_rho) % Q
-        proofs.append(IpaProof(st["ls"], st["rs"],
-                               [ai, bi, z_a, z_b, z_rho]))
-    return proofs
+        proofs = []
+        for i, st in enumerate(states):
+            a_f, b_f, s_a, s_b, s_rho, t_rho = sigmas[i]
+            ai, bi = ab_flat[2 * i], ab_flat[2 * i + 1]
+            transcript.absorb_ints(b"ipa2/AB", [ai, bi])
+            e = transcript.challenge_int(b"ipa2/e", Q)
+            z_a = (a_f * e + s_a) % Q
+            z_b = (b_f * e + s_b) % Q
+            z_rho = (st["rho"] * e % Q * e + s_rho * e + t_rho) % Q
+            proofs.append(IpaProof(st["ls"], st["rs"],
+                                   [ai, bi, z_a, z_b, z_rho]))
+        return proofs
 
 
 def pair_verify_many(stmts, proofs: List[IpaProof],

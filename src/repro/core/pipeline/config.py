@@ -177,6 +177,23 @@ class PipelineConfig:
         last = self.agg_blocks[-1]
         return next_pow2(last[1] + last[2])
 
+    @functools.cached_property
+    def validity_blocks(self) -> Tuple[Tuple[str, int, int], ...]:
+        """The zkReLU validity statements' slices of the MERGED opening
+        vector: ``(name, offset, length)`` with offsets continuing past
+        the (padded) open region, so the one aggregated IPA covers
+        open blocks ++ main validity ++ remainder validity ++ pad."""
+        n_main = 2 * self.d_stack * self.q_bits
+        n_rem = 2 * self.d_stack * self.r_bits
+        return (("vmain", self.agg_len, n_main),
+                ("vrem", self.agg_len + n_main, n_rem))
+
+    @property
+    def merged_len(self) -> int:
+        """Length of the merged (open + validity) opening vector."""
+        last = self.validity_blocks[-1]
+        return next_pow2(last[1] + last[2])
+
     # -- challenge-point sizes (see challenges.py) ------------------------
     @property
     def lb(self) -> int:
@@ -209,18 +226,39 @@ class PipelineKeys:
     is what makes the cross-slot batching sound — shared generators would
     let a prover shift witness mass between blocks), all under one shared
     blinding generator so the per-slot blinds sum into the aggregated
-    Schnorr opening.  Two exceptions to freshness: the ``bq`` block is
-    the zkReLU G-column basis (its commitment doubles as the validity
-    argument's B_{Q-1} commitment), and the "x2" block reuses the "x1"
-    slice, because both data folds derive homomorphically from the same
-    per-sample commitments — those fold claims are additionally pinned by
-    the bucket sumcheck finals they must equal.
+    Schnorr opening.  One exception to freshness: the "x2" block reuses
+    the "x1" slice, because both data folds derive homomorphically from
+    the same per-sample commitments — those fold claims are additionally
+    pinned by the bucket sumcheck finals they must equal.  (The ``bq``
+    block is fresh too: the validity argument's own B_{Q-1} column
+    commitment is published separately by `zkrelu.commit_validity`, so
+    no zkReLU generator repeats inside the merged basis.)
+
+    ``g_merged`` / ``h_merged`` extend the opening basis with the zkReLU
+    validity slices (`cfg.validity_blocks`): G side is k_agg.gens ++
+    validity G ++ G_R ++ fresh pad, H side is the fresh ``h_open`` ++
+    validity H ++ H_R ++ fresh pad.  The single pair IPA of
+    `openings.prove` runs over these; the open region's b-vector is
+    public, so its H-slice commitment factor is added by the verifier.
     """
     cfg: PipelineConfig
     k_agg: pedersen.CommitKey     # unified basis (agg_len), one blind gen
     slot_keys: Dict[str, pedersen.CommitKey]   # schema slot -> basis slice
     kx: pedersen.CommitKey        # per-sample data vectors (x1/x2 slice)
     validity: zkrelu.ValidityKeys
+    h_open: jnp.ndarray           # (agg_len, 4) H basis of the open region
+    g_merged: jnp.ndarray         # (merged_len, 4)
+    h_merged: jnp.ndarray         # (merged_len, 4)
+
+    # first-round accel squaring chains for the merged bases (see
+    # zkrelu.POW_TABLE_MAX_ELEMS for the size guard at the call site)
+    @functools.cached_property
+    def g_merged_table(self) -> jnp.ndarray:
+        return group.pow_table(self.g_merged)
+
+    @functools.cached_property
+    def h_merged_table(self) -> jnp.ndarray:
+        return group.pow_table(self.h_merged)
 
     @property
     def k_bq(self) -> pedersen.CommitKey:
@@ -237,19 +275,15 @@ def make_keys(cfg: PipelineConfig) -> PipelineKeys:
     vk = zkrelu.make_validity_keys(cfg.d_stack, cfg.q_bits, cfg.r_bits)
     h = vk.h_blind
     # one deterministic derivation covers every fresh block plus the
-    # power-of-two pad tail; bq (g_col) and x2 (the x1 slice) are spliced
-    # in at their offsets
+    # power-of-two pad tail; only x2 (the x1 slice) is spliced in
     blocks = cfg.agg_blocks
-    fresh_len = sum(n for name, _, n in blocks
-                    if name not in ("bq", "x2"))
+    fresh_len = sum(n for name, _, n in blocks if name != "x2")
     total = blocks[-1][1] + blocks[-1][2]
     fresh = group.derive_generators(b"zkdl/gens/agg",
                                     fresh_len + (cfg.agg_len - total))
     parts, taken, slot_gens = [], 0, {}
     for name, _, n in blocks:
-        if name == "bq":
-            gens = vk.g_col
-        elif name == "x2":
+        if name == "x2":
             gens = slot_gens["x1"]
         else:
             gens = fresh[taken: taken + n]
@@ -261,7 +295,22 @@ def make_keys(cfg: PipelineConfig) -> PipelineKeys:
     slot_keys = {s.name: pedersen.CommitKey(slot_gens[s.name], h,
                                             b"zkdl/slot/" + s.name.encode())
                  for s in cfg.graph.commit_slots}
+    # merged (open + validity) bases: the open region gets a fresh H
+    # side (its b-vector is public — the verifier multiplies the H
+    # factor in itself), the validity slices reuse the vk bases so
+    # Algorithm 1's transformed commitments line up, and the tail pad
+    # is fresh on both sides
+    vtotal = cfg.validity_blocks[-1][1] + cfg.validity_blocks[-1][2]
+    vpad = cfg.merged_len - vtotal
+    h_open = group.derive_generators(b"zkdl/gens/aggH", cfg.agg_len)
+    gparts = [k_agg.gens, vk.g_big, vk.g_r]
+    hparts = [h_open, vk.h_big, vk.h_r]
+    if vpad:
+        gparts.append(group.derive_generators(b"zkdl/gens/vpadG", vpad))
+        hparts.append(group.derive_generators(b"zkdl/gens/vpadH", vpad))
+    g_merged = jnp.concatenate(gparts)
+    h_merged = jnp.concatenate(hparts)
     return PipelineKeys(
         cfg=cfg, k_agg=k_agg, slot_keys=slot_keys,
         kx=pedersen.CommitKey(slot_gens["x1"], h, b"zkdl/x"),
-        validity=vk)
+        validity=vk, h_open=h_open, g_merged=g_merged, h_merged=h_merged)

@@ -17,12 +17,16 @@ discharged here:
   argument: a batching challenge rho weights block k's evaluation vector
   by rho^k, the witness is the direct sum ``a = (+)_k a_k`` over the
   block-concatenated generator basis of `cfg.agg_blocks` (disjoint
-  slices of one unified key, zero-padded to the next power of two), the
-  blinds sum, and a single log(agg_len)-round IPA plus one Schnorr
-  replaces the K per-tensor arguments -- one round schedule, one L/R
-  chain, 2 log(N) + 3 group elements on the wire instead of
-  sum_k (2 log(n_k) + 3);
-* the zkReLU validity argument over the full stacked bit matrices.
+  slices of one unified key, zero-padded to the next power of two), and
+  the blinds sum;
+* the zkReLU validity argument over the full stacked bit matrices RIDES
+  THE SAME IPA: the main and remainder eq. (19) statements occupy the
+  `cfg.validity_blocks` slices of the merged basis, scaled by the next
+  two rho powers (`merged_lambdas`), so a single log(merged_len)-round
+  pair IPA plus one sigma finale replaces the K per-tensor arguments
+  AND the two former standalone validity IPAs -- one round schedule,
+  one L/R chain, 2 log(N) + 5 scalars on the wire instead of
+  sum_k (2 log(n_k) + 3) + sum_v (2 log(n_v) + 5).
 
 Soundness of the cross-tensor batching rests on the blocks' generator
 slices being pairwise disjoint (see `make_keys`); the one shared slice
@@ -375,31 +379,77 @@ def prover_blocks(cfg: PipelineConfig, tabs: FieldTables,
     return blocks, (u_relu, v, v_q1, v_r)
 
 
+def merged_lambdas(cfg: PipelineConfig, rho: int):
+    """The validity blocks' batching weights inside the merged opening:
+    the open blocks consume rho^0..rho^{K-1}, so the main/remainder
+    validity statements take the next two powers.  Their claims enter
+    squared (lam^2 c: both witness sides carry lam), so the claim
+    monomials rho^{2K} / rho^{2K+2} stay distinct from the open blocks'
+    rho^0..rho^{K-1} — the Schwartz-Zippel batching argument is
+    unchanged."""
+    K = len(cfg.agg_blocks)
+    lam1 = pow(rho, K, Q_MOD)
+    return lam1, lam1 * rho % Q_MOD
+
+
+def _merged_pad(cfg: PipelineConfig):
+    last = cfg.validity_blocks[-1]
+    return cfg.merged_len - (last[1] + last[2])
+
+
 def prove(cfg: PipelineConfig, keys: PipelineKeys, tabs: FieldTables,
           blinds: Dict[str, int], x_blinds: List[int],
           aux_bits: zkrelu.AuxBits, vblinds, ch: ChallengeSchedule,
           mat: matmul.MatmulOut, anc, op: Dict[str, int],
           e_pi1, e_pi2, e_pi3, t: Transcript, rng, prof=None):
-    """Runs the whole of step (c) prover-side; returns (ipa_agg,
-    validity).  ``prof`` (a `PhaseProfile`) attributes the sub-phases
-    claim-combine / ipa-rounds / sigma / zkrelu-validity."""
+    """Runs the whole of step (c) prover-side; returns the single merged
+    pair-IPA proof covering every opening block AND both zkReLU validity
+    statements.  ``prof`` (a `PhaseProfile`) attributes the sub-phases
+    claim-combine / zkrelu-validity / ipa-rounds / sigma."""
     with _sub(prof, "claim-combine"):
         blocks, (u_relu, v, v_q1, v_r) = prover_blocks(
             cfg, tabs, blinds, x_blinds, ch, mat, anc, op,
             e_pi1, e_pi2, e_pi3, t)
-        b_agg, claim_agg, _ = direct_sum(cfg, t, blocks)
-        a_agg = stacked_witness(cfg, blocks)
-        blind_agg = sum(blk.blind for blk in blocks.values()) % Q_MOD
-        jax.block_until_ready((a_agg, b_agg))
-
-    ipa_agg = ipa.open_prove(keys.k_agg, a_agg, b_agg, blind_agg,
-                             claim_agg, t, rng, prof=prof)
 
     with _sub(prof, "zkrelu-validity"):
-        validity = zkrelu.prove_validity(
-            keys.validity, aux_bits, vblinds, u_relu,
-            v, v_q1, v_r, blinds["bq"], t, rng)
-    return ipa_agg, validity
+        # validity challenges draw BEFORE rho/agg; the a/b tables for
+        # both statements come out of one validity_tables dispatch
+        st = zkrelu.prove_statements(keys.validity, aux_bits, vblinds,
+                                     u_relu, v, v_q1, v_r, t)
+        jax.block_until_ready((st.a_main, st.b_main, st.a_rem, st.b_rem))
+
+    with _sub(prof, "claim-combine"):
+        b_agg, claim_agg, rho = direct_sum(cfg, t, blocks)
+        a_agg = stacked_witness(cfg, blocks)
+        blind_agg = sum(blk.blind for blk in blocks.values()) % Q_MOD
+        lam1, lam2 = merged_lambdas(cfg, rho)
+        l1, l2 = enc(lam1), enc(lam2)
+        pad = _merged_pad(cfg)
+        zeros = jnp.zeros((pad, 4), jnp.uint32)
+        a_hat = jnp.concatenate([a_agg, mont_mul(FQ, st.a_main, l1[None]),
+                                 mont_mul(FQ, st.a_rem, l2[None]), zeros])
+        b_hat = jnp.concatenate([b_agg, mont_mul(FQ, st.b_main, l1[None]),
+                                 mont_mul(FQ, st.b_rem, l2[None]), zeros])
+        ones = jnp.broadcast_to(enc(1), (cfg.agg_len, 4)).astype(jnp.uint32)
+        pones = jnp.broadcast_to(enc(1), (pad, 4)).astype(jnp.uint32)
+        w = jnp.concatenate([ones, st.w_main, st.w_rem, pones])
+        claim = (claim_agg + lam1 * lam1 % Q_MOD * st.claim_main
+                 + lam2 * lam2 % Q_MOD * st.claim_rem) % Q_MOD
+        blind = (blind_agg + lam1 * st.blind_main
+                 + lam2 * st.blind_rem) % Q_MOD
+        jax.block_until_ready((a_hat, b_hat))
+
+    if cfg.merged_len <= zkrelu.POW_TABLE_MAX_ELEMS:
+        stmt = (keys.g_merged, None, keys.validity.h_blind, a_hat, b_hat,
+                blind, claim,
+                (keys.g_merged_table, keys.h_merged, keys.h_merged_table, w))
+    else:
+        from repro.field import from_mont
+        hh = group.g_pow(keys.h_merged, from_mont(FQ, w))
+        stmt = (keys.g_merged, hh, keys.validity.h_blind, a_hat, b_hat,
+                blind, claim)
+    (ipa_agg,) = ipa.pair_prove_many([stmt], t, rng, prof=prof)
+    return ipa_agg
 
 
 def verify(cfg: PipelineConfig, keys: PipelineKeys, proof, coms,
@@ -466,18 +516,30 @@ def verify(cfg: PipelineConfig, keys: PipelineKeys, proof, coms,
         blocks[tag] = AggClaim(tag, expand_point(col_pt), combined_claim,
                                com=com_fold)
 
-    # the direct-sum commitment is the product of every block's
-    # commitment (shared blind generator; zero pad witness); one IPA
-    # check replaces the per-tensor checks
-    b_agg, claim_agg, _ = direct_sum(cfg, t, blocks)
+    # validity statements: redraw challenges, transform commitments
+    # (Algorithm 1) — BEFORE rho/agg, matching the prover's schedule
+    ctx = zkrelu.verify_statements(keys.validity, coms.validity,
+                                   v, v_q1, v_r, u_relu, t)
+
+    # the merged commitment is the product of every block's commitment
+    # (shared blind generator; zero pad witness), times the open
+    # region's public H-side factor, times the lam-scaled transformed
+    # validity commitments; ONE pair-IPA check replaces everything
+    b_agg, claim_agg, rho = direct_sum(cfg, t, blocks)
     com_agg = blocks[cfg.agg_blocks[0][0]].com
     for name, _, _ in cfg.agg_blocks[1:]:
         com_agg = group.g_mul(com_agg, blocks[name].com)
-    if not ipa.open_verify(keys.k_agg, com_agg, b_agg, claim_agg,
-                           proof.ipa_agg, t):
+    lam1, lam2 = merged_lambdas(cfg, rho)
+    com_hat = group.g_mul(com_agg, group.msm_field(keys.h_open, b_agg))
+    com_hat = group.g_mul(com_hat, group.g_pow_int(ctx.com_t, lam1))
+    com_hat = group.g_mul(com_hat, group.g_pow_int(ctx.com_tr, lam2))
+    claim = (claim_agg + lam1 * lam1 % Q_MOD * ctx.claim_main
+             + lam2 * lam2 % Q_MOD * ctx.claim_rem) % Q_MOD
+    vtail = cfg.validity_blocks[-1][1] + cfg.validity_blocks[-1][2]
+    hh = jnp.concatenate([keys.h_open, ctx.h_prime_main, ctx.h_prime_rem,
+                          keys.h_merged[vtail:]])
+    if not ipa.pair_verify_many(
+            [(keys.g_merged, hh, keys.validity.h_blind, com_hat, claim,
+              cfg.merged_len)],
+            [proof.ipa_agg], t):
         raise ValueError("open-agg")
-
-    if not zkrelu.verify_validity(
-            keys.validity, coms.validity, coms.bq, v, v_q1, v_r, u_relu,
-            proof.validity, t):
-        raise ValueError("validity")

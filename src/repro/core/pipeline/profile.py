@@ -21,9 +21,12 @@ from typing import Dict
 PHASES = ("stack", "commit", "challenges", "matmul", "anchor", "openings")
 
 # sub-phases of the dominant `openings` phase: claim combination (the
-# per-tensor rho folds + the direct-sum assembly), the aggregated IPA's
-# L/R round loop, its final Schnorr opening, and the zkReLU validity
-# argument.  Tracked separately from `phases_s` so `accounted_s` (which
+# per-tensor rho folds, the direct-sum assembly AND the merged-vector
+# concatenation), the merged pair-IPA's L/R round loop, its final
+# Schnorr opening, and the zkReLU validity statement/table preparation
+# (challenge draws + the Pallas/jnp table kernel; the validity IPA
+# itself rides the merged pair IPA and is accounted under ipa-rounds/
+# sigma).  Tracked separately from `phases_s` so `accounted_s` (which
 # the --smoke attribution check compares against total_s) never double
 # counts.
 SUB_PHASES = ("claim-combine", "ipa-rounds", "sigma", "zkrelu-validity")

@@ -16,13 +16,15 @@ appears exactly once, in tag order:
     1 META      n_steps
     2 COMS      per-sample x commitments, schema-slot commitments
                 (name-keyed, in the graph's commit_slots order — the
-                transcript absorption order), validity commitments
+                transcript absorption order), the four validity
+                commitments (com_b_ip, com_bq1, com_bq1p, com_br_ip)
     3 OPEN      claim openings, name-keyed
     4 SC        per-family bucket sumchecks + the anchor sumcheck
     5 FINALS    per-family bucket finals + claim splits + anchor finals
-    6 IPA       the ONE direct-sum opening IPA (v2; v1 carried a
-                name-keyed dict of per-tensor IPAs here)
-    7 VALIDITY  the two zkReLU validity IPAs
+    6 IPA       the ONE merged pair IPA: every direct-sum opening block
+                AND both zkReLU validity statements (v3; v2 carried the
+                two validity IPAs in a separate section 7, v1 a
+                name-keyed dict of per-tensor IPAs)
 
 Scalars are 8-byte words: both the proof field (61-bit) and the group
 field (62-bit) fit.  The encoding is canonical — encode(decode(b)) == b
@@ -30,10 +32,10 @@ and decode(encode(p)) == p — so byte digests are stable and any
 single-byte tamper either fails framing (`ProofDecodeError`) or changes
 a transcript value and is rejected by verification.
 
-Version negotiation is explicit: v2 readers reject v1 streams (whose
-per-slot opening arguments and key layout no longer exist) with a
-dedicated `ProofDecodeError` naming the migration, and reject unknown
-future versions rather than guessing.
+Version negotiation is explicit: v3 readers reject v1/v2 streams (whose
+separate opening/validity arguments and key layouts no longer exist)
+with a dedicated `ProofDecodeError` naming the migration, and reject
+unknown future versions rather than guessing.
 """
 from __future__ import annotations
 
@@ -46,13 +48,14 @@ from repro.core.sumcheck import SumcheckProof
 
 MAGIC_PROOF = b"ZKDL"
 MAGIC_VK = b"ZKVK"
-# v2: the per-slot IPA dict collapsed into ONE direct-sum opening IPA,
-# and commitment keys moved to the unified generator layout — v1 bytes
-# (and v1 verifying keys, whose generators derive differently) cannot
-# verify under v2 keys, so decode refuses them instead of mis-verifying
-VERSION = 2
+# v3: the two standalone zkReLU validity IPAs folded into the single
+# direct-sum opening (now a pair IPA over the merged basis) and the
+# VALIDITY section disappeared; keys grew the merged/h_open bases and a
+# fresh bq slice — v1/v2 bytes (and their verifying keys) cannot verify
+# under v3 keys, so decode refuses them instead of mis-verifying
+VERSION = 3
 
-_SECTIONS = ("META", "COMS", "OPEN", "SC", "FINALS", "IPA", "VALIDITY")
+_SECTIONS = ("META", "COMS", "OPEN", "SC", "FINALS", "IPA")
 FAMILIES = ("fwd", "bwd", "gw")
 
 
@@ -66,8 +69,15 @@ def _check_version(ver: int, what: str) -> None:
     if ver == 1:
         raise ProofDecodeError(
             f"{what} format v1 (per-slot IPA openings) is no longer "
-            "supported: v2 aggregates every opening into one direct-sum "
-            "IPA over a new key layout — re-prove under v2 keys")
+            "supported: v3 aggregates every opening AND the zkReLU "
+            "validity statements into one merged pair IPA over a new "
+            "key layout — re-prove under v3 keys")
+    if ver == 2:
+        raise ProofDecodeError(
+            f"{what} format v2 (separate zkReLU validity IPAs) is no "
+            "longer supported: v3 folds the validity statements into "
+            "the single direct-sum pair IPA and drops the VALIDITY "
+            "section — re-prove under v3 keys")
     raise ProofDecodeError(f"unsupported {what} version {ver} "
                            f"(this decoder speaks v{VERSION})")
 
@@ -210,7 +220,7 @@ def encode_proof(proof) -> bytes:
         _w_str(b, name)
         _w_scalar(b, v)
     val = proof.coms.validity
-    for v in (val.com_b_ip, val.com_bq1p, val.com_br_ip):
+    for v in (val.com_b_ip, val.com_bq1, val.com_bq1p, val.com_br_ip):
         _w_scalar(b, v)
     section(2, b)
 
@@ -240,14 +250,9 @@ def encode_proof(proof) -> bytes:
     _w_scalars(b, proof.anchor_finals, count="u16")
     section(5, b)
 
-    b = io.BytesIO()                                   # 6 IPA (direct sum)
+    b = io.BytesIO()                                   # 6 IPA (merged)
     _w_ipa(b, proof.ipa_agg)
     section(6, b)
-
-    b = io.BytesIO()                                   # 7 VALIDITY
-    _w_ipa(b, proof.validity.ipa_main)
-    _w_ipa(b, proof.validity.ipa_rem)
-    section(7, b)
 
     return out.getvalue()
 
@@ -282,7 +287,8 @@ def decode_proof(data: bytes):
         name = s.str_()
         slots[name] = s.scalar()
     validity_coms = zkrelu.ValidityCommitments(
-        com_b_ip=s.scalar(), com_bq1p=s.scalar(), com_br_ip=s.scalar())
+        com_b_ip=s.scalar(), com_bq1=s.scalar(), com_bq1p=s.scalar(),
+        com_br_ip=s.scalar())
     coms = SessionCommitments(x=x, slots=slots, validity=validity_coms)
 
     s = sections[3]
@@ -306,9 +312,6 @@ def decode_proof(data: bytes):
     s = sections[6]
     ipa_agg = _r_ipa(s)
 
-    s = sections[7]
-    validity = zkrelu.ValidityProof(ipa_main=_r_ipa(s), ipa_rem=_r_ipa(s))
-
     for tag, sec in sections.items():
         if not sec.done():
             raise ProofDecodeError(
@@ -322,8 +325,7 @@ def decode_proof(data: bytes):
         gw_finals=finals["gw"],
         fwd_claims=claims["fwd"], bwd_claims=claims["bwd"],
         gw_claims=claims["gw"],
-        anchor_finals=anchor_finals, ipa_agg=ipa_agg, validity=validity,
-        n_steps=n_steps)
+        anchor_finals=anchor_finals, ipa_agg=ipa_agg, n_steps=n_steps)
 
 
 # -- verifying key ----------------------------------------------------------

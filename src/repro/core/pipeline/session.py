@@ -58,8 +58,8 @@ class SessionCommitments:
         """Transcript absorption order: x rows, then the schema slots in
         declaration order, then the validity commitments."""
         return (self.x + list(self.slots.values())
-                + [self.validity.com_b_ip, self.validity.com_bq1p,
-                   self.validity.com_br_ip])
+                + [self.validity.com_b_ip, self.validity.com_bq1,
+                   self.validity.com_bq1p, self.validity.com_br_ip])
 
 
 @dataclasses.dataclass
@@ -84,10 +84,9 @@ class AggregatedProof:
     bwd_claims: List[int]
     gw_claims: List[int]
     anchor_finals: List[int]
-    #: the ONE direct-sum opening IPA covering every committed-tensor
-    #: and data-fold claim (see openings.py)
+    #: the ONE merged pair-IPA covering every committed-tensor claim,
+    #: both data folds AND both zkReLU validity statements (openings.py)
     ipa_agg: ipa.IpaProof
-    validity: zkrelu.ValidityProof
     n_steps: int = 1
 
     def size_bytes(self) -> int:
@@ -178,7 +177,7 @@ class SessionProver:
         with prof.phase("anchor"):
             anc = anchor_mod.prove(cfg, self.tabs, ch, mat, t)   # step (b)
         with prof.phase("openings"):
-            ipa_agg, validity = openings_mod.prove(              # step (c)
+            ipa_agg = openings_mod.prove(                        # step (c)
                 cfg, keys, self.tabs, self.blinds, self.x_blinds,
                 self.aux_bits, self.vblinds, ch, mat, anc, op,
                 e_pi1, e_pi2, e_pi3, t, rng, prof=prof)
@@ -194,7 +193,7 @@ class SessionProver:
             bwd_claims=list(mat.fams["bwd"].claims),
             gw_claims=list(mat.fams["gw"].claims),
             anchor_finals=anc.anchor_finals,
-            ipa_agg=ipa_agg, validity=validity, n_steps=cfg.n_steps)
+            ipa_agg=ipa_agg, n_steps=cfg.n_steps)
 
 
 class ProofSession:

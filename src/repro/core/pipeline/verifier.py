@@ -2,9 +2,12 @@
 
 Mirrors the prover's transcript schedule exactly: absorb commitments,
 draw the challenge schedule, replay steps (a)/(b)/(c) over the graph's
-shape buckets.  Soundness checks are expressed as ValueError raises
-inside the stage modules; this module converts them into an
-accept/reject bit (plus an optional failure trace for telemetry).
+shape buckets.  Step (c) ends in ONE merged pair-IPA check that covers
+every committed-tensor opening AND both zkReLU validity statements
+(format v3; see openings.verify).  Soundness checks are expressed as
+ValueError raises inside the stage modules; this module converts them
+into an accept/reject bit (plus an optional failure trace for
+telemetry).
 """
 from __future__ import annotations
 

@@ -24,20 +24,32 @@ gives soundness: acceptance implies all range constraints hold.
 The remainders R_Z / R_GA use the identical machinery with an unsigned
 R-bit s-vector and no k-term (their own (19)-analogue), as the paper's
 "combined ... using random linear combinations" step.
+
+Execution model: the eq. (19) witness tables are never materialized on
+the host.  `prove_statements` hands the raw stacked integers to
+`repro.kernels.validity_tables`, which shift/masks the bits out and
+assembles both (main + remainder) a/b tables in one accelerator
+dispatch; the bit matrices themselves (`build_aux_bits`, vectorized
+shift/mask) exist only for the Pedersen commitments.  Both statements
+are then folded into ONE pair IPA: callers either merge them into the
+pipeline's direct-sum opening (`pipeline.openings`) or, standalone,
+into a lam-weighted two-statement merge over the vk-level merged basis
+(`prove_validity` / `verify_validity`).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional
+from typing import List
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.field import FQ, FP, add, sub, mont_mul, pow_const, batch_inv, encode_ints, decode
+from repro.field import FQ, FP, mont_mul, batch_inv, from_mont
 from repro.core import group, ipa
-from repro.core.mle import enc, enc_vec, expand_point, hexpand_point, hmul, hadd, hsub
+from repro.core.mle import enc, enc_vec, expand_point, hexpand_point
 from repro.core.transcript import Transcript
+from repro.kernels import validity_tables as vtab
 
 Q_MOD = FQ.modulus
 P_MOD = FP.modulus
@@ -50,10 +62,8 @@ def _rand_scalar(rng) -> int:
 def bits_unsigned(v: np.ndarray, nbits: int) -> np.ndarray:
     """(n,) int64 in [0, 2^nbits) -> (n, nbits) 0/1 int8."""
     assert (v >= 0).all() and (v < (1 << nbits)).all()
-    out = np.zeros((v.shape[0], nbits), dtype=np.int8)
-    for j in range(nbits):
-        out[:, j] = (v >> j) & 1
-    return out
+    return ((v[:, None] >> np.arange(nbits, dtype=np.int64)[None, :]) & 1
+            ).astype(np.int8)
 
 
 def bits_signed(v: np.ndarray, nbits: int) -> np.ndarray:
@@ -61,10 +71,8 @@ def bits_signed(v: np.ndarray, nbits: int) -> np.ndarray:
     lim = 1 << (nbits - 1)
     assert (v >= -lim).all() and (v < lim).all()
     u = np.where(v < 0, v + (1 << nbits), v).astype(np.int64)
-    out = np.zeros((v.shape[0], nbits), dtype=np.int8)
-    for j in range(nbits):
-        out[:, j] = (u >> j) & 1
-    return out
+    return ((u[:, None] >> np.arange(nbits, dtype=np.int64)[None, :]) & 1
+            ).astype(np.int8)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,29 +100,59 @@ class ValidityKeys:
         idx = np.arange(self.ds) * self.q_bits + (self.q_bits - 1)
         return self.h_big[idx]
 
+    @property
+    def n_main(self) -> int:
+        return 2 * self.ds * self.q_bits
+
+    @property
+    def n_rem(self) -> int:
+        return 2 * self.ds * self.r_bits
+
+    @property
+    def merged_len(self) -> int:
+        """Power-of-two length of the lam-merged (main ++ rem) statement."""
+        n, m = self.n_main + self.n_rem, 1
+        while m < n:
+            m <<= 1
+        return m
+
+    def _tag(self) -> bytes:
+        return b"ds%d-q%d-r%d" % (self.ds, self.q_bits, self.r_bits)
+
+    @functools.cached_property
+    def g_merged(self) -> jnp.ndarray:
+        """G basis of the merged statement: G ++ G_R ++ fresh pad."""
+        pad = self.merged_len - self.n_main - self.n_rem
+        parts = [self.g_big, self.g_r]
+        if pad:
+            parts.append(group.derive_generators(
+                b"zkrelu/Gpad/" + self._tag(), pad))
+        return jnp.concatenate(parts)
+
+    @functools.cached_property
+    def h_merged(self) -> jnp.ndarray:
+        pad = self.merged_len - self.n_main - self.n_rem
+        parts = [self.h_big, self.h_r]
+        if pad:
+            parts.append(group.derive_generators(
+                b"zkrelu/Hpad/" + self._tag(), pad))
+        return jnp.concatenate(parts)
+
     # precomputed squaring chains (`group.pow_table`) for the fixed
-    # bases: built lazily once per key, they let the validity IPAs run
-    # their FIRST (widest) round with one conditional multiply per
+    # bases: built lazily once per key, they let the merged validity IPA
+    # run its FIRST (widest) round with one conditional multiply per
     # exponent bit and skip materializing H' = H^{1/e} entirely.
     # Memory: each table is 61x its basis (976 bytes/element), so the
     # accel path only engages below POW_TABLE_MAX_ELEMS — larger keys
     # fall back to the explicit (bit-identical) H' path rather than
     # pinning hundreds of MB per table on the key.
     @functools.cached_property
-    def g_big_table(self) -> jnp.ndarray:
-        return group.pow_table(self.g_big)
+    def g_merged_table(self) -> jnp.ndarray:
+        return group.pow_table(self.g_merged)
 
     @functools.cached_property
-    def h_big_table(self) -> jnp.ndarray:
-        return group.pow_table(self.h_big)
-
-    @functools.cached_property
-    def g_r_table(self) -> jnp.ndarray:
-        return group.pow_table(self.g_r)
-
-    @functools.cached_property
-    def h_r_table(self) -> jnp.ndarray:
-        return group.pow_table(self.h_r)
+    def h_merged_table(self) -> jnp.ndarray:
+        return group.pow_table(self.h_merged)
 
 
 # accel tables above this basis length would pin > ~64 MB each on the
@@ -143,7 +181,7 @@ def _commit_pm_bits(gens, plus_bits, minus_bits, h_blind, blind: int):
     acc = group.msm_bits(gens, jnp.asarray(plus_bits.reshape(-1).astype(np.uint32)))
     if minus_bits is not None:
         m = group.msm_bits(gens, jnp.asarray(minus_bits.reshape(-1).astype(np.uint32)))
-        acc = group.g_mul(acc, pow_const(FP, m, P_MOD - 2))  # group inverse
+        acc = group.g_mul(acc, group.g_inv(m))
     if blind:
         acc = group.g_mul(acc, group.g_pow_int(h_blind, blind))
     return acc
@@ -151,12 +189,18 @@ def _commit_pm_bits(gens, plus_bits, minus_bits, h_blind, blind: int):
 
 @dataclasses.dataclass
 class AuxBits:
-    """Bit matrices for the stacked aux tensors (host int8 arrays)."""
+    """Bit matrices for the stacked aux tensors (host int8 arrays), plus
+    the raw stacked integers they decompose — the validity-table kernel
+    consumes the raw values directly and never reads the matrices."""
     b_mat: np.ndarray       # (2Ds, Q) bits of (Z'' ; G_A')
     bneg: np.ndarray        # (2Ds, Q) -B' = 1 - B, with forced-zero column 0
     bq: np.ndarray          # (Ds,) B_{Q-1}
     br_mat: np.ndarray      # (2Ds, R) bits of (R_Z ; R_GA)
     brneg: np.ndarray       # (2Ds, R) 1 - B_R
+    zpp: np.ndarray         # (Ds,) int64 Z''
+    gap: np.ndarray         # (Ds,) int64 G_A'
+    rz: np.ndarray          # (Ds,) int64 R_Z
+    rga: np.ndarray         # (Ds,) int64 R_GA
 
 
 def build_aux_bits(zpp: np.ndarray, gap: np.ndarray, bq: np.ndarray,
@@ -172,12 +216,15 @@ def build_aux_bits(zpp: np.ndarray, gap: np.ndarray, bq: np.ndarray,
     br_mat[:ds] = bits_unsigned(rz, r_bits)
     br_mat[ds:] = bits_unsigned(rga, r_bits)
     return AuxBits(b_mat=b_mat, bneg=bneg, bq=bq.astype(np.int8),
-                   br_mat=br_mat, brneg=1 - br_mat)
+                   br_mat=br_mat, brneg=1 - br_mat,
+                   zpp=zpp.astype(np.int64), gap=gap.astype(np.int64),
+                   rz=rz.astype(np.int64), rga=rga.astype(np.int64))
 
 
 @dataclasses.dataclass
 class ValidityCommitments:
     com_b_ip: int          # h^r G^B H^{B'}
+    com_bq1: int           # h^{rq1} g_col^{B_{Q-1}}
     com_bq1p: int          # h^{r'} h_col^{B'_{Q-1}}
     com_br_ip: int         # h^{rr} GR^{B_R} HR^{B'_R}
 
@@ -185,14 +232,24 @@ class ValidityCommitments:
 @dataclasses.dataclass
 class ValidityBlinds:
     r: int
+    rq1: int
     rq1p: int
     rr: int
 
 
 def commit_validity(keys: ValidityKeys, bits: AuxBits, rng) -> (
         tuple):
-    """Protocol 1 (trainer side): commitments to bit matrices."""
+    """Protocol 1 (trainer side): commitments to bit matrices.
+
+    com_bq1 (B_{Q-1} under the g_col sub-basis, own blind rq1) is part of
+    this bundle: the merged opening pins the bq MLE at the same random
+    point through two routes — the slot commitment and, via the k-term,
+    this column commitment — so the two must agree w.h.p.  Publishing it
+    here (rather than splicing g_col into another key) keeps every slice
+    of the merged IPA basis generator-disjoint.
+    """
     r = _rand_scalar(rng)
+    rq1 = _rand_scalar(rng)
     rq1p = _rand_scalar(rng)
     rr = _rand_scalar(rng)
     com_b = _commit_pm_bits(keys.g_big, bits.b_mat, None, keys.h_blind, 0)
@@ -200,7 +257,9 @@ def commit_validity(keys: ValidityKeys, bits: AuxBits, rng) -> (
                              keys.h_blind, 0)
     com_b_ip = group.g_mul(group.g_mul(com_b, com_bp),
                            group.g_pow_int(keys.h_blind, r))
-    # com of B'_{Q-1} = B_{Q-1} - 1 over h_col
+    # com of B_{Q-1} over g_col, com of B'_{Q-1} = B_{Q-1} - 1 over h_col
+    com_bq1 = _commit_pm_bits(keys.g_col, bits.bq.reshape(-1, 1), None,
+                              keys.h_blind, rq1)
     bq1p_neg = (1 - bits.bq).astype(np.int8)   # -(B_{Q-1}-1)
     com_bq1p = _commit_pm_bits(keys.h_col, np.zeros((keys.ds, 1), np.int8),
                                bq1p_neg.reshape(-1, 1), keys.h_blind, rq1p)
@@ -211,9 +270,10 @@ def commit_validity(keys: ValidityKeys, bits: AuxBits, rng) -> (
                             group.g_pow_int(keys.h_blind, rr))
     coms = ValidityCommitments(
         com_b_ip=group.decode_group(com_b_ip),
+        com_bq1=group.decode_group(com_bq1),
         com_bq1p=group.decode_group(com_bq1p),
         com_br_ip=group.decode_group(com_br_ip))
-    return coms, ValidityBlinds(r=r, rq1p=rq1p, rr=rr)
+    return coms, ValidityBlinds(r=r, rq1=rq1, rq1p=rq1p, rr=rr)
 
 
 def _s_q_vector(q_bits: int) -> List[int]:
@@ -221,38 +281,6 @@ def _s_q_vector(q_bits: int) -> List[int]:
     s = [pow(2, j, Q_MOD) for j in range(q_bits - 1)]
     s.append(Q_MOD - pow(2, q_bits - 1, Q_MOD))
     return s
-
-
-def _field_table_from_bits(mat: np.ndarray) -> jnp.ndarray:
-    return jnp.asarray(encode_ints(FQ, mat.reshape(-1).astype(object)))
-
-
-@dataclasses.dataclass
-class ValidityProof:
-    ipa_main: ipa.IpaProof
-    ipa_rem: ipa.IpaProof
-
-    def size_bytes(self) -> int:
-        return self.ipa_main.size_bytes() + self.ipa_rem.size_bytes()
-
-
-def _transformed_b_vector(bk_neg_table, e_relu, e_bit, s_vals: List[int],
-                          z: int, n_rows: int):
-    """b = z^2 (e_relu (x) s) + (z 1 + B'_k) . (e_relu (x) e_bit).
-
-    bk_neg_table holds -B'_k (as field elements); returns (n,4) table.
-    """
-    nb = len(s_vals)
-    e_full = mont_mul(FQ, e_relu[:, None, :], e_bit[None, :, :]).reshape(-1, 4)
-    s_tab = enc_vec(s_vals)
-    es = mont_mul(FQ, e_relu[:, None, :], s_tab[None, :, :]).reshape(-1, 4)
-    z2 = enc((z * z) % Q_MOD)
-    term1 = mont_mul(FQ, es, z2[None])
-    zt = enc(z)
-    zb = sub(FQ, jnp.broadcast_to(zt, (n_rows * nb, 4)).astype(jnp.uint32),
-             bk_neg_table)
-    term2 = mont_mul(FQ, zb, e_full)
-    return add(FQ, term1, term2), e_full
 
 
 def _main_claim(v_k: int, vp_k: int, z: int, s_sum: int = -1) -> int:
@@ -265,16 +293,35 @@ def _main_claim(v_k: int, vp_k: int, z: int, s_sum: int = -1) -> int:
     return (-pow(z, 3, Q_MOD) * s_sum - (1 - v_k) * z * z + z * vp_k) % Q_MOD
 
 
-def prove_validity(keys: ValidityKeys, bits: AuxBits, blinds: ValidityBlinds,
-                   u_relu: List[int], v: int, v_q1: int, v_r: int,
-                   r_q1: int, transcript: Transcript,
-                   rng) -> ValidityProof:
-    """Validity of aux inputs given claims already bound to the transcript.
+@dataclasses.dataclass
+class ValidityStatements:
+    """Both eq. (19) pair-IPA statements, ready to be folded into a
+    single direct-sum opening.  a/b are (n, 4) Montgomery witness
+    tables; w is the H-basis exponent weight vector 1/e (Montgomery);
+    claims/blinds are canonical ints."""
+    a_main: jnp.ndarray
+    b_main: jnp.ndarray
+    w_main: jnp.ndarray
+    claim_main: int
+    blind_main: int
+    a_rem: jnp.ndarray
+    b_rem: jnp.ndarray
+    w_rem: jnp.ndarray
+    claim_rem: int
+    blind_rem: int
+
+
+def prove_statements(keys: ValidityKeys, bits: AuxBits,
+                     blinds: ValidityBlinds, u_relu: List[int], v: int,
+                     v_q1: int, v_r: int,
+                     transcript: Transcript) -> ValidityStatements:
+    """Draw the validity challenges and build both statement witnesses.
 
     u_relu = (u_star..., u'') is the row point; v / v_q1 / v_r are the
-    (already transcript-absorbed) MLE-evaluation claims; r_q1 is the blind
-    of the standalone com_{B_{Q-1}} aux commitment.  Challenges k, u_bit, z
-    are drawn from the shared transcript.
+    (already transcript-absorbed) MLE-evaluation claims.  Challenges
+    k, u_bit, z (and the remainder's u_bit_r, z_r) are drawn from the
+    shared transcript; the a/b tables for BOTH statements come out of
+    one `validity_tables` kernel dispatch over the raw aux integers.
     """
     ds, qb, rb = keys.ds, keys.q_bits, keys.r_bits
     k = transcript.challenge_int(b"zkrelu/k", Q_MOD)
@@ -285,71 +332,135 @@ def prove_validity(keys: ValidityKeys, bits: AuxBits, blinds: ValidityBlinds,
                                         (rb - 1).bit_length())
     z_r = transcript.challenge_int(b"zkrelu/zr", Q_MOD)
 
-    # ---- main matrix: B_k = B + k Bbar, B'_k = B' + k Bbar' -------------
-    bk = encode_ints(FQ, bits.b_mat.astype(object))
-    bk = jnp.asarray(bk).reshape(-1, 4)
-    kbar = np.zeros((2 * ds, qb), dtype=object)
-    kbar[:ds, qb - 1] = [int(x) * k % Q_MOD for x in bits.bq]
-    bk = add(FQ, bk, jnp.asarray(encode_ints(FQ, kbar)).reshape(-1, 4))
-    # -B'_k = (1 - B masked) + k (1 - B_{Q-1}) on the forced column
-    nbp = bits.bneg.astype(object)
-    kbarp = np.zeros((2 * ds, qb), dtype=object)
-    kbarp[:ds, qb - 1] = [int(1 - x) * k % Q_MOD for x in bits.bq]
-    bkp_neg = add(FQ, jnp.asarray(encode_ints(FQ, nbp)).reshape(-1, 4),
-                  jnp.asarray(encode_ints(FQ, kbarp)).reshape(-1, 4))
-
     e_relu = expand_point(u_relu)
     assert e_relu.shape[0] == 2 * ds
     e_bit = expand_point(u_bit)[:qb]
-    # (qb is a power of two in all configs; assert to be safe)
-    assert e_bit.shape[0] == qb
+    e_bit_r = expand_point(u_bit_r)[:rb]
 
-    a_vec = sub(FQ, bk, jnp.broadcast_to(enc(z), bk.shape).astype(jnp.uint32))
-    b_vec, _ = _transformed_b_vector(bkp_neg, e_relu, e_bit,
-                                     _s_q_vector(qb), z, 2 * ds)
+    # e_relu (x) e_bit and the z^2-scaled e_relu (x) s tables, both
+    # statements concatenated in kernel-layout order
+    e_full_m = mont_mul(FQ, e_relu[:, None, :],
+                        e_bit[None, :, :]).reshape(-1, 4)
+    e_full_r = mont_mul(FQ, e_relu[:, None, :],
+                        e_bit_r[None, :, :]).reshape(-1, 4)
+    es_m = mont_mul(FQ,
+                    mont_mul(FQ, e_relu[:, None, :],
+                             enc_vec(_s_q_vector(qb))[None, :, :]
+                             ).reshape(-1, 4),
+                    enc(z * z % Q_MOD)[None])
+    s_r = [pow(2, j, Q_MOD) for j in range(rb)]
+    es_r = mont_mul(FQ,
+                    mont_mul(FQ, e_relu[:, None, :],
+                             enc_vec(s_r)[None, :, :]).reshape(-1, 4),
+                    enc(z_r * z_r % Q_MOD)[None])
+
+    layout = vtab.build_layout(bits.zpp, bits.gap, bits.bq, bits.rz,
+                               bits.rga, qb, rb)
+    a, b = vtab.build_tables(layout, k, z, z_r,
+                             jnp.concatenate([e_full_m, e_full_r]),
+                             jnp.concatenate([es_m, es_r]))
+    n_main = layout.n_main
 
     # derived claim values (the verifier recomputes these itself)
     upp = u_relu[-1]
     v_k = (v - k * pow(2, qb - 1, Q_MOD) % Q_MOD
            * ((1 - upp) % Q_MOD) % Q_MOD * v_q1) % Q_MOD
     vp_k = _vp_k(k, u_relu, u_bit, qb)
-    claim = _main_claim(v_k, vp_k, z)
-    blind_k = (blinds.r + k * (r_q1 + blinds.rq1p)) % Q_MOD
+    return ValidityStatements(
+        a_main=a[:n_main], b_main=b[:n_main],
+        w_main=batch_inv(FQ, e_full_m),
+        claim_main=_main_claim(v_k, vp_k, z),
+        blind_main=(blinds.r + k * (blinds.rq1 + blinds.rq1p)) % Q_MOD,
+        a_rem=a[n_main:], b_rem=b[n_main:],
+        w_rem=batch_inv(FQ, e_full_r),
+        claim_rem=_main_claim(v_r, 1, z_r, s_sum=(1 << rb) - 1),
+        blind_rem=blinds.rr)
 
-    w_main = _h_weights(e_relu, e_bit)
 
-    # ---- remainder matrix (no k-term, unsigned s-vector) ----------------
-    brk = jnp.asarray(encode_ints(FQ, bits.br_mat.astype(object))).reshape(-1, 4)
-    brp_neg = jnp.asarray(encode_ints(FQ, bits.brneg.astype(object))).reshape(-1, 4)
-    e_bit_r = expand_point(u_bit_r)[:rb]
-    s_r = [pow(2, j, Q_MOD) for j in range(rb)]
-    a_r = sub(FQ, brk, jnp.broadcast_to(enc(z_r), brk.shape).astype(jnp.uint32))
-    b_r, _ = _transformed_b_vector(brp_neg, e_relu, e_bit_r, s_r, z_r, 2 * ds)
-    claim_r = _main_claim(v_r, 1, z_r, s_sum=(1 << rb) - 1)
-    w_rem = _h_weights(e_relu, e_bit_r)
+@dataclasses.dataclass
+class ValidityVerifyCtx:
+    """Verifier-side mirror of `ValidityStatements`: the transformed
+    commitments (Algorithm 1), recomputed claims and materialized
+    H' = H^{1/e} bases the merged-IPA verifier splices in."""
+    com_t: jnp.ndarray
+    com_tr: jnp.ndarray
+    claim_main: int
+    claim_rem: int
+    h_prime_main: jnp.ndarray
+    h_prime_rem: jnp.ndarray
 
-    # the main and remainder arguments are independent statements on one
-    # transcript: lockstep rounds pay max(rounds) syncs, not their sum,
-    # and (below the table memory cap) the accel tuples run the wide
-    # first round off the fixed-basis squaring tables with H' = H^{1/e}
-    # kept in exponent form — bit-identical to the explicit fallback
-    def stmt(g_basis, g_table, h_basis, h_table, w, e_bit_vec, a, b,
-             blind, cl):
-        if g_basis.shape[0] <= POW_TABLE_MAX_ELEMS:
-            return (g_basis, None, keys.h_blind, a, b, blind, cl,
-                    (g_table(), h_basis, h_table(), w))
-        h_prime = _h_prime_basis(h_basis, e_relu, e_bit_vec)
-        return (g_basis, h_prime, keys.h_blind, a, b, blind, cl)
 
-    proof_main, proof_rem = ipa.pair_prove_many(
-        [stmt(keys.g_big, lambda: keys.g_big_table, keys.h_big,
-              lambda: keys.h_big_table, w_main, e_bit,
-              a_vec, b_vec, blind_k, claim),
-         stmt(keys.g_r, lambda: keys.g_r_table, keys.h_r,
-              lambda: keys.h_r_table, w_rem, e_bit_r,
-              a_r, b_r, blinds.rr, claim_r)],
-        transcript, rng)
-    return ValidityProof(ipa_main=proof_main, ipa_rem=proof_rem)
+def verify_statements(keys: ValidityKeys, coms: ValidityCommitments,
+                      v: int, v_q1: int, v_r: int, u_relu: List[int],
+                      transcript: Transcript) -> ValidityVerifyCtx:
+    """Redraw the validity challenges and transform the commitments."""
+    ds, qb, rb = keys.ds, keys.q_bits, keys.r_bits
+    k = transcript.challenge_int(b"zkrelu/k", Q_MOD)
+    u_bit = transcript.challenge_ints(b"zkrelu/ubit", Q_MOD,
+                                      (qb - 1).bit_length())
+    z = transcript.challenge_int(b"zkrelu/z", Q_MOD)
+    u_bit_r = transcript.challenge_ints(b"zkrelu/ubitr", Q_MOD,
+                                        (rb - 1).bit_length())
+    z_r = transcript.challenge_int(b"zkrelu/zr", Q_MOD)
+
+    upp = u_relu[-1]
+    v_k = (v - k * pow(2, qb - 1, Q_MOD) % Q_MOD
+           * ((1 - upp) % Q_MOD) % Q_MOD * v_q1) % Q_MOD
+    vp_k = _vp_k(k, u_relu, u_bit, qb)
+
+    # com_{B_{Q-1}}^ip = com_{B_{Q-1}} * com_{B'_{Q-1}}   (Protocol 1 line 3)
+    com_bq1_ip = group.decode_group(
+        group.g_mul(group.encode_group(coms.com_bq1),
+                    group.encode_group(coms.com_bq1p)))
+    com_t = transform_commitment(keys, coms.com_b_ip, com_bq1_ip, k, z, u_bit)
+    com_tr = transform_commitment(keys, coms.com_br_ip, None, None, z_r,
+                                  u_bit_r, remainder=True)
+    e_relu = expand_point(u_relu)
+    return ValidityVerifyCtx(
+        com_t=com_t, com_tr=com_tr,
+        claim_main=_main_claim(v_k, vp_k, z),
+        claim_rem=_main_claim(v_r, 1, z_r, s_sum=(1 << rb) - 1),
+        h_prime_main=_h_prime_basis(keys.h_big, e_relu,
+                                    expand_point(u_bit)[:qb]),
+        h_prime_rem=_h_prime_basis(keys.h_r, e_relu,
+                                   expand_point(u_bit_r)[:rb]))
+
+
+def prove_validity(keys: ValidityKeys, bits: AuxBits,
+                   blinds: ValidityBlinds, u_relu: List[int], v: int,
+                   v_q1: int, v_r: int, transcript: Transcript,
+                   rng) -> ipa.IpaProof:
+    """Standalone validity of aux inputs: ONE merged pair IPA.
+
+    The main and remainder statements become disjoint slices of the
+    merged basis (G ++ G_R ++ pad); the remainder slice is lam-scaled so
+    claim monomials stay distinct (claim = c_main + lam^2 c_rem) and the
+    verifier can assemble the merged commitment as com_t * com_tr^lam.
+    The pipeline does the same fold with rho-powers inside its
+    direct-sum opening — this wrapper is the two-statement special case.
+    """
+    st = prove_statements(keys, bits, blinds, u_relu, v, v_q1, v_r,
+                          transcript)
+    lam = transcript.challenge_int(b"zkrelu/lam", Q_MOD)
+    lam_m = enc(lam)
+    pad = keys.merged_len - keys.n_main - keys.n_rem
+    zeros = jnp.zeros((pad, 4), dtype=jnp.uint32)
+    a = jnp.concatenate([st.a_main,
+                         mont_mul(FQ, st.a_rem, lam_m[None]), zeros])
+    b = jnp.concatenate([st.b_main,
+                         mont_mul(FQ, st.b_rem, lam_m[None]), zeros])
+    ones = jnp.broadcast_to(enc(1), (pad, 4)).astype(jnp.uint32)
+    w = jnp.concatenate([st.w_main, st.w_rem, ones])
+    claim = (st.claim_main + lam * lam % Q_MOD * st.claim_rem) % Q_MOD
+    blind = (st.blind_main + lam * st.blind_rem) % Q_MOD
+    if keys.merged_len <= POW_TABLE_MAX_ELEMS:
+        stmt = (keys.g_merged, None, keys.h_blind, a, b, blind, claim,
+                (keys.g_merged_table, keys.h_merged, keys.h_merged_table, w))
+    else:
+        hh = group.g_pow(keys.h_merged, from_mont(FQ, w))
+        stmt = (keys.g_merged, hh, keys.h_blind, a, b, blind, claim)
+    (proof,) = ipa.pair_prove_many([stmt], transcript, rng)
+    return proof
 
 
 def _vp_k(k: int, u_relu: List[int], u_bit: List[int], qb: int) -> int:
@@ -371,7 +482,6 @@ def _h_prime_basis(h_big, e_relu, e_bit):
 
     Verifier-side only: the prover keeps the weights in exponent form
     (`ipa.pair_prove_many` accel statements) and never materializes H'."""
-    from repro.field import from_mont
     return group.g_pow(h_big, from_mont(FQ, _h_weights(e_relu, e_bit)))
 
 
@@ -405,39 +515,15 @@ def transform_commitment(keys: ValidityKeys, com_b_ip: int, com_bq1_ip: int,
 
 
 def verify_validity(keys: ValidityKeys, coms: ValidityCommitments,
-                    com_bq1: int, v: int, v_q1: int, v_r: int,
-                    u_relu: List[int], proof: ValidityProof,
-                    transcript: Transcript) -> bool:
-    ds, qb, rb = keys.ds, keys.q_bits, keys.r_bits
-    k = transcript.challenge_int(b"zkrelu/k", Q_MOD)
-    u_bit = transcript.challenge_ints(b"zkrelu/ubit", Q_MOD,
-                                      (qb - 1).bit_length())
-    z = transcript.challenge_int(b"zkrelu/z", Q_MOD)
-    u_bit_r = transcript.challenge_ints(b"zkrelu/ubitr", Q_MOD,
-                                        (rb - 1).bit_length())
-    z_r = transcript.challenge_int(b"zkrelu/zr", Q_MOD)
-
-    upp = u_relu[-1]
-    v_k = (v - k * pow(2, qb - 1, Q_MOD) % Q_MOD
-           * ((1 - upp) % Q_MOD) % Q_MOD * v_q1) % Q_MOD
-    vp_k = _vp_k(k, u_relu, u_bit, qb)
-    claim = _main_claim(v_k, vp_k, z)
-
-    # com_{B_{Q-1}}^ip = com_{B_{Q-1}} * com_{B'_{Q-1}}   (Protocol 1 line 3)
-    com_bq1_ip = group.decode_group(
-        group.g_mul(group.encode_group(com_bq1),
-                    group.encode_group(coms.com_bq1p)))
-    com_t = transform_commitment(keys, coms.com_b_ip, com_bq1_ip, k, z, u_bit)
-    e_relu = expand_point(u_relu)
-    e_bit = expand_point(u_bit)[:qb]
-    h_prime = _h_prime_basis(keys.h_big, e_relu, e_bit)
-
-    claim_r = _main_claim(v_r, 1, z_r, s_sum=(1 << rb) - 1)
-    com_tr = transform_commitment(keys, coms.com_br_ip, None, None, z_r,
-                                  u_bit_r, remainder=True)
-    e_bit_r = expand_point(u_bit_r)[:rb]
-    h_prime_r = _h_prime_basis(keys.h_r, e_relu, e_bit_r)
+                    v: int, v_q1: int, v_r: int, u_relu: List[int],
+                    proof: ipa.IpaProof, transcript: Transcript) -> bool:
+    """Standalone verifier for the merged validity IPA."""
+    ctx = verify_statements(keys, coms, v, v_q1, v_r, u_relu, transcript)
+    lam = transcript.challenge_int(b"zkrelu/lam", Q_MOD)
+    com = group.g_mul(ctx.com_t, group.g_pow_int(ctx.com_tr, lam))
+    claim = (ctx.claim_main + lam * lam % Q_MOD * ctx.claim_rem) % Q_MOD
+    hh = jnp.concatenate([ctx.h_prime_main, ctx.h_prime_rem,
+                          keys.h_merged[keys.n_main + keys.n_rem:]])
     return ipa.pair_verify_many(
-        [(keys.g_big, h_prime, keys.h_blind, com_t, claim, 2 * ds * qb),
-         (keys.g_r, h_prime_r, keys.h_blind, com_tr, claim_r, 2 * ds * rb)],
-        [proof.ipa_main, proof.ipa_rem], transcript)
+        [(keys.g_merged, hh, keys.h_blind, com, claim, keys.merged_len)],
+        [proof], transcript)

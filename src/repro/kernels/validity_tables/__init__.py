@@ -1,0 +1,5 @@
+from repro.kernels.validity_tables.ops import (BACKENDS,  # noqa: F401
+                                               ValidityLayout, backend,
+                                               build_layout, build_tables,
+                                               set_backend)
+from repro.kernels.validity_tables.ref import tables_ref  # noqa: F401

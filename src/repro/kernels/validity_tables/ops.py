@@ -1,0 +1,191 @@
+"""Backend dispatch + layout for the zkReLU validity-table kernel.
+
+`build_layout` flattens the stacked aux tensors into per-(row, bit)
+uint32 position planes once; `build_tables` then evaluates the eq. (19)
+``a`` / ``b`` vectors for BOTH validity statements (main Q-bit and
+remainder R-bit, concatenated) in one dispatch.
+
+Backends mirror `repro.core.mle.fold_backend`:
+
+* ``jnp`` (default): one fused XLA computation over (n, 4) limb arrays
+  -- the fast path on CPU/GPU and the reference the kernel is
+  parity-tested against.
+* ``pallas``: the limb-plane kernel in `kernel.py`; interpret mode off
+  TPU.  Select with ZKDL_VALIDITY_BACKEND=pallas or
+  `set_backend("pallas")`.
+
+Both are bit-identical to `ref.tables_ref` (and to each other), so the
+proof transcript does not depend on the backend choice.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.field import FQ, add, sub, mont_mul, encode_int
+from repro.field.modarith import NLIMB
+from repro.kernels.limb_planes import LANE, pack_planes, unpack_planes
+from repro.kernels.validity_tables.kernel import (DEFAULT_BLOCK_ROWS,
+                                                 validity_tables_planes)
+
+Q = FQ.modulus
+
+BACKENDS = ("jnp", "pallas")
+_BACKEND_ENV = "ZKDL_VALIDITY_BACKEND"
+_backend_override: str | None = None
+
+
+def backend() -> str:
+    """Active backend: override > $ZKDL_VALIDITY_BACKEND > "jnp"."""
+    name = _backend_override or os.environ.get(_BACKEND_ENV, "jnp").lower()
+    if name not in BACKENDS:
+        raise ValueError(f"unknown validity backend {name!r}; "
+                         f"choose from {BACKENDS}")
+    return name
+
+
+def set_backend(name: str | None) -> None:
+    """Process-wide override (None restores the env/default choice)."""
+    global _backend_override
+    if name is not None and name not in BACKENDS:
+        raise ValueError(f"unknown validity backend {name!r}; "
+                         f"choose from {BACKENDS}")
+    _backend_override = name
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class ValidityLayout:
+    """Flat per-(row, bit) position planes, main statement then
+    remainder (all (n,) uint32, n = 2 Ds (Q + R)):
+
+    ``vals``     the packed source value whose bit this position holds
+                 (two's-complement for the signed G_A' half)
+    ``shift``    the bit index within ``vals``
+    ``kmask``    B_{Q-1}[row] at the forced (top-half, col Q-1) slots
+    ``kpmask``   1 - B_{Q-1}[row] there
+    ``colmask``  1 at the forced column (the B' forced-zero column)
+    ``region``   1 on the main statement, 0 on the remainder
+    """
+    vals: np.ndarray
+    shift: np.ndarray
+    kmask: np.ndarray
+    kpmask: np.ndarray
+    colmask: np.ndarray
+    region: np.ndarray
+    n_main: int
+    n_rem: int
+
+
+def build_layout(zpp: np.ndarray, gap: np.ndarray, bq: np.ndarray,
+                 rz: np.ndarray, rga: np.ndarray, q_bits: int,
+                 r_bits: int) -> ValidityLayout:
+    """Stacked aux value vectors -> flat kernel layout (host, numpy)."""
+    ds = zpp.shape[0]
+    qb, rb = q_bits, r_bits
+    assert qb < 32 and rb < 32, "values must fit uint32"
+    lim = 1 << (qb - 1)
+    assert (zpp >= 0).all() and (zpp < lim).all()
+    assert (gap >= -lim).all() and (gap < lim).all()
+    gap_u = np.where(gap < 0, gap + (1 << qb), gap)
+    u_main = np.concatenate([zpp, gap_u]).astype(np.uint32)   # (2ds,)
+    u_rem = np.concatenate([rz, rga]).astype(np.uint32)
+
+    n_main, n_rem = 2 * ds * qb, 2 * ds * rb
+    vals = np.concatenate([np.repeat(u_main, qb), np.repeat(u_rem, rb)])
+    shift = np.concatenate([np.tile(np.arange(qb, dtype=np.uint32), 2 * ds),
+                            np.tile(np.arange(rb, dtype=np.uint32), 2 * ds)])
+    # the forced column (top-half rows, bit Q-1): B is 0 there by range
+    # (zpp < 2^{Q-1}), B' is forced to 0, and the k-term adds B_{Q-1}
+    kmask = np.zeros((2 * ds, qb), dtype=np.uint32)
+    kmask[:ds, qb - 1] = bq.astype(np.uint32)
+    kpmask = np.zeros((2 * ds, qb), dtype=np.uint32)
+    kpmask[:ds, qb - 1] = 1 - bq.astype(np.uint32)
+    colmask = np.zeros((2 * ds, qb), dtype=np.uint32)
+    colmask[:ds, qb - 1] = 1
+    zpad = np.zeros(n_rem, dtype=np.uint32)
+    region = np.concatenate([np.ones(n_main, dtype=np.uint32), zpad])
+    return ValidityLayout(
+        vals=vals.astype(np.uint32), shift=shift.astype(np.uint32),
+        kmask=np.concatenate([kmask.reshape(-1), zpad]),
+        kpmask=np.concatenate([kpmask.reshape(-1), zpad]),
+        colmask=np.concatenate([colmask.reshape(-1), zpad]),
+        region=region, n_main=n_main, n_rem=n_rem)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _tables_jnp(vals, shift, kmask, kpmask, colmask, region, e_full, es,
+                one_m, k_m, zm_m, zr_m):
+    """The (n, 4) limb-array evaluation of `_tables_body` (same math)."""
+    bit = (vals >> shift) & jnp.uint32(1)
+
+    def sel(mask01, scalar_m):
+        return jnp.where(mask01[:, None].astype(bool), scalar_m[None],
+                         jnp.uint32(0))
+
+    zsel = jnp.where(region[:, None].astype(bool), zm_m[None], zr_m[None])
+    a = sub(FQ, add(FQ, sel(bit, one_m), sel(kmask, k_m)), zsel)
+    negbp = add(FQ, sel((1 - bit) * (1 - colmask), one_m),
+                sel(kpmask, k_m))
+    b = add(FQ, es, mont_mul(FQ, sub(FQ, zsel, negbp), e_full))
+    return a, b
+
+
+def _enc_tile(x: int) -> jnp.ndarray:
+    limbs = np.asarray(encode_int(FQ, x), dtype=np.uint32)
+    return jnp.broadcast_to(jnp.asarray(limbs).reshape(NLIMB, 1, 1),
+                            (NLIMB, 1, LANE)).astype(jnp.uint32)
+
+
+def _pack_flat_u32(x: np.ndarray, rows: int) -> jnp.ndarray:
+    """(n,) uint32 -> (rows, 128) plane, zero-padded."""
+    pad = rows * LANE - x.shape[0]
+    return jnp.asarray(np.pad(x, (0, pad)).reshape(rows, LANE))
+
+
+def build_tables(layout: ValidityLayout, k: int, z_main: int, z_rem: int,
+                 e_full, es, *, block_rows: int | None = None,
+                 interpret: bool | None = None):
+    """Layout + challenges + (n, 4) Montgomery e-tables -> (a, b).
+
+    Returns two (n, 4) Montgomery tables covering both statements
+    (split them at ``layout.n_main``).  Dispatches on `backend()`.
+    """
+    n = layout.vals.shape[0]
+    assert e_full.shape[0] == n and es.shape[0] == n
+    one_m = jnp.asarray(np.asarray(FQ.one, dtype=np.uint32))
+    k_m = jnp.asarray(encode_int(FQ, k))
+    zm_m = jnp.asarray(encode_int(FQ, z_main))
+    zr_m = jnp.asarray(encode_int(FQ, z_rem))
+    if backend() == "pallas":
+        if interpret is None:
+            interpret = _interpret_default()
+        ef_p, _ = pack_planes(e_full)
+        es_p, _ = pack_planes(es)
+        rows = ef_p.shape[1]
+        br = block_rows or min(DEFAULT_BLOCK_ROWS, rows)
+        while rows % br:
+            br //= 2
+        a_p, b_p = validity_tables_planes(
+            _pack_flat_u32(layout.vals, rows),
+            _pack_flat_u32(layout.shift, rows),
+            _pack_flat_u32(layout.kmask, rows),
+            _pack_flat_u32(layout.kpmask, rows),
+            _pack_flat_u32(layout.colmask, rows),
+            _pack_flat_u32(layout.region, rows),
+            ef_p, es_p, _enc_tile(1), _enc_tile(k), _enc_tile(z_main),
+            _enc_tile(z_rem), spec=FQ, block_rows=br, interpret=interpret)
+        return unpack_planes(a_p, n), unpack_planes(b_p, n)
+    return _tables_jnp(jnp.asarray(layout.vals), jnp.asarray(layout.shift),
+                       jnp.asarray(layout.kmask), jnp.asarray(layout.kpmask),
+                       jnp.asarray(layout.colmask),
+                       jnp.asarray(layout.region), e_full, es,
+                       one_m, k_m, zm_m, zr_m)

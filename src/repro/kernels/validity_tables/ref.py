@@ -1,0 +1,37 @@
+"""Pure python-int reference for the validity-table construction.
+
+The oracle both backends of `repro.kernels.validity_tables.ops` are
+parity-tested against (tests/test_validity_kernel.py): one honest,
+dispatch-free evaluation of the eq. (19) vectors per flat position,
+entirely in canonical field integers.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.field import FQ
+
+Q = FQ.modulus
+
+
+def tables_ref(layout, k: int, z_main: int, z_rem: int,
+               e_full: List[int], es: List[int]) -> Tuple[List[int],
+                                                          List[int]]:
+    """(a, b) canonical-int lists for a `ValidityLayout`.
+
+    ``e_full`` is e_relu (x) e_bit per position; ``es`` is the
+    z^2-scaled e_relu (x) s table (both statements concatenated, same
+    order as the layout).
+    """
+    n = layout.vals.shape[0]
+    a_out, b_out = [], []
+    for p in range(n):
+        bit = (int(layout.vals[p]) >> int(layout.shift[p])) & 1
+        z = z_main if layout.region[p] else z_rem
+        a = (bit + int(layout.kmask[p]) * k - z) % Q
+        negbp = ((1 - bit) * (1 - int(layout.colmask[p]))
+                 + int(layout.kpmask[p]) * k) % Q
+        b = (es[p] + (z - negbp) * e_full[p]) % Q
+        a_out.append(a)
+        b_out.append(b)
+    return a_out, b_out

@@ -103,6 +103,54 @@ def test_layout_blocks_are_disjoint_slices_of_the_unified_key(keys):
             assert not (gens[a][:m] == gens[b][:m]).all(), (a, b)
 
 
+def test_merged_key_extends_unified_key_with_validity_slices(keys):
+    """The v3 merged basis: G = agg gens ++ the zkReLU main/remainder
+    bases at the `validity_blocks` offsets ++ fresh padding; H mirrors it
+    with a fresh `h_open` head.  Every slice must be exactly the basis
+    the standalone statements commit under, and the bq slot generators
+    must be DISJOINT from the zkReLU column basis (repeated generators
+    across merged slices would break binding)."""
+    vk = keys.validity
+    (mname, moff, mn), (rname, roff, rn) = CFG.validity_blocks
+    assert (mname, rname) == ("vmain", "vrem")
+    assert moff == CFG.agg_len and roff == moff + mn
+    assert mn == np.asarray(vk.g_big).shape[0]
+    assert rn == np.asarray(vk.g_r).shape[0]
+    vtail = roff + rn
+    assert CFG.merged_len >= vtail
+    assert CFG.merged_len & (CFG.merged_len - 1) == 0
+    assert np.asarray(keys.g_merged).shape[0] == CFG.merged_len
+    assert np.asarray(keys.h_merged).shape[0] == CFG.merged_len
+    assert np.asarray(keys.h_open).shape[0] == CFG.agg_len
+
+    np.testing.assert_array_equal(np.asarray(keys.g_merged[:CFG.agg_len]),
+                                  np.asarray(keys.k_agg.gens))
+    np.testing.assert_array_equal(np.asarray(keys.g_merged[moff:moff + mn]),
+                                  np.asarray(vk.g_big))
+    np.testing.assert_array_equal(np.asarray(keys.g_merged[roff:roff + rn]),
+                                  np.asarray(vk.g_r))
+    np.testing.assert_array_equal(np.asarray(keys.h_merged[:CFG.agg_len]),
+                                  np.asarray(keys.h_open))
+    np.testing.assert_array_equal(np.asarray(keys.h_merged[moff:moff + mn]),
+                                  np.asarray(vk.h_big))
+    np.testing.assert_array_equal(np.asarray(keys.h_merged[roff:roff + rn]),
+                                  np.asarray(vk.h_r))
+
+    # h_open is fresh: no element reappears in the validity H slices
+    ho = {tuple(row) for row in np.asarray(keys.h_open).tolist()}
+    for basis in (vk.h_big, vk.h_r):
+        assert not ho & {tuple(r) for r in np.asarray(basis).tolist()}
+    # bq slot generators are fresh, NOT spliced from the zkReLU column
+    # basis (g_col is a sub-basis of g_big, which sits in the vmain
+    # slice of the merged key)
+    bq_gens = {tuple(r)
+               for r in np.asarray(keys.slot_keys["bq"].gens).tolist()}
+    col = {tuple(r) for r in np.asarray(vk.g_col).tolist()}
+    assert not bq_gens & col
+    big = {tuple(r) for r in np.asarray(vk.g_big).tolist()}
+    assert not bq_gens & big
+
+
 def test_block_claims_are_true_inner_products(prover_state):
     """Each per-tensor combined claim equals <witness block, combined
     basis> — the per-slot rho folds preserve values exactly."""

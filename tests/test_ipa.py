@@ -187,25 +187,43 @@ def test_fused_pair_round_matches_unfused(n):
     b = field_vec([int(rng.integers(0, Q, dtype=np.uint64)) for _ in range(n)])
     rho_l = int(rng.integers(0, Q, dtype=np.uint64)) % Q
     rho_r = int(rng.integers(0, Q, dtype=np.uint64)) % Q
+    from repro.core.mle import enc
     fused = ipa._pair_round_lr(gg, hh, a, b, up, hb,
-                               ipa._exp1(rho_l), ipa._exp1(rho_r))
+                               ipa._exp1(rho_l), ipa._exp1(rho_r),
+                               enc(1), enc(1))
     want = _unfused_pair_round(gg, hh, a, b, up, hb, rho_l, rho_r)
     assert group.decode_group_many(fused) == [group.decode_group(w)
                                               for w in want]
 
     al = 192837465
     ali = pow(al, Q - 2, Q)
-    from repro.core.mle import enc
+    al2, ali2 = al * al % Q, ali * ali % Q
     a2, b2, gg2, hh2 = ipa._pair_fold(a, b, gg, hh, enc(al), enc(ali),
-                                      ipa._exp1(al), ipa._exp1(ali))
+                                      ipa._exp1(al2), ipa._exp1(ali2))
     np.testing.assert_array_equal(np.asarray(a2),
                                   np.asarray(ipa._fold_vec(a, al, ali)))
     np.testing.assert_array_equal(np.asarray(b2),
                                   np.asarray(ipa._fold_vec(b, ali, al)))
-    np.testing.assert_array_equal(np.asarray(gg2),
-                                  np.asarray(ipa._fold_gens(gg, ali, al)))
-    np.testing.assert_array_equal(np.asarray(hh2),
-                                  np.asarray(ipa._fold_gens(hh, al, ali)))
+    # the fold defers the outer exponents (gam_g = ali, gam_h = al):
+    # applying them recovers the eager fold exactly
+    np.testing.assert_array_equal(
+        np.asarray(ipa._g_pow_const(gg2, ali)),
+        np.asarray(ipa._fold_gens(gg, ali, al)))
+    np.testing.assert_array_equal(
+        np.asarray(ipa._g_pow_const(hh2, al)),
+        np.asarray(ipa._fold_gens(hh, al, ali)))
+    # deferred L/R on the stored bases with gam scalars equals the
+    # eager L/R on the true (materialized) bases
+    gg_true = ipa._g_pow_const(gg2, ali)
+    hh_true = ipa._g_pow_const(hh2, al)
+    lr_def = ipa._pair_round_lr(gg2, hh2, a2, b2, up, hb,
+                                ipa._exp1(rho_l), ipa._exp1(rho_r),
+                                enc(ali), enc(al))
+    lr_eager = ipa._pair_round_lr(gg_true, hh_true, a2, b2, up, hb,
+                                  ipa._exp1(rho_l), ipa._exp1(rho_r),
+                                  enc(1), enc(1))
+    assert group.decode_group_many(lr_def) == \
+        group.decode_group_many(lr_eager)
 
 
 # ---------------------------------------------------------------------------

@@ -1,8 +1,9 @@
 """Aggregated proof pipeline tests: T=2 prove/verify roundtrip plus
 tamper rejections (flipped aux bit, wrong step count, stale transcript,
 cross-step claim splicing), the heterogeneous pyramid roundtrip, and the
-golden-digest pins that freeze the uniform-graph transcript of the v2
-one-IPA opening protocol."""
+golden-digest pins that freeze the uniform-graph transcript of the v3
+merged one-IPA opening protocol (data folds + zkReLU validity in a
+single pair IPA)."""
 import copy
 import hashlib
 
@@ -256,22 +257,22 @@ def proof_digest(proof):
     absorb("anchor/finals", proof.anchor_finals)
     absorb("ipa/agg", [proof.ipa_agg.ls, proof.ipa_agg.rs,
                        proof.ipa_agg.sigma])
-    for p, tag in ((proof.validity.ipa_main, "vmain"),
-                   (proof.validity.ipa_rem, "vrem")):
-        absorb(tag, [p.ls, p.rs, p.sigma])
     return h.hexdigest()
 
 
-# recorded for the v2 one-IPA opening protocol (layers=2, batch=2,
-# width=4, q=16, r=4, trajectory seed=7, prover rng seed=7).  History:
-# originally recorded from the pre-graph-IR pipeline and kept
+# recorded for the v3 merged one-IPA opening protocol (layers=2,
+# batch=2, width=4, q=16, r=4, trajectory seed=7, prover rng seed=7).
+# History: originally recorded from the pre-graph-IR pipeline and kept
 # bit-identical through the IR / batching / serialization refactors;
-# re-recorded for PR 5, whose unified commitment-key layout and
-# direct-sum aggregated opening change the transcript by design (both
-# pipelines verified the same seeded trajectories before re-recording)
+# re-recorded for PR 5 (unified commitment-key layout + direct-sum
+# aggregated opening) and again for PR 6, which folds both zkReLU
+# validity statements into the single pair IPA over the merged key
+# (fresh bq generators, com_bq1 published, validity challenges drawn
+# before rho/agg) -- the transcript changes by design; both pipelines
+# verified the same seeded trajectories before re-recording
 GOLDEN = {
-    1: "0b2e26fc02d5812cf9f422729b65ee7f04dce7ef04c2d098065469025fcf6d7c",
-    2: "4a7aea6204993c7ff45239a47b72995525406299acdc2b1bca1c11440a1ff3b8",
+    1: "25adee334f3087831ba4588932c3f6d5a38bfbb816b888a42f9504a94769a5c0",
+    2: "d098df1fea85a092589dabc3701e040eff473b17db571331701ecb7ff99e6fef",
 }
 
 

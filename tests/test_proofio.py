@@ -36,12 +36,12 @@ def uniform_t2():
     return _make_uniform(2)
 
 
-# recorded canonical v2 encodings of the seed-7 uniform trajectory (the
+# recorded canonical v3 encodings of the seed-7 uniform trajectory (the
 # same proofs whose scalar digests are pinned in test_proof_session.py);
 # any byte-format or transcript change must re-record BOTH goldens
 GOLDEN_SHA256 = {
-    1: "de0af887d1f39d09af82457d9f9e004f237b80ae15914ac24b9f165c2238306a",
-    2: "c5ceaeee850aebafa369d075692376c300be212325b17f1c00b938c0f58896ff",
+    1: "a538160f1da619bd39439420f78d24af9089dd1eacd770f3ce24d76dd80c2422",
+    2: "17e8be25e9320abb55694a27615bf0093a7c0c08e290f2e11856a8d4f09b08f6",
 }
 
 
@@ -120,7 +120,17 @@ def test_version_negotiation_rejects_v1_with_migration_hint(uniform_t2):
     with pytest.raises(ProofDecodeError, match="v1"):
         VerifyingKey.from_bytes(bytes(vk_v1))
 
-    for future in (3, 250):
+    # v2 streams (separate zkReLU validity IPAs, 7-section layout) reject
+    # with their own migration message pointing at the v3 merged fold
+    as_v2 = bytearray(encode_proof(proof))
+    as_v2[4:6] = struct.pack("<H", 2)
+    with pytest.raises(ProofDecodeError, match="v2.*no longer supported"):
+        decode_proof(bytes(as_v2))
+    trace = []
+    assert not verify_bytes(vk, bytes(as_v2), trace=trace)
+    assert "v2" in trace[0]
+
+    for future in (4, 250):
         fut = bytearray(encode_proof(proof))
         fut[4:6] = struct.pack("<H", future)
         with pytest.raises(ProofDecodeError, match="unsupported"):

@@ -1,0 +1,140 @@
+"""Parity + dispatch tests for the zkReLU validity-table kernel.
+
+The kernel package (`repro.kernels.validity_tables`) replaces the old
+host-side per-bit python loops: `build_layout` flattens the stacked aux
+tensors once, `build_tables` evaluates the eq. (19) a/b vectors for both
+validity statements in one dispatch.  These tests pin the three parity
+contracts the proof transcript rests on:
+
+* the jnp backend equals the honest python-int oracle (`tables_ref`),
+* the pallas backend is BIT-identical to the jnp backend (same uint32
+  Montgomery limbs, so backend choice can never alter a transcript),
+* the vectorized bit decompositions equal their per-bit definitions.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.field import FQ, decode, encode_ints
+from repro.core.zkrelu import bits_signed, bits_unsigned
+from repro.kernels import validity_tables as vtab
+
+Q = FQ.modulus
+
+DS, QB, RB = 8, 8, 4
+
+
+def random_inputs(seed, ds=DS, qb=QB, rb=RB):
+    rng = np.random.default_rng(seed)
+    lim = 1 << (qb - 1)
+    zpp = rng.integers(0, lim, ds).astype(np.int64)
+    gap = rng.integers(-lim, lim, ds).astype(np.int64)
+    bq = rng.integers(0, 2, ds).astype(np.int64)
+    rz = rng.integers(0, 1 << rb, ds).astype(np.int64)
+    rga = rng.integers(0, 1 << rb, ds).astype(np.int64)
+    layout = vtab.build_layout(zpp, gap, bq, rz, rga, qb, rb)
+    n = layout.vals.shape[0]
+    k, z_main, z_rem = (int(rng.integers(0, Q)) for _ in range(3))
+    e_full = [int(rng.integers(0, Q)) for _ in range(n)]
+    es = [int(rng.integers(0, Q)) for _ in range(n)]
+    return (zpp, gap, bq, rz, rga), layout, k, z_main, z_rem, e_full, es
+
+
+@pytest.fixture(autouse=True)
+def _restore_backend():
+    yield
+    vtab.set_backend(None)
+
+
+def test_layout_geometry():
+    vals, layout, *_ = random_inputs(0)
+    zpp, gap, bq, rz, rga = vals
+    assert layout.n_main == 2 * DS * QB and layout.n_rem == 2 * DS * RB
+    n = layout.n_main + layout.n_rem
+    for arr in (layout.vals, layout.shift, layout.kmask, layout.kpmask,
+                layout.colmask, layout.region):
+        assert arr.shape == (n,) and arr.dtype == np.uint32
+    # the layout's (value >> shift) & 1 walk reproduces the row-major
+    # bit matrices of the four decomposed tensors exactly
+    bits = (layout.vals >> layout.shift) & 1
+    main = bits[:layout.n_main].reshape(2 * DS, QB)
+    rem = bits[layout.n_main:].reshape(2 * DS, RB)
+    np.testing.assert_array_equal(main[:DS], bits_unsigned(zpp, QB))
+    np.testing.assert_array_equal(main[DS:], bits_signed(gap, QB))
+    np.testing.assert_array_equal(rem[:DS], bits_unsigned(rz, RB))
+    np.testing.assert_array_equal(rem[DS:], bits_unsigned(rga, RB))
+    # masks live only at the forced column (top-half rows, bit Q-1)
+    km = layout.kmask[:layout.n_main].reshape(2 * DS, QB)
+    kpm = layout.kpmask[:layout.n_main].reshape(2 * DS, QB)
+    cm = layout.colmask[:layout.n_main].reshape(2 * DS, QB)
+    np.testing.assert_array_equal(km[:DS, QB - 1], bq)
+    np.testing.assert_array_equal(kpm[:DS, QB - 1], 1 - bq)
+    np.testing.assert_array_equal(cm[:DS, QB - 1], np.ones(DS))
+    for m in (km, kpm, cm):
+        m = m.copy()
+        m[:DS, QB - 1] = 0
+        assert not m.any()
+    assert not layout.kmask[layout.n_main:].any()
+    assert layout.region[:layout.n_main].all()
+    assert not layout.region[layout.n_main:].any()
+
+
+@pytest.mark.parametrize("seed", [1, 2])
+def test_jnp_backend_matches_python_oracle(seed):
+    _, layout, k, z_main, z_rem, e_full, es = random_inputs(seed)
+    want_a, want_b = vtab.tables_ref(layout, k, z_main, z_rem, e_full, es)
+    a, b = vtab.build_tables(layout, k, z_main, z_rem,
+                             jnp.asarray(encode_ints(FQ, e_full)),
+                             jnp.asarray(encode_ints(FQ, es)))
+    np.testing.assert_array_equal(decode(FQ, a), np.array(want_a, object))
+    np.testing.assert_array_equal(decode(FQ, b), np.array(want_b, object))
+
+
+@pytest.mark.parametrize("block_rows", [None, 2])
+def test_pallas_backend_bit_identical_to_jnp(block_rows):
+    """Same uint32 Montgomery limbs from both backends — the transcript
+    cannot depend on ZKDL_VALIDITY_BACKEND."""
+    _, layout, k, z_main, z_rem, e_full, es = random_inputs(3)
+    ef = jnp.asarray(encode_ints(FQ, e_full))
+    esm = jnp.asarray(encode_ints(FQ, es))
+    a_j, b_j = vtab.build_tables(layout, k, z_main, z_rem, ef, esm)
+    vtab.set_backend("pallas")
+    assert vtab.backend() == "pallas"
+    a_p, b_p = vtab.build_tables(layout, k, z_main, z_rem, ef, esm,
+                                 block_rows=block_rows, interpret=True)
+    np.testing.assert_array_equal(np.asarray(a_j), np.asarray(a_p))
+    np.testing.assert_array_equal(np.asarray(b_j), np.asarray(b_p))
+
+
+def test_backend_dispatch(monkeypatch):
+    assert vtab.backend() == "jnp"                   # default
+    monkeypatch.setenv("ZKDL_VALIDITY_BACKEND", "pallas")
+    assert vtab.backend() == "pallas"                # env selects
+    vtab.set_backend("jnp")
+    assert vtab.backend() == "jnp"                   # override wins
+    vtab.set_backend(None)
+    assert vtab.backend() == "pallas"                # back to env
+    monkeypatch.setenv("ZKDL_VALIDITY_BACKEND", "cuda")
+    with pytest.raises(ValueError, match="unknown validity backend"):
+        vtab.backend()
+    with pytest.raises(ValueError, match="unknown validity backend"):
+        vtab.set_backend("tpu")
+
+
+def test_vectorized_bits_match_per_bit_definition():
+    rng = np.random.default_rng(7)
+    v = rng.integers(0, 1 << 15, 64).astype(np.int64)
+    got = bits_unsigned(v, 16)
+    for i, x in enumerate(v):
+        np.testing.assert_array_equal(
+            got[i], [(int(x) >> j) & 1 for j in range(16)])
+    s = rng.integers(-(1 << 15), 1 << 15, 64).astype(np.int64)
+    got = bits_signed(s, 16)
+    for i, x in enumerate(s):
+        tc = int(x) + (1 << 16) if x < 0 else int(x)
+        np.testing.assert_array_equal(
+            got[i], [(tc >> j) & 1 for j in range(16)])
+    # reconstruction: sum_j 2^j b_j recovers the two's-complement value
+    np.testing.assert_array_equal(got @ (1 << np.arange(16)),
+                                  np.where(s < 0, s + (1 << 16), s))

@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 
 from repro.field import FQ
-from repro.core import group, pedersen, zkrelu
+from repro.core import zkrelu
 from repro.core.mle import hexpand_point
 from repro.core.transcript import Transcript
 
@@ -38,6 +38,10 @@ def honest_claims(zpp, gap, bq, rz, rga, u_relu):
     return v, vq1, vr
 
 
+def coms_list(coms):
+    return [coms.com_b_ip, coms.com_bq1, coms.com_bq1p, coms.com_br_ip]
+
+
 def run_protocol(tamper=None):
     rng = np.random.default_rng(42)
     zpp, gap, bq, rz, rga = make_aux(rng)
@@ -45,35 +49,28 @@ def run_protocol(tamper=None):
     bits = zkrelu.build_aux_bits(zpp, gap, bq, rz, rga, QB, RB)
     if tamper == "bitflip":
         bits.b_mat[3, 2] ^= 1
-    if tamper == "sign":
-        bits.bq[2] ^= 1
-        # rebuild bq-dependent parts dishonestly: bq column lives separately
+    if tamper == "value":
+        # commitments honest, but the prover's raw witness disagrees
+        bits.zpp[3] ^= 4
 
     coms, blinds = zkrelu.commit_validity(keys, bits, rng)
-    # standalone com of B_{Q-1} under g_col (the aux tensor commitment)
-    r_q1 = int(rng.integers(0, Q_MOD, dtype=np.uint64)) % Q_MOD
-    key_col = pedersen.CommitKey(keys.g_col, keys.h_blind, b"bq")
-    com_bq1 = group.decode_group(
-        pedersen.commit_bits(key_col, bits.bq.astype(np.uint32), r_q1))
 
     n_vars = DS.bit_length() - 1
     tp = Transcript(b"zkrelu-test")
-    tp.absorb_ints(b"coms", [coms.com_b_ip, coms.com_bq1p, coms.com_br_ip,
-                             com_bq1])
+    tp.absorb_ints(b"coms", coms_list(coms))
     u_relu = tp.challenge_ints(b"urelu", Q_MOD, n_vars + 1)
     v, vq1, vr = honest_claims(zpp, gap, bq, rz, rga, u_relu)
     tp.absorb_ints(b"claims", [v, vq1, vr])
 
     proof = zkrelu.prove_validity(keys, bits, blinds, u_relu, v, vq1, vr,
-                                  r_q1, tp, rng)
+                                  tp, rng)
 
     tv = Transcript(b"zkrelu-test")
-    tv.absorb_ints(b"coms", [coms.com_b_ip, coms.com_bq1p, coms.com_br_ip,
-                             com_bq1])
+    tv.absorb_ints(b"coms", coms_list(coms))
     u_relu_v = tv.challenge_ints(b"urelu", Q_MOD, n_vars + 1)
     assert u_relu_v == u_relu
     tv.absorb_ints(b"claims", [v, vq1, vr])
-    return zkrelu.verify_validity(keys, coms, com_bq1, v, vq1, vr,
+    return zkrelu.verify_validity(keys, coms, v, vq1, vr,
                                   u_relu, proof, tv)
 
 
@@ -85,16 +82,16 @@ def test_validity_rejects_bitflip():
     assert not run_protocol(tamper="bitflip")
 
 
+def test_validity_rejects_witness_value_flip():
+    assert not run_protocol(tamper="value")
+
+
 def test_validity_rejects_wrong_claim():
     rng = np.random.default_rng(1)
     zpp, gap, bq, rz, rga = make_aux(rng)
     keys = zkrelu.make_validity_keys(DS, QB, RB)
     bits = zkrelu.build_aux_bits(zpp, gap, bq, rz, rga, QB, RB)
     coms, blinds = zkrelu.commit_validity(keys, bits, rng)
-    r_q1 = 77
-    key_col = pedersen.CommitKey(keys.g_col, keys.h_blind, b"bq")
-    com_bq1 = group.decode_group(
-        pedersen.commit_bits(key_col, bits.bq.astype(np.uint32), r_q1))
     n_vars = DS.bit_length() - 1
     tp = Transcript(b"t2")
     u_relu = tp.challenge_ints(b"urelu", Q_MOD, n_vars + 1)
@@ -102,12 +99,62 @@ def test_validity_rejects_wrong_claim():
     v_bad = (v + 1) % Q_MOD
     tp.absorb_ints(b"claims", [v_bad, vq1, vr])
     proof = zkrelu.prove_validity(keys, bits, blinds, u_relu, v_bad, vq1, vr,
-                                  r_q1, tp, rng)
+                                  tp, rng)
     tv = Transcript(b"t2")
     u2 = tv.challenge_ints(b"urelu", Q_MOD, n_vars + 1)
     tv.absorb_ints(b"claims", [v_bad, vq1, vr])
-    assert not zkrelu.verify_validity(keys, coms, com_bq1, v_bad, vq1, vr,
+    assert not zkrelu.verify_validity(keys, coms, v_bad, vq1, vr,
                                       u2, proof, tv)
+
+
+def test_cross_statement_swap_rejects():
+    """Fold-in soundness: a prover that swaps the main/remainder slices
+    inside the merged direct-sum IPA (proving the right claims against
+    the wrong basis positions) must be rejected."""
+    from repro.field import mont_mul
+    from repro.core import group, ipa
+    from repro.core.mle import enc
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(7)
+    zpp, gap, bq, rz, rga = make_aux(rng)
+    keys = zkrelu.make_validity_keys(DS, QB, RB)
+    bits = zkrelu.build_aux_bits(zpp, gap, bq, rz, rga, QB, RB)
+    coms, blinds = zkrelu.commit_validity(keys, bits, rng)
+
+    n_vars = DS.bit_length() - 1
+    tp = Transcript(b"swap")
+    tp.absorb_ints(b"coms", coms_list(coms))
+    u_relu = tp.challenge_ints(b"urelu", Q_MOD, n_vars + 1)
+    v, vq1, vr = honest_claims(zpp, gap, bq, rz, rga, u_relu)
+    tp.absorb_ints(b"claims", [v, vq1, vr])
+
+    st = zkrelu.prove_statements(keys, bits, blinds, u_relu, v, vq1, vr, tp)
+    lam = tp.challenge_int(b"zkrelu/lam", Q_MOD)
+    lam_m = enc(lam)
+    pad = keys.merged_len - keys.n_main - keys.n_rem
+    zeros = jnp.zeros((pad, 4), dtype=jnp.uint32)
+    # malicious layout: remainder witness into the main slice and vice
+    # versa (padded/truncated to the slice widths), claims unchanged
+    a_sw = jnp.concatenate([
+        jnp.concatenate([st.a_rem] * (keys.n_main // keys.n_rem)),
+        mont_mul(FQ, st.a_main[:keys.n_rem], lam_m[None]), zeros])
+    b_sw = jnp.concatenate([
+        jnp.concatenate([st.b_rem] * (keys.n_main // keys.n_rem)),
+        mont_mul(FQ, st.b_main[:keys.n_rem], lam_m[None]), zeros])
+    ones = jnp.broadcast_to(enc(1), (pad, 4)).astype(jnp.uint32)
+    w = jnp.concatenate([st.w_main, st.w_rem, ones])
+    claim = (st.claim_main + lam * lam % Q_MOD * st.claim_rem) % Q_MOD
+    blind = (st.blind_main + lam * st.blind_rem) % Q_MOD
+    stmt = (keys.g_merged, None, keys.h_blind, a_sw, b_sw, blind, claim,
+            (keys.g_merged_table, keys.h_merged, keys.h_merged_table, w))
+    (proof,) = ipa.pair_prove_many([stmt], tp, rng)
+
+    tv = Transcript(b"swap")
+    tv.absorb_ints(b"coms", coms_list(coms))
+    u2 = tv.challenge_ints(b"urelu", Q_MOD, n_vars + 1)
+    tv.absorb_ints(b"claims", [v, vq1, vr])
+    assert not zkrelu.verify_validity(keys, coms, v, vq1, vr, u2, proof, tv)
 
 
 def test_bits_roundtrip():
