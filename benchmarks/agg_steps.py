@@ -19,32 +19,134 @@ pyramid MLP against a uniform MLP of (approximately) equal parameter
 count in one aggregated session.  Both prove and verify run an untimed
 warm-up first; the warm-up durations are recorded separately as
 ``prove_compile_s`` / ``verify_compile_s`` so jit compilation never
-pollutes (or de-monotonizes) the reported numbers, and
-``prove_compile_warm_s`` additionally records the compile cost with the
-in-memory jit caches dropped but the persistent on-disk cache warm —
-what a fresh process actually pays after `enable_compilation_cache`.
+pollutes (or de-monotonizes) the reported numbers.
+
+``prove_compile_warm_s`` is the warm-start cost: what a FRESH process
+pays on its first prove once the serialized-executable cache
+(`repro.core.execache`) is populated.  It is measured in a controlled
+fresh subprocess (--warm-probe): the parent's cold warm-up populates
+the disk cache, then the child proves twice and reports
+first_prove - steady_prove along with the executable-cache hit/miss
+counters (a correct warm start shows ``misses == 0``).  The old
+in-process ``jax.clear_caches()`` + re-prove measurement is gone — it
+dropped executables a fresh process would load from disk while KEEPING
+warm host state a fresh process wouldn't have, so it could read higher
+than the cold path at small T and was neither cold nor warm.
+
 Each row also carries the per-phase prover profile (commit / matmul /
 anchor / openings wall clock plus the openings sub-phases, see
 `repro.core.pipeline.profile`), emitted standalone as
 BENCH_prover_phases.json.  ``--smoke`` is the CI guard: tiny shapes,
 every cell must verify, the phase profile must account for ~all prove
 time, serialized per-step bytes at T=8 must stay strictly below the
-recorded v1 baseline, and the zkReLU validity prep sub-phase must stay
-under its share budget of T=8 prove time; no JSON written.
+recorded v1 baseline, the zkReLU validity prep sub-phase must stay
+under its share budget of T=8 prove time, and the warm start must be
+genuinely warm: zero executable-cache misses in the probe subprocess,
+T=8 warm overhead under WARM_COMPILE_MAX_S and within
+WARM_T_INVARIANCE_MAX of the T=1 overhead (compile cost flat in T); no
+JSON written.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
 
+_PROBE_TAG = "WARM_PROBE_RESULT "
+
+
+def _warm_probe_child(params: dict) -> None:
+    """Body of the ``--warm-probe`` subprocess: starting from a populated
+    executable-cache disk (the parent's cold warm-up wrote it), rebuild
+    the keys, prove twice, and report first/steady timings plus the
+    execache counters as one tagged JSON line on stdout.  This IS the
+    warm-start scenario: a fresh prover process for a config someone has
+    proved before on this machine."""
+    from repro.core import execache
+    from repro.core.quantfc import (QuantConfig,
+                                    synthetic_sgd_trajectory_widths)
+    from repro.core.pipeline import PipelineConfig, ProofSession, make_keys
+    from repro.util import enable_compilation_cache
+
+    enable_compilation_cache()        # mirror what a real prover enables
+    widths = tuple(params["widths"])
+    cfg = PipelineConfig(n_layers=len(widths) - 1, batch=params["batch"],
+                         q_bits=params["q_bits"], r_bits=params["r_bits"],
+                         n_steps=params["T"], widths=widths)
+    qc = QuantConfig(q_bits=params["q_bits"], r_bits=params["r_bits"])
+    t0 = time.perf_counter()
+    keys = make_keys(cfg)
+    setup_s = time.perf_counter() - t0
+    wits = synthetic_sgd_trajectory_widths(params["T"], widths,
+                                           params["batch"], qc,
+                                           seed=params["T"])
+
+    def prove_once(seed):
+        session = ProofSession(keys, np.random.default_rng(seed))
+        for w in wits:
+            session.add_step(w)
+        t0 = time.perf_counter()
+        session.prove()
+        return time.perf_counter() - t0
+
+    execache.reset_stats()
+    first = prove_once(0)
+    stats = execache.stats()          # counters for the FIRST prove only
+    steady = min(prove_once(s) for s in (1, 2))
+    print(_PROBE_TAG + json.dumps({
+        "setup_s": setup_s,
+        "first_prove_s": first,
+        "steady_prove_s": steady,
+        "warm_overhead_s": max(0.0, first - steady),
+        "exec_stats": stats,
+        "exec_warm": execache.enabled() and execache.cache_dir() is not None,
+    }), flush=True)
+
+
+def _measure_warm(T: int, batch: int, q_bits: int, r_bits: int, widths,
+                  attempts: int = 2):
+    """Run the warm-start probe in a controlled FRESH subprocess and
+    return its JSON report (best of ``attempts`` runs by warm overhead —
+    the probe is pure wall clock, so background load can only inflate
+    it).  The parent must have proved this exact config already (so the
+    executable-cache disk is populated)."""
+    params = {"T": T, "batch": batch, "q_bits": q_bits, "r_bits": r_bits,
+              "widths": list(widths)}
+    here = os.path.abspath(__file__)
+    src = os.path.join(os.path.dirname(os.path.dirname(here)), "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    best = None
+    for _ in range(attempts):
+        proc = subprocess.run(
+            [sys.executable, here, "--warm-probe", json.dumps(params)],
+            capture_output=True, text=True, env=env, timeout=1800)
+        report = None
+        for line in proc.stdout.splitlines():
+            if line.startswith(_PROBE_TAG):
+                report = json.loads(line[len(_PROBE_TAG):])
+        if report is None:
+            raise RuntimeError(
+                f"warm probe subprocess failed (rc={proc.returncode}):\n"
+                f"{proc.stdout[-1000:]}\n{proc.stderr[-2000:]}")
+        # a single re-traced program anywhere disqualifies the whole
+        # warm start — never let a lucky fast attempt mask it
+        if report["exec_stats"]["misses"] > 0:
+            return report
+        if best is None or (report["warm_overhead_s"]
+                            < best["warm_overhead_s"]):
+            best = report
+    return best
+
 
 def bench_T(T: int, layers: int, batch: int, width: int, q_bits: int,
-            r_bits: int, repeats: int, verify: bool, widths=None):
-    import jax
-
+            r_bits: int, repeats: int, verify: bool, widths=None,
+            warm_probe: bool = True):
     from repro.core.quantfc import (QuantConfig,
                                     synthetic_sgd_trajectory_widths)
     from repro.core.pipeline import (PipelineConfig, ProofSession,
@@ -73,14 +175,16 @@ def bench_T(T: int, layers: int, batch: int, width: int, q_bits: int,
     # leaks into (and never jitters) the reported prove/verify numbers
     prove_compile_s, proof, _ = prove_once(0)
 
-    # warm-cache compile: drop the in-memory jit caches (keeping the
-    # persistent on-disk cache, which the cold warm-up just populated)
-    # and re-prove — this is what a FRESH process pays for compilation
-    # once the `repro.util.enable_compilation_cache` store is warm
-    prove_compile_warm_s = None
-    if hasattr(jax, "clear_caches"):
-        jax.clear_caches()
-        prove_compile_warm_s, _, _ = prove_once(0)
+    # warm-start cost: what a FRESH process pays on its first prove with
+    # the executable-cache disk populated (which the cold warm-up above
+    # just did).  Measured in a controlled fresh subprocess — an
+    # in-process jax.clear_caches() probe is neither cold nor warm: it
+    # drops executables a fresh process would load from disk while
+    # keeping warm host state a fresh process wouldn't have
+    prove_compile_warm_s, warm = None, None
+    if warm_probe:
+        warm = _measure_warm(T, batch, q_bits, r_bits, widths)
+        prove_compile_warm_s = warm["warm_overhead_s"]
 
     best, phases = float("inf"), None
     for rep in range(repeats):
@@ -112,6 +216,11 @@ def bench_T(T: int, layers: int, batch: int, width: int, q_bits: int,
         "per_step_bytes": proof_bytes / T,
         "prove_compile_s": prove_compile_s,
         "prove_compile_warm_s": prove_compile_warm_s,
+        "warm_first_prove_s": warm["first_prove_s"] if warm else None,
+        "warm_steady_prove_s": warm["steady_prove_s"] if warm else None,
+        "warm_setup_s": warm["setup_s"] if warm else None,
+        "warm_exec_stats": warm["exec_stats"] if warm else None,
+        "warm_exec_warm": warm["exec_warm"] if warm else None,
         "verify_s": verify_s,
         "verify_compile_s": verify_compile_s,
         "verify_ok": ok,
@@ -128,10 +237,11 @@ def bench_heterogeneous(args, T: int = 2):
     het_widths = tuple(int(w) for w in args.het_widths.split(","))
     uni = bench_T(T, args.het_uniform_layers, args.batch,
                   args.het_uniform_width, args.q_bits, args.r_bits,
-                  args.repeats, verify=not args.no_verify)
+                  args.repeats, verify=not args.no_verify,
+                  warm_probe=False)
     het = bench_T(T, 0, args.batch, 0, args.q_bits, args.r_bits,
                   args.repeats, verify=not args.no_verify,
-                  widths=het_widths)
+                  widths=het_widths, warm_probe=False)
     p_het = sum(a * b for a, b in zip(het_widths, het_widths[1:]))
     p_uni = args.het_uniform_layers * args.het_uniform_width ** 2
     cell = {
@@ -167,6 +277,17 @@ V1_T8_PER_STEP_BYTES = 494.375
 # loops this phase consumed ~45% of prove, the kernel path keeps it
 # comfortably below a third
 VALIDITY_SHARE_MAX_T8 = 0.35
+
+# warm-start gates (fresh-subprocess probe, executable cache populated):
+# a warm prover must come up in seconds, and the cost must be flat in T
+# — the scan-shaped sumcheck bodies and masked IPA ladder make the
+# executable set depend only on shape buckets, not on depth or T, so
+# T=8 pays (nearly) the same warm overhead as T=1.  The absolute slack
+# absorbs disk/OS noise at toy shapes where the overheads are a few
+# seconds and a 0.3s wobble would otherwise flip the ratio.
+WARM_COMPILE_MAX_S = 5.0
+WARM_T_INVARIANCE_MAX = 1.3
+WARM_T_INVARIANCE_SLACK_S = 0.5
 
 
 def monotonic_prefix(rows, key, t_max=4):
@@ -204,7 +325,14 @@ def main(argv=None):
     ap.add_argument("--phases-out", default=None,
                     help="per-phase prover profile JSON "
                          "(default BENCH_prover_phases.json)")
+    ap.add_argument("--warm-probe", default=None, metavar="JSON",
+                    help=argparse.SUPPRESS)   # internal: subprocess body
+    ap.add_argument("--no-warm-probe", action="store_true",
+                    help="skip the fresh-subprocess warm-start probe")
     args = ap.parse_args(argv)
+    if args.warm_probe is not None:
+        _warm_probe_child(json.loads(args.warm_probe))
+        return None
     if args.smoke:
         # T=8 rides along so CI can gate the serialized per-step size
         # against the recorded v1 baseline (see V1_T8_PER_STEP_BYTES)
@@ -227,7 +355,8 @@ def main(argv=None):
     for T in steps:
         row = bench_T(T, args.layers, args.batch, args.width,
                       args.q_bits, args.r_bits, args.repeats,
-                      verify=not args.no_verify)
+                      verify=not args.no_verify,
+                      warm_probe=not args.no_warm_probe)
         base = rows[0] if rows else row
         row["amortization_vs_T1"] = (row["per_step_s"] / base["per_step_s"]
                                      if base["T"] == 1 else None)
@@ -292,10 +421,37 @@ def main(argv=None):
         assert vshare <= VALIDITY_SHARE_MAX_T8, (
             f"smoke: zkReLU validity prep is {vshare:.0%} of T=8 prove "
             f"time, over the {VALIDITY_SHARE_MAX_T8:.0%} budget")
+        # warm-start gates: a fresh process with the executable cache
+        # populated must (a) never re-trace, (b) come up fast, (c) pay
+        # the same compile overhead at T=8 as at T=1 (flat in T)
+        warm_line = "warm probe skipped"
+        if not args.no_warm_probe:
+            (t1,) = [r for r in rows if r["T"] == 1]
+            for r in rows:
+                es = r["warm_exec_stats"]
+                if r["warm_exec_warm"]:
+                    assert es["misses"] == 0, (
+                        f"smoke: warm-start subprocess at T={r['T']} "
+                        f"re-compiled {es['misses']} programs (expected "
+                        f"0 executable-cache misses): {es}")
+            t8w, t1w = t8["prove_compile_warm_s"], \
+                t1["prove_compile_warm_s"]
+            assert t8w <= WARM_COMPILE_MAX_S, (
+                f"smoke: T=8 warm-start overhead {t8w:.2f}s over the "
+                f"{WARM_COMPILE_MAX_S}s budget")
+            assert t8w <= (WARM_T_INVARIANCE_MAX * t1w
+                           + WARM_T_INVARIANCE_SLACK_S), (
+                f"smoke: warm-start overhead not flat in T: T=8 "
+                f"{t8w:.2f}s vs T=1 {t1w:.2f}s (budget "
+                f"{WARM_T_INVARIANCE_MAX}x + "
+                f"{WARM_T_INVARIANCE_SLACK_S}s)")
+            warm_line = (f"warm start {t8w:.2f}s at T=8 vs {t1w:.2f}s "
+                         f"at T=1, 0 misses")
         print(f"agg_steps: smoke ok (all cells verified; phases account "
               f"for prove time; T=8 per-step {t8['per_step_bytes']:.1f} B "
               f"< v1 baseline {V1_T8_PER_STEP_BYTES} B; validity share "
-              f"{vshare:.0%} <= {VALIDITY_SHARE_MAX_T8:.0%})", flush=True)
+              f"{vshare:.0%} <= {VALIDITY_SHARE_MAX_T8:.0%}; "
+              f"{warm_line})", flush=True)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(result, f, indent=1)

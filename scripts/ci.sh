@@ -20,7 +20,9 @@ python -m pytest -x -q "$@"
 # must account for ~all prove time, and the serialized per-step proof at
 # T=8 must stay STRICTLY smaller than the recorded v1 baseline
 # (0.48 kB/step) — the one-IPA opening's size win is a CI invariant,
-# not just a benchmark number
+# not just a benchmark number.  Also gates the warm start (fresh
+# subprocess, populated executable cache): zero cache misses, under
+# 5s at T=8, and flat in T.
 python benchmarks/agg_steps.py --smoke
 
 # cross-process verify smoke: prove + serialize (proof.bin, vk.bin) in
@@ -83,4 +85,69 @@ assert not verify_bytes(vk, bytes(as_v2), trace=trace), \
 assert "v2" in trace[0] and "no longer supported" in trace[0], \
     f"ci: v2 rejection lacks the migration message: {trace}"
 print("ci: cross-process verify ok (accept + tamper-reject + v2-reject)")
+PY
+
+# warm prover-service gate: the service proves two windows in one
+# process (the second must be steady-state: executables compiled at
+# start, nothing re-traced per window), then a FRESH process with the
+# now-populated executable-cache dir must come up warm — zero cache
+# misses and setup in seconds, not the ~25-30s a full re-trace costs.
+python - "$SMOKE_DIR" <<'PY'
+import sys
+
+from repro.core import execache
+from repro.core.quantfc import QuantConfig, synthetic_sgd_trajectory_widths
+from repro.core.pipeline import build_fcnn_graph
+from repro.launch.serve import ProverService
+
+out = sys.argv[1]
+qc = QuantConfig(q_bits=16, r_bits=4)
+widths = (4, 4, 4)
+service = ProverService(build_fcnn_graph(widths, batch=2), qc, n_steps=2,
+                        out_dir=f"{out}/proofs", verify=True, rng_seed=5)
+service.start(warm=True)
+misses_after_start = execache.stats()["misses"]
+wits = synthetic_sgd_trajectory_widths(4, widths, 2, qc, seed=5)
+for w in wits:
+    service.submit(w)
+service.close()
+assert service.n_proofs == 2, f"ci: {service.n_proofs} proofs, wanted 2"
+dts = [dt for _, _, _, dt in service.proofs]
+s = execache.stats()
+assert s["misses"] == misses_after_start, \
+    f"ci: proving windows re-compiled programs after the warm start: {s}"
+assert dts[1] <= 2.0, \
+    f"ci: second window proved in {dts[1]:.2f}s, not steady-state"
+print(f"ci: warm service ok (windows {dts[0]:.2f}s / {dts[1]:.2f}s, "
+      f"warm-up {service.warm_seconds:.1f}s)")
+PY
+python - "$SMOKE_DIR" <<'PY'
+# fresh process, populated executable cache: a restarted service must
+# start warm — no re-tracing (misses == 0) and setup latency bounded
+import sys
+
+from repro.core.quantfc import QuantConfig, synthetic_sgd_trajectory_widths
+from repro.core.pipeline import build_fcnn_graph
+from repro.launch.serve import ProverService
+
+out = sys.argv[1]
+qc = QuantConfig(q_bits=16, r_bits=4)
+widths = (4, 4, 4)
+service = ProverService(build_fcnn_graph(widths, batch=2), qc, n_steps=2,
+                        out_dir=f"{out}/proofs-restart", verify=True,
+                        rng_seed=5)
+service.start(warm=True)
+assert service.warm_stats is not None and \
+    service.warm_stats["misses"] == 0, \
+    f"ci: restarted service re-traced programs: {service.warm_stats}"
+assert service.warm_seconds <= 20.0, \
+    f"ci: restarted service took {service.warm_seconds:.1f}s to warm " \
+    f"(executable cache not effective)"
+wits = synthetic_sgd_trajectory_widths(2, widths, 2, qc, seed=6)
+for w in wits:
+    service.submit(w)
+service.close()
+assert service.n_proofs == 1, "ci: restarted service produced no proof"
+print(f"ci: warm restart ok ({service.warm_seconds:.1f}s setup, "
+      f"0 executable-cache misses)")
 PY

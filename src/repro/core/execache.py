@@ -1,0 +1,201 @@
+"""AOT executable cache: trace + lower + compile once per (fn, shapes).
+
+The persistent XLA compilation cache (`repro.util.enable_compilation_cache`)
+only skips the *backend compile* — its key is computed from the lowered
+StableHLO module, so a fresh process still pays full jaxpr tracing and
+MLIR lowering for every program in the prover (the dominant cost: the
+pipeline is hundreds of small programs, not one big one).  This module
+removes that cost end to end:
+
+* first call per shape signature: ``jax.jit(fn).lower(*args).compile()``
+  (ahead-of-time), the resulting ``Compiled`` goes into a process-wide
+  registry and is serialized to disk via
+  ``jax.experimental.serialize_executable``;
+* later calls in the same process hit the registry (no dispatch-time
+  cache probing beyond one dict lookup);
+* a FRESH process deserializes the executable directly — no trace, no
+  lower, no XLA compile.
+
+Conventions for wrapped functions: dynamic arguments are positional jax
+arrays, static arguments are keywords (listed in ``static_argnames``).
+The cache key is (name, backend, dynamic shapes/dtypes, statics); the
+proof geometry — graph spec, quantization, aggregation window T — is
+fully encoded in the argument shapes, so `ProvingKey`s for different
+configs can never collide in the cache.  The disk directory is keyed by
+jax/jaxlib version + backend (stale entries from other versions are
+never loaded), and every load failure falls back to a fresh compile.
+
+Counters (`stats()`) make warm starts auditable: a warmed process
+reports ``misses == 0`` — the cross-process "never re-traces" contract
+pinned by tests/test_exec_cache.py.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import pickle
+import threading
+
+_DISK_ENV = "ZKDL_EXEC_CACHE"          # path override; "off"/"0" disables disk
+_MODE_ENV = "ZKDL_EXEC_MODE"           # "off" disables the whole cache
+_SCHEMA = 1                            # bump to invalidate old disk layouts
+
+_lock = threading.RLock()
+_registry: dict = {}
+_stats = {"hits": 0, "misses": 0, "disk_hits": 0, "disk_writes": 0}
+
+
+def enabled() -> bool:
+    return os.environ.get(_MODE_ENV, "on").lower() not in ("off", "0")
+
+
+def stats() -> dict:
+    with _lock:
+        return dict(_stats)
+
+
+def reset_stats() -> None:
+    with _lock:
+        for k in _stats:
+            _stats[k] = 0
+
+
+def clear() -> None:
+    """Drop the in-process registry (disk entries stay)."""
+    with _lock:
+        _registry.clear()
+
+
+def cache_dir() -> str | None:
+    """Disk directory for serialized executables (None = disk disabled)."""
+    d = os.environ.get(_DISK_ENV, "")
+    if d.lower() in ("off", "0", "none"):
+        return None
+    if not d:
+        d = os.path.join(os.path.expanduser("~"), ".cache", "zkdl-exec")
+    import jax
+    import jaxlib
+    sub = (f"{jax.__version__}-{jaxlib.__version__}-"
+           f"{jax.default_backend()}-v{_SCHEMA}")
+    return os.path.join(d, sub)
+
+
+def _argsig(a):
+    return (tuple(a.shape), str(a.dtype))
+
+
+def _key(name: str, args, statics, pos_statics=()):
+    import jax
+    return (name, jax.default_backend(),
+            tuple(sorted(statics.items())), repr(pos_statics),
+            tuple(_argsig(a) for a in args))
+
+
+def _disk_path(key) -> str | None:
+    base = cache_dir()
+    if base is None:
+        return None
+    h = hashlib.sha256(repr(key).encode()).hexdigest()
+    return os.path.join(base, f"{h}.exe.pkl")
+
+
+def _load_or_compile(key, jitted, args, statics):
+    path = _disk_path(key)
+    if path is not None and os.path.exists(path):
+        try:
+            with open(path, "rb") as f:
+                _stored_key, payload, in_tree, out_tree = pickle.load(f)
+            from jax.experimental import serialize_executable as se
+            comp = se.deserialize_and_load(payload, in_tree, out_tree)
+            with _lock:
+                _registry[key] = comp
+                _stats["disk_hits"] += 1
+            return comp
+        except Exception:
+            pass  # stale/corrupt/foreign entry: recompile below
+    # Compile with the XLA persistent cache OFF: an executable that came
+    # out of that cache re-serializes WITHOUT its object-code symbols
+    # (loads fine in-process, "Symbols not found" in any other process).
+    # Only a genuine backend compile yields a portable serialization —
+    # and this cache subsumes the persistent cache for wrapped programs
+    # anyway (it also skips trace + lower, which the XLA cache cannot).
+    # The use-the-cache decision is memoized process-wide on the first
+    # compile (`compilation_cache.is_cache_used`), so flipping the
+    # config flag alone is a no-op: reset the memo around the flip.
+    import jax
+    from jax._src import compilation_cache as _cc
+    prev = jax.config.jax_enable_compilation_cache
+    try:
+        jax.config.update("jax_enable_compilation_cache", False)
+        _cc.reset_cache()
+        comp = jitted.lower(*args, **statics).compile()
+    finally:
+        jax.config.update("jax_enable_compilation_cache", prev)
+        _cc.reset_cache()
+    with _lock:
+        _registry[key] = comp
+        _stats["misses"] += 1
+    if path is not None:
+        try:
+            from jax.experimental import serialize_executable as se
+            payload, in_tree, out_tree = se.serialize(comp)
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            tmp = f"{path}.tmp.{os.getpid()}"
+            with open(tmp, "wb") as f:
+                # the key rides along so diagnostics (and bulk preloads)
+                # can map a file back to its program
+                pickle.dump((repr(key), payload, in_tree, out_tree), f)
+            os.replace(tmp, path)
+            with _lock:
+                _stats["disk_writes"] += 1
+        except Exception:
+            pass  # serialization unsupported on this backend: memory-only
+    return comp
+
+
+def wrap(name: str, fn, static_argnames=(), static_argnums=()):
+    """Wrap ``fn`` (pure traced jax code) in the executable cache.
+
+    Returns a callable with the convention: dynamic args positional,
+    statics keyword-only — except positions in ``static_argnums``, which
+    carry hashable statics with a deterministic ``repr`` (e.g. the
+    frozen-dataclass ``FieldSpec``: the field primitives take the spec
+    positionally at hundreds of call sites).  With the cache disabled
+    (ZKDL_EXEC_MODE=off) or a non-array dynamic argument, falls back to
+    plain ``jax.jit``.
+    """
+    import jax
+    nums = tuple(static_argnums)
+    jitted = jax.jit(fn, static_argnames=tuple(static_argnames),
+                     static_argnums=nums or None)
+
+    def call(*args, **statics):
+        if nums:
+            pos_statics = tuple(args[i] for i in nums)
+            dyn = tuple(a for i, a in enumerate(args) if i not in nums)
+        else:
+            pos_statics, dyn = (), args
+        # nested use (this body traced inside another wrapped/jitted
+        # program) must inline: a Compiled can't consume tracers
+        if (not enabled()
+                or any(isinstance(a, jax.core.Tracer) for a in dyn)
+                or any(not hasattr(a, "shape") for a in dyn)):
+            return jitted(*args, **statics)
+        key = _key(name, dyn, statics, pos_statics)
+        with _lock:
+            comp = _registry.get(key)
+        if comp is not None:
+            with _lock:
+                _stats["hits"] += 1
+        else:
+            comp = _load_or_compile(key, jitted, args, statics)
+        try:
+            return comp(*dyn)
+        except TypeError:
+            # aval mismatch the (shape, dtype) key can't see (weak types,
+            # committed devices): correctness first, plain jit fallback
+            return jitted(*args, **statics)
+
+    call.__name__ = name
+    call._jitted = jitted       # escape hatch (tests, parity oracles)
+    return call

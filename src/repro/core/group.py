@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import execache
 from repro.field import (
     FP, FQ, GROUP_GEN, mont_mul, from_mont, encode_ints, int_to_limbs,
     limbs_to_ints, hash_to_int, pow_const,
@@ -76,7 +77,6 @@ def g_pow_int(base, e: int):
     return g_pow(base[None], exps)[0]
 
 
-@functools.partial(jax.jit, static_argnames=("nbits",))
 def g_pow(bases, exps_std, nbits: int = 61):
     """Elementwise bases^exps. exps in standard (non-Montgomery) limb form.
 
@@ -95,6 +95,9 @@ def g_pow(bases, exps_std, nbits: int = 61):
 
     (result, _), _ = jax.lax.scan(step, (result, bases), jnp.arange(nbits, dtype=jnp.uint32))
     return result
+
+
+g_pow = execache.wrap("g_pow", g_pow, static_argnames=("nbits",))
 
 
 def _seg_combine(x, y):
@@ -215,12 +218,14 @@ def _msm_core(points, exps_std, nwin: int, window: int = WINDOW):
     return total
 
 
-@functools.partial(jax.jit, static_argnames=("nwin", "window"))
 def _msm_impl(points, exps_std, nwin: int, window: int = WINDOW):
     return _msm_core(points, exps_std, nwin, window)
 
 
-@functools.partial(jax.jit, static_argnames=("nwin", "window"))
+_msm_impl = execache.wrap("msm", _msm_impl,
+                          static_argnames=("nwin", "window"))
+
+
 def _msm_many_impl(points, exps_std, nwin: int, window: int):
     """R independent MSMs over a shared window schedule, ONE executable.
 
@@ -229,6 +234,10 @@ def _msm_many_impl(points, exps_std, nwin: int, window: int):
     R reductions run inside a single XLA program instead of R dispatches."""
     return jax.vmap(lambda p, e: _msm_core(p, e, nwin, window))(
         points, exps_std)
+
+
+_msm_many_impl = execache.wrap("msm_many", _msm_many_impl,
+                               static_argnames=("nwin", "window"))
 
 
 def _pad4(n: int) -> int:
@@ -260,7 +269,7 @@ def msm(points, exps_std, nbits: int = 61, window: int | None = None):
     if window is None:
         window = best_window(m, nbits)
     nwin = (nbits + window - 1) // window
-    return _msm_impl(points, exps_std, nwin, window)
+    return _msm_impl(points, exps_std, nwin=nwin, window=window)
 
 
 def msm_many(points, exps_std, nbits: int = 61, window: int | None = None):
@@ -291,7 +300,7 @@ def msm_many(points, exps_std, nbits: int = 61, window: int | None = None):
     if window is None:
         window = best_window(m, nbits)
     nwin = (nbits + window - 1) // window
-    return _msm_many_impl(points, exps_std, nwin, window)
+    return _msm_many_impl(points, exps_std, nwin=nwin, window=window)
 
 
 def msm_field(points, scalars_mont, nbits: int = 61):
@@ -299,7 +308,6 @@ def msm_field(points, scalars_mont, nbits: int = 61):
     return msm(points, from_mont(FQ, scalars_mont), nbits)
 
 
-@functools.partial(jax.jit, static_argnames=("nbits",))
 def pow_table(bases, nbits: int = 61):
     """Precomputed squaring chains: (n,4) bases -> (nbits,n,4) with
     table[j] = bases^{2^j}.  For a FIXED basis (commitment generators),
@@ -312,7 +320,10 @@ def pow_table(bases, nbits: int = 61):
     return tab
 
 
-@functools.partial(jax.jit, static_argnames=("nbits",))
+pow_table = execache.wrap("pow_table", pow_table,
+                          static_argnames=("nbits",))
+
+
 def g_pow_table(table, exps_std, nbits: int = 61):
     """Elementwise bases^exps via a `pow_table`: one conditional multiply
     per bit (half the work of `g_pow`'s square-and-multiply).  Exponents
@@ -331,7 +342,10 @@ def g_pow_table(table, exps_std, nbits: int = 61):
     return result
 
 
-@jax.jit
+g_pow_table = execache.wrap("g_pow_table", g_pow_table,
+                            static_argnames=("nbits",))
+
+
 def tree_prod(elems):
     """Product of all group elements in (n,4)."""
     one = identity()
@@ -340,6 +354,9 @@ def tree_prod(elems):
             elems = jnp.concatenate([elems, one[None]], axis=0)
         elems = g_mul(elems[0::2], elems[1::2])
     return elems[0]
+
+
+tree_prod = execache.wrap("tree_prod", tree_prod)
 
 
 def msm_bits(points, bits):

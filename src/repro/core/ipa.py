@@ -25,6 +25,8 @@ included), so transcripts do not change.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import os
 from typing import List, Optional
 
 import jax
@@ -32,12 +34,46 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.field import FQ, FP, add, mont_mul, from_mont, decode, int_to_limbs
-from repro.core import group
+from repro.core import execache, group
 from repro.core import mle
 from repro.core.mle import enc, fdot
 from repro.core.transcript import Transcript
 
 Q = FQ.modulus
+
+# ---------------------------------------------------------------------------
+# Round execution mode.
+#
+# "ladder" (default, single-statement proofs): rounds run on a small
+# fixed set of buffer sizes (`_ladder_size`) with the live halves
+# gathered/masked inside the round body, so log2(n) rounds compile O(1)
+# distinct programs instead of one pair per halving shape.  "unrolled"
+# keeps the legacy exact-shape schedule as the bit-identity parity
+# oracle; multi-statement lockstep proofs always use it.
+# ---------------------------------------------------------------------------
+
+IPA_MODES = ("ladder", "unrolled")
+_IPA_MODE_ENV = "ZKDL_IPA_MODE"
+_ipa_mode_override: str | None = None
+
+
+def round_mode() -> str:
+    """Active IPA round mode: override > $ZKDL_IPA_MODE > "ladder"."""
+    name = _ipa_mode_override or os.environ.get(_IPA_MODE_ENV,
+                                                "ladder").lower()
+    if name not in IPA_MODES:
+        raise ValueError(f"unknown ipa mode {name!r}; "
+                         f"choose from {IPA_MODES}")
+    return name
+
+
+def set_round_mode(name: str | None) -> None:
+    """Process-wide override (None restores the env/default choice)."""
+    global _ipa_mode_override
+    if name is not None and name not in IPA_MODES:
+        raise ValueError(f"unknown ipa mode {name!r}; "
+                         f"choose from {IPA_MODES}")
+    _ipa_mode_override = name
 
 
 def _sub(prof, name: str):
@@ -118,7 +154,6 @@ def _lr_extras(up, h, c_l, c_r, rho_l, rho_r):
     return group.msm_many(pts, exps)
 
 
-@jax.jit
 def _open_round_lr(gens, a, b, up, h, rho_l, rho_r):
     """L/R of one `open` round fused into one executable:
 
@@ -134,7 +169,9 @@ def _open_round_lr(gens, a, b, up, h, rho_l, rho_r):
     return group.g_mul(main, _lr_extras(up, h, c_l, c_r, rho_l, rho_r))
 
 
-@jax.jit
+_open_round_lr = execache.wrap("ipa_open_round_lr", _open_round_lr)
+
+
 def _pair_round_lr(gg, hh, a, b, up, h_blind, rho_l, rho_r,
                    gam_g_m, gam_h_m):
     """L/R of one `pair` round: both half-MSMs per side fused into one row.
@@ -156,13 +193,15 @@ def _pair_round_lr(gg, hh, a, b, up, h_blind, rho_l, rho_r,
     return group.g_mul(main, _lr_extras(up, h_blind, c_l, c_r, rho_l, rho_r))
 
 
+_pair_round_lr = execache.wrap("ipa_pair_round_lr", _pair_round_lr)
+
+
 def _fold_halves(vec, lo_m, hi_m):
     n2 = vec.shape[0] // 2
     return add(FQ, mont_mul(FQ, vec[:n2], lo_m[None]),
                mont_mul(FQ, vec[n2:], hi_m[None]))
 
 
-@jax.jit
 def _open_fold(a, b, gens, al_m, ali_m, al_std, ali_std):
     """a' = al*a_L + al^-1*a_R, b' = al^-1*b_L + al*b_R, gens' likewise.
 
@@ -177,6 +216,9 @@ def _open_fold(a, b, gens, al_m, ali_m, al_std, ali_std):
     powed = group.g_pow(gens, exps)
     g2 = group.g_mul(powed[:n2], powed[n2:])
     return a2, b2, g2
+
+
+_open_fold = execache.wrap("ipa_open_fold", _open_fold)
 
 
 def _open_fold_dispatch(a, b, gens, al_m, ali_m, al_std, ali_std):
@@ -194,7 +236,6 @@ def _open_fold_dispatch(a, b, gens, al_m, ali_m, al_std, ali_std):
     return _open_fold(a, b, gens, al_m, ali_m, al_std, ali_std)
 
 
-@jax.jit
 def _pair_round_lr_w(gg, h_base, w, a, b, up, h_blind, rho_l, rho_r):
     """First pair round with the H basis held as h_base^{w} (the zkReLU
     H' = H^{1/e} basis, never materialized): the weight rides in the
@@ -214,7 +255,9 @@ def _pair_round_lr_w(gg, h_base, w, a, b, up, h_blind, rho_l, rho_r):
     return group.g_mul(main, _lr_extras(up, h_blind, c_l, c_r, rho_l, rho_r))
 
 
-@jax.jit
+_pair_round_lr_w = execache.wrap("ipa_pair_round_lr_w", _pair_round_lr_w)
+
+
 def _pair_fold_first(a, b, g_table, h_table, w, al_m, ali_m,
                      al2_std, ali2_m):
     """First pair fold over FIXED bases via precomputed squaring tables
@@ -240,7 +283,9 @@ def _pair_fold_first(a, b, g_table, h_table, w, al_m, ali_m,
     return a2, b2, gg2, hh2
 
 
-@jax.jit
+_pair_fold_first = execache.wrap("ipa_pair_fold_first", _pair_fold_first)
+
+
 def _pair_fold(a, b, gg, hh, al_m, ali_m, al2_std, ali2_std):
     """Pair fold with the OUTER generator exponent deferred.
 
@@ -261,6 +306,178 @@ def _pair_fold(a, b, gg, hh, al_m, ali_m, al2_std, ali2_std):
     gg2 = group.g_mul(gg[:n2], powed[:n2])
     hh2 = group.g_mul(hh[:n2], powed[n2:])
     return a2, b2, gg2, hh2
+
+
+_pair_fold = execache.wrap("ipa_pair_fold", _pair_fold)
+
+
+# ---------------------------------------------------------------------------
+# Ladder rounds: masked fixed-size bodies.
+#
+# A pair statement of width n runs log2(n) rounds over halving shapes;
+# unrolled, that is 2*log2(n) distinct programs to trace and compile.
+# The ladder instead buckets the rounds onto O(1) buffer sizes
+# (`_ladder_size`) and runs ONE masked body per size: the live vectors
+# occupy a prefix of length n <= S, the live hi half is gathered with a
+# host-built index vector, and dead rows are masked to zero field
+# elements / zero MSM exponents.  Zero exponents contribute exactly the
+# identity (Pippenger substitutes the identity point for zero digits:
+# `group._msm_core`) and zero field terms add nothing to the claim dots,
+# so every emitted L/R — and therefore the transcript — is bit-identical
+# to the exact-shape schedule (tests/test_fold_dispatch.py pins it).
+# ---------------------------------------------------------------------------
+
+def _ladder_size(n: int, n0: int) -> int:
+    """Round-body buffer size for live length n of a statement that
+    started at n0: the five widest rounds (where masked tail rows would
+    cost real MSM work) run exact, the rest on a power-of-four descent
+    down to an absolute floor of 32 rows.  A
+    handful of distinct compiled bodies per statement width (and the
+    executable cache makes each a once-per-machine cost); the masked
+    tail a round carries is at most 3x its live rows, so the ladder's
+    steady-state work stays within a constant of the exact schedule —
+    an earlier clamp at n0/16 instead ran every narrow round on a
+    n0/16-row buffer, which at merged-key widths made the masked MSMs
+    dominate the whole opening phase."""
+    if 16 * n >= n0:
+        return n
+    s = n0 // 16
+    while s // 4 >= n and s // 4 >= 32:
+        s //= 4
+    return s
+
+
+@functools.lru_cache(maxsize=None)
+def _round_mask(n: int, S: int):
+    """Gather index + live mask for a masked round: buffer size S, live
+    prefix n.  idx_hi[i] = n/2 + i for live rows (dead gathers clamp to
+    slot 0 — their exponents are masked to zero, so the gathered value
+    never matters)."""
+    h = S // 2
+    idx = np.zeros(h, np.int32)
+    idx[:n // 2] = n // 2 + np.arange(n // 2, dtype=np.int32)
+    mask = np.zeros((h, 1), np.uint32)
+    mask[:n // 2] = 1
+    return jnp.asarray(idx), jnp.asarray(mask)
+
+
+def _pair_round_lr_m(gg, hh, a, b, up, h_blind, rho_l, rho_r,
+                     gam_g_m, gam_h_m, idx_hi, mask):
+    """Masked fixed-size `_pair_round_lr` (same deferred gam_g/gam_h
+    convention): exact-size rounds pass a degenerate all-live mask, so
+    one compiled body serves every round bucketed to this size."""
+    h = a.shape[0] // 2
+    sel = mask.astype(bool)
+    a_lo = jnp.where(sel, a[:h], 0)
+    b_lo = jnp.where(sel, b[:h], 0)
+    a_hi = jnp.where(sel, a[idx_hi], 0)
+    b_hi = jnp.where(sel, b[idx_hi], 0)
+    c_l = from_mont(FQ, fdot(a_lo, b_hi))
+    c_r = from_mont(FQ, fdot(a_hi, b_lo))
+    al_std = from_mont(FQ, mont_mul(FQ, a_lo, gam_g_m[None]))
+    ah_std = from_mont(FQ, mont_mul(FQ, a_hi, gam_g_m[None]))
+    bl_std = from_mont(FQ, mont_mul(FQ, b_lo, gam_h_m[None]))
+    bh_std = from_mont(FQ, mont_mul(FQ, b_hi, gam_h_m[None]))
+    main = group.msm_many(
+        jnp.stack([jnp.concatenate([gg[idx_hi], hh[:h]]),
+                   jnp.concatenate([gg[:h], hh[idx_hi]])]),
+        jnp.stack([jnp.concatenate([al_std, bh_std]),
+                   jnp.concatenate([ah_std, bl_std])]))
+    return group.g_mul(main, _lr_extras(up, h_blind, c_l, c_r, rho_l, rho_r))
+
+
+_pair_round_lr_m = execache.wrap("ipa_pair_round_lr_m", _pair_round_lr_m)
+
+
+def _pair_fold_m(a, b, gg, hh, al_m, ali_m, al2_std, ali2_std,
+                 idx_hi, mask):
+    """Masked fixed-size `_pair_fold`: live outputs land in the prefix
+    of the halved buffer; dead scalars fold to zero and dead generators
+    to the identity, keeping the buffer invariants for later rounds."""
+    h = a.shape[0] // 2
+    sel = mask.astype(bool)
+    a2 = jnp.where(sel, add(FQ, mont_mul(FQ, a[:h], al_m[None]),
+                            mont_mul(FQ, a[idx_hi], ali_m[None])), 0)
+    b2 = jnp.where(sel, add(FQ, mont_mul(FQ, b[:h], ali_m[None]),
+                            mont_mul(FQ, b[idx_hi], al_m[None])), 0)
+    exps = jnp.concatenate([jnp.broadcast_to(al2_std, (h, 4)),
+                            jnp.broadcast_to(ali2_std, (h, 4))])
+    powed = group.g_pow(jnp.concatenate([gg[idx_hi], hh[idx_hi]]), exps)
+    one = group.identity()
+    gg2 = jnp.where(sel, group.g_mul(gg[:h], powed[:h]), one[None])
+    hh2 = jnp.where(sel, group.g_mul(hh[:h], powed[h:]), one[None])
+    return a2, b2, gg2, hh2
+
+
+_pair_fold_m = execache.wrap("ipa_pair_fold_m", _pair_fold_m)
+
+
+def _resize_state(st, S: int) -> None:
+    """Move a ladder statement's buffers to size S (slice down, or grow
+    with neutral elements: zero scalars, identity generators)."""
+    cur = st["a"].shape[0]
+    if cur == S:
+        return
+    if cur > S:
+        for k in ("a", "b", "gg", "hh"):
+            st[k] = st[k][:S]
+        return
+    zero = jnp.zeros((S - cur, 4), jnp.uint32)
+    onep = jnp.broadcast_to(group.identity(),
+                            (S - cur, 4)).astype(jnp.uint32)
+    st["a"] = jnp.concatenate([st["a"], zero])
+    st["b"] = jnp.concatenate([st["b"], zero])
+    st["gg"] = jnp.concatenate([st["gg"], onep])
+    st["hh"] = jnp.concatenate([st["hh"], onep])
+
+
+def _pair_rounds_ladder(st, transcript: Transcript,
+                        rng: np.random.Generator) -> None:
+    """All halving rounds of ONE pair statement on the size ladder.
+
+    Draw order, transcript schedule and emitted L/R values are
+    bit-identical to the single-statement lockstep path — only the
+    compiled-program schedule differs."""
+    n0 = st["n"]
+    while st["n"] > 1:
+        n = st["n"]
+        rho_l = int(rng.integers(0, Q, dtype=np.uint64)) % Q
+        rho_r = int(rng.integers(0, Q, dtype=np.uint64)) % Q
+        if st["accel"] is not None:
+            _, h_base, _, w = st["accel"]
+            lr = _pair_round_lr_w(st["gg"], h_base, w, st["a"], st["b"],
+                                  st["up"], st["hb"],
+                                  _exp1(rho_l), _exp1(rho_r))
+        else:
+            idx_hi, mask = _round_mask(n, st["a"].shape[0])
+            lr = _pair_round_lr_m(st["gg"], st["hh"], st["a"], st["b"],
+                                  st["up"], st["hb"], _exp1(rho_l),
+                                  _exp1(rho_r), enc(st["gam_g"]),
+                                  enc(st["gam_h"]), idx_hi, mask)
+        li, ri = group.decode_group_many(lr)
+        st["ls"].append(li)
+        st["rs"].append(ri)
+        transcript.absorb_ints(b"ipa2/lr", [li, ri])
+        al = transcript.challenge_int(b"ipa2/alpha", Q)
+        ali = pow(al, Q - 2, Q)
+        al2, ali2 = al * al % Q, ali * ali % Q
+        if st["accel"] is not None:
+            g_table, _, h_table, w = st["accel"]
+            st["a"], st["b"], st["gg"], st["hh"] = _pair_fold_first(
+                st["a"], st["b"], g_table, h_table, w, enc(al),
+                enc(ali), _exp1(al2), enc(ali2))
+            st["accel"] = None
+        else:
+            idx_hi, mask = _round_mask(n, st["a"].shape[0])
+            st["a"], st["b"], st["gg"], st["hh"] = _pair_fold_m(
+                st["a"], st["b"], st["gg"], st["hh"], enc(al), enc(ali),
+                _exp1(al2), _exp1(ali2), idx_hi, mask)
+        st["gam_g"] = st["gam_g"] * ali % Q
+        st["gam_h"] = st["gam_h"] * al % Q
+        st["rho"] = (al2 * rho_l + st["rho"] + ali2 * rho_r) % Q
+        st["n"] = n // 2
+        if st["n"] > 1:
+            _resize_state(st, _ladder_size(st["n"], n0))
 
 
 # ---------------------------------------------------------------------------
@@ -395,7 +612,13 @@ def pair_prove_many(stmts, transcript: Transcript,
                        # gg^{gam_g} / hh^{gam_h} (see `_pair_fold`)
                        "gam_g": 1, "gam_h": 1})
 
+    # single-statement proofs (the aggregated pipeline's merged opening)
+    # run the masked size-ladder rounds: O(1) compiled bodies instead of
+    # 2 per halving shape, bit-identical transcripts (see above)
+    ladder = len(states) == 1 and round_mode() == "ladder"
     with _sub(prof, "ipa-rounds"):
+        if ladder:
+            _pair_rounds_ladder(states[0], transcript, rng)
         while any(st["n"] > 1 for st in states):
             active = [st for st in states if st["n"] > 1]
             lrs, blind_draws = [], []

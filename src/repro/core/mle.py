@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.field import FQ, add, sub, mont_mul, encode_int, encode_ints
+from repro.core import execache
 
 Q = FQ.modulus
 
@@ -65,11 +66,13 @@ def enc_vec(xs):
     return jnp.asarray(encode_ints(FQ, np.array([int(x) for x in xs], dtype=object)))
 
 
-@functools.partial(jax.jit, static_argnames=())
 def _fold_pair(table, r):
     even, odd = table[0::2], table[1::2]
     diff = sub(FQ, odd, even)
     return add(FQ, even, mont_mul(FQ, diff, r[None]))
+
+
+_fold_pair = execache.wrap("mle_fold_pair", _fold_pair)
 
 
 def fold(table, r_limbs):
@@ -99,7 +102,6 @@ def eval_mle(table, point_ints):
     return table[0]
 
 
-@jax.jit
 def _extend_expand(e, u):
     # new coordinate occupies the HIGH bit so that coordinate j of the point
     # stays aligned with bit j of the flat index (little-endian convention).
@@ -107,6 +109,9 @@ def _extend_expand(e, u):
     lo = mont_mul(FQ, e, sub(FQ, one[None], u[None]))
     hi = mont_mul(FQ, e, u[None])
     return jnp.concatenate([lo, hi], axis=0)
+
+
+_extend_expand = execache.wrap("mle_extend_expand", _extend_expand)
 
 
 def expand_point(point_ints):
@@ -117,11 +122,13 @@ def expand_point(point_ints):
     return e
 
 
-@jax.jit
 def _sum_step(table):
     if table.shape[0] % 2 == 1:
         table = jnp.concatenate([table, jnp.zeros((1, 4), jnp.uint32)], axis=0)
     return add(FQ, table[0::2], table[1::2])
+
+
+_sum_step = execache.wrap("mle_sum_step", _sum_step)
 
 
 def fsum(table):
@@ -136,7 +143,6 @@ def fdot(a, b):
     return fsum(mont_mul(FQ, a, b))
 
 
-@jax.jit
 def weighted_sum(tables, coefs):
     """sum_k coefs[k] * tables[k] for (k,n,4) tables and (k,4) coefs.
 
@@ -153,7 +159,11 @@ def weighted_sum(tables, coefs):
     return acc[0]
 
 
-_fdot_many_impl = jax.jit(jax.vmap(fdot, in_axes=(None, 0)))
+weighted_sum = execache.wrap("mle_weighted_sum", weighted_sum)
+
+
+_fdot_many_impl = execache.wrap(
+    "mle_fdot_many", jax.vmap(fdot, in_axes=(None, 0)))
 
 
 def fdot_many(table, bases):

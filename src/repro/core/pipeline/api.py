@@ -36,7 +36,14 @@ from repro.core.pipeline.graph import LayerGraph
 
 @dataclasses.dataclass(frozen=True)
 class ProvingKey:
-    """Prover-side setup artifact: config + full generator tables."""
+    """Prover-side setup artifact: config + full generator tables.
+
+    The compiled executables behind a key are cached process-wide AND
+    on disk (`repro.core.execache`), keyed by the argument shapes every
+    program sees — which fully encode (graph_spec, quant, T, backend).
+    `warm()` populates that cache ahead of time; `exec_stats()` reports
+    hit/miss/disk counters, so "a second ProofSession never re-traces"
+    is an observable property, not a hope."""
     keys: PipelineKeys
 
     @property
@@ -46,6 +53,41 @@ class ProvingKey:
     @property
     def graph(self) -> LayerGraph:
         return self.keys.cfg.graph
+
+    def warm(self, seed: int = 0) -> dict:
+        """AOT-compile every prover executable for this key's geometry.
+
+        Proves one throwaway synthetic window end to end (program
+        shapes — not values — determine what compiles, and the
+        executable cache keys on shapes), serializing each executable
+        to the disk cache as it builds.  Returns the executable-cache
+        stats delta; after a warm (this process or a fresh one sharing
+        the disk cache) a `ProofSession(pk).prove()` re-traces nothing.
+        """
+        import numpy as np
+
+        from repro.core import execache
+        from repro.core.quantfc import synthetic_sgd_trajectory_widths
+        from repro.core.pipeline.graph import graph_skips, graph_widths
+        from repro.core.pipeline.session import ProofSession
+
+        before = execache.stats()
+        cfg = self.cfg
+        quant = QuantConfig(q_bits=cfg.q_bits, r_bits=cfg.r_bits)
+        wits = synthetic_sgd_trajectory_widths(
+            cfg.n_steps, graph_widths(cfg.graph), cfg.batch, quant,
+            seed=seed, skips=graph_skips(cfg.graph))
+        session = ProofSession(self, np.random.default_rng(seed))
+        for wit in wits:
+            session.add_step(wit)
+        proof = session.prove()
+        assert session.verify(proof), "warm-up proof rejected"
+        after = execache.stats()
+        return {k: after[k] - before[k] for k in after}
+
+    def exec_stats(self) -> dict:
+        from repro.core import execache
+        return execache.stats()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,7 +118,8 @@ class VerifyingKey:
 
 
 def compile(graph: LayerGraph, quant: Optional[QuantConfig] = None,
-            n_steps: int = 1) -> Tuple[ProvingKey, VerifyingKey]:
+            n_steps: int = 1,
+            warm: bool = False) -> Tuple[ProvingKey, VerifyingKey]:
     """One-time setup for a proof graph: freeze the bucket/slot layout
     and derive the commitment generators.
 
@@ -86,7 +129,13 @@ def compile(graph: LayerGraph, quant: Optional[QuantConfig] = None,
     are free parameters.  Returns ``(ProvingKey, VerifyingKey)``; both
     wrap the same deterministic generator derivation, so a vk
     reconstructed from bytes in another process verifies proofs made
-    with this pk."""
+    with this pk.
+
+    ``warm=True`` additionally AOT-compiles every prover executable for
+    this geometry (one throwaway synthetic window through the full
+    prover; see `ProvingKey.warm`), so the first real `prove()` pays
+    zero trace/compile time — and, via the serialized-executable disk
+    cache, neither does any later process for the same config."""
     # setup is the natural choke point every prover/verifier process
     # passes through: enabling the persistent XLA compilation cache here
     # (idempotent config flips) turns the ~tens-of-seconds first-prove
@@ -97,4 +146,7 @@ def compile(graph: LayerGraph, quant: Optional[QuantConfig] = None,
     cfg = PipelineConfig.from_graph(graph, q_bits=quant.q_bits,
                                     r_bits=quant.r_bits, n_steps=n_steps)
     keys = make_keys(cfg)
-    return ProvingKey(keys=keys), VerifyingKey(cfg=cfg)
+    pk = ProvingKey(keys=keys)
+    if warm:
+        pk.warm()
+    return pk, VerifyingKey(cfg=cfg)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.field import FQ, add, sub, mont_mul, encode_i64, decode
+from repro.core import execache
 from repro.core.mle import enc, enc_vec
 
 Q_MOD = FQ.modulus
@@ -56,10 +57,12 @@ def kron_many(his, lo) -> jnp.ndarray:
     return _kron_many(his, lo)
 
 
-@jax.jit
 def _kron_many(his, lo):
     out = mont_mul(FQ, his[:, :, None, :], lo[None, None, :, :])
     return out.reshape(his.shape[0], -1, 4)
+
+
+_kron_many = execache.wrap("tab_kron_many", _kron_many)
 
 
 def fix_rows(table: jnp.ndarray, point: List[int]) -> jnp.ndarray:

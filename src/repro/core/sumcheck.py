@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import List, Sequence, Tuple
 
 import jax
@@ -26,11 +27,46 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.field import FQ, add, sub, mont_mul, decode
-from repro.core import mle
+from repro.core import execache, mle
 from repro.core.mle import enc, enc_vec, fsum, hadd, hmul, lagrange_eval
 from repro.core.transcript import Transcript
 
 Q = FQ.modulus
+
+# ---------------------------------------------------------------------------
+# Round execution mode.
+#
+# "scan" (default): every round runs on a FIXED (K, n0, 4) buffer — the
+# fold writes the halved table back into the zeroed front half, so all
+# ``rounds`` iterations reuse the SAME two compiled programs (one
+# round-message body, one fold body) instead of tracing a fresh pair per
+# shrinking shape.  Compile cost per bucket: O(1) in depth/T.  "unrolled"
+# keeps the legacy shrinking-shape path as the bit-identity parity
+# oracle (tests/test_fold_dispatch.py).
+# ---------------------------------------------------------------------------
+
+SCAN_MODES = ("scan", "unrolled")
+_SCAN_MODE_ENV = "ZKDL_SUMCHECK_MODE"
+_scan_mode_override: str | None = None
+
+
+def scan_mode() -> str:
+    """Active round mode: override > $ZKDL_SUMCHECK_MODE > "scan"."""
+    name = _scan_mode_override or os.environ.get(_SCAN_MODE_ENV,
+                                                 "scan").lower()
+    if name not in SCAN_MODES:
+        raise ValueError(f"unknown sumcheck mode {name!r}; "
+                         f"choose from {SCAN_MODES}")
+    return name
+
+
+def set_scan_mode(name: str | None) -> None:
+    """Process-wide override (None restores the env/default choice)."""
+    global _scan_mode_override
+    if name is not None and name not in SCAN_MODES:
+        raise ValueError(f"unknown sumcheck mode {name!r}; "
+                         f"choose from {SCAN_MODES}")
+    _scan_mode_override = name
 
 
 @dataclasses.dataclass
@@ -47,8 +83,7 @@ def _decode_scalars(x) -> List[int]:
     return [int(v) for v in decode(FQ, x)]
 
 
-@functools.partial(jax.jit, static_argnames=("degree",))
-def _round_msgs(stack, idx, coef_limbs, degree: int):
+def _round_msgs_impl(stack, idx, coef_limbs, degree: int):
     """All degree+1 round-poly evaluations for a (K, n, 4) table stack in
     ONE executable: returns (degree+1, 4) sums.
 
@@ -57,7 +92,12 @@ def _round_msgs(stack, idx, coef_limbs, degree: int):
     the eval stack (multiplying a canonical element by the Montgomery
     unit is exact identity, so padded factors change nothing).  The
     per-product work is a gather + a degree-step vectorized multiply,
-    keeping the XLA graph small for any product count."""
+    keeping the XLA graph small for any product count.
+
+    Zero-padded tail columns (scan mode keeps dead halves as zeros) are
+    exactly neutral: every product's first factor is a real table — zero
+    on dead columns — and mont_mul(0, x) = 0, so padded terms add
+    nothing to any message."""
     evens, odds = stack[:, 0::2], stack[:, 1::2]
     diffs = sub(FQ, odds, evens)
     one_row = jnp.broadcast_to(enc(1), (1,) + evens.shape[1:]).astype(jnp.uint32)
@@ -81,11 +121,51 @@ def _round_msgs(stack, idx, coef_limbs, degree: int):
     return jnp.stack(msgs)
 
 
+_round_msgs = execache.wrap("sc_round_msgs", _round_msgs_impl,
+                            static_argnames=("degree",))
+
+
 @jax.jit
 def _fold_stack(stack, r_l):
     """Fix variable 0 of every table in the (K, n, 4) stack at r."""
     evens, odds = stack[:, 0::2], stack[:, 1::2]
     return add(FQ, evens, mont_mul(FQ, sub(FQ, odds, evens), r_l[None, None]))
+
+
+def _fold_stack_fixed_impl(stack, r_l):
+    """Shape-preserving fold: halve every table, zero-fill the freed
+    tail.  Live entries occupy a prefix (cols 0..live-1); the even/odd
+    split maps that prefix onto the folded prefix and the zero tail onto
+    zeros (sub/mul/add of zeros is exactly zero), so iterating this ONE
+    program ``rounds`` times is value-identical to the shrinking-shape
+    unrolled path — the final value still lands at stack[:, 0]."""
+    evens, odds = stack[:, 0::2], stack[:, 1::2]
+    folded = add(FQ, evens, mont_mul(FQ, sub(FQ, odds, evens),
+                                     r_l[None, None]))
+    return jnp.concatenate([folded, jnp.zeros_like(folded)], axis=1)
+
+
+_fold_stack_fixed = execache.wrap("sc_fold_fixed", _fold_stack_fixed_impl)
+
+
+def _scan_fold_fixed_impl(stack, r_l):
+    """The fixed-shape fold with the Pallas `kernels/sumcheck_fold`
+    kernel as the per-table body, scanned over the stacked instance axis
+    K — one compiled body regardless of how many tables the bucket
+    stacks (the levanter scan-over-layers idiom applied to the proof
+    tables)."""
+    from repro.kernels.sumcheck_fold import fold as kernel_fold
+
+    def body(carry, table):
+        folded = kernel_fold(table, r_l)
+        return carry, jnp.concatenate([folded, jnp.zeros_like(folded)])
+
+    _, out = jax.lax.scan(body, None, stack)
+    return out
+
+
+_scan_fold_fixed = execache.wrap("sc_fold_fixed_pallas",
+                                 _scan_fold_fixed_impl)
 
 
 def sumcheck_prove(
@@ -124,16 +204,24 @@ def sumcheck_prove(
     messages: List[List[int]] = []
     point: List[int] = []
     pallas = mle.fold_backend() == "pallas"
+    fixed = scan_mode() == "scan"
     for _ in range(rounds):
-        msg = _decode_scalars(_round_msgs(stack, idx, coef_limbs, degree))
+        msg = _decode_scalars(_round_msgs(stack, idx, coef_limbs,
+                                          degree=degree))
         messages.append(msg)
         transcript.absorb_ints(label + b"/round", msg)
         r = transcript.challenge_int(label + b"/r", Q)
         point.append(r)
         r_l = enc(r)
-        if pallas:
-            # fused fold kernel: one VMEM pass per table instead of
-            # materializing diff and diff*r (see kernels/sumcheck_fold)
+        if fixed:
+            # fixed-shape rounds: the buffer never shrinks, so all
+            # log2(n) folds (and all round-message evaluations above)
+            # share ONE compiled program each
+            stack = (_scan_fold_fixed(stack, r_l) if pallas
+                     else _fold_stack_fixed(stack, r_l))
+        elif pallas:
+            # legacy unrolled path, fused fold kernel: one VMEM pass per
+            # table instead of materializing diff and diff*r
             stack = jnp.stack([mle.fold(stack[k], r_l)
                                for k in range(stack.shape[0])])
         else:

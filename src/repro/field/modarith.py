@@ -134,7 +134,6 @@ def _split(t):
     return t & WMASK, t >> WORD
 
 
-@functools.partial(jax.jit, static_argnames=("spec",))
 def mont_mul(spec: FieldSpec, a, b):
     """CIOS Montgomery multiplication: returns a*b*2^-64 mod m (canonical).
 
@@ -185,7 +184,6 @@ def _cond_sub_mod(spec: FieldSpec, t):
     return jnp.stack(limbs, axis=-1)
 
 
-@functools.partial(jax.jit, static_argnames=("spec",))
 def add(spec: FieldSpec, a, b):
     c = jnp.zeros(jnp.broadcast_shapes(a.shape[:-1], b.shape[:-1]), U32)
     t = []
@@ -197,7 +195,6 @@ def add(spec: FieldSpec, a, b):
     return _cond_sub_mod(spec, t)
 
 
-@functools.partial(jax.jit, static_argnames=("spec",))
 def sub(spec: FieldSpec, a, b):
     pl = spec.mod_limbs
     borrow = jnp.zeros(jnp.broadcast_shapes(a.shape[:-1], b.shape[:-1]), U32)
@@ -251,7 +248,6 @@ def inv(spec: FieldSpec, a):
     return pow_const(spec, a, spec.modulus - 2)
 
 
-@functools.partial(jax.jit, static_argnames=("spec",))
 def batch_inv(spec: FieldSpec, a):
     """Montgomery batch inversion of a flat (n, 4) array: one inv + 3n muls.
 
@@ -279,15 +275,28 @@ def batch_inv(spec: FieldSpec, a):
     return outs
 
 
-@functools.partial(jax.jit, static_argnames=("spec",))
 def to_mont(spec: FieldSpec, x_limbs):
     return mont_mul(spec, x_limbs, jnp.asarray(spec.r2_limbs))
 
 
-@functools.partial(jax.jit, static_argnames=("spec",))
 def from_mont(spec: FieldSpec, a):
     one_std = jnp.zeros((1,) * (a.ndim - 1) + (NLIMB,), U32).at[..., 0].set(1)
     return mont_mul(spec, a, one_std)
+
+
+# Executable-cache wrapping of the eager-callable primitives: the spec
+# is a positional static (frozen dataclass, deterministic repr), so a
+# fresh process replays mont_mul/add/sub dispatches from serialized
+# executables instead of re-tracing each (spec, shape) signature.
+# Deferred import: repro.core.execache is stdlib-only at module level.
+from repro.core import execache as _execache
+
+mont_mul = _execache.wrap("f_mont_mul", mont_mul, static_argnums=(0,))
+add = _execache.wrap("f_add", add, static_argnums=(0,))
+sub = _execache.wrap("f_sub", sub, static_argnums=(0,))
+batch_inv = _execache.wrap("f_batch_inv", batch_inv, static_argnums=(0,))
+to_mont = _execache.wrap("f_to_mont", to_mont, static_argnums=(0,))
+from_mont = _execache.wrap("f_from_mont", from_mont, static_argnums=(0,))
 
 
 # ---------------------------------------------------------------------------

@@ -121,7 +121,6 @@ def build_layout(zpp: np.ndarray, gap: np.ndarray, bq: np.ndarray,
         region=region, n_main=n_main, n_rem=n_rem)
 
 
-@functools.partial(jax.jit, static_argnames=())
 def _tables_jnp(vals, shift, kmask, kpmask, colmask, region, e_full, es,
                 one_m, k_m, zm_m, zr_m):
     """The (n, 4) limb-array evaluation of `_tables_body` (same math)."""
@@ -137,6 +136,11 @@ def _tables_jnp(vals, shift, kmask, kpmask, colmask, region, e_full, es,
                 sel(kpmask, k_m))
     b = add(FQ, es, mont_mul(FQ, sub(FQ, zsel, negbp), e_full))
     return a, b
+
+
+from repro.core import execache as _execache  # noqa: E402
+
+_tables_jnp = _execache.wrap("vt_tables_jnp", _tables_jnp)
 
 
 def _enc_tile(x: int) -> jnp.ndarray:

@@ -1,0 +1,217 @@
+"""Resident warm prover service: compile once, prove windows forever.
+
+The prover's one-time costs (generator derivation, AOT-compiling every
+executable for the graph geometry) are paid at `ProverService.start()`;
+after that each training window is proved from the warm in-process
+registry with zero re-tracing — and because the executables are also
+serialized to the on-disk cache (`repro.core.execache`), a RESTARTED
+service for the same config comes back warm too.
+
+Layout of the output directory (created on start):
+
+    vk.bin              the serialized VerifyingKey (a few hundred bytes)
+    proof_000000.bin    aggregated proof for window 0 (v3 byte format)
+    proof_000001.bin    ...
+    MANIFEST.jsonl      one line per proof: window, steps, bytes, seconds
+
+Training never blocks on proving: `submit(wit)` enqueues a step witness
+and returns; a background worker assembles full windows, proves, and
+streams `proof_NNNNNN.bin` files while the training loop keeps going.
+
+    service = ProverService(graph, quant, n_steps=T, out_dir="proofs/")
+    service.start()                       # warm keys, write vk.bin
+    for step in range(n):
+        ws, wit = train_step(ws, batch)   # training thread
+        service.submit(wit)               # non-blocking
+    service.close()                       # drain remaining full windows
+
+CLI (synthetic trajectory driver, doubles as the warm-service smoke):
+
+    python -m repro.launch.serve --widths 4,4,4 --batch 2 \
+        --window 2 --steps 4 --out-dir /tmp/proofs [--warm-only]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import queue
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+
+class ProverService:
+    """Warm resident prover for ONE (graph, quant, T) configuration.
+
+    Thread model: `submit()` is called from the training thread and only
+    appends to a queue; the internal worker thread owns every
+    ProofSession and does all proving/IO.  `stats` and `proofs` are
+    safe to read at any time (list appends are atomic)."""
+
+    def __init__(self, graph, quant=None, n_steps: int = 1,
+                 out_dir: str = "proofs", label: bytes = b"zkdl/train",
+                 verify: bool = False, rng_seed: int = 0):
+        self.graph = graph
+        self.quant = quant
+        self.n_steps = n_steps
+        self.out_dir = out_dir
+        self.label = label
+        self.verify = verify
+        self.rng_seed = rng_seed
+        self.pk = None
+        self.vk = None
+        self.proofs = []          # (window_idx, path, n_bytes, seconds)
+        self.warm_stats: Optional[dict] = None
+        self.warm_seconds: float = 0.0
+        self._queue: "queue.Queue" = queue.Queue()
+        self._worker: Optional[threading.Thread] = None
+        self._window = 0
+        self._errors = []
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self, warm: bool = True) -> "ProverService":
+        """Compile keys (optionally AOT-warming every executable), write
+        vk.bin, and launch the proving worker."""
+        from repro.core import execache
+        from repro.core.pipeline import compile as zk_compile
+
+        os.makedirs(self.out_dir, exist_ok=True)
+        t0 = time.perf_counter()
+        self.pk, self.vk = zk_compile(self.graph, self.quant,
+                                      n_steps=self.n_steps)
+        if warm:
+            before = execache.stats()
+            self.pk.warm(seed=self.rng_seed)
+            after = execache.stats()
+            self.warm_stats = {k: after[k] - before[k] for k in after}
+        self.warm_seconds = time.perf_counter() - t0
+        with open(os.path.join(self.out_dir, "vk.bin"), "wb") as f:
+            f.write(self.vk.to_bytes())
+        self._worker = threading.Thread(target=self._run, daemon=True,
+                                        name="zkdl-prover")
+        self._worker.start()
+        return self
+
+    def submit(self, wit) -> None:
+        """Queue one step witness (non-blocking; training continues)."""
+        if self._worker is None:
+            raise RuntimeError("service not started")
+        self._queue.put(wit)
+
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Drain queued FULL windows and stop the worker.  A trailing
+        partial window (fewer than n_steps pending witnesses) is
+        dropped — it belongs to the next service run."""
+        if self._worker is None:
+            return
+        self._queue.put(None)
+        self._worker.join(timeout)
+        self._worker = None
+        if self._errors:
+            raise self._errors[0]
+
+    @property
+    def n_proofs(self) -> int:
+        return len(self.proofs)
+
+    # -- worker ------------------------------------------------------------
+
+    def _run(self) -> None:
+        from repro.core.pipeline import ProofSession, encode_proof
+
+        rng = np.random.default_rng(self.rng_seed)
+        session = ProofSession(self.pk, rng, label=self.label)
+        try:
+            while True:
+                wit = self._queue.get()
+                if wit is None:
+                    return
+                session.add_step(wit)
+                if not session.is_full:
+                    continue
+                t0 = time.perf_counter()
+                proof = session.prove()
+                if self.verify and not session.verify(proof):
+                    raise RuntimeError(
+                        f"window {self._window}: proof REJECTED")
+                dt = time.perf_counter() - t0
+                data = encode_proof(proof)
+                path = os.path.join(self.out_dir,
+                                    f"proof_{self._window:06d}.bin")
+                tmp = f"{path}.tmp"
+                with open(tmp, "wb") as f:
+                    f.write(data)
+                os.replace(tmp, path)
+                with open(os.path.join(self.out_dir, "MANIFEST.jsonl"),
+                          "a") as f:
+                    f.write(json.dumps({
+                        "window": self._window,
+                        "n_steps": proof.n_steps,
+                        "bytes": len(data),
+                        "prove_s": round(dt, 4),
+                    }) + "\n")
+                self.proofs.append((self._window, path, len(data), dt))
+                self._window += 1
+                session = ProofSession(self.pk, rng, label=self.label)
+        except Exception as exc:          # surfaced by close()
+            self._errors.append(exc)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Warm zkDL prover service (synthetic driver)")
+    ap.add_argument("--widths", default="4,4,4",
+                    help="layer-width table d_0..d_L")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--window", type=int, default=2,
+                    help="T: steps aggregated per proof")
+    ap.add_argument("--steps", type=int, default=4,
+                    help="synthetic training steps to drive through")
+    ap.add_argument("--q-bits", type=int, default=16)
+    ap.add_argument("--r-bits", type=int, default=4)
+    ap.add_argument("--out-dir", default="proofs")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--verify", action="store_true",
+                    help="verify each proof before writing it")
+    ap.add_argument("--warm-only", action="store_true",
+                    help="compile + warm the executable cache, then exit")
+    args = ap.parse_args(argv)
+
+    from repro.core.quantfc import (QuantConfig,
+                                    synthetic_sgd_trajectory_widths)
+    from repro.core.pipeline import build_fcnn_graph
+
+    widths = tuple(int(w) for w in args.widths.split(","))
+    quant = QuantConfig(q_bits=args.q_bits, r_bits=args.r_bits)
+    graph = build_fcnn_graph(widths, batch=args.batch)
+    service = ProverService(graph, quant, n_steps=args.window,
+                            out_dir=args.out_dir, verify=args.verify,
+                            rng_seed=args.seed)
+    service.start(warm=True)
+    print(f"[serve] warm in {service.warm_seconds:.1f}s "
+          f"(exec cache: {service.warm_stats})", flush=True)
+    if args.warm_only:
+        service.close()
+        return 0
+
+    wits = synthetic_sgd_trajectory_widths(
+        args.steps, widths, args.batch, quant, seed=args.seed)
+    t0 = time.perf_counter()
+    for step, wit in enumerate(wits):
+        service.submit(wit)
+    service.close()
+    dt = time.perf_counter() - t0
+    for window, path, n_bytes, secs in service.proofs:
+        print(f"[serve] window {window}: {n_bytes} B -> {path} "
+              f"({secs:.2f}s)", flush=True)
+    print(f"[serve] {service.n_proofs} proofs for {args.steps} steps "
+          f"in {dt:.1f}s total", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

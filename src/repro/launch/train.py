@@ -66,7 +66,13 @@ def run_zkdl_train(cfg, args) -> int:
             --prove-window 4 [--widths 16,8,4,2] [--no-verify]
 
     Without overrides this runs the paper-scale 16x4096 network -- the
-    same code path, just slow on a CPU substrate."""
+    same code path, just slow on a CPU substrate.
+
+    With ``--proof-dir`` the resident warm prover service
+    (`repro.launch.serve.ProverService`) takes over: setup AOT-compiles
+    every prover executable (so the first window proves at steady-state
+    speed), training never blocks on proving, and each window's proof
+    streams to ``proof_NNNNNN.bin`` beside a serialized ``vk.bin``."""
     import numpy as np
     from repro.core import quantfc
     from repro.core.pipeline import compile as zk_compile
@@ -88,10 +94,22 @@ def run_zkdl_train(cfg, args) -> int:
           f"batch {args.global_batch}, aggregating {window} step(s)/proof",
           flush=True)
 
-    # one-time setup over the registered graph: the pk drives every
-    # window's session; the vk alone (serializable, a few hundred
-    # bytes) is what a remote verifier would hold
-    pk, vk = zk_compile(zk_cfg.graph, qc, n_steps=zk_cfg.n_steps)
+    service = None
+    if args.proof_dir:
+        from repro.launch.serve import ProverService
+        service = ProverService(zk_cfg.graph, qc, n_steps=zk_cfg.n_steps,
+                                out_dir=args.proof_dir,
+                                verify=not args.no_verify)
+        service.start(warm=True)
+        pk, vk = service.pk, service.vk
+        print(f"[train] prover service warm in {service.warm_seconds:.1f}s "
+              f"(exec cache: {service.warm_stats}); streaming proofs to "
+              f"{args.proof_dir}", flush=True)
+    else:
+        # one-time setup over the registered graph: the pk drives every
+        # window's session; the vk alone (serializable, a few hundred
+        # bytes) is what a remote verifier would hold
+        pk, vk = zk_compile(zk_cfg.graph, qc, n_steps=zk_cfg.n_steps)
     rng = np.random.default_rng(0)
     ws = [quantfc.quantize(
         rng.uniform(-1, 1, (widths[l], widths[l + 1])) * 0.3, qc)
@@ -105,8 +123,10 @@ def run_zkdl_train(cfg, args) -> int:
               f"in {dt:.1f}s ({dt / proof.n_steps:.1f}s/step, "
               f"verified={not args.no_verify})", flush=True)
 
-    hook = steps_mod.ZkdlProveHook(pk, rng, verify=not args.no_verify,
-                                   on_proof=on_proof)
+    hook = None
+    if service is None:
+        hook = steps_mod.ZkdlProveHook(pk, rng, verify=not args.no_verify,
+                                       on_proof=on_proof)
     step_fn = steps_mod.build_zkdl_step(zk_cfg)
     for step in range(args.steps):
         lo = (step * args.global_batch) % data_x.shape[0]
@@ -117,11 +137,23 @@ def run_zkdl_train(cfg, args) -> int:
         t0 = time.perf_counter()
         ws, wit = step_fn(ws, batch)
         step_s = time.perf_counter() - t0          # training only; proving
-        hook.observe(step, wit)                    # is logged per window
+        if service is not None:
+            service.submit(wit)                    # non-blocking
+        else:
+            hook.observe(step, wit)                # logged per window
         if step % args.log_every == 0:
             print(f"[train] step {step} {step_s:.2f}s", flush=True)
-    print(f"[train] done: {args.steps} steps, {len(hook.proofs)} "
-          f"aggregated proofs, {hook.n_pending} step(s) pending "
+    if service is not None:
+        service.close()
+        for window, path, n_bytes, secs in service.proofs:
+            print(f"[train] window {window}: {n_bytes} B -> {path} "
+                  f"({secs:.2f}s, verified={not args.no_verify})",
+                  flush=True)
+        n_proofs, pending = service.n_proofs, args.steps % window
+    else:
+        n_proofs, pending = len(hook.proofs), hook.n_pending
+    print(f"[train] done: {args.steps} steps, {n_proofs} "
+          f"aggregated proofs, {pending} step(s) pending "
           f"(next window)", flush=True)
     return 0
 
@@ -154,6 +186,10 @@ def main(argv=None):
                          "d_0..d_L, e.g. 784,512,256,128,10")
     ap.add_argument("--no-verify", action="store_true",
                     help="provable families: skip verifying emitted proofs")
+    ap.add_argument("--proof-dir", default=None,
+                    help="provable families: run the resident warm prover "
+                         "service and stream proof_NNNNNN.bin + vk.bin "
+                         "into this directory (training never blocks)")
     args = ap.parse_args(argv)
 
     from repro.util import enable_compilation_cache

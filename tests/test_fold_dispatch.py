@@ -193,3 +193,70 @@ def test_ipa_open_transcript_identical_across_backends():
         (p_pal.ls, p_pal.rs, p_pal.sigma)
     mle.set_fold_backend(None)
     assert ipa.open_verify(key, com, b, claim, p_pal, Transcript(b"fdi"))
+
+
+# ---------------------------------------------------------------------------
+# Compile-O(1) round bodies vs the legacy per-shape schedules: the
+# scan-shaped sumcheck and the masked IPA ladder are pure implementation
+# detail, so their transcripts must be bit-identical to the unrolled
+# paths under BOTH fold backends.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def _restore_round_modes():
+    from repro.core import ipa, sumcheck
+    yield
+    sumcheck.set_scan_mode(None)
+    ipa.set_round_mode(None)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_sumcheck_scan_matches_unrolled(backend, _restore_round_modes):
+    """Fixed-shape scan round bodies emit the same messages / bound
+    point / finals as the shrinking-shape unrolled prover."""
+    from repro.core import sumcheck as sc
+
+    n, arity = 32, 3
+    tables = [rand_table(n) for _ in range(arity)]
+    products = [(0, 1), (1, 2)]
+    mle.set_fold_backend(backend)
+
+    runs = {}
+    for mode in sc.SCAN_MODES:
+        sc.set_scan_mode(mode)
+        runs[mode] = sumcheck_prove([t for t in tables], products,
+                                    Transcript(b"scan-par"), b"sc")
+    p_s, pt_s, fin_s = runs["scan"]
+    p_u, pt_u, fin_u = runs["unrolled"]
+    assert p_s.messages == p_u.messages
+    assert pt_s == pt_u
+    assert fin_s == fin_u
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_ipa_ladder_matches_unrolled(backend, _restore_round_modes):
+    """The masked fixed-size ladder folds produce the same L/R chain and
+    sigma response as the exact-shape unrolled rounds, and the ladder
+    proof verifies."""
+    from repro.core import ipa, pedersen
+
+    n = 128
+    key = pedersen.make_key(b"ladder-par", n)
+    a, b = rand_table(n), rand_table(n)
+    av = [int(v) for v in decode(FQ, a)]
+    bv = [int(v) for v in decode(FQ, b)]
+    claim = sum(x * y for x, y in zip(av, bv)) % Q
+    blind = rand_r()
+    com = pedersen.commit(key, a, blind)
+    mle.set_fold_backend(backend)
+
+    runs = {}
+    for mode in ipa.IPA_MODES:
+        ipa.set_round_mode(mode)
+        runs[mode] = ipa.open_prove(key, a, b, blind, claim,
+                                    Transcript(b"lp"),
+                                    np.random.default_rng(17))
+    lad, unr = runs["ladder"], runs["unrolled"]
+    assert (lad.ls, lad.rs, lad.sigma) == (unr.ls, unr.rs, unr.sigma)
+    ipa.set_round_mode(None)
+    assert ipa.open_verify(key, com, b, claim, lad, Transcript(b"lp"))

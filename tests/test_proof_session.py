@@ -290,6 +290,41 @@ def test_uniform_graph_transcript_pinned(T):
     assert proof.fwd_claims == []         # single bucket: split implicit
 
 
+@pytest.mark.parametrize("fold_backend", ["jnp", "pallas"])
+def test_v3_bytes_invariant_to_compile_path(fold_backend):
+    """The compile-O(1) prover (scan-shaped sumcheck bodies + masked IPA
+    ladder) and the legacy per-shape unrolled prover must emit
+    byte-identical serialized v3 proofs, under both fold backends, and
+    both must reproduce the pinned golden digest — the whole
+    depth/T-invariant compile machinery is transcript-invisible."""
+    from repro.core import ipa, mle, sumcheck
+    from repro.core.pipeline import encode_proof
+
+    cfg = PipelineConfig(n_layers=2, batch=2, width=4, q_bits=16,
+                         r_bits=4, n_steps=1)
+    keys = make_keys(cfg)
+
+    def run():
+        wits = synthetic_sgd_trajectory(1, 2, 2, 4, QC, seed=7)
+        return prove_session(keys, wits, np.random.default_rng(7))
+
+    try:
+        mle.set_fold_backend(fold_backend)
+        sumcheck.set_scan_mode("scan")
+        ipa.set_round_mode("ladder")
+        scan_proof = run()
+        sumcheck.set_scan_mode("unrolled")
+        ipa.set_round_mode("unrolled")
+        unrolled_proof = run()
+    finally:
+        mle.set_fold_backend(None)
+        sumcheck.set_scan_mode(None)
+        ipa.set_round_mode(None)
+    assert encode_proof(scan_proof) == encode_proof(unrolled_proof)
+    assert proof_digest(scan_proof) == GOLDEN[1]
+    assert verify_session(keys, scan_proof)
+
+
 def test_uniform_stacking_matches_seed_layout():
     """Graph-driven stacking reproduces the seed's positional formula
     flat[(t * l_pad + (l-1)) * B*d + row * d + col] exactly."""
