@@ -284,8 +284,14 @@ VALIDITY_SHARE_MAX_T8 = 0.35
 # executable set depend only on shape buckets, not on depth or T, so
 # T=8 pays (nearly) the same warm overhead as T=1.  The absolute slack
 # absorbs disk/OS noise at toy shapes where the overheads are a few
-# seconds and a 0.3s wobble would otherwise flip the ratio.
-WARM_COMPILE_MAX_S = 5.0
+# seconds and a 0.3s wobble would otherwise flip the ratio.  The
+# absolute budget carries ~30% headroom over a loaded-container
+# measurement (the 5.0s budget tripped at 5.2-5.5s on a machine where
+# the unchanged seed measured the same — interpreter+jax import and
+# disk-cache loads drift with host load; the warm CONTRACT is the
+# zero-miss assert above, the seconds bound only catches a cold start's
+# ~25-30s full re-trace).
+WARM_COMPILE_MAX_S = 7.0
 WARM_T_INVARIANCE_MAX = 1.3
 WARM_T_INVARIANCE_SLACK_S = 0.5
 

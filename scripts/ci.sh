@@ -151,3 +151,48 @@ assert service.n_proofs == 1, "ci: restarted service produced no proof"
 print(f"ci: warm restart ok ({service.warm_seconds:.1f}s setup, "
       f"0 executable-cache misses)")
 PY
+
+# chaos smoke: the serve CLI is SIGKILLed mid-run by an injected fault
+# at the nastiest point (after a proof write, before its manifest
+# commit); a rerun of the SAME command against the same out-dir must
+# replay the witness journal, re-prove every uncommitted window, and
+# leave a gap-free manifest with each window COMMITTED exactly once and
+# verifying from disk.  This is the durability contract of
+# launch/serve.py (PR 8) exercised through a real signal death.
+CHAOS_DIR="$SMOKE_DIR/chaos"
+set +e
+ZKDL_FAULTS="commit/pre-manifest@0:kill" python -m repro.launch.serve \
+    --widths 4,4,4 --batch 2 --window 2 --steps 6 \
+    --q-bits 16 --r-bits 4 --out-dir "$CHAOS_DIR" --seed 5
+chaos_rc=$?
+set -e
+if [ "$chaos_rc" -eq 0 ]; then
+    echo "ci: chaos kill never fired (service exited cleanly)"; exit 1
+fi
+python -m repro.launch.serve \
+    --widths 4,4,4 --batch 2 --window 2 --steps 6 \
+    --q-bits 16 --r-bits 4 --out-dir "$CHAOS_DIR" --seed 5
+python - "$CHAOS_DIR" <<'PY'
+import os, sys
+
+from repro.launch import serve
+from repro.core.pipeline.proofio import decode_vk
+from repro.core.pipeline.verifier import verify_bytes
+
+out = sys.argv[1]
+man = serve.read_manifest(out)
+counts = serve.manifest_commit_counts(out)
+vk = decode_vk(open(os.path.join(out, "vk.bin"), "rb").read())
+for w in range(3):
+    assert man.get(w, {}).get("status") == "COMMITTED", \
+        f"ci: window {w} not committed after restart: {man.get(w)}"
+    assert counts[w] == 1, \
+        f"ci: window {w} committed {counts[w]} times (exactly-once broken)"
+    raw = open(os.path.join(out, f"proof_{w:06d}.bin"), "rb").read()
+    assert verify_bytes(vk, raw, label=b"zkdl/train"), \
+        f"ci: window {w} proof REJECTED after crash+restart"
+assert serve.journal_steps(serve.journal_dir(out)) == [], \
+    "ci: journal not GC'd after commits"
+print("ci: chaos smoke ok (SIGKILL -> restart -> 3/3 windows verify, "
+      "no duplicate commits, no manifest gaps)")
+PY

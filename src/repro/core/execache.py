@@ -42,7 +42,8 @@ _SCHEMA = 1                            # bump to invalidate old disk layouts
 
 _lock = threading.RLock()
 _registry: dict = {}
-_stats = {"hits": 0, "misses": 0, "disk_hits": 0, "disk_writes": 0}
+_stats = {"hits": 0, "misses": 0, "disk_hits": 0, "disk_writes": 0,
+          "disk_corrupt": 0}
 
 
 def enabled() -> bool:
@@ -112,7 +113,15 @@ def _load_or_compile(key, jitted, args, statics):
                 _stats["disk_hits"] += 1
             return comp
         except Exception:
-            pass  # stale/corrupt/foreign entry: recompile below
+            # stale/truncated/corrupt/foreign entry: a MISS, never an
+            # error.  Count it, drop the bad file (so a crashed write or
+            # bit rot can't be retried forever), recompile + rewrite.
+            with _lock:
+                _stats["disk_corrupt"] += 1
+            try:
+                os.remove(path)
+            except OSError:
+                pass
     # Compile with the XLA persistent cache OFF: an executable that came
     # out of that cache re-serializes WITHOUT its object-code symbols
     # (loads fine in-process, "Symbols not found" in any other process).

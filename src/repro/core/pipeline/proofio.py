@@ -382,8 +382,12 @@ def decode_vk(data: bytes):
         graph = LayerGraph(tuple(nodes))
         cfg = PipelineConfig.from_graph(graph, q_bits=q_bits,
                                         r_bits=r_bits, n_steps=n_steps)
-    except (ValueError, KeyError, AssertionError) as exc:
-        # config derivation asserts geometry (>= 2 layers, pow2 batch);
-        # from attacker-supplied bytes those are format errors, not bugs
+    except (ValueError, KeyError, AssertionError, IndexError, TypeError,
+            OverflowError, ZeroDivisionError) as exc:
+        # config derivation asserts geometry (>= 2 layers, pow2 batch,
+        # resolvable op inputs); from attacker-supplied bytes ANY of
+        # these are format errors, not bugs — the fuzz suite
+        # (tests/test_proofio_fuzz.py) holds this to "ProofDecodeError
+        # or clean verify-reject, never a crash"
         raise ProofDecodeError(f"invalid graph in vk: {exc}") from exc
     return VerifyingKey(cfg=cfg)

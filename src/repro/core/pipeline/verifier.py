@@ -52,10 +52,14 @@ def verify(keys: PipelineKeys, proof: AggregatedProof,
                             points, u_star, e_pi1, e_pi2, e_pi3, t)
         return True
     # ValueError: failed soundness checks / inconsistent transcript;
-    # KeyError/IndexError: structurally malformed proof fields.  Verifier-
-    # side programming errors (AssertionError etc.) propagate -- an
-    # infrastructure bug must not masquerade as a forged proof.
-    except (ValueError, KeyError, IndexError) as exc:
+    # KeyError/IndexError: structurally malformed proof fields;
+    # TypeError/OverflowError/ZeroDivisionError: decoded-but-garbage
+    # fields hitting arithmetic (all reachable from attacker bytes, per
+    # the fuzz suite).  Verifier-side programming errors
+    # (AssertionError etc.) propagate -- an infrastructure bug must not
+    # masquerade as a forged proof.
+    except (ValueError, KeyError, IndexError, TypeError, OverflowError,
+            ZeroDivisionError) as exc:
         if trace is not None:
             arg = exc.args[0] if exc.args else exc
             trace.append(arg if isinstance(arg, str) else f"exception: {exc!r}")

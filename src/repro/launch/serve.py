@@ -1,4 +1,4 @@
-"""Resident warm prover service: compile once, prove windows forever.
+"""Crash-safe resident prover service: compile once, prove windows forever.
 
 The prover's one-time costs (generator derivation, AOT-compiling every
 executable for the graph geometry) are paid at `ProverService.start()`;
@@ -7,53 +7,295 @@ registry with zero re-tracing — and because the executables are also
 serialized to the on-disk cache (`repro.core.execache`), a RESTARTED
 service for the same config comes back warm too.
 
+Durability contract (PR 8)
+==========================
+
+The service never loses a submitted witness to a crash, and never
+commits a window twice.  Concretely:
+
+Journal (write-ahead witness log)
+    ``submit()`` appends the step witness to
+    ``<out_dir>/journal/step_<s>.npz`` (atomic tmp+rename, the
+    `train/checkpoint.atomic_write_bytes` pattern) BEFORE enqueueing it
+    for the worker.  Step indices ``s`` are global and monotonic; window
+    ``w`` owns steps ``[w*T, (w+1)*T)``.  A journal segment is
+    garbage-collected only after its window reaches a terminal manifest
+    state (``COMMITTED`` or ``DROPPED``).
+
+Manifest (append-only commit log)
+    ``<out_dir>/MANIFEST.jsonl``: one JSON line per event, fsync'd.
+    Per-window status is LAST-WINS on read; a torn trailing line (crash
+    mid-append) is skipped, not an error.  States:
+
+    * ``COMMITTED`` — ``proof_<w>.bin`` is durable and verified-sized;
+      written AFTER the atomic proof write, so a committed line implies
+      readable proof bytes.
+    * ``FAILED``    — every supervised prove attempt failed (or the
+      journal for the window was corrupt/gapped); the service keeps
+      going instead of wedging.
+    * ``DROPPED``   — backpressure policy ``drop_window`` shed the
+      window; its journal steps are GC'd and accounted in ``stats``.
+    * ``PARTIAL``   — informational: close() drained with a trailing
+      window short of T steps.  Its journal steps are RETAINED; a
+      restarted service resumes the window (a later ``COMMITTED`` line
+      supersedes it).
+
+Restart / replay protocol
+    ``start()`` on a non-empty out_dir: read the manifest, delete
+    leftover ``*.tmp.*`` turds, GC journal steps of terminal windows,
+    then replay the remaining journaled steps (complete un-committed
+    windows and the trailing partial window) into the prove queue in
+    order.  New submissions continue at
+    ``next_step = max(highest journaled step + 1,
+    (highest manifest window + 1) * T)``.  A proof file without a
+    manifest line (crash between proof write and commit) is re-proved
+    and overwritten — the manifest, not the file system, is the source
+    of truth, which is what keeps "exactly one COMMITTED line per
+    window" true under crashes at every fault point.
+
+Supervised proving
+    Each window proves under `launch/supervise.run_supervised`
+    (``isolation="thread"``: in-process attempts, capped exponential
+    backoff) or `run_subprocess_supervised` (``isolation="subprocess"``:
+    each attempt is a fresh ``python -m repro.launch.serve
+    --prove-window w`` child that rebuilds the ProvingKey warm from the
+    executable cache, proves from the journal, atomically writes the
+    proof, and hard-exits — signal deaths and timeouts retry, clean
+    rejections don't).  Repeated failure marks the window ``FAILED``;
+    the worker moves on.
+
+Backpressure
+    ``queue_size=0`` (default) keeps the historical unbounded queue.
+    With a bound, policy ``block`` makes submit() wait (checking worker
+    liveness so a dead worker raises instead of deadlocking), policy
+    ``drop_window`` sheds the NEWEST window on overflow: mark
+    ``DROPPED``, GC its journal, count it in
+    ``stats["dropped_windows"]``, and ignore the window's remaining
+    submissions.
+
+Fault injection
+    Pass a `train/resilience.FailureInjector` (or set ``ZKDL_FAULTS``
+    for the CLI/subprocess workers).  Fault points: ``submit/journal-pre``,
+    ``submit/journal-post``, ``prove/mid``, ``commit/pre-manifest``,
+    ``worker/kill``.  The chaos tests (tests/test_serve_chaos.py) and
+    the ci.sh chaos smoke drive every point and assert the contract
+    above.
+
 Layout of the output directory (created on start):
 
     vk.bin              the serialized VerifyingKey (a few hundred bytes)
     proof_000000.bin    aggregated proof for window 0 (v3 byte format)
-    proof_000001.bin    ...
-    MANIFEST.jsonl      one line per proof: window, steps, bytes, seconds
+    MANIFEST.jsonl      append-only commit log (see above)
+    journal/            write-ahead step witnesses (empty when idle)
 
-Training never blocks on proving: `submit(wit)` enqueues a step witness
-and returns; a background worker assembles full windows, proves, and
-streams `proof_NNNNNN.bin` files while the training loop keeps going.
+Training never blocks on proving (default config): `submit(wit)`
+journals + enqueues a step witness and returns; the background worker
+assembles full windows, proves, and streams `proof_NNNNNN.bin` files.
 
     service = ProverService(graph, quant, n_steps=T, out_dir="proofs/")
-    service.start()                       # warm keys, write vk.bin
-    for step in range(n):
+    service.start()                       # warm keys, replay journal
+    for step in range(service.next_step, n):
         ws, wit = train_step(ws, batch)   # training thread
-        service.submit(wit)               # non-blocking
+        service.submit(wit)               # journaled, non-blocking
     service.close()                       # drain remaining full windows
 
-CLI (synthetic trajectory driver, doubles as the warm-service smoke):
+CLI (synthetic trajectory driver, doubles as the chaos smoke):
 
     python -m repro.launch.serve --widths 4,4,4 --batch 2 \
-        --window 2 --steps 4 --out-dir /tmp/proofs [--warm-only]
+        --window 2 --steps 4 --out-dir /tmp/proofs \
+        [--warm-only] [--inject point@N[:action],...] [--isolation ...]
 """
 from __future__ import annotations
 
 import argparse
+import io
 import json
 import os
 import queue
+import sys
 import threading
 import time
-from typing import Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.launch import supervise
+
+MANIFEST = "MANIFEST.jsonl"
+JOURNAL_DIR = "journal"
+
+COMMITTED = "COMMITTED"
+FAILED = "FAILED"
+DROPPED = "DROPPED"
+PARTIAL = "PARTIAL"
+
+# StepWitness list fields and their lengths as a function of the layer
+# count L (scalars x/y and the skips dict are handled separately)
+_WIT_LISTS = ("w", "z", "zpp", "b", "rz", "a", "gz", "ga", "gap", "rga",
+              "gw")
+
+
+# ---------------------------------------------------------------------------
+# Witness journal
+# ---------------------------------------------------------------------------
+
+def journal_dir(out_dir: str) -> str:
+    return os.path.join(out_dir, JOURNAL_DIR)
+
+
+def _step_path(jdir: str, step: int) -> str:
+    return os.path.join(jdir, f"step_{step:08d}.npz")
+
+
+def journal_append(jdir: str, step: int, wit) -> str:
+    """Durably persist one step witness (atomic tmp+rename npz)."""
+    from repro.train.checkpoint import atomic_write_bytes
+
+    os.makedirs(jdir, exist_ok=True)
+    arrays = {"x": wit.x, "y": wit.y}
+    lens = {}
+    for field in _WIT_LISTS:
+        vals = getattr(wit, field)
+        lens[field] = len(vals)
+        for i, arr in enumerate(vals):
+            arrays[f"{field}.{i}"] = arr
+    meta = {"q_bits": wit.cfg.q_bits, "r_bits": wit.cfg.r_bits,
+            "lens": lens,
+            "skips": sorted((int(k), int(v)) for k, v in wit.skips.items())}
+    arrays["meta"] = np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8)
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    path = _step_path(jdir, step)
+    atomic_write_bytes(path, buf.getvalue())
+    return path
+
+
+def journal_load(jdir: str, step: int):
+    """Reconstruct a StepWitness from its journal segment.  Raises on a
+    missing/corrupt segment — callers decide the failure policy."""
+    from repro.core.quantfc import QuantConfig, StepWitness
+
+    with np.load(_step_path(jdir, step)) as z:
+        meta = json.loads(bytes(bytearray(np.asarray(z["meta"]))).decode())
+        lists = {f: [np.asarray(z[f"{f}.{i}"])
+                     for i in range(meta["lens"][f])]
+                 for f in _WIT_LISTS}
+        return StepWitness(
+            cfg=QuantConfig(q_bits=meta["q_bits"], r_bits=meta["r_bits"]),
+            x=np.asarray(z["x"]), y=np.asarray(z["y"]),
+            skips={int(k): int(v) for k, v in meta["skips"]},
+            **lists)
+
+
+def journal_steps(jdir: str) -> List[int]:
+    """Sorted step indices with a committed (fully renamed) segment."""
+    if not os.path.isdir(jdir):
+        return []
+    out = []
+    for f in os.listdir(jdir):
+        if f.startswith("step_") and f.endswith(".npz"):
+            try:
+                out.append(int(f[5:-4]))
+            except ValueError:
+                pass
+    return sorted(out)
+
+
+def journal_gc(jdir: str, lo: int, hi: int) -> None:
+    """Delete journal segments for steps in [lo, hi)."""
+    for s in range(lo, hi):
+        try:
+            os.remove(_step_path(jdir, s))
+        except FileNotFoundError:
+            pass
+
+
+def _clean_tmp_files(out_dir: str) -> None:
+    """Remove torn-write turds (``*.tmp.*``) left by a crashed writer."""
+    for root in (out_dir, journal_dir(out_dir)):
+        if not os.path.isdir(root):
+            continue
+        for f in os.listdir(root):
+            if ".tmp." in f:
+                try:
+                    os.remove(os.path.join(root, f))
+                except OSError:
+                    pass
+
+
+# ---------------------------------------------------------------------------
+# Manifest
+# ---------------------------------------------------------------------------
+
+def read_manifest(out_dir: str) -> Dict[int, dict]:
+    """Last-wins view of MANIFEST.jsonl keyed by window.  Unparseable
+    (torn) lines are skipped: a crash mid-append loses at most the event
+    being written, never the file."""
+    path = os.path.join(out_dir, MANIFEST)
+    out: Dict[int, dict] = {}
+    if not os.path.exists(path):
+        return out
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if isinstance(rec, dict) and "window" in rec:
+                out[int(rec["window"])] = rec
+    return out
+
+
+def manifest_commit_counts(out_dir: str) -> Dict[int, int]:
+    """COMMITTED lines per window — the exactly-once audit."""
+    path = os.path.join(out_dir, MANIFEST)
+    counts: Dict[int, int] = {}
+    if not os.path.exists(path):
+        return counts
+    with open(path) as f:
+        for line in f:
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if isinstance(rec, dict) and rec.get("status") == COMMITTED:
+                w = int(rec["window"])
+                counts[w] = counts.get(w, 0) + 1
+    return counts
+
+
+# ---------------------------------------------------------------------------
+# Service
+# ---------------------------------------------------------------------------
 
 class ProverService:
-    """Warm resident prover for ONE (graph, quant, T) configuration.
+    """Crash-safe warm resident prover for ONE (graph, quant, T) config.
 
-    Thread model: `submit()` is called from the training thread and only
-    appends to a queue; the internal worker thread owns every
-    ProofSession and does all proving/IO.  `stats` and `proofs` are
-    safe to read at any time (list appends are atomic)."""
+    Thread model: `submit()` is called from the training thread; it
+    journals the witness, then enqueues it.  The internal worker thread
+    owns every ProofSession and does all proving/manifest IO (manifest
+    appends share a lock with the submit path's DROPPED records).
+    `stats` and `proofs` are safe to read at any time."""
+
+    FAULT_POINTS = ("submit/journal-pre", "submit/journal-post",
+                    "prove/mid", "commit/pre-manifest", "worker/kill")
 
     def __init__(self, graph, quant=None, n_steps: int = 1,
                  out_dir: str = "proofs", label: bytes = b"zkdl/train",
-                 verify: bool = False, rng_seed: int = 0):
+                 verify: bool = False, rng_seed: int = 0, *,
+                 journal: bool = True, queue_size: int = 0,
+                 backpressure: str = "block", max_attempts: int = 3,
+                 backoff_base: float = 0.05, backoff_cap: float = 2.0,
+                 prove_timeout: Optional[float] = None,
+                 isolation: str = "thread",
+                 injector=None):
+        if backpressure not in ("block", "drop_window"):
+            raise ValueError(f"unknown backpressure policy {backpressure!r}")
+        if isolation not in ("thread", "subprocess"):
+            raise ValueError(f"unknown isolation mode {isolation!r}")
         self.graph = graph
         self.quant = quant
         self.n_steps = n_steps
@@ -61,25 +303,43 @@ class ProverService:
         self.label = label
         self.verify = verify
         self.rng_seed = rng_seed
+        self.journal = journal
+        self.backpressure = backpressure
+        self.max_attempts = max_attempts
+        self.backoff_base = backoff_base
+        self.backoff_cap = backoff_cap
+        self.prove_timeout = prove_timeout
+        self.isolation = isolation
+        self.injector = injector
         self.pk = None
         self.vk = None
-        self.proofs = []          # (window_idx, path, n_bytes, seconds)
+        self.proofs: List[Tuple[int, str, int, float]] = []
         self.warm_stats: Optional[dict] = None
         self.warm_seconds: float = 0.0
-        self._queue: "queue.Queue" = queue.Queue()
+        self.stats = {"submitted": 0, "journaled": 0, "replayed": 0,
+                      "proved": 0, "failed_windows": 0, "retries": 0,
+                      "dropped_windows": 0, "dropped_steps": 0,
+                      "partial_steps": 0}
+        self._queue: "queue.Queue" = queue.Queue(maxsize=queue_size)
         self._worker: Optional[threading.Thread] = None
-        self._window = 0
-        self._errors = []
+        self._errors: list = []
+        self._mlock = threading.Lock()
+        self._manifest: Dict[int, dict] = {}
+        self._dropped: set = set()
+        self._next_step = 0
 
     # -- lifecycle ---------------------------------------------------------
 
     def start(self, warm: bool = True) -> "ProverService":
         """Compile keys (optionally AOT-warming every executable), write
-        vk.bin, and launch the proving worker."""
+        vk.bin, recover journal/manifest state, replay unproved windows,
+        and launch the proving worker."""
         from repro.core import execache
         from repro.core.pipeline import compile as zk_compile
+        from repro.train.checkpoint import atomic_write_bytes
 
         os.makedirs(self.out_dir, exist_ok=True)
+        _clean_tmp_files(self.out_dir)
         t0 = time.perf_counter()
         self.pk, self.vk = zk_compile(self.graph, self.quant,
                                       n_steps=self.n_steps)
@@ -89,27 +349,85 @@ class ProverService:
             after = execache.stats()
             self.warm_stats = {k: after[k] - before[k] for k in after}
         self.warm_seconds = time.perf_counter() - t0
-        with open(os.path.join(self.out_dir, "vk.bin"), "wb") as f:
-            f.write(self.vk.to_bytes())
+        atomic_write_bytes(os.path.join(self.out_dir, "vk.bin"),
+                           self.vk.to_bytes())
+        self._manifest = read_manifest(self.out_dir)
+        self._dropped = {w for w, rec in self._manifest.items()
+                         if rec.get("status") == DROPPED}
+        replay = self._recover_journal() if self.journal else []
         self._worker = threading.Thread(target=self._run, daemon=True,
                                         name="zkdl-prover")
         self._worker.start()
+        for step, wit in replay:
+            self._queue.put((step, wit))    # durable steps never drop
+            self.stats["replayed"] += 1
         return self
 
+    @property
+    def next_step(self) -> int:
+        """Global index the next submit() will journal under — after a
+        restart this is where training should resume."""
+        return self._next_step
+
     def submit(self, wit) -> None:
-        """Queue one step witness (non-blocking; training continues)."""
+        """Journal + queue one step witness.  Non-blocking with the
+        default unbounded queue; under a bound, behavior follows the
+        backpressure policy.  Raises if the worker has died (its original
+        error chained) — the journal retains the step for a restart."""
         if self._worker is None:
             raise RuntimeError("service not started")
-        self._queue.put(wit)
+        self._check_worker()
+        step = self._next_step
+        window = step // self.n_steps
+        self.stats["submitted"] += 1
+        if self.injector is not None:
+            self.injector.fire("submit/journal-pre")
+        if self.journal:
+            journal_append(journal_dir(self.out_dir), step, wit)
+            self.stats["journaled"] += 1
+        if self.injector is not None:
+            self.injector.fire("submit/journal-post")
+        self._next_step = step + 1
+        if window in self._dropped:
+            self.stats["dropped_steps"] += 1
+            if self.journal:
+                journal_gc(journal_dir(self.out_dir), step, step + 1)
+            return
+        item = (step, wit)
+        if self.backpressure == "drop_window" and self._queue.maxsize > 0:
+            try:
+                self._queue.put_nowait(item)
+            except queue.Full:
+                self._drop_window(window, step)
+            return
+        while True:
+            try:
+                self._queue.put(item, timeout=0.2)
+                return
+            except queue.Full:
+                self._check_worker()
 
     def close(self, timeout: Optional[float] = None) -> None:
         """Drain queued FULL windows and stop the worker.  A trailing
-        partial window (fewer than n_steps pending witnesses) is
-        dropped — it belongs to the next service run."""
+        partial window is reported as PARTIAL in stats/manifest and its
+        journal segments are retained for the next service run.  Never
+        hangs on a dead worker: the sentinel is best-effort, the join is
+        bounded, and the worker's original error is re-raised."""
         if self._worker is None:
             return
-        self._queue.put(None)
+        while True:
+            try:
+                self._queue.put(None, timeout=0.2)
+                break
+            except queue.Full:
+                if not self._worker.is_alive():
+                    break               # dead worker: nothing will drain
         self._worker.join(timeout)
+        if self._worker.is_alive():
+            raise TimeoutError(
+                f"prover worker did not drain within {timeout}s "
+                f"({self._queue.qsize()} items still queued; the journal "
+                f"retains every submitted step)")
         self._worker = None
         if self._errors:
             raise self._errors[0]
@@ -118,52 +436,261 @@ class ProverService:
     def n_proofs(self) -> int:
         return len(self.proofs)
 
+    # -- internal ----------------------------------------------------------
+
+    def _check_worker(self) -> None:
+        if self._errors:
+            raise RuntimeError(
+                "prover worker died; journaled steps will replay on "
+                "restart") from self._errors[0]
+        if self._worker is not None and not self._worker.is_alive():
+            raise RuntimeError("prover worker is not running")
+
+    def _manifest_append(self, rec: dict) -> None:
+        with self._mlock:
+            with open(os.path.join(self.out_dir, MANIFEST), "a") as f:
+                f.write(json.dumps(rec) + "\n")
+                f.flush()
+                os.fsync(f.fileno())
+            self._manifest[int(rec["window"])] = rec
+
+    def _drop_window(self, window: int, step: int) -> None:
+        """Backpressure shed: the window's queued-or-journaled steps are
+        discarded and the window is terminally DROPPED."""
+        self._dropped.add(window)
+        self.stats["dropped_windows"] += 1
+        self.stats["dropped_steps"] += step - window * self.n_steps + 1
+        if self.journal:
+            journal_gc(journal_dir(self.out_dir),
+                       window * self.n_steps, step + 1)
+        self._manifest_append({"window": window, "status": DROPPED,
+                               "reason": "backpressure",
+                               "n_steps": self.n_steps})
+
+    def _recover_journal(self) -> List[Tuple[int, object]]:
+        """Restart path: GC terminal windows' segments, load replayable
+        steps, and position ``next_step``."""
+        jdir = journal_dir(self.out_dir)
+        steps = journal_steps(jdir)
+        T = self.n_steps
+        terminal = {w for w, rec in self._manifest.items()
+                    if rec.get("status") in (COMMITTED, DROPPED)}
+        live = []
+        for s in steps:
+            if s // T in terminal:
+                journal_gc(jdir, s, s + 1)   # crash between commit and GC
+            else:
+                live.append(s)
+        # a PARTIAL window is non-terminal (its steps replay below), so
+        # only terminal windows push next_step past their range
+        max_terminal_w = max(
+            (w for w, rec in self._manifest.items()
+             if rec.get("status") in (COMMITTED, DROPPED, FAILED)),
+            default=-1)
+        self._next_step = max([0, (max_terminal_w + 1) * T]
+                              + [s + 1 for s in steps])
+        by_window: Dict[int, List[int]] = {}
+        for s in live:
+            by_window.setdefault(s // T, []).append(s)
+        replay: List[Tuple[int, object]] = []
+        for w in sorted(by_window):
+            ss = sorted(by_window[w])
+            complete = ss == list(range(w * T, (w + 1) * T))
+            tail = (w == max(by_window)
+                    and ss == list(range(w * T, w * T + len(ss))))
+            if not (complete or tail):
+                # a gap inside a non-trailing window: unprovable
+                self._manifest_append({"window": w, "status": FAILED,
+                                       "error": "journal gap",
+                                       "steps": ss})
+                journal_gc(jdir, w * T, (w + 1) * T)
+                continue
+            loaded = []
+            try:
+                for s in ss:
+                    loaded.append((s, journal_load(jdir, s)))
+            except Exception as exc:
+                self._manifest_append({"window": w, "status": FAILED,
+                                       "error": f"journal corrupt: {exc}"})
+                journal_gc(jdir, w * T, (w + 1) * T)
+                continue
+            replay.extend(loaded)
+        # windows FAILED during this scan (gap/corrupt) are terminal too:
+        # resume training after them, not inside them
+        max_terminal_w = max(
+            (w for w, rec in self._manifest.items()
+             if rec.get("status") in (COMMITTED, DROPPED, FAILED)),
+            default=-1)
+        self._next_step = max(self._next_step, (max_terminal_w + 1) * T)
+        return replay
+
     # -- worker ------------------------------------------------------------
 
     def _run(self) -> None:
-        from repro.core.pipeline import ProofSession, encode_proof
-
-        rng = np.random.default_rng(self.rng_seed)
-        session = ProofSession(self.pk, rng, label=self.label)
+        self._rng = np.random.default_rng(self.rng_seed)
+        pending: Dict[int, Dict[int, object]] = {}
         try:
             while True:
-                wit = self._queue.get()
-                if wit is None:
+                item = self._queue.get()
+                if item is None:
+                    for w in sorted(pending):
+                        if w in self._dropped:
+                            continue
+                        k = len(pending[w])
+                        self.stats["partial_steps"] += k
+                        self._manifest_append(
+                            {"window": w, "status": PARTIAL,
+                             "n_steps": k, "of": self.n_steps})
                     return
-                session.add_step(wit)
-                if not session.is_full:
+                step, wit = item
+                w = step // self.n_steps
+                if w in self._dropped:
+                    pending.pop(w, None)
                     continue
-                t0 = time.perf_counter()
+                pending.setdefault(w, {})[step] = wit
+                if len(pending[w]) < self.n_steps:
+                    continue
+                wits = [pending[w][s] for s in sorted(pending[w])]
+                del pending[w]
+                if w in self._dropped:
+                    continue
+                self._prove_window(w, wits)
+        except Exception as exc:          # surfaced by submit()/close()
+            self._errors.append(exc)
+
+    def _proof_path(self, window: int) -> str:
+        return os.path.join(self.out_dir, f"proof_{window:06d}.bin")
+
+    def _prove_window(self, window: int, wits) -> None:
+        from repro.core.pipeline import ProofSession, encode_proof
+        from repro.train.checkpoint import atomic_write_bytes
+
+        if self.injector is not None:
+            self.injector.fire("worker/kill")
+        t0 = time.perf_counter()
+        path = self._proof_path(window)
+
+        if self.isolation == "subprocess":
+            res = supervise.run_subprocess_supervised(
+                self._child_argv(window), max_attempts=self.max_attempts,
+                backoff_base=self.backoff_base, backoff_cap=self.backoff_cap,
+                timeout=self.prove_timeout, retry_nonzero=True,
+                capture_output=True, text=True, env=self._child_env())
+            data = None
+            if res.ok:
+                with open(path, "rb") as f:
+                    data = f.read()     # the child wrote it atomically
+            error = res.last_error
+            if not res.ok and res.value is not None and res.value.stderr:
+                error = f"{error}: {res.value.stderr.strip()[-400:]}"
+        else:
+            def attempt():
+                if self.injector is not None:
+                    self.injector.fire("prove/mid")
+                session = ProofSession(self.pk, self._rng, label=self.label)
+                for wit in wits:
+                    session.add_step(wit)
                 proof = session.prove()
                 if self.verify and not session.verify(proof):
-                    raise RuntimeError(
-                        f"window {self._window}: proof REJECTED")
-                dt = time.perf_counter() - t0
-                data = encode_proof(proof)
-                path = os.path.join(self.out_dir,
-                                    f"proof_{self._window:06d}.bin")
-                tmp = f"{path}.tmp"
-                with open(tmp, "wb") as f:
-                    f.write(data)
-                os.replace(tmp, path)
-                with open(os.path.join(self.out_dir, "MANIFEST.jsonl"),
-                          "a") as f:
-                    f.write(json.dumps({
-                        "window": self._window,
-                        "n_steps": proof.n_steps,
-                        "bytes": len(data),
-                        "prove_s": round(dt, 4),
-                    }) + "\n")
-                self.proofs.append((self._window, path, len(data), dt))
-                self._window += 1
-                session = ProofSession(self.pk, rng, label=self.label)
-        except Exception as exc:          # surfaced by close()
-            self._errors.append(exc)
+                    raise RuntimeError(f"window {window}: proof REJECTED")
+                return encode_proof(proof)
+
+            res = supervise.run_supervised(
+                attempt, max_attempts=self.max_attempts,
+                backoff_base=self.backoff_base,
+                backoff_cap=self.backoff_cap)
+            data = res.value if res.ok else None
+            error = res.last_error
+
+        self.stats["retries"] += max(0, res.n_attempts - 1)
+        if not res.ok:
+            self.stats["failed_windows"] += 1
+            self._manifest_append({"window": window, "status": FAILED,
+                                   "error": error,
+                                   "attempts": res.n_attempts})
+            return
+        if self.isolation != "subprocess":
+            atomic_write_bytes(path, data)
+        if self.injector is not None:
+            self.injector.fire("commit/pre-manifest")
+        dt = time.perf_counter() - t0
+        self._manifest_append({"window": window, "status": COMMITTED,
+                               "n_steps": self.n_steps, "bytes": len(data),
+                               "prove_s": round(dt, 4),
+                               "attempts": res.n_attempts})
+        if self.journal:
+            journal_gc(journal_dir(self.out_dir),
+                       window * self.n_steps, (window + 1) * self.n_steps)
+        self.stats["proved"] += 1
+        self.proofs.append((window, path, len(data), dt))
+
+    def _child_argv(self, window: int) -> List[str]:
+        argv = [sys.executable, "-m", "repro.launch.serve",
+                "--prove-window", str(window), "--out-dir", self.out_dir,
+                "--seed", str(self.rng_seed),
+                "--label", self.label.decode()]
+        if self.verify:
+            argv.append("--verify")
+        return argv
+
+    def _child_env(self) -> Dict[str, str]:
+        env = dict(os.environ)
+        src = os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))))
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        return env
+
+
+# ---------------------------------------------------------------------------
+# Subprocess prove worker + CLI
+# ---------------------------------------------------------------------------
+
+def _prove_window_child(args) -> int:
+    """One isolated prove attempt: rebuild the ProvingKey from vk.bin
+    (warm via the executable cache), load the window's witnesses from
+    the journal, prove, atomically write the proof, hard-exit.  The
+    PARENT commits the manifest line — this process crashing after the
+    proof write therefore cannot double-commit."""
+    from repro.core.pipeline import (ProofSession, compile as zk_compile,
+                                     encode_proof)
+    from repro.core.pipeline.proofio import decode_vk
+    from repro.core.quantfc import QuantConfig
+    from repro.train.checkpoint import atomic_write_bytes
+    from repro.train.resilience import FailureInjector
+
+    injector = FailureInjector.from_env()
+    out = args.out_dir
+    with open(os.path.join(out, "vk.bin"), "rb") as f:
+        vk = decode_vk(f.read())
+    cfg = vk.cfg
+    pk, _ = zk_compile(cfg.graph,
+                       QuantConfig(q_bits=cfg.q_bits, r_bits=cfg.r_bits),
+                       n_steps=cfg.n_steps)
+    w, T = args.prove_window, cfg.n_steps
+    jdir = journal_dir(out)
+    wits = [journal_load(jdir, s) for s in range(w * T, (w + 1) * T)]
+    if injector is not None:
+        injector.fire("prove/mid")
+    rng = np.random.default_rng((args.seed, w))
+    session = ProofSession(pk, rng, label=args.label.encode())
+    for wit in wits:
+        session.add_step(wit)
+    proof = session.prove()
+    if args.verify and not session.verify(proof):
+        print(f"[serve:child] window {w}: proof REJECTED", flush=True)
+        return 1
+    data = encode_proof(proof)
+    atomic_write_bytes(os.path.join(out, f"proof_{w:06d}.bin"), data)
+    print(f"[serve:child] window {w}: {len(data)} B proved", flush=True)
+    # skip interpreter/XLA teardown (known SIGABRT flake) — the proof is
+    # already durable, and the parent reads only files + returncode
+    supervise.hard_exit(0)
+    return 0                              # unreachable
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
-        description="Warm zkDL prover service (synthetic driver)")
+        description="Crash-safe warm zkDL prover service (synthetic driver)")
     ap.add_argument("--widths", default="4,4,4",
                     help="layer-width table d_0..d_L")
     ap.add_argument("--batch", type=int, default=2)
@@ -175,22 +702,48 @@ def main(argv=None) -> int:
     ap.add_argument("--r-bits", type=int, default=4)
     ap.add_argument("--out-dir", default="proofs")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--label", default="zkdl/train")
     ap.add_argument("--verify", action="store_true",
                     help="verify each proof before writing it")
     ap.add_argument("--warm-only", action="store_true",
                     help="compile + warm the executable cache, then exit")
+    ap.add_argument("--queue-size", type=int, default=0,
+                    help="bound the submit queue (0 = unbounded)")
+    ap.add_argument("--backpressure", default="block",
+                    choices=["block", "drop_window"])
+    ap.add_argument("--max-attempts", type=int, default=3)
+    ap.add_argument("--prove-timeout", type=float, default=None)
+    ap.add_argument("--isolation", default="thread",
+                    choices=["thread", "subprocess"])
+    ap.add_argument("--inject", default=None,
+                    help="fault spec point@N[:action],... "
+                         "(ZKDL_FAULTS env works too)")
+    ap.add_argument("--prove-window", type=int, default=None,
+                    help=argparse.SUPPRESS)   # internal: subprocess worker
     args = ap.parse_args(argv)
+
+    if args.prove_window is not None:
+        return _prove_window_child(args)
 
     from repro.core.quantfc import (QuantConfig,
                                     synthetic_sgd_trajectory_widths)
     from repro.core.pipeline import build_fcnn_graph
+    from repro.train.resilience import FailureInjector
 
+    injector = (FailureInjector.from_spec(args.inject) if args.inject
+                else FailureInjector.from_env())
     widths = tuple(int(w) for w in args.widths.split(","))
     quant = QuantConfig(q_bits=args.q_bits, r_bits=args.r_bits)
     graph = build_fcnn_graph(widths, batch=args.batch)
     service = ProverService(graph, quant, n_steps=args.window,
                             out_dir=args.out_dir, verify=args.verify,
-                            rng_seed=args.seed)
+                            rng_seed=args.seed,
+                            label=args.label.encode(),
+                            queue_size=args.queue_size,
+                            backpressure=args.backpressure,
+                            max_attempts=args.max_attempts,
+                            prove_timeout=args.prove_timeout,
+                            isolation=args.isolation, injector=injector)
     service.start(warm=True)
     print(f"[serve] warm in {service.warm_seconds:.1f}s "
           f"(exec cache: {service.warm_stats})", flush=True)
@@ -200,8 +753,13 @@ def main(argv=None) -> int:
 
     wits = synthetic_sgd_trajectory_widths(
         args.steps, widths, args.batch, quant, seed=args.seed)
+    start_at = min(service.next_step, len(wits))
+    if start_at or service.stats["replayed"]:
+        print(f"[serve] resuming at step {start_at} "
+              f"({service.stats['replayed']} journaled steps replayed)",
+              flush=True)
     t0 = time.perf_counter()
-    for step, wit in enumerate(wits):
+    for wit in wits[start_at:]:
         service.submit(wit)
     service.close()
     dt = time.perf_counter() - t0
@@ -209,7 +767,7 @@ def main(argv=None) -> int:
         print(f"[serve] window {window}: {n_bytes} B -> {path} "
               f"({secs:.2f}s)", flush=True)
     print(f"[serve] {service.n_proofs} proofs for {args.steps} steps "
-          f"in {dt:.1f}s total", flush=True)
+          f"in {dt:.1f}s total; stats={service.stats}", flush=True)
     return 0
 
 

@@ -22,6 +22,21 @@ import jax
 import numpy as np
 
 
+def atomic_write_bytes(path: str, data: bytes, fsync: bool = True) -> None:
+    """Single-file form of the checkpoint commit pattern (tmp + rename):
+    readers never observe a torn write, and a crash mid-write leaves only
+    a ``*.tmp.<pid>`` turd, never a half-valid ``path``.  Used by the
+    crash-safe prover service for journal segments, proof files, and
+    vk.bin (`launch/serve.py`)."""
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        if fsync:
+            f.flush()
+            os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
 def _leaf_paths(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = []

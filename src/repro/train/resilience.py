@@ -14,12 +14,27 @@ the compiled graph):
   rescale); here the hook records the event and triggers the caller's
   callback.
 
-* ``FailureInjector`` -- deterministic fault simulation for tests/examples
-  (raise at step k), proving the restart path end-to-end.
+* ``FailureInjector`` -- deterministic fault simulation for tests/examples.
+  Two interfaces: the legacy step trigger (``fail_at_step=k`` +
+  ``check(step)``, used by the training loop) and NAMED FAULT POINTS
+  (``faults={"point": "N[:action]"}`` + ``fire(point)``), used by the
+  crash-safe prover service (`launch/serve.py`) to inject crashes at
+  exact pipeline locations: before/after the journal append, mid-prove,
+  between the proof write and the manifest commit, or a hard worker
+  kill.  Actions: ``raise`` (default, a `SimulatedFailure`), ``kill``
+  (SIGKILL the whole process — a real signal death), ``corrupt-cache``
+  (truncate one on-disk `core/execache` entry, then continue).
+  ``from_env()`` reads ``ZKDL_FAULTS`` so subprocess workers inherit
+  faults, and ``ZKDL_FAULTS_ONCE=<dir>`` makes each fault fire at most
+  once ACROSS processes (markers on disk) — without it a retried
+  subprocess would re-fire the same fault forever.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
+import signal
+import sys
 import time
 from typing import Any, Callable, Dict, List, Optional
 
@@ -87,12 +102,92 @@ class SimulatedFailure(RuntimeError):
 class FailureInjector:
     fail_at_step: Optional[int] = None
     fired: bool = False
+    # named fault points: {"point": "N" | "N:raise" | "N:kill" |
+    # "N:corrupt-cache"} — fire on the N-th (0-based) hit of fire(point)
+    faults: Dict[str, str] = dataclasses.field(default_factory=dict)
+    once_dir: Optional[str] = None      # cross-process fire-once markers
+    counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    events: List[str] = dataclasses.field(default_factory=list)
 
     def check(self, step: int) -> None:
         if (self.fail_at_step is not None and step == self.fail_at_step
                 and not self.fired):
             self.fired = True
             raise SimulatedFailure(f"injected failure at step {step}")
+
+    def fire(self, point: str) -> None:
+        """Hit the named fault point; acts only when a matching spec is
+        armed and this is its N-th hit (and, with ``once_dir``, the
+        fault has not already fired in ANY process)."""
+        hit = self.counts.get(point, 0)
+        self.counts[point] = hit + 1
+        spec = self.faults.get(point)
+        if spec is None:
+            return
+        n_str, _, action = str(spec).partition(":")
+        if hit != int(n_str):
+            return
+        action = action or "raise"
+        if self.once_dir is not None:
+            marker = os.path.join(
+                self.once_dir, f"fired_{point.replace('/', '_')}_{n_str}")
+            if os.path.exists(marker):
+                return
+            os.makedirs(self.once_dir, exist_ok=True)
+            with open(marker, "w") as f:
+                f.write(action)
+        self.events.append(f"{point}#{hit}:{action}")
+        if action == "kill":
+            sys.stdout.flush()
+            sys.stderr.flush()
+            os.kill(os.getpid(), signal.SIGKILL)
+        if action == "corrupt-cache":
+            corrupt_exec_cache_entry()
+            return
+        raise SimulatedFailure(f"injected fault at {point} (hit {hit})")
+
+    @classmethod
+    def from_spec(cls, spec: str,
+                  once_dir: Optional[str] = None) -> "FailureInjector":
+        """Parse ``"point@N[:action][,point2@M[:action]]..."``; a bare
+        ``point`` means ``point@0`` (fire on the first hit)."""
+        faults: Dict[str, str] = {}
+        for part in spec.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            point, _, rest = part.partition("@")
+            faults[point] = rest or "0"
+        return cls(faults=faults, once_dir=once_dir)
+
+    @classmethod
+    def from_env(cls, var: str = "ZKDL_FAULTS"
+                 ) -> Optional["FailureInjector"]:
+        spec = os.environ.get(var, "")
+        if not spec:
+            return None
+        return cls.from_spec(spec,
+                             once_dir=os.environ.get(var + "_ONCE") or None)
+
+
+def corrupt_exec_cache_entry() -> Optional[str]:
+    """Truncate one serialized executable in the on-disk exec cache (the
+    oldest entry by name) to half its size — the ``corrupt-cache`` fault
+    action.  Returns the corrupted path, or None when the cache is
+    disabled/empty.  The cache contract (PR 8) is that such an entry is
+    treated as a MISS: recompiled and rewritten, never a crash."""
+    from repro.core import execache
+    d = execache.cache_dir()
+    if d is None or not os.path.isdir(d):
+        return None
+    entries = sorted(f for f in os.listdir(d) if f.endswith(".pkl"))
+    if not entries:
+        return None
+    path = os.path.join(d, entries[0])
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(max(1, size // 2))
+    return path
 
 
 def run_resilient(train_loop: Callable[[Any, int], Any],

@@ -3,11 +3,9 @@ smoke tests and benches must see exactly 1 device; only launch/dryrun.py
 sets xla_force_host_platform_device_count), plus the quarantine marker +
 centralized retry policy for tests whose SUBPROCESSES die on known
 native (XLA-CPU) signals."""
-import subprocess
-import time
-
 import pytest
 
+from repro.launch.supervise import run_subprocess_supervised
 from repro.util import enable_compilation_cache
 
 enable_compilation_cache()
@@ -46,18 +44,19 @@ def run_flaky_subprocess(request):
     retries = marker.kwargs.get("retries", 3)
 
     def run(argv, attempt_setup=None, **kwargs):
-        proc = None
-        for attempt in range(retries):
-            extra = attempt_setup(attempt) if attempt_setup else []
-            proc = subprocess.run(list(argv) + list(extra), **kwargs)
-            if proc.returncode >= 0:
-                return proc
+        def on_retry(attempt, att):
             print(f"[flaky_subprocess] {request.node.name}: native crash "
-                  f"(rc={proc.returncode}), attempt {attempt + 1}/{retries}")
-            # the native crash is load-sensitive (small-core containers
-            # hit it back-to-back); let the machine settle before retrying
-            if attempt + 1 < retries:
-                time.sleep(2.0 * (attempt + 1))
-        return proc
+                  f"(signal {att.signal}), attempt "
+                  f"{attempt + 1}/{retries}")
+
+        # delegates to the library supervisor (launch/supervise.py) the
+        # prover service uses in production: signal deaths retry with
+        # capped exponential backoff (the native crash is load-sensitive
+        # — let the machine settle), clean exits return immediately
+        res = run_subprocess_supervised(
+            list(argv), max_attempts=retries, attempt_setup=attempt_setup,
+            backoff_base=2.0, backoff_cap=6.0, retry_nonzero=False,
+            retry_timeouts=False, on_retry=on_retry, **kwargs)
+        return res.value
 
     return run

@@ -201,3 +201,45 @@ def test_homomorphic_commitment_matches_direct_sum_commitment(
             el = group.encode_group(coms.slots[name])
         acc = el if acc is None else group.g_mul(acc, el)
     assert group.decode_group(acc) == group.decode_group(direct)
+
+
+def test_cross_slot_claim_swap_rejects():
+    """The adversarial attack the PR 5 soundness argument invites
+    (ROADMAP): the direct-sum one-IPA is only sound because every slot
+    opens against its OWN disjoint generator slice of the unified key.
+    A forger who swaps two slots' commitment vectors (rz <-> rga) — and,
+    in the stronger variant, relocates the claimed openings with them
+    (a3 <-> a5, a7 <-> a8) so each claim still 'matches' its commitment —
+    must be rejected by the merged one-IPA verify: claims cannot be
+    moved between slots even self-consistently."""
+    from repro.core.pipeline import (GraphBuilder, compile as zk_compile,
+                                     decode_proof, encode_proof,
+                                     prove_session, verify_bytes)
+
+    graph = GraphBuilder(batch=2).input(4).dense(4).relu() \
+        .dense(4).relu().output()
+    pk, vk = zk_compile(graph, QC, n_steps=1)
+    wits = synthetic_sgd_trajectory(1, 2, 2, 4, QC, seed=7)
+    raw = encode_proof(prove_session(pk, wits, np.random.default_rng(7)))
+    assert verify_bytes(vk, raw)
+
+    # variant 1: swap only the commitment vectors (key order — and hence
+    # the transcript framing — unchanged; values relocated)
+    forged = decode_proof(raw)
+    slots = dict(forged.coms.slots)
+    slots["rz"], slots["rga"] = slots["rga"], slots["rz"]
+    forged.coms.slots = slots
+    assert not verify_bytes(vk, encode_proof(forged)), \
+        "commitment-swapped proof accepted"
+
+    # variant 2: move the claimed openings along with the commitments —
+    # the self-consistent forgery the disjoint slices must still kill
+    forged = decode_proof(raw)
+    slots = dict(forged.coms.slots)
+    slots["rz"], slots["rga"] = slots["rga"], slots["rz"]
+    forged.coms.slots = slots
+    op = forged.openings
+    op["a3"], op["a5"] = op["a5"], op["a3"]
+    op["a7"], op["a8"] = op["a8"], op["a7"]
+    assert not verify_bytes(vk, encode_proof(forged)), \
+        "claim-relocated cross-slot swap accepted"

@@ -90,7 +90,44 @@ def test_disabled_mode_falls_back_to_jit(monkeypatch):
     np.testing.assert_array_equal(
         np.asarray(fn(jnp.arange(4, dtype=jnp.int32))), [0, 2, 4, 6])
     assert execache.stats() == {"hits": 0, "misses": 0, "disk_hits": 0,
-                                "disk_writes": 0}
+                                "disk_writes": 0, "disk_corrupt": 0}
+
+
+def test_corrupt_disk_entry_is_a_miss_not_a_crash(monkeypatch, tmp_path):
+    """PR 8 robustness contract: a truncated/corrupt serialized
+    executable (crashed writer, bit rot, the chaos harness's
+    ``corrupt-cache`` fault) is treated as a MISS — counted, the bad
+    file dropped, the program recompiled and REWRITTEN so the next cold
+    start loads warm again."""
+    import jax.numpy as jnp
+    from repro.core import execache
+
+    monkeypatch.setenv("ZKDL_EXEC_CACHE", str(tmp_path))
+    fn = execache.wrap("t_corrupt", lambda x: x - 3)
+    execache.reset_stats()
+    x = jnp.arange(6, dtype=jnp.int32)
+    np.testing.assert_array_equal(np.asarray(fn(x)), np.arange(-3, 3))
+    assert execache.stats()["disk_writes"] == 1
+    entries = [f for f in os.listdir(execache.cache_dir())
+               if f.endswith(".exe.pkl")]
+    assert len(entries) == 1
+    path = os.path.join(execache.cache_dir(), entries[0])
+    with open(path, "r+b") as f:
+        f.truncate(os.path.getsize(path) // 2)
+
+    execache.clear()                    # force the disk-load path
+    execache.reset_stats()
+    np.testing.assert_array_equal(np.asarray(fn(x)), np.arange(-3, 3))
+    s = execache.stats()
+    assert s["disk_corrupt"] == 1 and s["misses"] == 1 \
+        and s["disk_hits"] == 0 and s["disk_writes"] == 1, s
+
+    execache.clear()                    # rewritten entry must load clean
+    execache.reset_stats()
+    np.testing.assert_array_equal(np.asarray(fn(x)), np.arange(-3, 3))
+    s = execache.stats()
+    assert s["disk_hits"] == 1 and s["misses"] == 0 \
+        and s["disk_corrupt"] == 0, s
 
 
 def test_tracer_args_inline_into_outer_jit(monkeypatch, tmp_path):

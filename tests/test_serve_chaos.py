@@ -1,0 +1,262 @@
+"""Chaos harness for the crash-safe prover service (PR 8 tentpole).
+
+Every named fault point in `launch/serve.ProverService` gets an injected
+crash; the contract under test is the durability contract from the serve
+docstring:
+
+* a restarted service replays journaled steps and re-emits every
+  non-dropped window,
+* `verify_bytes` passes on every committed proof read back from disk,
+* the manifest records EXACTLY ONE ``COMMITTED`` line per window (the
+  exactly-once audit — a crash between the proof write and the manifest
+  commit must re-prove, not double-commit),
+* journal segments are garbage-collected once their window is terminal,
+* dropped/partial windows are accounted, never silently discarded.
+
+Signal death is covered twice: in-process via the ``worker/kill`` raise
+(worker thread dies mid-pipeline) and for real via subprocess isolation
+with a ``kill`` action (the child SIGKILLs itself mid-prove and the
+supervisor retries).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.quantfc import QuantConfig, synthetic_sgd_trajectory_widths
+from repro.core.pipeline import build_fcnn_graph
+from repro.core.pipeline.proofio import decode_vk
+from repro.core.pipeline.verifier import verify_bytes
+from repro.launch import serve
+from repro.launch.serve import ProverService
+from repro.train.resilience import FailureInjector, SimulatedFailure
+
+QC = QuantConfig(q_bits=16, r_bits=4)
+WIDTHS = (4, 4, 4)
+T = 2
+N_STEPS = 6                      # 3 windows
+LABEL = b"zkdl/train"
+
+
+def _service(out_dir, **kw):
+    return ProverService(build_fcnn_graph(WIDTHS, batch=2), QC, n_steps=T,
+                         out_dir=str(out_dir), rng_seed=5, **kw)
+
+
+def _wits(n=N_STEPS):
+    return synthetic_sgd_trajectory_widths(n, WIDTHS, 2, QC, seed=5)
+
+
+def _drive(service, wits, start=0):
+    """Submit wits[start:]; returns the index where a submit-side crash
+    surfaced (len(wits) = no crash)."""
+    for i in range(start, len(wits)):
+        try:
+            service.submit(wits[i])
+        except (SimulatedFailure, RuntimeError):
+            return i
+    return len(wits)
+
+
+def _assert_contract(out_dir, n_windows, dropped=()):
+    """The chaos acceptance criteria, from disk state alone."""
+    out = str(out_dir)
+    man = serve.read_manifest(out)
+    counts = serve.manifest_commit_counts(out)
+    with open(os.path.join(out, "vk.bin"), "rb") as f:
+        vk = decode_vk(f.read())
+    for w in range(n_windows):
+        if w in dropped:
+            assert man[w]["status"] == serve.DROPPED
+            assert counts.get(w, 0) == 0
+            continue
+        assert man.get(w, {}).get("status") == serve.COMMITTED, \
+            f"window {w}: {man.get(w)}"
+        assert counts[w] == 1, f"window {w} committed {counts[w]} times"
+        with open(os.path.join(out, f"proof_{w:06d}.bin"), "rb") as f:
+            raw = f.read()
+        assert verify_bytes(vk, raw, label=LABEL), f"window {w} rejected"
+    assert serve.journal_steps(serve.journal_dir(out)) == [], \
+        "terminal windows left journal segments behind"
+
+
+# ---------------------------------------------------------------------------
+# Crash at every fault point -> restart -> exactly-once commit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fault", [
+    "submit/journal-pre@2",       # crash before the witness is durable
+    "submit/journal-post@3",      # crash after journal, before enqueue
+    "prove/mid@1",                # transient mid-prove failure (retried)
+    "commit/pre-manifest@0",      # proof written, manifest commit lost
+    "worker/kill@1",              # worker dies wholesale mid-pipeline
+    "prove/mid@1:corrupt-cache",  # cache corruption mid-run: no effect
+])
+def test_crash_then_restart_commits_every_window_once(tmp_path, fault):
+    wits = _wits()
+    svc = _service(tmp_path, injector=FailureInjector.from_spec(fault))
+    svc.start(warm=False)
+    _drive(svc, wits)
+    try:
+        svc.close(timeout=600)
+    except (SimulatedFailure, RuntimeError, TimeoutError):
+        pass                      # worker-side faults surface here
+    # restart against the same out-dir, fault-free: replay + resume
+    svc2 = _service(tmp_path)
+    svc2.start(warm=False)
+    _drive(svc2, wits, start=min(svc2.next_step, len(wits)))
+    svc2.close(timeout=600)
+    _assert_contract(tmp_path, 3)
+    if fault == "prove/mid@1":
+        # the transient failure was retried in-place, not restarted
+        man = serve.read_manifest(str(tmp_path))
+        assert man[1]["attempts"] == 2
+
+
+def test_exhausted_retries_mark_failed_and_keep_going(tmp_path):
+    """Every attempt at window 0 fails -> FAILED in the manifest, and the
+    worker proves window 1 instead of wedging the queue."""
+    class FirstTwoHits(FailureInjector):
+        def fire(self, point):
+            self.counts[point] = self.counts.get(point, 0) + 1
+            if point == "prove/mid" and self.counts[point] <= 2:
+                raise SimulatedFailure(f"injected {point} "
+                                       f"hit {self.counts[point]}")
+
+    svc = _service(tmp_path, max_attempts=2, backoff_base=0.01,
+                   injector=FirstTwoHits())
+    svc.start(warm=False)
+    for wit in _wits(4):
+        svc.submit(wit)
+    svc.close(timeout=600)
+    man = serve.read_manifest(str(tmp_path))
+    assert man[0]["status"] == serve.FAILED
+    assert man[0]["attempts"] == 2
+    assert man[1]["status"] == serve.COMMITTED
+    assert svc.stats["failed_windows"] == 1
+    assert svc.stats["retries"] >= 1
+    # FAILED is terminal: a restart resumes AFTER it, not inside it
+    svc2 = _service(tmp_path)
+    svc2.start(warm=False)
+    assert svc2.next_step == 4
+
+
+def test_backpressure_drop_window_accounting(tmp_path):
+    """A wedged prover with a bounded queue sheds the newest window:
+    DROPPED in the manifest, journal GC'd, stats accounted — and
+    training's submit() never blocks."""
+    svc = _service(tmp_path, queue_size=2, backpressure="drop_window",
+                   max_attempts=2, backoff_base=3.0, backoff_cap=3.0,
+                   injector=FailureInjector.from_spec("prove/mid@0"))
+    svc.start(warm=False)
+    wits = _wits()
+    svc.submit(wits[0])
+    svc.submit(wits[1])
+    # wait until the worker owns window 0 (queue drained) and is inside
+    # its failing first attempt (then it sleeps ~3s of backoff)
+    deadline = 600
+    import time
+    t0 = time.time()
+    while svc._queue.qsize() > 0 and time.time() - t0 < deadline:
+        time.sleep(0.01)
+    time.sleep(0.3)
+    for wit in wits[2:]:          # window 1 fills the queue, window 2 drops
+        svc.submit(wit)
+    svc.close(timeout=600)
+    assert svc.stats["dropped_windows"] == 1
+    assert svc.stats["dropped_steps"] == 2
+    _assert_contract(tmp_path, 3, dropped={2})
+    man = serve.read_manifest(str(tmp_path))
+    assert man[2]["reason"] == "backpressure"
+
+
+def test_close_handles_dead_worker_without_hanging(tmp_path):
+    """Satellite: close() after a worker death must bound its join,
+    surface the original error, and leave the journal intact for the
+    next run."""
+    svc = _service(tmp_path, max_attempts=1,
+                   injector=FailureInjector.from_spec("worker/kill@0"))
+    svc.start(warm=False)
+    wits = _wits(4)
+    _drive(svc, wits)
+    with pytest.raises(SimulatedFailure):
+        svc.close(timeout=60)
+    # every journaled step survived for the restart
+    assert serve.journal_steps(serve.journal_dir(str(tmp_path))) != []
+    svc2 = _service(tmp_path)
+    svc2.start(warm=False)
+    _drive(svc2, wits, start=min(svc2.next_step, len(wits)))
+    svc2.close(timeout=600)
+    _assert_contract(tmp_path, 2)
+
+
+def test_partial_trailing_window_reported_not_discarded(tmp_path):
+    """Satellite: a trailing window short of T steps is reported as
+    PARTIAL (stats + manifest) and its journal segments are retained;
+    the restarted service finishes the window."""
+    svc = _service(tmp_path)
+    svc.start(warm=False)
+    wits = _wits(3)               # 1 full window + 1 trailing step
+    for wit in wits:
+        svc.submit(wit)
+    svc.close(timeout=600)
+    man = serve.read_manifest(str(tmp_path))
+    assert man[0]["status"] == serve.COMMITTED
+    assert man[1]["status"] == serve.PARTIAL
+    assert man[1]["n_steps"] == 1 and man[1]["of"] == T
+    assert svc.stats["partial_steps"] == 1
+    assert serve.journal_steps(serve.journal_dir(str(tmp_path))) == [2]
+    svc2 = _service(tmp_path)
+    svc2.start(warm=False)
+    assert svc2.next_step == 3
+    svc2.submit(_wits(4)[3])
+    svc2.close(timeout=600)
+    _assert_contract(tmp_path, 2)
+
+
+def test_corrupt_journal_segment_fails_window_not_service(tmp_path):
+    """A torn/corrupt journal segment marks ITS window FAILED on
+    recovery; the service still starts and proves new windows."""
+    svc = _service(tmp_path)
+    svc.start(warm=False)
+    wits = _wits(4)
+    for wit in wits[:3]:
+        svc.submit(wit)
+    svc.close(timeout=600)        # window 0 committed, step 2 journaled
+    seg = os.path.join(serve.journal_dir(str(tmp_path)), "step_00000002.npz")
+    with open(seg, "r+b") as f:
+        f.truncate(max(1, os.path.getsize(seg) // 3))
+    svc2 = _service(tmp_path)
+    svc2.start(warm=False)
+    man = serve.read_manifest(str(tmp_path))
+    assert man[1]["status"] == serve.FAILED
+    assert "journal" in man[1]["error"]
+    assert svc2.next_step == 4    # FAILED window is terminal
+    for wit in _wits(6)[4:]:
+        svc2.submit(wit)
+    svc2.close(timeout=600)
+    man = serve.read_manifest(str(tmp_path))
+    assert man[2]["status"] == serve.COMMITTED
+
+
+def test_subprocess_isolation_survives_signal_death(tmp_path, monkeypatch):
+    """The real signal-death path: each prove attempt is a subprocess;
+    the first child SIGKILLs itself mid-prove (a genuine negative
+    returncode), the supervisor retries, and the retry — seeing the
+    cross-process once-marker — proves and commits exactly once."""
+    from repro.core import execache
+    if not (execache.enabled() and execache.cache_dir() is not None):
+        pytest.skip("subprocess worker needs the executable disk cache")
+    monkeypatch.setenv("ZKDL_FAULTS", "prove/mid@0:kill")
+    monkeypatch.setenv("ZKDL_FAULTS_ONCE", str(tmp_path / "fired"))
+    out = tmp_path / "out"
+    svc = _service(out, isolation="subprocess", max_attempts=3,
+                   backoff_base=0.1, prove_timeout=1200)
+    svc.start(warm=True)          # populates the disk cache for children
+    for wit in _wits(2):
+        svc.submit(wit)
+    svc.close(timeout=1200)
+    _assert_contract(out, 1)
+    man = serve.read_manifest(str(out))
+    assert man[0]["attempts"] == 2, man[0]
+    assert svc.stats["retries"] == 1

@@ -1,0 +1,143 @@
+"""Unit contracts for `launch/supervise` — the retry/backoff library the
+crash-safe prover service and conftest's flaky-subprocess quarantine
+both run on.  The policy split under test: signal deaths and timeouts
+are infrastructure failures (retried), clean nonzero exits are
+deliberate failures (surfaced immediately unless opted in)."""
+import os
+import signal
+import sys
+
+import pytest
+
+from repro.launch import supervise
+
+
+# ---------------------------------------------------------------------------
+# In-process supervisor
+# ---------------------------------------------------------------------------
+
+def test_backoff_schedule_is_capped_exponential():
+    assert supervise.backoff_delays(5, base=0.1, cap=0.5) == \
+        [0.1, 0.2, 0.4, 0.5, 0.5]
+    assert supervise.backoff_delays(0) == []
+
+
+def test_run_supervised_first_try_success():
+    res = supervise.run_supervised(lambda: 42)
+    assert res.ok and res.value == 42
+    assert res.n_attempts == 1 and res.error is None
+    assert res.attempts[0].error is None
+
+
+def test_run_supervised_retries_then_succeeds():
+    calls = {"n": 0}
+    slept = []
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError(f"boom {calls['n']}")
+        return "ok"
+
+    res = supervise.run_supervised(flaky, max_attempts=4,
+                                   backoff_base=0.1, backoff_cap=0.15,
+                                   sleep=slept.append)
+    assert res.ok and res.value == "ok"
+    assert res.n_attempts == 3
+    assert [a.error for a in res.attempts[:2]] == \
+        ["RuntimeError: boom 1", "RuntimeError: boom 2"]
+    assert slept == [0.1, 0.15]          # capped exponential
+
+
+def test_run_supervised_exhausts_and_keeps_last_error():
+    retries = []
+    res = supervise.run_supervised(
+        lambda: (_ for _ in ()).throw(ValueError("always")),
+        max_attempts=3, sleep=lambda _: None,
+        on_retry=lambda i, exc: retries.append(i))
+    assert not res.ok and res.value is None
+    assert isinstance(res.error, ValueError)
+    assert res.n_attempts == 3 and res.last_error == "ValueError: always"
+    assert retries == [0, 1]             # no retry after the final attempt
+
+
+def test_run_supervised_retry_on_filter():
+    """Exceptions outside retry_on propagate on the first attempt."""
+    with pytest.raises(KeyError):
+        supervise.run_supervised(
+            lambda: (_ for _ in ()).throw(KeyError("nope")),
+            retry_on=(ValueError,), sleep=lambda _: None)
+
+
+# ---------------------------------------------------------------------------
+# Subprocess supervisor
+# ---------------------------------------------------------------------------
+
+def _child_argv(code):
+    return [sys.executable, "-c", code]
+
+
+def test_subprocess_clean_success():
+    res = supervise.run_subprocess_supervised(
+        _child_argv("print('hi')"), capture_output=True, text=True)
+    assert res.ok and res.n_attempts == 1
+    assert res.value.stdout.strip() == "hi"
+
+
+def test_subprocess_signal_death_retried(tmp_path):
+    """The child SIGKILLs itself unless the marker exists; attempt_setup
+    drops the marker before the second try — the supervisor must retry
+    the signal death and report it in the attempt log."""
+    marker = tmp_path / "alive"
+    code = (f"import os, signal, sys\n"
+            f"if not os.path.exists({str(marker)!r}):\n"
+            f"    os.kill(os.getpid(), signal.SIGKILL)\n"
+            f"print('survived')\n")
+
+    def setup(attempt):
+        if attempt == 1:
+            marker.write_text("ok")
+        return []
+
+    res = supervise.run_subprocess_supervised(
+        _child_argv(code), max_attempts=3, attempt_setup=setup,
+        backoff_base=0.01, backoff_cap=0.01,
+        capture_output=True, text=True)
+    assert res.ok and res.n_attempts == 2
+    assert res.attempts[0].signal == signal.SIGKILL
+    assert res.value.stdout.strip() == "survived"
+
+
+def test_subprocess_clean_nonzero_not_retried_by_default():
+    res = supervise.run_subprocess_supervised(
+        _child_argv("import sys; sys.exit(3)"), max_attempts=5,
+        capture_output=True, text=True)
+    assert not res.ok and res.n_attempts == 1
+    assert res.value.returncode == 3 and res.attempts[0].signal is None
+
+
+def test_subprocess_retry_nonzero_opt_in():
+    res = supervise.run_subprocess_supervised(
+        _child_argv("import sys; sys.exit(3)"), max_attempts=2,
+        retry_nonzero=True, backoff_base=0.01, backoff_cap=0.01,
+        capture_output=True, text=True)
+    assert not res.ok and res.n_attempts == 2
+    assert res.last_error == "exit 3"
+
+
+def test_subprocess_timeout_retried_then_exhausted():
+    res = supervise.run_subprocess_supervised(
+        _child_argv("import time; time.sleep(60)"), max_attempts=2,
+        timeout=0.5, backoff_base=0.01, backoff_cap=0.01,
+        capture_output=True)
+    assert not res.ok and res.n_attempts == 2
+    assert all(a.timed_out for a in res.attempts)
+    assert res.value is None             # no attempt ever completed
+
+
+def test_subprocess_timeout_propagates_when_opted_out():
+    import subprocess
+    with pytest.raises(subprocess.TimeoutExpired):
+        supervise.run_subprocess_supervised(
+            _child_argv("import time; time.sleep(60)"), max_attempts=3,
+            timeout=0.5, retry_timeouts=False, capture_output=True)
