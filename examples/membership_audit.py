@@ -1,8 +1,13 @@
-"""Data-copyright audit (Section 4.4 + Appendix B): a copyright owner
-queries whether their data points were in the committed training set and
-verifies the trainer's Merkle (non-)membership proofs.
+"""Data-copyright audit (Section 4.4 + Appendix B) on REAL proof bytes.
 
-    PYTHONPATH=src python examples/membership_audit.py [--n-data 5000]
+End-to-end `repro.audit` flow: a trainer proves two aggregation windows,
+binds the per-sample commitments carried in each proof into a
+sparse-Merkle dataset root (`DatasetBinding`), and a data owner audits
+"were my committed samples used — and in which window?" purely from
+serialized artifacts: the binding, the audit, and a window's proof
+bytes.
+
+    PYTHONPATH=src python examples/membership_audit.py [--hash sha256]
 """
 import argparse
 import time
@@ -12,50 +17,87 @@ import numpy as np
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--n-data", type=int, default=2000)
-    ap.add_argument("--n-query", type=int, default=20)
     ap.add_argument("--hash", default="sha256",
                     choices=["md5", "sha1", "sha256"])
+    ap.add_argument("--steps", type=int, default=2,
+                    help="T: training steps aggregated per window")
     args = ap.parse_args()
 
-    from repro.core import merkle
+    from repro.util import enable_compilation_cache
+    enable_compilation_cache()
+    from repro.audit import membership as mem
+    from repro.core.pipeline import (build_fcnn_graph,
+                                     compile as zk_compile, encode_proof,
+                                     prove_session, verify_bytes)
+    from repro.core.pipeline.tables import rand_scalar
+    from repro.core.quantfc import (QuantConfig,
+                                    synthetic_sgd_trajectory_widths)
 
-    rng = np.random.default_rng(0)
-    # per-sample deterministic Pedersen commitments stand in as 32B digests
-    dataset = [rng.bytes(32) for _ in range(args.n_data)]
-
+    widths, batch, qc = (4, 4, 4), 2, QuantConfig(q_bits=16, r_bits=4)
     t0 = time.time()
-    tree = merkle.MerkleTree(dataset, args.hash)
-    print(f"[audit] trainer built Merkle tree over {args.n_data} committed "
-          f"samples in {time.time()-t0:.1f}s (root published + endorsed)")
+    pk, vk = zk_compile(build_fcnn_graph(widths, batch=batch), qc,
+                        n_steps=args.steps)
+    print(f"[audit] compiled T={args.steps} window in {time.time()-t0:.1f}s")
 
-    # the copyright owner queries a mix: half in the set, half not
-    owned_in = dataset[: args.n_query // 2]
-    owned_out = [rng.bytes(32) for _ in range(args.n_query
-                                              - args.n_query // 2)]
-    queried = owned_in + owned_out
+    # the trainer proves two windows of a real SGD trajectory
+    raws = []
+    for w in range(2):
+        wits = synthetic_sgd_trajectory_widths(args.steps, widths, batch,
+                                               qc, seed=7 + w)
+        t0 = time.time()
+        raws.append(encode_proof(prove_session(
+            pk, wits, np.random.default_rng(7 + w))))
+        assert verify_bytes(vk, raws[w])
+        print(f"[audit] window {w}: {len(raws[w])} B proof in "
+              f"{time.time()-t0:.1f}s ({args.steps * batch} samples)")
 
+    # ... and binds every window's sample commitments into ONE root
     t0 = time.time()
-    proof = tree.prove_membership(queried)
-    print(f"[audit] trainer answered {len(queried)} queries in "
-          f"{(time.time()-t0)*1e3:.1f} ms; proof = {proof.size_nodes()} "
-          f"hash values")
+    tree, binding = mem.build_binding(
+        {w: mem.sample_coms(raw) for w, raw in enumerate(raws)},
+        hash_name=args.hash)
+    print(f"[audit] dataset root {binding.root.hex()[:16]}... bound "
+          f"({binding.n_samples} samples, {len(binding.to_bytes())} B "
+          f"binding) in {(time.time()-t0)*1e3:.1f} ms")
 
+    # the data owner queries: trained-on samples from both windows plus
+    # held-out samples they committed but never handed to the trainer
+    rng = np.random.default_rng(99)
+    lim = 1 << (qc.q_bits - 1)
+    held_out = [mem.com_to_bytes(mem.commit_sample(
+        pk, rng.integers(-lim, lim, size=pk.keys.kx.n), rand_scalar(rng)))
+        for _ in range(3)]
+    queried = ([mem.com_to_bytes(c) for c in mem.sample_coms(raws[0])[:2]]
+               + [mem.com_to_bytes(c)
+                  for c in mem.sample_coms(raws[1])[:2]] + held_out)
+
+    audit = mem.prove_membership(tree, binding, 0, queried)
     t0 = time.time()
-    ok = merkle.verify_membership(queried, tree.root, proof, args.hash)
+    verdict = mem.verify_membership(
+        mem.DatasetBinding.from_bytes(binding.to_bytes()),
+        mem.MembershipAudit.from_bytes(audit.to_bytes()),
+        proof_bytes=raws[0], vk=vk)
     dt = (time.time() - t0) * 1e3
-    print(f"[audit] owner verified in {dt:.2f} ms -> "
-          f"{'ACCEPT' if ok else 'REJECT'}")
-    assert ok
-    print(f"[audit] members found: {len(proof.included)}, "
-          f"non-members: {len(proof.excluded)} (ground truth "
-          f"{len(owned_in)}/{len(owned_out)})")
+    assert verdict.ok, verdict.reason
+    print(f"[audit] owner verified from bytes in {dt:.1f} ms -> ACCEPT: "
+          f"{verdict.n_members}/{len(queried)} in dataset, "
+          f"{verdict.n_window_members} used in window 0 "
+          f"(ground truth 4 / 2)")
+    assert verdict.n_members == 4 and verdict.n_window_members == 2
 
-    # the trainer cannot lie: flip one answer and the proof fails
-    h = merkle.hash_bits(owned_in[0], args.hash)
-    proof.included.remove(h)
-    proof.excluded.append(h)
-    assert not merkle.verify_membership(queried, tree.root, proof, args.hash)
+    # the trainer cannot replay another window's proof for the claim
+    replay = mem.verify_membership(binding, audit, proof_bytes=raws[1],
+                                   vk=vk)
+    assert not replay.ok
+    print(f"[audit] cross-window replay rejected ({replay.reason})")
+
+    # ... nor flip a membership answer
+    h = mem.merkle.hash_bits(queried[0], args.hash)
+    forged = mem.MembershipAudit.from_bytes(audit.to_bytes())
+    forged.proof.included.remove(h)
+    forged.proof.excluded.append(h)
+    assert not mem.verify_membership(binding, forged,
+                                     proof_bytes=raws[0], vk=vk).ok
     print("[audit] forged answer rejected (soundness check). done.")
 
 

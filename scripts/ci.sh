@@ -176,6 +176,8 @@ python - "$CHAOS_DIR" <<'PY'
 import os, sys
 
 from repro.launch import serve
+from repro.audit.membership import bind_service_dir, verify_membership, \
+    prove_membership, com_to_bytes, sample_coms
 from repro.core.pipeline.proofio import decode_vk
 from repro.core.pipeline.verifier import verify_bytes
 
@@ -195,4 +197,30 @@ assert serve.journal_steps(serve.journal_dir(out)) == [], \
     "ci: journal not GC'd after commits"
 print("ci: chaos smoke ok (SIGKILL -> restart -> 3/3 windows verify, "
       "no duplicate commits, no manifest gaps)")
+# bind the crash-recovered run's windows into a dataset root and audit
+# a trained-on sample from the service artifacts alone — membership
+# must survive the same durability story the proofs do
+tree, binding = bind_service_dir(out)
+assert os.path.exists(os.path.join(out, "dataset.bin"))
+raw0 = open(os.path.join(out, "proof_000000.bin"), "rb").read()
+q = [com_to_bytes(sample_coms(raw0)[0])]
+v = verify_membership(binding, prove_membership(tree, binding, 0, q),
+                      proof_bytes=raw0, vk=vk, label=b"zkdl/train")
+assert v.ok and v.n_window_members == 1, \
+    f"ci: service membership audit failed: {v.reason}"
+assert not verify_membership(
+    binding, prove_membership(tree, binding, 1, q),
+    proof_bytes=raw0, vk=vk, label=b"zkdl/train").ok, \
+    "ci: cross-window replay accepted by service binding"
+print("ci: service dataset binding ok (root bound, member verified, "
+      "cross-window replay rejected)")
 PY
+
+# adversarial soundness battery + membership audit (repro.audit): every
+# structured forgery — spoofed SGD trajectory, cross-slot claim swaps
+# inside the merged one-IPA, replay/splicing, zkReLU validity-table
+# forgeries — must be REJECTED, and the data-membership audit must
+# round-trip from bytes through a fresh verifier process.  The process
+# exit status gates on zero accepted forgeries; the report is evidence.
+python -m repro.audit run --smoke --out "$SMOKE_DIR/AUDIT_report.json" \
+    --dir "$SMOKE_DIR/audit"

@@ -1,0 +1,34 @@
+"""repro.audit — the verifier-side counterpart to the prover pipeline.
+
+Three layers (ISSUE 9):
+
+* ``attacks``    — a registry of structured adversaries over
+  ``(witness trajectory, ProvingKey, proof bytes, vk)``, every one of
+  which must be REJECTED by ``verify_bytes``;
+* ``membership`` — the Section 4.4 data-membership audit revived onto
+  the v3 proof format: bind per-step ``com_x`` sample commitments into
+  a sparse-Merkle dataset root (``DatasetBinding``) and answer "were
+  these committed samples used in window W" from bytes alone;
+* ``report``     — ``python -m repro.audit run``: the full battery
+  against a freshly proved model, producing ``AUDIT_report.json`` that
+  CI gates on 100% rejection.
+"""
+from repro.audit.attacks import (ATTACKS, AttackContext, AttackOutcome,
+                                 build_context, run_attack, run_battery)
+from repro.audit.membership import (DatasetBinding, MembershipAudit,
+                                    MembershipVerdict, QueryResult,
+                                    WindowSpan, bind_service_dir,
+                                    build_binding, com_to_bytes,
+                                    commit_sample, prove_membership,
+                                    sample_coms, verify_membership)
+from repro.audit.report import run_audit, validate_report
+
+__all__ = [
+    "ATTACKS", "AttackContext", "AttackOutcome", "build_context",
+    "run_attack", "run_battery",
+    "DatasetBinding", "MembershipAudit", "MembershipVerdict",
+    "QueryResult", "WindowSpan", "bind_service_dir", "build_binding",
+    "com_to_bytes", "commit_sample", "prove_membership", "sample_coms",
+    "verify_membership",
+    "run_audit", "validate_report",
+]

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import struct
 from typing import Dict, Iterable, List, Optional, Set, Tuple
 
 EPSILON = b""
@@ -89,6 +90,47 @@ def merkle_root(values: Dict[str, bytes], hash_name: str) -> bytes:
     return work[""]
 
 
+def _pack_id(bits: str) -> bytes:
+    """Bit-string node id -> (u16 bit length, MSB-first packed bytes)."""
+    nbits = len(bits)
+    padded = bits + "0" * (-nbits % 8)
+    packed = bytes(int(padded[i:i + 8], 2) for i in range(0, len(padded), 8))
+    return struct.pack("<H", nbits) + packed
+
+
+class MembershipProofDecodeError(ValueError):
+    pass
+
+
+class _ProofReader:
+    def __init__(self, data: bytes):
+        self.data = data
+        self.off = 0
+
+    def take(self, n: int) -> bytes:
+        if self.off + n > len(self.data):
+            raise MembershipProofDecodeError("truncated membership proof")
+        out = self.data[self.off:self.off + n]
+        self.off += n
+        return out
+
+    def u16(self) -> int:
+        return struct.unpack("<H", self.take(2))[0]
+
+    def u32(self) -> int:
+        return struct.unpack("<I", self.take(4))[0]
+
+    def node_id(self) -> str:
+        nbits = self.u16()
+        packed = self.take((nbits + 7) // 8)
+        bits = "".join(f"{b:08b}" for b in packed)
+        return bits[:nbits]
+
+
+MEMBERSHIP_PROOF_MAGIC = b"ZKMP"
+MEMBERSHIP_PROOF_VERSION = 1
+
+
 @dataclasses.dataclass
 class MembershipProof:
     """Protocol 3 output: hashes split by membership + released node values."""
@@ -99,6 +141,43 @@ class MembershipProof:
 
     def size_nodes(self) -> int:
         return len(self.node_values) + len(self.frontier_exc)
+
+    def to_bytes(self) -> bytes:
+        """Canonical encoding so audits verify in a fresh process from
+        bytes alone (node ids are bit strings; values are raw bytes)."""
+        out = [MEMBERSHIP_PROOF_MAGIC,
+               struct.pack("<H", MEMBERSHIP_PROOF_VERSION)]
+        for group in (self.included, self.excluded, self.frontier_exc):
+            out.append(struct.pack("<I", len(group)))
+            out.extend(_pack_id(h) for h in group)
+        out.append(struct.pack("<I", len(self.node_values)))
+        for nid in sorted(self.node_values):
+            val = self.node_values[nid]
+            out.append(_pack_id(nid))
+            out.append(struct.pack("<I", len(val)))
+            out.append(val)
+        return b"".join(out)
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "MembershipProof":
+        r = _ProofReader(data)
+        if r.take(4) != MEMBERSHIP_PROOF_MAGIC:
+            raise MembershipProofDecodeError("bad membership-proof magic")
+        ver = r.u16()
+        if ver != MEMBERSHIP_PROOF_VERSION:
+            raise MembershipProofDecodeError(
+                f"unsupported membership-proof version {ver}")
+        groups = []
+        for _ in range(3):
+            groups.append([r.node_id() for _ in range(r.u32())])
+        node_values: Dict[str, bytes] = {}
+        for _ in range(r.u32()):
+            nid = r.node_id()
+            node_values[nid] = r.take(r.u32())
+        if r.off != len(data):
+            raise MembershipProofDecodeError("trailing bytes")
+        return cls(included=groups[0], excluded=groups[1],
+                   frontier_exc=groups[2], node_values=node_values)
 
 
 class MerkleTree:
@@ -134,19 +213,22 @@ class MerkleTree:
         return out
 
     def _fill(self, values: Dict[str, bytes]) -> Dict[str, bytes]:
+        # bucket nodes by depth once and sweep bottom-up: each node is
+        # touched O(1) times (the per-level rescan of the whole pending
+        # set made dataset-scale trees quadratic in practice)
         out = dict(values)
-        nodes = sorted(out, key=len, reverse=True)
-        pending = set(nodes)
-        depth = max((len(n) for n in nodes), default=0)
-        for k in range(depth, 0, -1):
-            for s in [n for n in pending if len(n) == k]:
+        by_len: Dict[int, List[str]] = {}
+        for n in out:
+            by_len.setdefault(len(n), []).append(n)
+        for k in range(max(by_len, default=0), 0, -1):
+            for s in by_len.get(k, ()):
                 parent = s[:-1]
                 sib = parent + ("1" if s[-1] == "0" else "0")
                 if parent in out or sib not in out:
                     continue
                 l_, r_ = (s, sib) if s[-1] == "0" else (sib, s)
                 out[parent] = _node_hash(out[l_], out[r_], self.hash_name)
-                pending.add(parent)
+                by_len.setdefault(k - 1, []).append(parent)
         return out
 
     # -- Protocol 3 ---------------------------------------------------------
@@ -156,7 +238,10 @@ class MerkleTree:
         exc = [h for h in h_e if h not in self.leaves]
         f_exc: Set[str] = set()
         for h in exc:
-            pre = next((f for f in self.frontier if h.startswith(f)), None)
+            # walk h's prefixes instead of scanning the frontier set
+            # (the frontier holds ~n*hash_bits nodes at dataset scale)
+            pre = next((h[:i] for i in range(1, len(h) + 1)
+                        if h[:i] in self.frontier), None)
             if pre is None:
                 raise AssertionError("frontier must cover every non-member")
             f_exc.add(pre)

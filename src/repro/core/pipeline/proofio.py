@@ -356,7 +356,21 @@ def encode_vk(vk) -> bytes:
     return out.getvalue()
 
 
-def decode_vk(data: bytes):
+# Resource bound on vk-declared geometry (PR-8 fuzz finding): the vk is
+# a TRUSTED input in the protocol, but `decode_vk` is reachable from
+# attacker-supplied bytes in deployments that fetch vks by reference.
+# Key material re-derives from the declared geometry, so a mutated vk
+# claiming a huge graph turns `make_keys` into an unbounded hash-to-
+# curve workload.  `cfg.merged_len` is pure arithmetic over the
+# geometry (every derived basis — slot keys, the unified agg key, the
+# zkReLU bases, the merged IPA key — is a slice of, or smaller than,
+# the merged basis), so one cap on it bounds ALL generator derivation.
+# 1<<22 generators is ~100x the largest geometry the benchmarks prove
+# and already represents minutes of derivation work.
+VK_MAX_MERGED_LEN = 1 << 22
+
+
+def decode_vk(data: bytes, max_merged_len: int = VK_MAX_MERGED_LEN):
     """Bytes -> `VerifyingKey` (generators derive lazily on first use)."""
     from repro.core.pipeline.api import VerifyingKey
     from repro.core.pipeline.config import PipelineConfig
@@ -390,4 +404,8 @@ def decode_vk(data: bytes):
         # (tests/test_proofio_fuzz.py) holds this to "ProofDecodeError
         # or clean verify-reject, never a crash"
         raise ProofDecodeError(f"invalid graph in vk: {exc}") from exc
+    if cfg.merged_len > max_merged_len:
+        raise ProofDecodeError(
+            f"vk geometry implies a {cfg.merged_len}-generator merged key "
+            f"(cap {max_merged_len}): refusing key derivation")
     return VerifyingKey(cfg=cfg)

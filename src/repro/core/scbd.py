@@ -21,6 +21,7 @@ PROTOCOL difference, not the arithmetic substrate.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import List
 
 import jax.numpy as jnp
@@ -57,6 +58,27 @@ class ScbdProof:
             n += sum(len(m) for m in sc.messages)
         n += len(self.main_finals) + len(self.bin_finals)
         return 32 * n
+
+    def proof_ints(self) -> List[int]:
+        """Canonical flat integer encoding (length-prefixed sections) —
+        the basis of the golden digest pin that guards the transcript
+        domains against silent drift."""
+        out = [self.claim]
+        for sc in (self.sc_main, self.sc_bin):
+            out.append(len(sc.messages))
+            for msg in sc.messages:
+                out.append(len(msg))
+                out.extend(int(v) for v in msg)
+        for finals in (self.main_finals, self.bin_finals):
+            out.append(len(finals))
+            out.extend(int(v) for v in finals)
+        return out
+
+    def digest(self) -> str:
+        h = hashlib.sha256()
+        for v in self.proof_ints():
+            h.update(int(v).to_bytes(32, "little"))
+        return h.hexdigest()
 
 
 def _s_weights(q_bits: int) -> List[int]:

@@ -614,8 +614,15 @@ class ProverService:
         if self.injector is not None:
             self.injector.fire("commit/pre-manifest")
         dt = time.perf_counter() - t0
+        batch = self.pk.keys.cfg.batch
         self._manifest_append({"window": window, "status": COMMITTED,
                                "n_steps": self.n_steps, "bytes": len(data),
+                               # global sample-index range [start, count]
+                               # of the window's per-sample commitments —
+                               # the membership audit (repro.audit) binds
+                               # these into the dataset root
+                               "samples": [window * self.n_steps * batch,
+                                           self.n_steps * batch],
                                "prove_s": round(dt, 4),
                                "attempts": res.n_attempts})
         if self.journal:
@@ -718,6 +725,10 @@ def main(argv=None) -> int:
     ap.add_argument("--inject", default=None,
                     help="fault spec point@N[:action],... "
                          "(ZKDL_FAULTS env works too)")
+    ap.add_argument("--bind-dataset", action="store_true",
+                    help="after the run, bind every COMMITTED window's "
+                         "sample commitments into dataset.bin "
+                         "(repro.audit membership root)")
     ap.add_argument("--prove-window", type=int, default=None,
                     help=argparse.SUPPRESS)   # internal: subprocess worker
     args = ap.parse_args(argv)
@@ -768,6 +779,13 @@ def main(argv=None) -> int:
               f"({secs:.2f}s)", flush=True)
     print(f"[serve] {service.n_proofs} proofs for {args.steps} steps "
           f"in {dt:.1f}s total; stats={service.stats}", flush=True)
+    if args.bind_dataset:
+        from repro.audit.membership import bind_service_dir
+        _, binding = bind_service_dir(args.out_dir)
+        print(f"[serve] dataset root {binding.root.hex()} "
+              f"({binding.n_samples} samples across "
+              f"{len(binding.windows)} windows) -> "
+              f"{os.path.join(args.out_dir, 'dataset.bin')}", flush=True)
     return 0
 
 

@@ -1,0 +1,27 @@
+"""Collection-time import smoke for the whole benchmarks/ directory:
+every module must import cleanly under the post-zkdl API (stale
+references to retired modules fail here, not at benchmark time)."""
+import importlib
+import pathlib
+import sys
+
+import pytest
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH_DIR = REPO_ROOT / "benchmarks"
+MODULES = sorted(p.stem for p in BENCH_DIR.glob("*.py"))
+
+
+@pytest.mark.parametrize("name", MODULES)
+def test_benchmark_module_imports(name):
+    if str(REPO_ROOT) not in sys.path:
+        sys.path.insert(0, str(REPO_ROOT))
+    mod = importlib.import_module(f"benchmarks.{name}")
+    assert mod.__file__ and "benchmarks" in mod.__file__
+
+
+def test_all_benchmarks_collected():
+    # the sweep is only meaningful if it actually sees the directory
+    assert "run" in MODULES and "perf" in MODULES and \
+        "table3_membership" in MODULES
+    assert len(MODULES) >= 9

@@ -66,3 +66,42 @@ def test_positivity_ratio_scaling():
     assert merkle.verify_membership(outsiders, tree.root, p_zero, "sha256")
     assert merkle.verify_membership(data[:20], tree.root, p_full, "sha256")
     assert p_zero.size_nodes() < p_full.size_nodes()
+
+
+def test_membership_proof_bytes_roundtrip():
+    data = make_commitments(30, seed=4)
+    tree = merkle.MerkleTree(data, "sha256")
+    queried = data[:3] + make_commitments(3, seed=123)
+    proof = tree.prove_membership(queried)
+    rt = merkle.MembershipProof.from_bytes(proof.to_bytes())
+    assert rt.included == proof.included
+    assert rt.excluded == proof.excluded
+    assert rt.frontier_exc == proof.frontier_exc
+    assert rt.node_values == proof.node_values
+    assert merkle.verify_membership(queried, tree.root, rt, "sha256")
+    # malformed streams reject with the typed decode error
+    with pytest.raises(merkle.MembershipProofDecodeError):
+        merkle.MembershipProof.from_bytes(proof.to_bytes()[:-2])
+    with pytest.raises(merkle.MembershipProofDecodeError):
+        merkle.MembershipProof.from_bytes(b"NOPE" + proof.to_bytes()[4:])
+    with pytest.raises(merkle.MembershipProofDecodeError):
+        merkle.MembershipProof.from_bytes(proof.to_bytes() + b"\x00")
+
+
+def test_dataset_scale_tree_stays_fast():
+    """The revived sparse tree must be linear in practice: the audit
+    benchmark binds tens of thousands of leaves, which the per-level
+    rescan in the old fill made quadratic (minutes for 5k leaves)."""
+    import time
+
+    data = make_commitments(2000, seed=9)
+    t0 = time.perf_counter()
+    tree = merkle.MerkleTree(data, "sha256")
+    build_s = time.perf_counter() - t0
+    queried = data[:20] + make_commitments(20, seed=10**6)
+    t0 = time.perf_counter()
+    proof = tree.prove_membership(queried)
+    prove_s = time.perf_counter() - t0
+    assert merkle.verify_membership(queried, tree.root, proof, "sha256")
+    assert build_s < 30.0, f"tree build took {build_s:.1f}s for 2k leaves"
+    assert prove_s < 5.0, f"query took {prove_s:.1f}s for 40 queries"

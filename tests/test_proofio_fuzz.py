@@ -129,9 +129,10 @@ def test_mutated_vks_verify_cleanly_without_crash(t1_bytes):
             continue
         cfg = forged_vk.cfg
         # a mutant claiming huge geometry (a flipped n_steps/width byte)
-        # would make KEY DERIVATION — not verification — arbitrarily
-        # expensive; vks are trusted inputs, so resource-bounding them
-        # is the caller's job.  Keep the crash-freedom sweep fast.
+        # makes KEY DERIVATION — not verification — expensive.  decode_vk
+        # now caps merged_len (VK_MAX_MERGED_LEN; see
+        # test_vk_geometry_cap_bounds_key_derivation), but mutants under
+        # the cap can still cost seconds each — keep the sweep fast.
         if cfg.n_steps * cfg.batch * max(cfg.widths, default=1) > 4096:
             continue
         budget -= 1
@@ -140,3 +141,38 @@ def test_mutated_vks_verify_cleanly_without_crash(t1_bytes):
         rejected += not verdict
     assert budget == 0, "vk mutation stream produced too few decodable vks"
     assert rejected > 0, "every mutated vk accepted the proof"
+
+
+def test_vk_geometry_cap_bounds_key_derivation():
+    """The vk trusted-input DoS (found by the mutation sweep above): a
+    vk claiming a huge window/width makes generator derivation — not
+    verification — arbitrarily expensive.  `decode_vk` must reject such
+    geometry with a ProofDecodeError BEFORE any key material derives,
+    and quickly."""
+    import time
+
+    from repro.core.pipeline import GraphBuilder, PipelineConfig
+    from repro.core.pipeline.api import VerifyingKey
+    from repro.core.pipeline.proofio import (VK_MAX_MERGED_LEN, encode_vk,
+                                             decode_vk)
+
+    graph = GraphBuilder(batch=2).input(4).dense(4).relu() \
+        .dense(4).relu().output()
+    # config construction is pure arithmetic; only decode_vk's cap
+    # stands between these bytes and a 2^30-generator derivation
+    huge = PipelineConfig.from_graph(graph, q_bits=16, r_bits=4,
+                                     n_steps=1 << 20)
+    assert huge.merged_len > VK_MAX_MERGED_LEN
+    raw = encode_vk(VerifyingKey(cfg=huge))
+    t0 = time.perf_counter()
+    with pytest.raises(ProofDecodeError, match="refusing key derivation"):
+        decode_vk(raw)
+    assert time.perf_counter() - t0 < 2.0, "cap check must be cheap"
+
+    # a legitimate small vk still decodes, and the cap is overridable
+    # for deployments that really prove huge windows
+    small = PipelineConfig.from_graph(graph, q_bits=16, r_bits=4,
+                                      n_steps=2)
+    assert decode_vk(encode_vk(VerifyingKey(cfg=small))).cfg.n_steps == 2
+    big_cap = decode_vk(raw, max_merged_len=huge.merged_len)
+    assert big_cap.cfg.n_steps == 1 << 20

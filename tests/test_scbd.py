@@ -1,5 +1,7 @@
 """Tests for the SC-BD baseline (general-purpose bit-decomposition proof,
 the comparison column of Table 2)."""
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -46,3 +48,22 @@ def test_scbd_workload_is_quadratic():
     assert scbd.workload_elems(1024, 16) == 1024 * 1024 * 16
     # the asymptotic gap of Table 1: D^2 Q vs zkReLU's D Q
     assert scbd.workload_elems(2048, 16) // (2048 * 16) == 2048
+
+
+def test_golden_digest_pin_on_audit_transcript_domain():
+    """Canonical-encoding digest of a fixed proof on the audit label:
+    any drift in the transcript domains (scbd/u, scbd/claim, scbd/main,
+    scbd/u2, scbd/bin), the message layout, or the wiring tables changes
+    this digest.  Re-pin ONLY for an intentional format change."""
+    aux = (((np.arange(16, dtype=np.int64) * 37) % 256) - 128).astype(
+        np.int64)
+    proof = scbd.prove(aux, 8, Transcript(b"zkdl/scbd-audit"))
+    assert scbd.verify(proof, 16, 8, Transcript(b"zkdl/scbd-audit"))
+    assert proof.digest() == \
+        "4b741340fd0f64f4c567b06911049dac8e71a23d0b02a47751fa430823ece455"
+    # the digest covers every section: any tamper moves it and rejects
+    forged = dataclasses.replace(proof,
+                                 claim=(proof.claim + 1) % scbd.Q_MOD)
+    assert forged.digest() != proof.digest()
+    assert not scbd.verify(forged, 16, 8, Transcript(b"zkdl/scbd-audit"))
+    assert len(proof.proof_ints()) == 101
