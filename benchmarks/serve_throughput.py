@@ -1,0 +1,218 @@
+"""Gateway throughput benchmark: proofs/sec under concurrent multi-
+tenant load (PR 10 tentpole measurement).
+
+Starts one `launch.serve.ProvingGateway` with a pool of prove workers,
+registers N tenants (each with its own journal/manifest/vk directory
+under ``out_dir/tenants/<name>/``), and drives each tenant from its own
+client thread — the same shape as N training jobs sharing one warm
+proving sidecar.  Reported throughput is end-to-end: preflight
+validation, durable journal append, weighted-fair admission, proving,
+atomic proof write and manifest commit, measured from the first submit
+to a fully drained close.
+
+    PYTHONPATH=src python benchmarks/serve_throughput.py \
+        [--tenants 2] [--steps 8] [--window 2] [--pool 2] \
+        [--width 4] [--batch 2] [--out BENCH_serve_throughput.json] \
+        [--smoke]
+
+Emits BENCH_serve_throughput.json with the per-tenant ledger and the
+``totals`` block.  The acceptance invariants are checked on EVERY run,
+not just asserted in CI:
+
+* zero lost windows — every submitted full window ends COMMITTED with
+  exactly ONE commit line in its tenant's manifest (nothing shed or
+  dropped under a fault-free run, nothing double-committed);
+* every proof verifies from the bytes on disk against the tenant's
+  vk.bin;
+* every tenant's journal is fully GC'd at close (durability debt paid).
+
+``--smoke`` is the CI guard: 2 tenants x 1 window on a pool of 2, the
+same invariants plus ``proofs_per_sec > 0`` and a schema check; no JSON
+written.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import threading
+import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCHEMA_KEYS = ("config", "tenants", "totals")
+TOTALS_KEYS = ("windows_expected", "windows_committed", "windows_lost",
+               "proofs_verified", "wall_s", "proofs_per_sec",
+               "steps_per_sec", "worker_respawns")
+
+
+def run_bench(n_tenants: int, steps: int, window: int, pool: int,
+              width: int, batch: int, out_dir: str) -> dict:
+    from repro.core.quantfc import (QuantConfig,
+                                    synthetic_sgd_trajectory_widths)
+    from repro.core.pipeline import build_fcnn_graph
+    from repro.core.pipeline.proofio import decode_vk
+    from repro.core.pipeline.verifier import verify_bytes
+    from repro.launch import serve
+    from repro.launch.serve import ProvingGateway
+
+    qc = QuantConfig(q_bits=16, r_bits=4)
+    widths = (width, width, width)
+    graph = build_fcnn_graph(widths, batch=batch)
+    label = b"zkdl/train"
+    names = [f"tenant{i}" for i in range(n_tenants)]
+
+    gw = ProvingGateway(out_dir, n_workers=pool).start()
+    handles = {}
+    for i, name in enumerate(names):
+        handles[name] = gw.add_tenant(name, graph, qc, n_steps=window,
+                                      rng_seed=100 + i, label=label,
+                                      warm=(i == 0))
+    trajs = {name: synthetic_sgd_trajectory_widths(
+        steps, widths, batch, qc, seed=100 + i)
+        for i, name in enumerate(names)}
+
+    errors = []
+
+    def client(name):
+        try:
+            for wit in trajs[name]:
+                gw.submit(name, wit)
+        except Exception as exc:            # surfaces in the report
+            errors.append(f"{name}: {type(exc).__name__}: {exc}")
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=client, args=(n,), name=f"client-{n}")
+               for n in names]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    gw.close(timeout=1200)
+    wall = time.perf_counter() - t0
+    if errors:
+        raise SystemExit(f"client submit errors: {errors}")
+
+    expected_per_tenant = steps // window
+    tenants_out = {}
+    committed = lost = verified = 0
+    for name in names:
+        t = handles[name]
+        man = serve.read_manifest(t.dir)
+        counts = serve.manifest_commit_counts(t.dir)
+        with open(os.path.join(t.dir, "vk.bin"), "rb") as f:
+            vk = decode_vk(f.read())
+        t_committed = t_lost = t_verified = 0
+        for w in range(expected_per_tenant):
+            if counts.get(w, 0) == 1 \
+                    and man.get(w, {}).get("status") == serve.COMMITTED:
+                t_committed += 1
+                with open(t.proof_path(w), "rb") as f:
+                    raw = f.read()
+                if verify_bytes(vk, raw, label=label):
+                    t_verified += 1
+            else:
+                t_lost += 1
+        journal_left = serve.journal_steps(serve.journal_dir(t.dir))
+        if journal_left:
+            raise SystemExit(f"{name}: journal not GC'd at close: "
+                             f"{journal_left}")
+        committed += t_committed
+        lost += t_lost
+        verified += t_verified
+        tenants_out[name] = {
+            "windows_expected": expected_per_tenant,
+            "windows_committed": t_committed,
+            "windows_lost": t_lost,
+            "proofs_verified": t_verified,
+            "proof_bytes": [n for _w, _p, n, _dt in t.proofs],
+            "prove_s": [round(dt, 4) for _w, _p, _n, dt in t.proofs],
+            "stats": dict(t.stats),
+        }
+
+    totals = {
+        "windows_expected": expected_per_tenant * n_tenants,
+        "windows_committed": committed,
+        "windows_lost": lost,
+        "proofs_verified": verified,
+        "wall_s": round(wall, 4),
+        "proofs_per_sec": round(committed / wall, 4) if wall > 0 else 0.0,
+        "steps_per_sec": round(committed * window / wall, 4)
+        if wall > 0 else 0.0,
+        "worker_respawns": gw.stats["worker_respawns"],
+    }
+    return {
+        "config": {"n_tenants": n_tenants, "steps_per_tenant": steps,
+                   "window": window, "pool": pool, "widths": list(widths),
+                   "batch": batch, "q_bits": qc.q_bits,
+                   "r_bits": qc.r_bits},
+        "tenants": tenants_out,
+        "totals": totals,
+    }
+
+
+def check_invariants(report: dict, smoke: bool) -> None:
+    for key in SCHEMA_KEYS:
+        assert key in report, f"schema: missing {key!r}"
+    for key in TOTALS_KEYS:
+        assert key in report["totals"], f"schema: missing totals.{key!r}"
+    tot = report["totals"]
+    assert tot["windows_lost"] == 0, \
+        f"LOST WINDOWS: {tot['windows_lost']} (durability bug)"
+    assert tot["windows_committed"] == tot["windows_expected"]
+    assert tot["proofs_verified"] == tot["windows_committed"], \
+        "a committed proof failed verification from bytes"
+    assert report["config"]["n_tenants"] >= 2, \
+        "throughput is only meaningful under concurrent tenants"
+    if smoke:
+        assert tot["proofs_per_sec"] > 0, "no throughput measured"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tenants", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=8,
+                    help="steps submitted per tenant")
+    ap.add_argument("--window", type=int, default=2,
+                    help="steps aggregated per proof window")
+    ap.add_argument("--pool", type=int, default=2)
+    ap.add_argument("--width", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--out-dir", default=None,
+                    help="gateway dir (default: a fresh temp dir)")
+    ap.add_argument("--out", default=os.path.join(
+        REPO_ROOT, "BENCH_serve_throughput.json"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, assert invariants, write no JSON")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.steps = min(args.steps, 2 * args.window)
+    out_dir = args.out_dir
+    if out_dir is None:
+        import tempfile
+        out_dir = tempfile.mkdtemp(prefix="zkdl-gw-bench-")
+
+    report = run_bench(args.tenants, args.steps, args.window, args.pool,
+                       args.width, args.batch, out_dir)
+    check_invariants(report, smoke=args.smoke)
+    tot = report["totals"]
+    print(f"[serve_throughput] {report['config']['n_tenants']} tenants x "
+          f"{tot['windows_committed'] // report['config']['n_tenants']} "
+          f"windows on pool={report['config']['pool']}: "
+          f"{tot['proofs_per_sec']} proofs/s "
+          f"({tot['steps_per_sec']} steps/s, wall {tot['wall_s']}s, "
+          f"lost {tot['windows_lost']})")
+    if args.smoke:
+        print("[serve_throughput] smoke OK (no JSON written)")
+        return 0
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"[serve_throughput] wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -216,6 +216,96 @@ print("ci: service dataset binding ok (root bound, member verified, "
       "cross-window replay rejected)")
 PY
 
+# multi-tenant gateway chaos smoke (PR 10): two tenants on a pool of 2;
+# the first run is SIGKILLed mid-window by an injected worker kill and
+# additionally eats one transient ENOSPC at a journal write (retried
+# transparently under the block policy).  The rerun against the SAME
+# out_dir must steal the dead owner's lockfile, replay every tenant's
+# journal, and leave BOTH tenants with every window COMMITTED exactly
+# once and verifying from bytes — the PR-8 durability contract enforced
+# per tenant.
+GW_DIR="$SMOKE_DIR/gateway"
+set +e
+ZKDL_FAULTS="pool/worker-kill@1:kill,storage/journal@2:enospc" \
+    python -m repro.launch.serve --tenants alice:2,bob --pool 2 \
+    --widths 4,4,4 --batch 2 --window 2 --steps 4 \
+    --q-bits 16 --r-bits 4 --out-dir "$GW_DIR" --seed 7
+gw_rc=$?
+set -e
+if [ "$gw_rc" -eq 0 ]; then
+    echo "ci: gateway chaos kill never fired (gateway exited cleanly)"
+    exit 1
+fi
+python -m repro.launch.serve --tenants alice:2,bob --pool 2 \
+    --widths 4,4,4 --batch 2 --window 2 --steps 4 \
+    --q-bits 16 --r-bits 4 --out-dir "$GW_DIR" --seed 7
+python - "$GW_DIR" <<'PY'
+import os, sys
+
+from repro.launch import serve
+from repro.launch.serve import dir_status
+from repro.core.pipeline.proofio import decode_vk
+from repro.core.pipeline.verifier import verify_bytes
+
+out = sys.argv[1]
+st = dir_status(out)
+assert st["lock"] is None, f"ci: gateway lock leaked after close: {st['lock']}"
+for name in ("alice", "bob"):
+    d = os.path.join(out, "tenants", name)
+    man = serve.read_manifest(d)
+    counts = serve.manifest_commit_counts(d)
+    vk = decode_vk(open(os.path.join(d, "vk.bin"), "rb").read())
+    for w in range(2):
+        assert man.get(w, {}).get("status") == "COMMITTED", \
+            f"ci: {name} window {w} not committed: {man.get(w)}"
+        assert counts[w] == 1, \
+            f"ci: {name} window {w} committed {counts[w]} times"
+        raw = open(os.path.join(d, f"proof_{w:06d}.bin"), "rb").read()
+        assert verify_bytes(vk, raw, label=b"zkdl/train"), \
+            f"ci: {name} window {w} proof REJECTED after crash+restart"
+    assert serve.journal_steps(serve.journal_dir(d)) == [], \
+        f"ci: {name} journal not GC'd after commits"
+    assert st["tenants"][name]["commit_lines"] == 2, st["tenants"][name]
+print("ci: gateway chaos smoke ok (SIGKILL + ENOSPC -> restart -> "
+      "2 tenants x 2/2 windows verify, no duplicate commits)")
+PY
+# single ownership: while one gateway holds the out_dir lock, a second
+# gateway AND a plain ProverService must be refused with the typed
+# busy error (and the lock must survive the refused attempts)
+python - "$GW_DIR" <<'PY'
+import os, sys
+
+from repro.core.quantfc import QuantConfig
+from repro.core.pipeline import build_fcnn_graph
+from repro.launch.admission import GatewayBusyError
+from repro.launch.serve import ProverService, ProvingGateway
+
+out = sys.argv[1]
+gw = ProvingGateway(out, n_workers=1).start()
+try:
+    try:
+        ProvingGateway(out).start()
+        raise SystemExit("ci: second gateway was NOT refused")
+    except GatewayBusyError:
+        pass
+    try:
+        ProverService(build_fcnn_graph((4, 4, 4), batch=2),
+                      QuantConfig(q_bits=16, r_bits=4), n_steps=2,
+                      out_dir=out).start(warm=False)
+        raise SystemExit("ci: service on a locked gateway dir NOT refused")
+    except GatewayBusyError:
+        pass
+finally:
+    gw.close(timeout=60)
+assert not os.path.exists(os.path.join(out, "GATEWAY.lock"))
+print("ci: gateway lockfile ok (second gateway + service refused, "
+      "lock released on close)")
+PY
+
+# gateway throughput smoke: >= 2 concurrent tenants, proofs/sec > 0,
+# zero lost windows, report schema intact; no JSON written
+python benchmarks/serve_throughput.py --smoke
+
 # adversarial soundness battery + membership audit (repro.audit): every
 # structured forgery — spoofed SGD trajectory, cross-slot claim swaps
 # inside the merged one-IPA, replay/splicing, zkReLU validity-table

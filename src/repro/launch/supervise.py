@@ -141,6 +141,11 @@ def run_subprocess_supervised(
     """
     if max_attempts < 1:
         raise ValueError("max_attempts must be >= 1")
+    if timeout is not None and timeout <= 0:
+        raise ValueError(
+            f"timeout must be positive (got {timeout!r}); pass None for "
+            f"no timeout — a zero/negative timeout would kill every "
+            f"attempt before it starts")
     result = SuperviseResult(ok=False)
     delays = backoff_delays(max_attempts, backoff_base, backoff_cap)
     for i in range(max_attempts):

@@ -22,19 +22,51 @@ import jax
 import numpy as np
 
 
+class StorageError(OSError):
+    """A durable-write failure (full disk, IO error, permission): the
+    typed form every `atomic_write_bytes` caller in the proving service
+    sees instead of a raw `OSError`.  The write is all-or-nothing — on
+    failure the temp file is removed, so a full disk leaves no orphan
+    ``*.tmp`` turds and the target path is never half-written.  Service
+    policy on catching it: mark the window FAILED (worker side) or
+    retry with backoff / drop the window per the backpressure policy
+    (submit side) — never crash the worker loop."""
+
+    @property
+    def is_enospc(self) -> bool:
+        import errno
+        return self.errno == errno.ENOSPC
+
+
 def atomic_write_bytes(path: str, data: bytes, fsync: bool = True) -> None:
     """Single-file form of the checkpoint commit pattern (tmp + rename):
     readers never observe a torn write, and a crash mid-write leaves only
     a ``*.tmp.<pid>`` turd, never a half-valid ``path``.  Used by the
     crash-safe prover service for journal segments, proof files, and
-    vk.bin (`launch/serve.py`)."""
+    vk.bin (`launch/serve.py`).
+
+    Any `OSError` during the write (ENOSPC on a full disk being the
+    canonical case) is re-raised as a typed `StorageError` AFTER the
+    temp file has been cleaned up: callers get a precise failure class
+    and the directory stays free of orphan temp files."""
     tmp = f"{path}.tmp.{os.getpid()}"
-    with open(tmp, "wb") as f:
-        f.write(data)
-        if fsync:
-            f.flush()
-            os.fsync(f.fileno())
-    os.replace(tmp, path)
+    try:
+        with open(tmp, "wb") as f:
+            f.write(data)
+            if fsync:
+                f.flush()
+                os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except OSError as exc:
+        try:
+            os.remove(tmp)
+        except OSError:
+            pass
+        if isinstance(exc, StorageError):
+            raise
+        raise StorageError(exc.errno or 0,
+                           f"durable write of {path!r} failed: "
+                           f"{exc.strerror or exc}") from exc
 
 
 def _leaf_paths(tree):

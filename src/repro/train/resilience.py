@@ -17,17 +17,32 @@ the compiled graph):
 * ``FailureInjector`` -- deterministic fault simulation for tests/examples.
   Two interfaces: the legacy step trigger (``fail_at_step=k`` +
   ``check(step)``, used by the training loop) and NAMED FAULT POINTS
-  (``faults={"point": "N[:action]"}`` + ``fire(point)``), used by the
-  crash-safe prover service (`launch/serve.py`) to inject crashes at
-  exact pipeline locations: before/after the journal append, mid-prove,
-  between the proof write and the manifest commit, or a hard worker
-  kill.  Actions: ``raise`` (default, a `SimulatedFailure`), ``kill``
-  (SIGKILL the whole process — a real signal death), ``corrupt-cache``
-  (truncate one on-disk `core/execache` entry, then continue).
-  ``from_env()`` reads ``ZKDL_FAULTS`` so subprocess workers inherit
-  faults, and ``ZKDL_FAULTS_ONCE=<dir>`` makes each fault fire at most
-  once ACROSS processes (markers on disk) — without it a retried
-  subprocess would re-fire the same fault forever.
+  (``faults={"point": "HITS[:action]"}`` + ``fire(point)``), used by the
+  crash-safe prover service and the multi-tenant proving gateway
+  (`launch/serve.py`) to inject crashes at exact pipeline locations:
+  before/after the journal append, mid-prove, between the proof write
+  and the manifest commit, a hard worker kill — plus the concurrency-era
+  points PR 10 added: ``pool/worker-kill`` (top of each gateway pool
+  worker's job loop: kill one worker thread under load), ``storage/
+  journal`` / ``storage/proof`` / ``storage/manifest`` (immediately
+  before the corresponding durable write — pair with the ``enospc``
+  action for full-disk chaos), ``lock/acquire`` (gateway lockfile
+  acquisition: simulate contention), ``gateway/pre-prove`` (before each
+  pool prove attempt: a range spec here produces the consecutive
+  failures that trip a tenant's circuit breaker) and ``breaker/trip``
+  (the instant a breaker opens: storm amplification).
+
+  ``HITS`` selects WHICH hits of the point act: ``N`` (the N-th, 0-based),
+  ``N-M`` (every hit in the inclusive range) or ``*`` (every hit).
+  Actions: ``raise`` (default, a `SimulatedFailure`), ``kill`` (SIGKILL
+  the whole process — a real signal death), ``corrupt-cache`` (truncate
+  one on-disk `core/execache` entry, then continue), ``enospc`` (raise a
+  typed `train/checkpoint.StorageError` with errno ENOSPC — the
+  injected full-disk).  ``from_env()`` reads ``ZKDL_FAULTS`` so
+  subprocess workers inherit faults, and ``ZKDL_FAULTS_ONCE=<dir>``
+  makes each fault fire at most once ACROSS processes (markers on
+  disk) — without it a retried subprocess would re-fire the same fault
+  forever.
 """
 from __future__ import annotations
 
@@ -98,12 +113,25 @@ class SimulatedFailure(RuntimeError):
     pass
 
 
+def _hit_matches(hits: str, hit: int) -> bool:
+    """Does hit number ``hit`` (0-based) fall inside the ``HITS`` spec?
+    ``N`` = exactly the N-th, ``N-M`` = the inclusive range, ``*`` =
+    every hit."""
+    if hits == "*":
+        return True
+    lo, sep, hi = hits.partition("-")
+    if sep:
+        return int(lo) <= hit <= int(hi)
+    return hit == int(hits)
+
+
 @dataclasses.dataclass
 class FailureInjector:
     fail_at_step: Optional[int] = None
     fired: bool = False
-    # named fault points: {"point": "N" | "N:raise" | "N:kill" |
-    # "N:corrupt-cache"} — fire on the N-th (0-based) hit of fire(point)
+    # named fault points: {"point": "HITS" | "HITS:raise" | "HITS:kill" |
+    # "HITS:corrupt-cache" | "HITS:enospc"} with HITS one of N / N-M / *
+    # (0-based hit numbers of fire(point))
     faults: Dict[str, str] = dataclasses.field(default_factory=dict)
     once_dir: Optional[str] = None      # cross-process fire-once markers
     counts: Dict[str, int] = dataclasses.field(default_factory=dict)
@@ -117,20 +145,23 @@ class FailureInjector:
 
     def fire(self, point: str) -> None:
         """Hit the named fault point; acts only when a matching spec is
-        armed and this is its N-th hit (and, with ``once_dir``, the
-        fault has not already fired in ANY process)."""
+        armed and this hit falls in its HITS selector (and, with
+        ``once_dir``, the fault has not already fired in ANY process —
+        range/``*`` specs keep one marker per HIT, so each selected hit
+        fires at most once across processes)."""
         hit = self.counts.get(point, 0)
         self.counts[point] = hit + 1
         spec = self.faults.get(point)
         if spec is None:
             return
-        n_str, _, action = str(spec).partition(":")
-        if hit != int(n_str):
+        hits_str, _, action = str(spec).partition(":")
+        if not _hit_matches(hits_str, hit):
             return
         action = action or "raise"
         if self.once_dir is not None:
             marker = os.path.join(
-                self.once_dir, f"fired_{point.replace('/', '_')}_{n_str}")
+                self.once_dir,
+                f"fired_{point.replace('/', '_')}_{hit}")
             if os.path.exists(marker):
                 return
             os.makedirs(self.once_dir, exist_ok=True)
@@ -144,13 +175,18 @@ class FailureInjector:
         if action == "corrupt-cache":
             corrupt_exec_cache_entry()
             return
+        if action == "enospc":
+            import errno
+            raise checkpoint.StorageError(
+                errno.ENOSPC, f"injected ENOSPC at {point} (hit {hit})")
         raise SimulatedFailure(f"injected fault at {point} (hit {hit})")
 
     @classmethod
     def from_spec(cls, spec: str,
                   once_dir: Optional[str] = None) -> "FailureInjector":
-        """Parse ``"point@N[:action][,point2@M[:action]]..."``; a bare
-        ``point`` means ``point@0`` (fire on the first hit)."""
+        """Parse ``"point@HITS[:action][,point2@HITS[:action]]..."`` with
+        ``HITS`` one of ``N`` / ``N-M`` / ``*``; a bare ``point`` means
+        ``point@0`` (fire on the first hit)."""
         faults: Dict[str, str] = {}
         for part in spec.split(","):
             part = part.strip()

@@ -1,0 +1,297 @@
+"""Unit contracts for `launch/admission` — the gateway's control plane
+(weighted-fair queue, circuit breaker, directory lock).  These are pure
+threading/stdlib units: no jax, no prover — deterministic by
+construction (fake clocks, no real sleeps), so the gateway chaos suite
+can lean on timing-free guarantees proved here."""
+import json
+import os
+import subprocess
+import sys
+import threading
+
+import pytest
+
+from repro.launch import admission
+from repro.launch.admission import (CircuitBreaker, GatewayBusyError,
+                                    ServiceClosedError, WeightedFairQueue,
+                                    acquire_dir_lock, release_dir_lock)
+
+
+# ---------------------------------------------------------------------------
+# WeightedFairQueue: stride scheduling
+# ---------------------------------------------------------------------------
+
+def _drain_order(q):
+    out = []
+    while True:
+        got = q.pop(timeout=0.0)
+        if got is None:
+            return out
+        out.append(got)
+
+
+def test_weights_drive_dispatch_ratio():
+    q = WeightedFairQueue()
+    q.add_tenant("heavy", weight=2.0)
+    q.add_tenant("light", weight=1.0)
+    for i in range(6):
+        q.push("heavy", f"h{i}")
+    for i in range(3):
+        q.push("light", f"l{i}")
+    names = [n for n, _ in _drain_order(q)]
+    # in any prefix, heavy gets ~2x light's dispatches (stride property)
+    for k in range(3, 10):
+        h = names[:k].count("heavy")
+        lt = names[:k].count("light")
+        assert h >= lt, f"prefix {k}: heavy={h} light={lt}"
+    assert names.count("heavy") == 6 and names.count("light") == 3
+
+
+def test_flooding_tenant_cannot_starve_others():
+    q = WeightedFairQueue()
+    q.add_tenant("spam", weight=1.0)
+    q.add_tenant("vip", weight=1.0)
+    for i in range(50):
+        q.push("spam", i)
+    q.push("vip", "a")
+    q.push("vip", "b")
+    names = [n for n, _ in (q.pop(timeout=0.0) for _ in range(4))]
+    # both vip items dispatch within the first few slots, not after the
+    # 50-deep spam backlog
+    assert names.count("vip") == 2, names
+
+
+def test_idle_tenant_banks_no_credit():
+    q = WeightedFairQueue()
+    q.add_tenant("a", weight=1.0)
+    q.add_tenant("b", weight=1.0)
+    for i in range(10):                 # a works alone for a while
+        q.push("a", i)
+        q.pop(timeout=0.0)
+    q.push("a", "x")
+    q.push("b", "y")                    # b was idle: re-enters at gvt
+    names = [n for n, _ in (q.pop(timeout=0.0) for _ in range(2))]
+    # b gets ONE fair slot, not ten banked ones; both drain promptly
+    assert sorted(names) == ["a", "b"]
+
+
+def test_items_within_tenant_stay_fifo():
+    q = WeightedFairQueue()
+    q.add_tenant("t")
+    for i in range(5):
+        q.push("t", i)
+    assert [it for _, it in _drain_order(q)] == [0, 1, 2, 3, 4]
+
+
+def test_requeue_goes_to_front():
+    q = WeightedFairQueue()
+    q.add_tenant("t")
+    q.push("t", 1)
+    q.push("t", 2)
+    q.requeue("t", 0)                   # a reclaimed in-flight item
+    assert [it for _, it in _drain_order(q)] == [0, 1, 2]
+
+
+def test_duplicate_or_invalid_tenant_rejected():
+    q = WeightedFairQueue()
+    q.add_tenant("t")
+    with pytest.raises(ValueError):
+        q.add_tenant("t")
+    with pytest.raises(ValueError):
+        q.add_tenant("zero", weight=0)
+
+
+# ---------------------------------------------------------------------------
+# WeightedFairQueue: capacity + priority load-shedding
+# ---------------------------------------------------------------------------
+
+def test_shed_victim_is_lowest_priority_newest_item():
+    q = WeightedFairQueue(capacity=2)
+    q.add_tenant("lo", priority=0)
+    q.add_tenant("hi", priority=1)
+    q.push("lo", "old")
+    q.push("lo", "new")
+    shed = q.push("hi", "urgent")       # hi preempts lo's NEWEST item
+    assert shed == [("lo", "new")]
+    assert q.depth("hi") == 1 and q.depth("lo") == 1
+
+
+def test_equal_priority_sheds_the_push_itself():
+    q = WeightedFairQueue(capacity=1)
+    q.add_tenant("a", priority=0)
+    q.add_tenant("b", priority=0)
+    q.push("a", "x")
+    shed = q.push("b", "y")             # equals never preempt equals
+    assert shed == [("b", "y")]
+    assert q.depth("a") == 1 and q.depth("b") == 0
+
+
+def test_force_push_bypasses_capacity():
+    q = WeightedFairQueue(capacity=1)
+    q.add_tenant("t")
+    q.push("t", "x")
+    assert q.push("t", "replayed", force=True) == []
+    assert q.depth() == 2
+
+
+def test_unbounded_queue_never_sheds():
+    q = WeightedFairQueue(capacity=0)
+    q.add_tenant("t")
+    for i in range(100):
+        assert q.push("t", i) == []
+    assert q.depth() == 100
+
+
+# ---------------------------------------------------------------------------
+# WeightedFairQueue: drain
+# ---------------------------------------------------------------------------
+
+def test_drain_unblocks_waiters_and_rejects_push():
+    q = WeightedFairQueue()
+    q.add_tenant("t")
+    got = []
+    th = threading.Thread(target=lambda: got.append(q.pop(timeout=30)))
+    th.start()
+    q.drain()
+    th.join(5)
+    assert not th.is_alive() and got == [None]
+    with pytest.raises(ServiceClosedError):
+        q.push("t", "late")
+    q.requeue("t", "inflight")          # reclaim still allowed mid-drain
+    assert q.pop(timeout=0.0) == ("t", "inflight")
+
+
+# ---------------------------------------------------------------------------
+# CircuitBreaker (fake clock: no sleeps)
+# ---------------------------------------------------------------------------
+
+class Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_breaker_trips_after_threshold_consecutive_failures():
+    cb = CircuitBreaker(threshold=3, reset_s=10.0, clock=Clock())
+    assert cb.allow() == "proceed"
+    assert cb.record_failure() is False
+    assert cb.record_failure() is False
+    assert cb.state == "closed"
+    assert cb.record_failure() is True          # third consecutive: trip
+    assert cb.state == "open" and cb.trips == 1
+    assert cb.allow() == "defer"
+
+
+def test_success_resets_consecutive_count():
+    cb = CircuitBreaker(threshold=2, reset_s=10.0, clock=Clock())
+    cb.record_failure()
+    cb.record_success()
+    assert cb.record_failure() is False         # count restarted
+    assert cb.state == "closed"
+
+
+def test_half_open_single_trial_then_close_or_reopen():
+    clock = Clock()
+    cb = CircuitBreaker(threshold=1, reset_s=5.0, clock=clock)
+    cb.record_failure()                         # trip
+    assert cb.allow() == "defer"
+    clock.t = 5.0
+    assert cb.ready_for_trial
+    assert cb.allow() == "trial"                # exactly one probe
+    assert cb.allow() == "defer"                # while trial in flight
+    assert not cb.ready_for_trial
+    cb.record_success()
+    assert cb.state == "closed"
+    # trip again; this time the trial FAILS -> re-open for another reset
+    cb.record_failure()
+    clock.t = 10.0
+    assert cb.allow() == "trial"
+    assert cb.record_failure() is True
+    # re-opening from a failed trial is a fresh trip (3rd transition)
+    assert cb.state == "open" and cb.trips == 3
+    clock.t = 14.9
+    assert cb.allow() == "defer"
+    clock.t = 15.0
+    assert cb.allow() == "trial"
+
+
+def test_breaker_threshold_validation():
+    with pytest.raises(ValueError):
+        CircuitBreaker(threshold=0)
+
+
+# ---------------------------------------------------------------------------
+# Directory lock
+# ---------------------------------------------------------------------------
+
+def test_lock_round_trip_and_busy(tmp_path):
+    d = str(tmp_path)
+    path = acquire_dir_lock(d)
+    assert os.path.exists(path)
+    with open(path) as f:
+        assert json.load(f)["pid"] == os.getpid()
+    # a second gateway in the SAME process is just as corrupting as a
+    # second process: the held-dir registry blocks it
+    with pytest.raises(GatewayBusyError):
+        acquire_dir_lock(d)
+    release_dir_lock(path)
+    assert not os.path.exists(path)
+    release_dir_lock(path)              # idempotent
+
+
+def test_own_pid_leftover_without_registry_entry_is_stolen(tmp_path):
+    """A lockfile recording OUR pid that this process does not hold (a
+    crashed-and-restarted gateway whose pid was recycled) is stale."""
+    d = str(tmp_path)
+    with open(os.path.join(d, admission.LOCKFILE), "w") as f:
+        json.dump({"pid": os.getpid(), "t": 0}, f)
+    path = acquire_dir_lock(d)
+    with open(path) as f:
+        assert json.load(f)["pid"] == os.getpid()
+    release_dir_lock(path)
+
+
+def test_lock_held_by_live_foreign_pid_raises(tmp_path):
+    d = str(tmp_path)
+    path = os.path.join(d, admission.LOCKFILE)
+    # pid 1 is alive on any linux box and is never us
+    with open(path, "w") as f:
+        json.dump({"pid": 1, "t": 0}, f)
+    with pytest.raises(GatewayBusyError):
+        acquire_dir_lock(d)
+    assert os.path.exists(path)         # the owner's lock is untouched
+
+
+def test_stale_dead_pid_lock_is_stolen(tmp_path):
+    d = str(tmp_path)
+    proc = subprocess.run([sys.executable, "-c",
+                           "import os; print(os.getpid())"],
+                          capture_output=True, text=True, check=True)
+    dead_pid = int(proc.stdout.strip())
+    with open(os.path.join(d, admission.LOCKFILE), "w") as f:
+        json.dump({"pid": dead_pid, "t": 0}, f)
+    path = acquire_dir_lock(d)          # SIGKILLed owner: steal
+    with open(path) as f:
+        assert json.load(f)["pid"] == os.getpid()
+    release_dir_lock(path)
+
+
+def test_unreadable_lock_is_stolen(tmp_path):
+    d = str(tmp_path)
+    with open(os.path.join(d, admission.LOCKFILE), "w") as f:
+        f.write("{torn")
+    path = acquire_dir_lock(d)
+    with open(path) as f:
+        assert json.load(f)["pid"] == os.getpid()
+    release_dir_lock(path)
+
+
+def test_release_refuses_foreign_lock(tmp_path):
+    d = str(tmp_path)
+    path = os.path.join(d, admission.LOCKFILE)
+    with open(path, "w") as f:
+        json.dump({"pid": 1, "t": 0}, f)
+    release_dir_lock(path)
+    assert os.path.exists(path)         # not ours: left alone

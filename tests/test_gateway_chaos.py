@@ -1,0 +1,429 @@
+"""Multi-tenant chaos harness for `launch/serve.ProvingGateway` (PR 10
+tentpole).
+
+The contract under test is the PR-8 durability invariant enforced PER
+TENANT, under the gateway's concurrency-era fault points: every window
+that was not load-shed or storage-dropped ends with EXACTLY ONE
+``COMMITTED`` manifest line in that tenant's directory, its proof bytes
+verify from disk, and its journal segments are GC'd — across worker
+deaths, ENOSPC at every write site, expired deadlines, tripped breakers
+and full gateway restarts.  Timing-sensitive policies (fair-share
+ratios, shed victim selection, half-open single-trial) are proved
+deterministically in tests/test_admission.py; here they are driven
+end-to-end only where the outcome is order-independent.
+"""
+import os
+import time
+
+import pytest
+
+from repro.core.quantfc import QuantConfig, synthetic_sgd_trajectory_widths
+from repro.core.pipeline import build_fcnn_graph
+from repro.core.pipeline.proofio import decode_vk
+from repro.core.pipeline.verifier import verify_bytes
+from repro.launch import serve
+from repro.launch.admission import GatewayBusyError, ServiceClosedError
+from repro.launch.preflight import (WitnessQuantError, WitnessStepError)
+from repro.launch.serve import ProverService, ProvingGateway
+from repro.train.checkpoint import StorageError
+from repro.train.resilience import FailureInjector, SimulatedFailure
+
+QC = QuantConfig(q_bits=16, r_bits=4)
+WIDTHS = (4, 4, 4)
+B = 2
+T = 2
+LABEL = b"zkdl/train"
+GRAPH = build_fcnn_graph(WIDTHS, batch=B)
+
+
+def _gateway(out_dir, **kw):
+    kw.setdefault("backoff_base", 0.01)
+    kw.setdefault("backoff_cap", 0.05)
+    return ProvingGateway(str(out_dir), **kw).start()
+
+
+def _add(gw, name, seed, **kw):
+    return gw.add_tenant(name, GRAPH, QC, n_steps=T, rng_seed=seed, **kw)
+
+
+def _wits(n, seed):
+    return synthetic_sgd_trajectory_widths(n, WIDTHS, B, QC, seed=seed)
+
+
+def _wait(pred, timeout=600):
+    t0 = time.monotonic()
+    while not pred():
+        if time.monotonic() - t0 > timeout:
+            raise AssertionError("condition not reached before timeout")
+        time.sleep(0.02)
+
+
+def _assert_exactly_once(tdir, windows):
+    """Per-tenant acceptance: exactly one COMMITTED line per window,
+    proof verifies from bytes, journal GC'd."""
+    man = serve.read_manifest(tdir)
+    counts = serve.manifest_commit_counts(tdir)
+    with open(os.path.join(tdir, "vk.bin"), "rb") as f:
+        vk = decode_vk(f.read())
+    for w in windows:
+        assert man.get(w, {}).get("status") == serve.COMMITTED, \
+            f"{tdir} window {w}: {man.get(w)}"
+        assert counts[w] == 1, f"window {w} committed {counts[w]} times"
+        with open(os.path.join(tdir, f"proof_{w:06d}.bin"), "rb") as f:
+            raw = f.read()
+        assert verify_bytes(vk, raw, label=LABEL), f"window {w} rejected"
+    for w in windows:
+        assert not any(s // T == w for s in
+                       serve.journal_steps(serve.journal_dir(tdir))), \
+            f"window {w} left journal segments behind"
+
+
+# ---------------------------------------------------------------------------
+# Baseline: two tenants, shared pool, isolated directories
+# ---------------------------------------------------------------------------
+
+def test_two_tenants_commit_exactly_once_and_verify(tmp_path):
+    gw = _gateway(tmp_path, n_workers=2)
+    ta = _add(gw, "alice", 11, weight=2.0)
+    tb = _add(gw, "bob", 22)
+    wa, wb = _wits(4, 11), _wits(4, 22)
+    for i in range(4):                  # interleaved client threads' view
+        gw.submit("alice", wa[i])
+        gw.submit("bob", wb[i])
+    gw.close(timeout=600)
+    _assert_exactly_once(ta.dir, [0, 1])
+    _assert_exactly_once(tb.dir, [0, 1])
+    assert ta.stats["proved"] == 2 and tb.stats["proved"] == 2
+    # one lock for the whole gateway dir, released on close
+    assert not os.path.exists(os.path.join(str(tmp_path), "GATEWAY.lock"))
+    st = gw.status()
+    assert st["closed"] and st["queue"]["depth"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Worker pool: deaths are reclaimed, jobs requeued, nothing double-commits
+# ---------------------------------------------------------------------------
+
+def test_worker_death_reclaims_job_and_respawns(tmp_path):
+    """The first two dequeues kill their worker thread outright; the
+    monitor must requeue the in-flight window and respawn the slot, and
+    every window still commits exactly once."""
+    gw = _gateway(tmp_path, n_workers=2,
+                  injector=FailureInjector.from_spec("pool/worker-kill@0-1"))
+    ta = _add(gw, "alice", 11)
+    tb = _add(gw, "bob", 22)
+    wa, wb = _wits(4, 11), _wits(4, 22)
+    for i in range(4):
+        gw.submit("alice", wa[i])
+        gw.submit("bob", wb[i])
+    _wait(lambda: ta.stats["proved"] == 2 and tb.stats["proved"] == 2)
+    gw.close(timeout=600)
+    assert gw.stats["worker_respawns"] == 2
+    assert len(gw.status()["workers"]["events"]) == 2
+    _assert_exactly_once(ta.dir, [0, 1])
+    _assert_exactly_once(tb.dir, [0, 1])
+
+
+def test_job_that_kills_every_worker_fails_terminally(tmp_path):
+    """A poison window that reliably kills workers must stop being
+    retried after max_attempts deaths — FAILED reason worker-death, and
+    the pool keeps serving other work."""
+    gw = _gateway(tmp_path, n_workers=1, max_attempts=2,
+                  injector=FailureInjector.from_spec("pool/worker-kill@0-1"))
+    ta = _add(gw, "alice", 11)
+    for wit in _wits(4, 11):
+        gw.submit("alice", wit)
+    _wait(lambda: ta.stats["proved"] == 1
+          and ta.stats["failed_windows"] == 1)
+    gw.close(timeout=600)
+    man = serve.read_manifest(ta.dir)
+    assert man[0]["status"] == serve.FAILED
+    assert man[0]["reason"] == "worker-death"
+    _assert_exactly_once(ta.dir, [1])
+    # the failed window's journal is retained: a restart re-proves it
+    assert serve.journal_steps(serve.journal_dir(ta.dir)) == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# ENOSPC at every write site (satellite 1)
+# ---------------------------------------------------------------------------
+
+def test_journal_enospc_drop_window_policy(tmp_path):
+    gw = _gateway(tmp_path, n_workers=1, backpressure="drop_window",
+                  injector=FailureInjector.from_spec(
+                      "storage/journal@0:enospc"))
+    ta = _add(gw, "alice", 11)
+    for wit in _wits(4, 11):
+        gw.submit("alice", wit)     # never raises under drop_window
+    gw.close(timeout=600)
+    man = serve.read_manifest(ta.dir)
+    assert man[0]["status"] == serve.DROPPED
+    assert man[0]["reason"] == "storage"
+    assert ta.stats["dropped_windows"] == 1
+    assert ta.stats["dropped_steps"] >= 1
+    assert ta.stats["storage_errors"] == 1
+    _assert_exactly_once(ta.dir, [1])
+    # no orphan tmp files anywhere in the tenant dir
+    for root, _dirs, files in os.walk(ta.dir):
+        assert not [f for f in files if ".tmp." in f], (root, files)
+
+
+def test_journal_enospc_block_policy_retries_with_backoff(tmp_path):
+    gw = _gateway(tmp_path, n_workers=1,
+                  injector=FailureInjector.from_spec(
+                      "storage/journal@0:enospc"))
+    ta = _add(gw, "alice", 11)
+    for wit in _wits(2, 11):
+        gw.submit("alice", wit)     # first write retried transparently
+    gw.close(timeout=600)
+    assert ta.stats["storage_errors"] == 1
+    assert ta.stats["journaled"] == 2
+    _assert_exactly_once(ta.dir, [0])
+
+
+def test_journal_enospc_block_policy_exhausted_raises_typed(tmp_path):
+    """A disk that STAYS full surfaces the typed StorageError to the
+    caller with nothing half-durable; freeing space (dropping the
+    injector) lets the same step go through."""
+    gw = _gateway(tmp_path, n_workers=1, max_attempts=2,
+                  injector=FailureInjector.from_spec(
+                      "storage/journal@*:enospc"))
+    ta = _add(gw, "alice", 11)
+    wits = _wits(2, 11)
+    with pytest.raises(StorageError) as ei:
+        gw.submit("alice", wits[0])
+    assert ei.value.is_enospc
+    assert ta.stats["journaled"] == 0
+    assert ta.next_step == 0        # nothing advanced: resubmit is safe
+    assert serve.journal_steps(serve.journal_dir(ta.dir)) == []
+    gw.injector = None              # "disk freed"
+    for wit in wits:
+        gw.submit("alice", wit)
+    gw.close(timeout=600)
+    _assert_exactly_once(ta.dir, [0])
+
+
+def test_proof_write_enospc_fails_window_keeps_journal(tmp_path):
+    """ENOSPC at the proof write: the window FAILS (reason storage) with
+    its journal retained, the next window commits, and the breaker does
+    NOT count an infra failure as prover poison."""
+    gw = _gateway(tmp_path, n_workers=1,
+                  injector=FailureInjector.from_spec(
+                      "storage/proof@0:enospc"))
+    ta = _add(gw, "alice", 11)
+    for wit in _wits(4, 11):
+        gw.submit("alice", wit)
+    gw.close(timeout=600)
+    man = serve.read_manifest(ta.dir)
+    assert man[0]["status"] == serve.FAILED
+    assert man[0]["reason"] == "storage"
+    assert ta.stats["storage_errors"] == 1
+    assert ta.breaker.state == "closed"
+    _assert_exactly_once(ta.dir, [1])
+    assert serve.journal_steps(serve.journal_dir(ta.dir)) == [0, 1]
+    # restart with space: the failed window replays and commits
+    gw2 = _gateway(tmp_path, n_workers=1)
+    ta2 = _add(gw2, "alice", 11)
+    gw2.close(timeout=600)
+    _assert_exactly_once(ta2.dir, [0, 1])
+
+
+def test_manifest_enospc_never_gcs_ahead_of_commit_line(tmp_path):
+    """The proof bytes land but the COMMITTED line does not: the journal
+    must be retained, and the restarted gateway re-proves and commits
+    EXACTLY once (not zero, not two)."""
+    gw = _gateway(tmp_path, n_workers=1,
+                  injector=FailureInjector.from_spec(
+                      "storage/manifest@0:enospc"))
+    ta = _add(gw, "alice", 11)
+    for wit in _wits(2, 11):
+        gw.submit("alice", wit)
+    _wait(lambda: ta.stats["storage_errors"] >= 1)
+    gw.close(timeout=600)
+    assert ta.stats["proved"] == 0
+    assert serve.manifest_commit_counts(ta.dir) == {}
+    assert serve.journal_steps(serve.journal_dir(ta.dir)) == [0, 1]
+    gw2 = _gateway(tmp_path, n_workers=1)
+    ta2 = _add(gw2, "alice", 11)
+    assert ta2.stats["replayed"] == 2
+    gw2.close(timeout=600)
+    _assert_exactly_once(ta2.dir, [0])
+
+
+# ---------------------------------------------------------------------------
+# Deadlines
+# ---------------------------------------------------------------------------
+
+def test_expired_deadline_fails_window_and_frees_worker(tmp_path):
+    """deadline_s=0 expires every window at dispatch: FAILED reason
+    deadline, worker reclaimed immediately (no prove attempted), breaker
+    untouched (capacity, not prover health), journal retained."""
+    gw = _gateway(tmp_path, n_workers=1)
+    ta = _add(gw, "alice", 11, deadline_s=0.0)
+    for wit in _wits(4, 11):
+        gw.submit("alice", wit)
+    gw.close(timeout=600)
+    man = serve.read_manifest(ta.dir)
+    for w in (0, 1):
+        assert man[w]["status"] == serve.FAILED
+        assert man[w]["reason"] == "deadline"
+        assert "waited_s" in man[w]
+    assert ta.stats["deadline_expired"] == 2
+    assert ta.stats["failed_windows"] == 2
+    assert ta.stats["proved"] == 0
+    assert ta.breaker.state == "closed"
+    assert serve.journal_steps(serve.journal_dir(ta.dir)) == [0, 1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker: trip -> journal-only -> half-open trial -> recovery
+# ---------------------------------------------------------------------------
+
+def test_breaker_trips_parks_then_half_open_recovers(tmp_path):
+    """Two consecutive prove failures trip the breaker: later windows
+    PARK (journal-only degradation — durable, not proved) until the
+    half-open trial succeeds, then everything drains.  A restart then
+    re-proves the two FAILED windows from their retained journals."""
+    gw = _gateway(tmp_path, n_workers=1, max_attempts=1,
+                  breaker_threshold=2, breaker_reset_s=0.5,
+                  injector=FailureInjector.from_spec(
+                      "gateway/pre-prove@0-1"))
+    ta = _add(gw, "alice", 11)
+    for wit in _wits(8, 11):
+        gw.submit("alice", wit)
+    _wait(lambda: ta.stats["proved"] == 2)      # w2 (trial) + w3
+    gw.close(timeout=600)
+    man = serve.read_manifest(ta.dir)
+    assert man[0]["status"] == serve.FAILED and man[0]["reason"] == "prove"
+    assert man[1]["status"] == serve.FAILED and man[1]["reason"] == "prove"
+    assert ta.breaker.trips == 1
+    assert ta.stats["deferred"] >= 2            # parked while open
+    _assert_exactly_once(ta.dir, [2, 3])
+    assert serve.journal_steps(serve.journal_dir(ta.dir)) == [0, 1, 2, 3]
+    gw2 = _gateway(tmp_path, n_workers=1)
+    ta2 = _add(gw2, "alice", 11)
+    assert ta2.stats["replayed"] == 4
+    gw2.close(timeout=600)
+    _assert_exactly_once(ta2.dir, [0, 1, 2, 3])
+
+
+# ---------------------------------------------------------------------------
+# Load-shedding accounting (policy itself is proved in test_admission)
+# ---------------------------------------------------------------------------
+
+def test_shed_window_is_terminal_and_accounted(tmp_path):
+    gw = _gateway(tmp_path, n_workers=1)
+    ta = _add(gw, "alice", 11)
+    job = serve.WindowJob(window=5, wits=[], enqueued_t=0.0)
+    gw._mark_shed(ta, job)
+    assert ta.stats["shed_windows"] == 1
+    assert 5 in ta.dropped
+    man = serve.read_manifest(ta.dir)
+    assert man[5]["status"] == serve.SHED
+    assert man[5]["reason"] == "admission"
+    assert ta.snapshot(0)["shed"] == 1
+    gw.close(timeout=600)
+    # SHED is terminal: the reopened tenant resumes after it
+    gw2 = _gateway(tmp_path, n_workers=1)
+    ta2 = _add(gw2, "alice", 11)
+    assert ta2.next_step == 6 * T
+    gw2.close(timeout=600)
+
+
+# ---------------------------------------------------------------------------
+# Single ownership: one lock for gateway AND service
+# ---------------------------------------------------------------------------
+
+def test_lockfile_blocks_second_gateway_and_service(tmp_path):
+    gw = _gateway(tmp_path, n_workers=1)
+    with pytest.raises(GatewayBusyError):
+        ProvingGateway(str(tmp_path)).start()
+    with pytest.raises(GatewayBusyError):
+        ProverService(GRAPH, QC, n_steps=T,
+                      out_dir=str(tmp_path)).start(warm=False)
+    gw.close(timeout=600)
+    gw2 = _gateway(tmp_path, n_workers=1)   # released on close
+    gw2.close(timeout=600)
+
+
+# ---------------------------------------------------------------------------
+# Preflight: typed rejection BEFORE anything is journaled
+# ---------------------------------------------------------------------------
+
+def test_preflight_rejects_before_journal(tmp_path):
+    import dataclasses
+
+    gw = _gateway(tmp_path, n_workers=1)
+    ta = _add(gw, "alice", 11)
+    wits = _wits(2, 11)
+    bad = dataclasses.replace(wits[0], cfg=QuantConfig(q_bits=8, r_bits=2))
+    with pytest.raises(WitnessQuantError):
+        gw.submit("alice", bad)
+    with pytest.raises(WitnessStepError):
+        gw.submit("alice", wits[0], step=3)     # gap vs next_step=0
+    assert ta.stats["rejected"] == 2
+    assert ta.stats["journaled"] == 0
+    assert serve.journal_steps(serve.journal_dir(ta.dir)) == []
+    for wit in wits:                            # valid work still flows
+        gw.submit("alice", wit)
+    gw.close(timeout=600)
+    _assert_exactly_once(ta.dir, [0])
+
+
+# ---------------------------------------------------------------------------
+# Restart: every tenant resumes where its manifest says
+# ---------------------------------------------------------------------------
+
+def test_gateway_restart_resumes_every_tenant(tmp_path):
+    gw = _gateway(tmp_path, n_workers=2)
+    _add(gw, "alice", 11)
+    _add(gw, "bob", 22)
+    wa, wb = _wits(4, 11), _wits(4, 22)
+    for wit in wa[:3]:                  # window 0 + trailing partial
+        gw.submit("alice", wit)
+    for wit in wb[:2]:                  # window 0 only
+        gw.submit("bob", wit)
+    gw.close(timeout=600)
+    man_a = serve.read_manifest(os.path.join(str(tmp_path),
+                                             "tenants", "alice"))
+    assert man_a[1]["status"] == serve.PARTIAL
+    gw2 = _gateway(tmp_path, n_workers=2)
+    ta = _add(gw2, "alice", 11)
+    tb = _add(gw2, "bob", 22)
+    assert ta.next_step == 3 and ta.stats["replayed"] == 1
+    assert tb.next_step == 2 and tb.stats["replayed"] == 0
+    gw2.submit("alice", wa[3])          # completes the partial window
+    for wit in wb[2:]:
+        gw2.submit("bob", wit)
+    gw2.close(timeout=600)
+    _assert_exactly_once(ta.dir, [0, 1])
+    _assert_exactly_once(tb.dir, [0, 1])
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle edges (satellite 6, gateway side)
+# ---------------------------------------------------------------------------
+
+def test_lifecycle_close_idempotent_and_submit_after_close(tmp_path):
+    gw = ProvingGateway(str(tmp_path / "never"))
+    gw.close()                          # never started: clean no-op
+    gw.close()                          # idempotent
+    with pytest.raises(ServiceClosedError):
+        gw.start()
+
+    gw2 = _gateway(tmp_path / "real", n_workers=1)
+    ta = _add(gw2, "alice", 11)
+    wit = _wits(1, 11)[0]
+    with pytest.raises(ValueError):
+        gw2.submit("nobody", wit)
+    with pytest.raises(ValueError):
+        _add(gw2, "alice", 11)          # duplicate
+    with pytest.raises(ValueError):
+        _add(gw2, "../escape", 11)      # it becomes a directory name
+    gw2.close(timeout=600)
+    gw2.close(timeout=600)              # idempotent after real run
+    with pytest.raises(ServiceClosedError):
+        gw2.submit("alice", wit)
+    with pytest.raises(ServiceClosedError):
+        _add(gw2, "late", 33)
+    assert ta.stats["submitted"] == 0

@@ -1,0 +1,139 @@
+"""Typed-rejection contracts for `launch/preflight` — the gateway's
+submit-time witness validation.  Each malformed-witness family must
+raise ITS error class (so clients can tell "fix your config" from "fix
+your tensors"), and a witness that passes must be exactly the kind the
+prover accepts.  Nothing here journals or proves: preflight runs before
+any byte hits disk."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.quantfc import QuantConfig, synthetic_sgd_trajectory_widths
+from repro.core.pipeline import build_fcnn_graph, compile as zk_compile
+from repro.launch import preflight
+from repro.launch.preflight import (WitnessDtypeError, WitnessQuantError,
+                                    WitnessRangeError, WitnessShapeError,
+                                    WitnessStepError, WitnessTopologyError,
+                                    WitnessValidationError,
+                                    check_step_monotonic, validate_witness)
+
+QC = QuantConfig(q_bits=16, r_bits=4)
+WIDTHS = (4, 4, 4)
+B = 2
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    pk, _vk = zk_compile(build_fcnn_graph(WIDTHS, batch=B), QC, n_steps=1)
+    return pk.keys.cfg
+
+
+@pytest.fixture()
+def wit():
+    w = synthetic_sgd_trajectory_widths(1, WIDTHS, B, QC, seed=9)[0]
+    # deep-copy every array so tests can mutate freely
+    lists = {f: [a.copy() for a in getattr(w, f)]
+             for f in ("w", "z", "zpp", "b", "rz", "a", "gz", "ga",
+                       "gap", "rga", "gw")}
+    return dataclasses.replace(w, x=w.x.copy(), y=w.y.copy(),
+                               skips=dict(w.skips), **lists)
+
+
+def test_valid_witness_passes(cfg, wit):
+    assert validate_witness(cfg, wit) is None
+
+
+def test_quant_mismatch(cfg, wit):
+    bad = dataclasses.replace(wit, cfg=QuantConfig(q_bits=8, r_bits=2))
+    with pytest.raises(WitnessQuantError):
+        validate_witness(cfg, bad)
+
+
+def test_layer_count_mismatch(cfg, wit):
+    bad = dataclasses.replace(wit, w=wit.w[:1])
+    with pytest.raises(WitnessShapeError):
+        validate_witness(cfg, bad)
+
+
+def test_tensor_shape_mismatch(cfg, wit):
+    wit.w[0] = wit.w[0][:, :3]          # wrong output width
+    with pytest.raises(WitnessShapeError) as ei:
+        validate_witness(cfg, wit)
+    assert "w[0]" in str(ei.value)
+
+
+def test_batch_mismatch(cfg, wit):
+    bad = dataclasses.replace(wit, x=wit.x[:1])
+    with pytest.raises(WitnessShapeError):
+        validate_witness(cfg, bad)
+
+
+def test_dtype_rejected(cfg, wit):
+    bad = dataclasses.replace(wit, x=wit.x.astype(np.int32))
+    with pytest.raises(WitnessDtypeError):
+        validate_witness(cfg, bad)
+
+
+def test_topology_mismatch(cfg, wit):
+    bad = dataclasses.replace(wit, skips={2: 1})
+    with pytest.raises(WitnessTopologyError):
+        validate_witness(cfg, bad)
+
+
+def test_zpp_out_of_range(cfg, wit):
+    wit.zpp[0][0, 0] = 1 << (QC.q_bits - 1)     # == lim: out of [0, lim)
+    with pytest.raises(WitnessRangeError):
+        validate_witness(cfg, wit)
+
+
+def test_bit_plane_not_binary(cfg, wit):
+    wit.b[0][0, 0] = 2
+    with pytest.raises(WitnessRangeError):
+        validate_witness(cfg, wit)
+
+
+def test_remainder_out_of_range(cfg, wit):
+    wit.rz[0][0, 0] = 1 << QC.r_bits            # == 2^R: out of [0, 2^R)
+    with pytest.raises(WitnessRangeError):
+        validate_witness(cfg, wit)
+
+
+def test_zkrelu_decomposition_must_hold(cfg, wit):
+    wit.z[0][0, 0] += 1                         # break eq. (3)
+    with pytest.raises(WitnessRangeError) as ei:
+        validate_witness(cfg, wit)
+    assert "eq. 3" in str(ei.value)
+
+
+def test_grad_rescale_decomposition_must_hold(cfg, wit):
+    wit.ga[0][0, 0] += 1                        # break eq. (5)
+    with pytest.raises(WitnessRangeError) as ei:
+        validate_witness(cfg, wit)
+    assert "eq. 5" in str(ei.value)
+
+
+def test_every_error_is_a_validation_and_value_error():
+    for cls in (WitnessQuantError, WitnessShapeError, WitnessDtypeError,
+                WitnessTopologyError, WitnessRangeError, WitnessStepError):
+        assert issubclass(cls, WitnessValidationError)
+        assert issubclass(cls, ValueError)
+
+
+def test_step_monotonic_contract():
+    assert check_step_monotonic("t", 5, None) == 5      # service-assigned
+    assert check_step_monotonic("t", 5, 5) == 5         # declared, correct
+    with pytest.raises(WitnessStepError):
+        check_step_monotonic("t", 5, 4)                 # replayed/dup step
+    with pytest.raises(WitnessStepError):
+        check_step_monotonic("t", 5, 7)                 # gap
+
+
+def test_validation_cheaper_than_a_prove(cfg, wit):
+    """Preflight is meant to run on EVERY submit: keep it elementwise
+    numpy, no group ops (a rough ceiling keeps it honest)."""
+    import time
+    t0 = time.perf_counter()
+    for _ in range(20):
+        validate_witness(cfg, wit)
+    assert (time.perf_counter() - t0) / 20 < 0.05

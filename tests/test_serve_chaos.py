@@ -239,6 +239,145 @@ def test_corrupt_journal_segment_fails_window_not_service(tmp_path):
     assert man[2]["status"] == serve.COMMITTED
 
 
+def test_close_is_idempotent_and_submit_after_close_raises(tmp_path):
+    """Satellite: close() on a never-started or already-closed service is
+    a clean no-op; submit()/start() afterwards raise the typed error."""
+    from repro.launch.admission import ServiceClosedError
+
+    cold = _service(tmp_path / "cold")
+    cold.close()                  # never started
+    cold.close()                  # already closed
+    with pytest.raises(ServiceClosedError):
+        cold.start(warm=False)
+
+    svc = _service(tmp_path / "hot")
+    svc.start(warm=False)
+    wits = _wits(2)
+    for wit in wits:
+        svc.submit(wit)
+    svc.close(timeout=600)
+    svc.close(timeout=600)        # idempotent after a real run
+    with pytest.raises(ServiceClosedError):
+        svc.submit(wits[0])
+    _assert_contract(tmp_path / "hot", 1)
+    # the lock was released exactly once: a new service can start
+    svc2 = _service(tmp_path / "hot")
+    svc2.start(warm=False)
+    svc2.close(timeout=600)
+
+
+def test_atomic_write_storage_error_is_typed_with_no_tmp_orphan(
+        tmp_path, monkeypatch):
+    """Satellite: an OSError inside atomic_write_bytes (ENOSPC at the
+    rename) surfaces as a typed StorageError AFTER the temp file is
+    cleaned up — the target is never half-written."""
+    import errno
+
+    from repro.train import checkpoint
+    from repro.train.checkpoint import StorageError, atomic_write_bytes
+
+    target = tmp_path / "proof.bin"
+
+    def full_disk(src, dst):
+        raise OSError(errno.ENOSPC, "No space left on device")
+
+    monkeypatch.setattr(checkpoint.os, "replace", full_disk)
+    with pytest.raises(StorageError) as ei:
+        atomic_write_bytes(str(target), b"x" * 64)
+    assert ei.value.is_enospc
+    assert isinstance(ei.value, OSError)        # typed AND catchable as OS
+    assert not target.exists()
+    assert [f for f in os.listdir(tmp_path) if ".tmp." in f] == []
+
+
+def test_service_journal_enospc_block_retries_then_drop_drops(tmp_path):
+    """Satellite: the service-side storage policy — ``block`` retries a
+    transient ENOSPC at the journal write transparently; ``drop_window``
+    converts a persistent one into a terminal DROPPED window."""
+    svc = _service(tmp_path / "block", backoff_base=0.01,
+                   injector=FailureInjector.from_spec(
+                       "storage/journal@0:enospc"))
+    svc.start(warm=False)
+    for wit in _wits(2):
+        svc.submit(wit)
+    svc.close(timeout=600)
+    assert svc.stats["storage_errors"] == 1
+    _assert_contract(tmp_path / "block", 1)
+
+    svc = _service(tmp_path / "drop", backpressure="drop_window",
+                   injector=FailureInjector.from_spec(
+                       "storage/journal@0:enospc"))
+    svc.start(warm=False)
+    for wit in _wits(4):
+        svc.submit(wit)           # never raises under drop_window
+    svc.close(timeout=600)
+    man = serve.read_manifest(str(tmp_path / "drop"))
+    assert man[0]["status"] == serve.DROPPED
+    assert man[0]["reason"] == "storage"
+    assert svc.stats["dropped_windows"] == 1
+    _assert_contract(tmp_path / "drop", 2, dropped={0})
+
+
+def test_compact_manifest_preserves_replay_semantics(tmp_path):
+    """Satellite: compaction must be invisible to every reader —
+    last-wins resolution, the exactly-once commit audit, and no-window
+    lines (dataset bindings) all survive byte-identically."""
+    import json
+
+    out = tmp_path
+    lines = [
+        {"window": 0, "status": serve.FAILED, "reason": "prove"},
+        {"window": 0, "status": serve.COMMITTED, "n_steps": 2},
+        {"event": "DATASET_BINDING", "root": "aa" * 16},
+        {"window": 1, "status": serve.COMMITTED, "n_steps": 2},
+        {"window": 1, "status": serve.COMMITTED, "n_steps": 2},  # double!
+        {"window": 2, "status": serve.PARTIAL, "n_steps": 1, "of": 2},
+        {"window": 3, "status": serve.FAILED, "reason": "deadline"},
+        {"window": 3, "status": serve.FAILED, "reason": "prove"},
+    ]
+    path = os.path.join(str(out), serve.MANIFEST)
+    with open(path, "w") as f:
+        for rec in lines:
+            f.write(json.dumps(rec) + "\n")
+        f.write('{"window": 9, "status": "COMM')   # torn final append
+    before_man = serve.read_manifest(str(out))
+    before_counts = serve.manifest_commit_counts(str(out))
+    info = serve.compact_manifest(str(out))
+    assert serve.read_manifest(str(out)) == before_man
+    assert serve.manifest_commit_counts(str(out)) == before_counts
+    assert before_counts[1] == 2      # the audit still sees the double
+    assert info["lines_before"] == 8  # torn line was never an entry
+    # kept: w0 last+commit (1 line), binding, w1 2 commits, w2 last,
+    # w3 last = 6
+    assert info["lines_after"] == 6
+    with open(path) as f:
+        kept = [json.loads(ln) for ln in f if ln.strip()]
+    assert {"event": "DATASET_BINDING", "root": "aa" * 16} in kept
+    assert sum(1 for r in kept if r.get("window") == 3) == 1
+    assert kept[-1]["window"] == 3    # original order preserved
+
+
+def test_service_start_auto_compacts_oversized_manifest(tmp_path):
+    """Satellite: a manifest past compact_threshold is compacted at
+    start; recovery state (next_step, terminal windows) is unchanged."""
+    import json
+
+    path = os.path.join(str(tmp_path), serve.MANIFEST)
+    os.makedirs(str(tmp_path), exist_ok=True)
+    with open(path, "w") as f:
+        for i in range(40):           # 40 lines of retry history
+            f.write(json.dumps({"window": 0, "status": serve.FAILED,
+                                "reason": "prove", "attempt": i}) + "\n")
+        f.write(json.dumps({"window": 0, "status": serve.COMMITTED,
+                            "n_steps": T}) + "\n")
+    svc = _service(tmp_path, compact_threshold=5)
+    svc.start(warm=False)
+    assert svc.next_step == T         # window 0 stays terminal
+    assert serve.manifest_line_count(str(tmp_path)) == 1
+    assert serve.manifest_commit_counts(str(tmp_path)) == {0: 1}
+    svc.close(timeout=600)
+
+
 def test_subprocess_isolation_survives_signal_death(tmp_path, monkeypatch):
     """The real signal-death path: each prove attempt is a subprocess;
     the first child SIGKILLs itself mid-prove (a genuine negative

@@ -141,3 +141,65 @@ def test_subprocess_timeout_propagates_when_opted_out():
         supervise.run_subprocess_supervised(
             _child_argv("import time; time.sleep(60)"), max_attempts=3,
             timeout=0.5, retry_timeouts=False, capture_output=True)
+
+
+# ---------------------------------------------------------------------------
+# Edge cases (PR 10 satellite): bad budgets, boundary exits, attempt log
+# ---------------------------------------------------------------------------
+
+def test_subprocess_zero_or_negative_timeout_rejected():
+    """timeout=0 would kill every attempt before it starts — a config
+    bug the supervisor must reject loudly, not loop over."""
+    for bad in (0, 0.0, -1.0):
+        with pytest.raises(ValueError):
+            supervise.run_subprocess_supervised(
+                _child_argv("pass"), timeout=bad, capture_output=True)
+    # None stays the "no timeout" spelling
+    assert supervise.run_subprocess_supervised(
+        _child_argv("pass"), timeout=None, capture_output=True).ok
+
+
+def test_subprocess_backoff_cap_respected_across_attempts():
+    """With many attempts, injected sleep must see the capped schedule —
+    the supervisor never sleeps past backoff_cap no matter how far the
+    exponential has run."""
+    slept = []
+    res = supervise.run_subprocess_supervised(
+        _child_argv("import sys; sys.exit(1)"), max_attempts=5,
+        retry_nonzero=True, backoff_base=0.01, backoff_cap=0.03,
+        sleep=slept.append, capture_output=True)
+    assert not res.ok and res.n_attempts == 5
+    assert slept == [0.01, 0.02, 0.03, 0.03]    # 4 sleeps between 5 tries
+    assert max(slept) <= 0.03
+
+
+def test_child_finishing_cleanly_inside_timeout_not_double_retried():
+    """A slow-but-successful child that completes WITHIN the timeout
+    window is one clean attempt: no spurious retry, no timed_out flag."""
+    slept = []
+    res = supervise.run_subprocess_supervised(
+        _child_argv("import time; time.sleep(0.2)"), max_attempts=3,
+        timeout=30.0, sleep=slept.append, capture_output=True)
+    assert res.ok and res.n_attempts == 1
+    assert slept == []                          # success never sleeps
+    assert not res.attempts[0].timed_out
+    assert res.attempts[0].error is None
+
+
+def test_attempt_log_carries_signal_and_duration_fields():
+    """Each Attempt must record index, wall seconds, the signal (for
+    signal deaths) and the timed_out flag — the serve manifest and the
+    chaos harness both read these."""
+    res = supervise.run_subprocess_supervised(
+        _child_argv("import os, signal; os.kill(os.getpid(), "
+                    "signal.SIGTERM)"),
+        max_attempts=2, backoff_base=0.01, backoff_cap=0.01,
+        capture_output=True)
+    assert not res.ok and res.n_attempts == 2
+    for i, att in enumerate(res.attempts):
+        assert att.index == i
+        assert att.seconds >= 0.0
+        assert att.signal == signal.SIGTERM
+        assert att.error == f"signal {signal.SIGTERM}"
+        assert att.timed_out is False
+    assert res.last_error == f"signal {signal.SIGTERM}"
